@@ -1,0 +1,62 @@
+//! One-shot reproduction driver: prints the headline numbers of every
+//! figure/table in compact form (the full per-experiment output lives in
+//! the dedicated benches, `cargo bench --bench fig8_llama7b` etc.).
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::{Evaluator, Method};
+use kvr::net::noise::NoiseConfig;
+
+fn main() -> kvr::Result<()> {
+    println!("KV-Runahead (ICML 2024) — headline reproduction\n");
+    let hw_hi = hardware_by_name("a100-300gbps")?;
+    let hw_lo = hardware_by_name("a100-10gbps")?;
+
+    // Fig. 8: Llama 7B speedups.
+    let mut ev = Evaluator::new(model_by_name("llama7b")?, hw_hi.clone());
+    let s_4_16k = ev.speedup_vs_tsp(Method::KvrS, 16384, 4)?;
+    let s_8_16k = ev.speedup_vs_tsp(Method::KvrS, 16384, 8)?;
+    println!("Llama 7B  300 GB/s  16k: KVR-S {s_4_16k:.2}x @4GPU (paper \
+              1.42x), {s_8_16k:.2}x @8GPU (paper 1.41x)");
+    let tsp_oom = ev.evaluate(Method::Tsp, 16384, 2, None)?.oom;
+    println!("Llama 7B  300 GB/s  16k @2GPU: TSP OOM = {tsp_oom} (paper: \
+              true)");
+    let mut ev_lo = Evaluator::new(model_by_name("llama7b")?, hw_lo.clone());
+    let s_lo = ev_lo.speedup_vs_tsp(Method::KvrS, 12288, 4)?;
+    println!("Llama 7B   10 GB/s  12k: KVR-S {s_lo:.2}x @4GPU (paper 1.79x)");
+
+    // Fig. 9: Falcon 7B.
+    let mut ef = Evaluator::new(model_by_name("falcon7b")?, hw_hi.clone());
+    let f8k = ef.speedup_vs_tsp(Method::KvrS, 8192, 8)?;
+    println!("Falcon 7B 300 GB/s   8k: KVR-S {f8k:.2}x @8GPU (paper 1.63x)");
+
+    // Fig. 10: KVR-P degradation.
+    let lut = ev.build_lut(&[8192, 12288, 16384], 4)?;
+    let kvrs = ev.evaluate(Method::KvrS, 10240, 4, None)?;
+    let kvrp = ev.evaluate(Method::KvrP, 10240, 4, Some(&lut))?;
+    println!("KVR-P 10k interpolated: {:+.2}% vs KVR-S (paper: +1.1%)",
+             (kvrp.ttft / kvrs.ttft - 1.0) * 100.0);
+
+    // Fig. 11: noise robustness.
+    let quiet_tsp = ev_lo.evaluate(Method::Tsp, 12288, 4, None)?.ttft;
+    let quiet_kvr = ev_lo.evaluate(Method::KvrE, 12288, 4, None)?.ttft;
+    let (mut n_tsp, mut n_kvr) = (0.0, 0.0);
+    for seed in 0..8 {
+        let mut nev = Evaluator::new(model_by_name("llama7b")?, hw_lo.clone())
+            .with_noise(NoiseConfig::default(), seed);
+        n_tsp += nev.evaluate(Method::Tsp, 12288, 4, None)?.ttft / 8.0;
+        n_kvr += nev.evaluate(Method::KvrE, 12288, 4, None)?.ttft / 8.0;
+    }
+    println!("noisy fabric overhead: TSP {:+.1}% vs KVR-E {:+.1}% (paper: \
+              up to +11.8% vs +2.7%)",
+             (n_tsp / quiet_tsp - 1.0) * 100.0,
+             (n_kvr / quiet_kvr - 1.0) * 100.0);
+
+    // Eq. 5/7 traffic identity.
+    let tsp = ev.evaluate(Method::Tsp, 8192, 4, None)?;
+    let kvre = ev.evaluate(Method::KvrE, 8192, 4, None)?;
+    println!("traffic ratio Net_tsp/Net_kvr = {:.2} (theory: 2.00)",
+             tsp.net_kv_entries / kvre.net_kv_entries);
+
+    println!("\nSee EXPERIMENTS.md for the full paper-vs-measured tables.");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Offline context-partition search + lookup-table workflow (paper
+//! Sec. 4.2 / Fig. 6 / Fig. 10):
+//!
+//! 1. hierarchical grid search at a few context lengths,
+//! 2. store the searched ratios in a `PartitionLut`,
+//! 3. interpolate a partition for an unseen context (KVR-P) and compare
+//!    its simulated TTFT against the searched optimum.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::{Evaluator, Method};
+use kvr::partition::search::SearchConfig;
+
+fn main() -> kvr::Result<()> {
+    let mut ev = Evaluator::new(
+        model_by_name("llama7b")?,
+        hardware_by_name("a100-300gbps")?,
+    );
+    let p = 4;
+
+    println!("== searching partitions (Llama 7B, {p} GPUs, 300 GB/s) ==");
+    let res = ev.search(16384, p, &SearchConfig::default())?;
+    println!("16k search: {} evaluations across {} levels",
+             res.evaluations, res.levels.len());
+    for (i, l) in res.levels.iter().enumerate() {
+        println!("  level {i}: stride {:>5} -> best TTFT {:.4}s",
+                 l.stride, l.best_ttft);
+    }
+
+    println!("\n== building the lookup table ==");
+    let lut = ev.build_lut(&[4096, 8192, 12288, 16384], p)?;
+    for e in lut.entries() {
+        let r: Vec<String> =
+            e.ratios.iter().map(|x| format!("{x:.3}")).collect();
+        println!("  ctx {:>6}: [{}]  ttft {:.4}s", e.context, r.join(", "),
+                 e.ttft);
+    }
+    let path = std::env::temp_dir().join("kvr_llama7b_p4.lut.json");
+    lut.save(&path)?;
+    println!("saved to {}", path.display());
+
+    println!("\n== KVR-P: interpolating for unseen contexts ==");
+    for c in [6144usize, 10240, 14336] {
+        let kvrs = ev.evaluate(Method::KvrS, c, p, None)?;
+        let kvrp = ev.evaluate(Method::KvrP, c, p, Some(&lut))?;
+        let tsp = ev.evaluate(Method::Tsp, c, p, None)?;
+        println!("  ctx {:>6}: KVR-S {:.4}s  KVR-P {:.4}s ({:+.2}%)  \
+                  TSP {:.4}s ({:.2}x)",
+                 c, kvrs.ttft, kvrp.ttft,
+                 (kvrp.ttft / kvrs.ttft - 1.0) * 100.0, tsp.ttft,
+                 tsp.ttft / kvrp.ttft);
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! End-to-end serving driver (the validation workload from DESIGN.md):
+//! spin up a worker cluster over the real AOT-compiled tiny model, submit
+//! a Poisson stream of batched requests, and report TTFT / TPOT /
+//! throughput — the serving-paper analogue of a training loss curve.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example serve -- --workers 2 --requests 12
+//! ```
+
+use kvr::coordinator::{
+    ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
+    SchedulerConfig,
+};
+use kvr::util::cli::Args;
+use kvr::util::rng::Rng;
+use kvr::util::stats::fmt_time;
+
+fn main() -> kvr::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let workers = args.usize_or("workers", 2)?;
+    let n = args.usize_or("requests", 12)?;
+    let rate = args.f64_or("rate", 1.5)?; // mean arrivals per second
+    let max_new = args.usize_or("max-new", 6)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let art = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    // Pre-compile every bucket at startup: compilation never lands on the
+    // request path (EXPERIMENTS.md §Perf).
+    let mut cluster = Cluster::new_opts(&art, workers, true)?;
+    let g = cluster.manifest.granularity();
+    let max_ctx = cluster.manifest.max_context();
+    println!("cluster: {workers} workers, granularity {g}, max ctx {max_ctx}");
+
+    // Poisson arrivals, mixed prompt lengths (the serving workload).
+    let tok = ByteTokenizer;
+    let mut rng = Rng::new(seed);
+    let corpus = [
+        "Antibiotics are a type of medication used to treat bacterial \
+         infections. They work by killing bacteria or preventing them from \
+         reproducing, allowing the immune system to fight off remaining \
+         pathogens over the course of the treatment.",
+        "Large language model inference has two phases: the prompt phase \
+         that produces the first token, and the extension phase that \
+         produces every subsequent token from the key-value cache.",
+        "The quick brown fox jumps over the lazy dog while the five boxing \
+         wizards jump quickly over a shimmering glass of liquid measure.",
+    ];
+    let mut arrival = 0.0;
+    let requests: Vec<GenRequest> = (0..n as u64)
+        .map(|id| {
+            arrival += rng.exp(rate);
+            let text = corpus[rng.range(0, corpus.len())];
+            let take = rng.range(24, text.len().min(max_ctx - max_new - g));
+            let tokens = tok.pad_to_multiple(&tok.encode(&text[..take]), g);
+            GenRequest { id, tokens, max_new_tokens: max_new, arrival }
+        })
+        .collect();
+    let total_prompt: usize = requests.iter().map(|r| r.tokens.len()).sum();
+    println!("workload: {n} requests, {total_prompt} prompt tokens, Poisson \
+              rate {rate}/s, {max_new} new tokens each\n");
+
+    let sched = Scheduler::new(SchedulerConfig {
+        policy: PartitionPolicy::Even,
+        max_active: 3,
+        ..Default::default()
+    });
+    let (responses, metrics) = sched.serve(&mut cluster, requests)?;
+
+    for r in &responses {
+        println!(
+            "req {:>3}: generated {:>2} tokens   ttft {:>9}   mean tpot {:>9}",
+            r.id,
+            r.tokens.len(),
+            fmt_time(r.ttft),
+            fmt_time(if r.tpot.is_empty() { 0.0 } else {
+                r.tpot.iter().sum::<f64>() / r.tpot.len() as f64
+            })
+        );
+    }
+    println!("\n== aggregate ==\n{}", metrics.report());
+    Ok(())
+}

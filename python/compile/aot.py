@@ -1,0 +1,238 @@
+"""AOT export: lower the L2 model to HLO text + weights for the rust runtime.
+
+Run once by ``make artifacts`` (never on the request path). Emits, into
+``artifacts/``:
+
+* ``prefill_c{chunk}_p{past}.hlo.txt`` — one HLO module per shape bucket,
+  chunk in CHUNK_SIZES x past in PAST_BUCKETS,
+* ``decode_p{past}.hlo.txt`` — single-token extension-phase step,
+* ``weights.bin`` — flat tensors in the in-repo KVRT codec
+  (mirrored by ``rust/src/util/bytes.rs``),
+* ``manifest.json`` — model config + artifact registry (shapes/dtypes and
+  the exact HLO argument order),
+* ``goldens.json`` — tiny input/output vectors so the rust integration
+  tests can certify numerics without python in the loop.
+
+Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+CHUNK_SIZES = [32, 64, 128]
+PAST_BUCKETS = [0, 128, 256, 512]
+DECODE_BUCKETS = [128, 256, 512]
+
+_DTYPE_CODES = {"float32": 0, "int32": 1}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def write_tensors(path: str, tensors: "list[tuple[str, np.ndarray]]") -> None:
+    """KVRT v1 codec: see rust/src/util/bytes.rs for the reader."""
+    with open(path, "wb") as f:
+        f.write(b"KVRT")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            code = _DTYPE_CODES[str(arr.dtype)]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            data = arr.tobytes()
+            f.write(struct.pack("<Q", len(data)))
+            f.write(data)
+
+
+def _prefill_fn(cfg: M.ModelConfig, n_params: int):
+    def fn(*args):
+        params = list(args[:n_params])
+        tokens, past_k, past_v, past_len = args[n_params:]
+        return M.prefill_chunk(cfg, params, tokens, past_k, past_v, past_len)
+    return fn
+
+
+def _example_args(cfg: M.ModelConfig, chunk: int, past: int):
+    shapes = M.param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+              for n in M.param_names(cfg)]
+    tokens = jax.ShapeDtypeStruct((chunk,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(
+        (cfg.layers, cfg.kv_heads, past, cfg.head_dim), jnp.float32)
+    past_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, tokens, kv, past_len
+
+
+def lower_bucket(cfg: M.ModelConfig, chunk: int, past: int) -> str:
+    params, tokens, kv, past_len = _example_args(cfg, chunk, past)
+    n = len(params)
+    fn = _prefill_fn(cfg, n)
+    lowered = jax.jit(fn).lower(*params, tokens, kv, kv, past_len)
+    return to_hlo_text(lowered)
+
+
+def artifact_entry(cfg: M.ModelConfig, kind: str, chunk: int, past: int,
+                   fname: str) -> dict:
+    return {
+        "name": fname.replace(".hlo.txt", ""),
+        "kind": kind,
+        "chunk": chunk,
+        "past": past,
+        "file": fname,
+        # Non-parameter inputs, in HLO argument order after the params:
+        "extra_inputs": [
+            {"name": "tokens", "shape": [chunk], "dtype": "i32"},
+            {"name": "past_k",
+             "shape": [cfg.layers, cfg.kv_heads, past, cfg.head_dim],
+             "dtype": "f32"},
+            {"name": "past_v",
+             "shape": [cfg.layers, cfg.kv_heads, past, cfg.head_dim],
+             "dtype": "f32"},
+            {"name": "past_len", "shape": [], "dtype": "i32"},
+        ],
+        "outputs": [
+            {"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+            {"name": "k_chunk",
+             "shape": [cfg.layers, cfg.kv_heads, chunk, cfg.head_dim],
+             "dtype": "f32"},
+            {"name": "v_chunk",
+             "shape": [cfg.layers, cfg.kv_heads, chunk, cfg.head_dim],
+             "dtype": "f32"},
+        ],
+    }
+
+
+def export_goldens(cfg: M.ModelConfig, params, out_dir: str) -> None:
+    """Small deterministic vectors for the rust-side numeric tests."""
+    rng = np.random.RandomState(1234)
+    goldens = {}
+
+    # (1) prefill_c32_p0: 32 tokens, no past.
+    toks = rng.randint(0, 256, size=(32,)).astype(np.int32)
+    zero = jnp.zeros((cfg.layers, cfg.kv_heads, 0, cfg.head_dim), jnp.float32)
+    logits, kc, vc = M.prefill_chunk(cfg, params, jnp.asarray(toks), zero,
+                                     zero, jnp.int32(0))
+    goldens["prefill_c32_p0"] = {
+        "tokens": toks.tolist(),
+        "logits_prefix": np.asarray(logits[:8], np.float64).tolist(),
+        "k_chunk_sum": float(jnp.sum(kc)),
+        "v_chunk_sum": float(jnp.sum(vc)),
+        "argmax": int(jnp.argmax(logits)),
+    }
+
+    # (2) two-chunk handoff equals one-shot 64-token prefill (the KVR core
+    # invariant, checked again on the rust side through PJRT).
+    toks2 = rng.randint(0, 256, size=(64,)).astype(np.int32)
+    logits_full, _, _ = M.prefill_chunk(
+        cfg, params, jnp.asarray(toks2), zero, zero, jnp.int32(0))
+    goldens["prefill_c64_p0_full"] = {
+        "tokens": toks2.tolist(),
+        "logits_prefix": np.asarray(logits_full[:8], np.float64).tolist(),
+        "argmax": int(jnp.argmax(logits_full)),
+    }
+
+    # (3) decode: one token after the 32-token prefill, past bucket 128.
+    pad = 128
+    pk = jnp.zeros((cfg.layers, cfg.kv_heads, pad, cfg.head_dim), jnp.float32)
+    pk = pk.at[:, :, :32].set(kc)
+    pv = jnp.zeros_like(pk)
+    pv = pv.at[:, :, :32].set(vc)
+    tok = np.array([goldens["prefill_c32_p0"]["argmax"] % cfg.vocab],
+                   np.int32)
+    dl, _, _ = M.prefill_chunk(cfg, params, jnp.asarray(tok), pk, pv,
+                               jnp.int32(32))
+    goldens["decode_p128"] = {
+        "token": int(tok[0]),
+        "past_len": 32,
+        "logits_prefix": np.asarray(dl[:8], np.float64).tolist(),
+        "argmax": int(jnp.argmax(dl)),
+    }
+
+    with open(os.path.join(out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    cfg = M.TINY
+    names = M.param_names(cfg)
+
+    artifacts = []
+    for chunk in CHUNK_SIZES:
+        for past in PAST_BUCKETS:
+            fname = f"prefill_c{chunk}_p{past}.hlo.txt"
+            print(f"lowering {fname} ...", flush=True)
+            text = lower_bucket(cfg, chunk, past)
+            with open(os.path.join(out, fname), "w") as f:
+                f.write(text)
+            artifacts.append(artifact_entry(cfg, "prefill", chunk, past, fname))
+    for past in DECODE_BUCKETS:
+        fname = f"decode_p{past}.hlo.txt"
+        print(f"lowering {fname} ...", flush=True)
+        text = lower_bucket(cfg, 1, past)
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        artifacts.append(artifact_entry(cfg, "decode", 1, past, fname))
+
+    print("exporting weights ...", flush=True)
+    params = M.init_params(cfg, seed=args.seed)
+    write_tensors(os.path.join(out, "weights.bin"),
+                  [(n, np.asarray(p)) for n, p in zip(names, params)])
+
+    manifest = {
+        "version": 1,
+        "model": {
+            "vocab": cfg.vocab, "dim": cfg.dim, "layers": cfg.layers,
+            "heads": cfg.heads, "kv_heads": cfg.kv_heads, "ffn": cfg.ffn,
+            "head_dim": cfg.head_dim, "rope_theta": cfg.rope_theta,
+        },
+        "param_names": names,
+        "chunk_sizes": CHUNK_SIZES,
+        "past_buckets": PAST_BUCKETS,
+        "decode_buckets": DECODE_BUCKETS,
+        "weights_file": "weights.bin",
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    print("exporting goldens ...", flush=True)
+    export_goldens(cfg, params, out)
+    print(f"AOT export complete: {len(artifacts)} HLO modules -> {out}")
+
+
+if __name__ == "__main__":
+    main()

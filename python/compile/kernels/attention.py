@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: blocked causal attention over a chunk + KV-cache.
+
+This is the paper's compute hot-spot (Fig. 2): for a context chunk assigned
+to one KV-Runahead process, compute attention of the chunk's queries against
+``[past KV-cache || chunk KV]`` while honouring causality. Instead of the
+dense ``QK^T`` + mask baseline (``ref.py``), the kernel streams KV blocks
+with an online-softmax accumulator (flash-attention style), so masked tiles
+above the causal frontier are never visited — the block schedule *is* the
+rectangle decomposition of Fig. 2(d).
+
+Hardware adaptation (paper targets CUDA, we target the TPU mental model,
+executed via ``interpret=True`` on CPU):
+
+* the per-``(head, q-block)`` working set (``BQ x D`` queries, ``BK x D``
+  KV tiles, ``BQ x D`` f32 accumulator) is sized for VMEM, not CUDA shared
+  memory;
+* matmul shapes are kept MXU-friendly (lane-width multiples, f32
+  accumulation);
+* the HBM->VMEM schedule the paper expresses with threadblocks is the
+  ``fori_loop`` over KV blocks with a causal upper bound, i.e. block
+  ``(h, qi)`` only reads KV blocks ``[0, ceil((P + (qi+1)*BQ)/BK))``.
+
+``interpret=True`` is mandatory here: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Correctness is asserted
+against ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large-negative (finite) stand-in for -inf. Using a finite value keeps the
+# online-softmax recurrence NaN-free when an entire KV block is masked out.
+_NEG = -1e30
+
+
+def _pick_block(n: int, max_block: int) -> int:
+    """Largest divisor of ``n`` that is ``<= max_block`` (n >= 1)."""
+    for b in range(min(max_block, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _attn_kernel(past_len_ref, q_ref, k_ref, v_ref, o_ref, *, past_pad: int,
+                 block_k: int, scale: float):
+    """One (head, q-block) grid step.
+
+    Refs (blocked by the specs in ``chunked_causal_attention``):
+      past_len_ref: [1, 1] int32 — valid prefix of the padded past cache.
+      q_ref: [BQ, D] queries for this block.
+      k_ref/v_ref: [Tk, D] full KV stream for this head (Tk = P + Tq).
+      o_ref: [BQ, D] output block.
+    """
+    bq, d = q_ref.shape
+    tk = k_ref.shape[0]
+    past_len = past_len_ref[0, 0]
+    qi = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    # Global chunk offset of the first query row in this block.
+    q_start = qi * bq
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    # Causal frontier: the last KV slot any query in this block may see is
+    # past_pad + (q_start + bq - 1); blocks beyond it are skipped entirely.
+    n_blocks = (past_pad + (qi + 1) * bq + block_k - 1) // block_k
+
+    def body(kb, carry):
+        acc, m, l = carry
+        start = kb * block_k
+        k_blk = pl.load(k_ref, (pl.dslice(start, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(start, block_k), slice(None)))
+        s = jnp.dot(q, k_blk.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)  # [BQ, BK]
+
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        valid_past = k_pos < past_len
+        valid_chunk = (k_pos >= past_pad) & ((k_pos - past_pad) <= q_pos)
+        valid = valid_past | valid_chunk
+
+        s = jnp.where(valid, s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        # Multiplicative guard: exp() of masked entries is forced to 0 even
+        # while m_new is still _NEG (e.g. a fully-masked leading block).
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.dot(p, v_blk.astype(jnp.float32),
+                                       preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+    # Every query row attends at least to itself, so l > 0.
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def chunked_causal_attention(q, k, v, past_len, past_pad: int,
+                             block_q: int = 64, block_k: int = 64):
+    """Blocked causal attention for one KVR chunk (Pallas, interpret mode).
+
+    Args:
+      q: ``[H, Tq, D]`` chunk queries (query ``i`` = global pos
+         ``past_len + i``).
+      k, v: ``[Hkv, P + Tq, D]`` padded past + chunk KV (see ref.py for the
+         layout contract).
+      past_len: scalar int32 — valid slots in the padded past region.
+      past_pad: static ``P``.
+      block_q, block_k: tile sizes (clamped to the actual extents).
+
+    Returns:
+      ``[H, Tq, D]`` attention output, dtype of ``q``.
+    """
+    h, tq, d = q.shape
+    hkv, tk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    assert tk == past_pad + tq, (tk, past_pad, tq)
+
+    # Pallas requires the grid to tile the array exactly; pick the largest
+    # divisor <= the requested block size (bucketed shapes are powers of two,
+    # so this normally returns the requested size unchanged).
+    bq = _pick_block(tq, block_q)
+    bk = _pick_block(tk, block_k)
+
+    past_len_arr = jnp.asarray(past_len, jnp.int32).reshape(1, 1)
+    grid = (h, tq // bq)
+    kernel = functools.partial(
+        _attn_kernel, past_pad=past_pad, block_k=bk,
+        scale=1.0 / math.sqrt(d))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda hh, qi: (0, 0)),
+            pl.BlockSpec((None, bq, d), lambda hh, qi: (hh, qi, 0)),
+            pl.BlockSpec((None, tk, d), lambda hh, qi: (hh // group, 0, 0)),
+            pl.BlockSpec((None, tk, d), lambda hh, qi: (hh // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda hh, qi: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, d), q.dtype),
+        interpret=True,
+    )(past_len_arr, q, k, v)

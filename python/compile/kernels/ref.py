@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the chunked causal attention kernel.
+
+This is the correctness reference for `attention.py` (L1). It computes the
+same math with dense ops: a full ``QK^T`` followed by an explicit mask and
+softmax — exactly the "compute everything then mask" baseline the paper
+describes as the common (wasteful) implementation (Fig. 1b).
+
+Layout contract (shared with the Pallas kernel and the L2 model):
+
+* ``q``: ``[H, Tq, D]`` — queries for the *current chunk*. Query ``i`` sits
+  at global position ``past_len + i``.
+* ``k``/``v``: ``[Hkv, P + Tq, D]`` — a KV buffer whose first ``P`` slots are
+  the (padded) past cache — only ``[:past_len]`` is valid — and whose last
+  ``Tq`` slots are the current chunk's keys/values.
+* A query at chunk offset ``i`` may attend to buffer slot ``j`` iff
+  ``j < past_len`` (valid past) or ``P <= j <= P + i`` (causal within the
+  chunk). This is the rectangle+triangle coverage of Fig. 2 in the paper.
+* GQA: ``H`` query heads share ``Hkv`` KV heads; query head ``h`` uses KV
+  head ``h // (H // Hkv)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_mask(tq: int, past_pad: int, past_len, dtype=jnp.float32):
+    """Additive mask ``[Tq, P+Tq]``: 0 where attendable, -inf elsewhere.
+
+    ``past_len`` may be a traced scalar (int32).
+    """
+    tk = past_pad + tq
+    q_idx = jnp.arange(tq)[:, None]  # chunk-local query offsets
+    k_idx = jnp.arange(tk)[None, :]  # buffer slots
+    valid_past = k_idx < past_len
+    valid_chunk = (k_idx >= past_pad) & ((k_idx - past_pad) <= q_idx)
+    valid = valid_past | valid_chunk
+    neg = jnp.asarray(jnp.finfo(dtype).min, dtype=dtype)
+    return jnp.where(valid, jnp.zeros((), dtype=dtype), neg)
+
+
+def chunked_causal_attention_ref(q, k, v, past_len, past_pad: int):
+    """Dense reference attention.
+
+    Args:
+      q: ``[H, Tq, D]`` queries for the chunk.
+      k, v: ``[Hkv, P+Tq, D]`` padded past + chunk keys/values.
+      past_len: scalar int32, number of valid past slots (``<= P``).
+      past_pad: static int, ``P``.
+
+    Returns:
+      ``[H, Tq, D]`` attention output.
+    """
+    h = q.shape[0]
+    hkv = k.shape[0]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    tq = q.shape[1]
+    d = q.shape[2]
+
+    # Expand KV heads to match query heads (GQA share pattern).
+    k_e = jnp.repeat(k, group, axis=0)  # [H, Tk, D]
+    v_e = jnp.repeat(v, group, axis=0)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    scores = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32), k_e.astype(jnp.float32)) * scale
+    mask = attention_mask(tq, past_pad, past_len, dtype=jnp.float32)
+    scores = scores + mask[None, :, :]
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hts,hsd->htd", weights, v_e.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,207 @@
+"""L2: Llama-style causal transformer in JAX, built on the L1 kernel.
+
+The model is the compute graph that KV-Runahead parallelizes. It is authored
+here once, AOT-lowered per shape bucket by ``aot.py``, and executed from the
+rust coordinator via PJRT — python never sits on the request path.
+
+Architecture (a faithful miniature of Llama 7B): token embedding, N blocks
+of [RMSNorm -> GQA attention with RoPE -> residual, RMSNorm -> SwiGLU MLP ->
+residual], final RMSNorm, tied-free LM head. Attention uses the Pallas
+kernel from ``kernels/attention.py``.
+
+Entry points (all take an explicit padded-past KV cache, which is exactly
+the interface KV-Runahead dual-purposes):
+
+* ``prefill_chunk``  — consume ``Tq`` tokens at positions
+  ``[past_len, past_len+Tq)``, return logits of the last position plus the
+  chunk's K/V (for the coordinator to append to the cache it hands to the
+  next process).
+* ``decode_step``    — ``Tq == 1`` specialization used in the extension
+  phase.
+
+Parameters travel as a *flat ordered list* (see ``param_names``) so the
+lowered HLO's argument order is deterministic and mirrored by the rust
+runtime (`rust/src/runtime/weights.rs`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import chunked_causal_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters of the tiny model."""
+
+    vocab: int = 384          # 256 bytes + specials, padded to 3*128 (MXU lanes)
+    dim: int = 256
+    layers: int = 4
+    heads: int = 8
+    kv_heads: int = 4         # GQA group of 2; =heads -> MHA, =1 -> MQA
+    ffn: int = 768            # SwiGLU hidden (~(8/3)*dim rounded to 128)
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+TINY = ModelConfig()
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Canonical flat parameter order (shared with weights.bin + manifest)."""
+    names = ["embed"]
+    for i in range(cfg.layers):
+        names += [
+            f"layer{i}.attn_norm",
+            f"layer{i}.wq",
+            f"layer{i}.wk",
+            f"layer{i}.wv",
+            f"layer{i}.wo",
+            f"layer{i}.mlp_norm",
+            f"layer{i}.w_gate",
+            f"layer{i}.w_up",
+            f"layer{i}.w_down",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """name -> shape for every parameter, in f32."""
+    d, hd = cfg.dim, cfg.head_dim
+    shapes = {"embed": (cfg.vocab, d)}
+    for i in range(cfg.layers):
+        shapes.update({
+            f"layer{i}.attn_norm": (d,),
+            f"layer{i}.wq": (d, cfg.heads * hd),
+            f"layer{i}.wk": (d, cfg.kv_heads * hd),
+            f"layer{i}.wv": (d, cfg.kv_heads * hd),
+            f"layer{i}.wo": (cfg.heads * hd, d),
+            f"layer{i}.mlp_norm": (d,),
+            f"layer{i}.w_gate": (d, cfg.ffn),
+            f"layer{i}.w_up": (d, cfg.ffn),
+            f"layer{i}.w_down": (cfg.ffn, d),
+        })
+    shapes["final_norm"] = (d,)
+    shapes["lm_head"] = (d, cfg.vocab)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic synthetic weights (the offline stand-in for real
+    checkpoints — TTFT depends on shapes, not values; see DESIGN.md §2)."""
+    shapes = param_shapes(cfg)
+    names = param_names(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name in names:
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def _rms_norm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions, theta: float):
+    """Rotary embedding. x: [T, H, Dh]; positions: [T] int32."""
+    t, h, dh = x.shape
+    half = dh // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unflatten(cfg: ModelConfig, params: List[jnp.ndarray]) -> dict:
+    return dict(zip(param_names(cfg), params))
+
+
+def prefill_chunk(cfg: ModelConfig, params: List[jnp.ndarray], tokens,
+                  past_k, past_v, past_len):
+    """Run one context chunk against a padded past KV cache.
+
+    Args:
+      params: flat list per ``param_names(cfg)``.
+      tokens: ``[Tq]`` int32 token ids of the chunk.
+      past_k/past_v: ``[L, Hkv, P, Dh]`` padded past cache (``P`` may be 0);
+        only ``[:, :, :past_len]`` is valid. Keys are stored *already
+        RoPE-rotated*, which is what makes chunk-wise handoff cheap.
+      past_len: scalar int32.
+
+    Returns:
+      (logits ``[vocab]`` of the last chunk position,
+       k_chunk ``[L, Hkv, Tq, Dh]``, v_chunk likewise) — the chunk KV is
+       what the coordinator appends to the accumulated cache before the
+       point-to-point send to the next process (paper Fig. 5).
+    """
+    p = _unflatten(cfg, params)
+    tq = tokens.shape[0]
+    past_pad = past_k.shape[2]
+    hd = cfg.head_dim
+    positions = past_len + jnp.arange(tq, dtype=jnp.int32)
+
+    x = p["embed"][tokens]  # [Tq, D]
+    k_out, v_out = [], []
+    for i in range(cfg.layers):
+        h = _rms_norm(x, p[f"layer{i}.attn_norm"])
+        q = (h @ p[f"layer{i}.wq"]).reshape(tq, cfg.heads, hd)
+        k = (h @ p[f"layer{i}.wk"]).reshape(tq, cfg.kv_heads, hd)
+        v = (h @ p[f"layer{i}.wv"]).reshape(tq, cfg.kv_heads, hd)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+
+        k_hT = k.transpose(1, 0, 2)  # [Hkv, Tq, Dh]
+        v_hT = v.transpose(1, 0, 2)
+        k_full = jnp.concatenate([past_k[i], k_hT], axis=1)  # [Hkv, P+Tq, Dh]
+        v_full = jnp.concatenate([past_v[i], v_hT], axis=1)
+        attn = chunked_causal_attention(
+            q.transpose(1, 0, 2), k_full, v_full, past_len, past_pad)
+        attn = attn.transpose(1, 0, 2).reshape(tq, cfg.heads * hd)
+        x = x + attn @ p[f"layer{i}.wo"]
+
+        h2 = _rms_norm(x, p[f"layer{i}.mlp_norm"])
+        gate = jax.nn.silu(h2 @ p[f"layer{i}.w_gate"])
+        x = x + (gate * (h2 @ p[f"layer{i}.w_up"])) @ p[f"layer{i}.w_down"]
+
+        k_out.append(k_hT)
+        v_out.append(v_hT)
+
+    x = _rms_norm(x, p["final_norm"])
+    logits = x[-1] @ p["lm_head"]
+    return logits, jnp.stack(k_out), jnp.stack(v_out)
+
+
+def decode_step(cfg: ModelConfig, params: List[jnp.ndarray], token,
+                past_k, past_v, past_len):
+    """Single-token extension-phase step (``Tq == 1`` prefill)."""
+    return prefill_chunk(cfg, params, token, past_k, past_v, past_len)
+
+
+def full_prefill_reference(cfg: ModelConfig, params: List[jnp.ndarray],
+                           tokens):
+    """Single-shot prefill of the whole context (the 1-process baseline);
+    used by tests to certify chunked == monolithic."""
+    zero_k = jnp.zeros((cfg.layers, cfg.kv_heads, 0, cfg.head_dim), jnp.float32)
+    return prefill_chunk(cfg, params, tokens, zero_k, zero_k,
+                         jnp.asarray(0, jnp.int32))

@@ -1,0 +1,118 @@
+"""AOT export consistency: manifest <-> HLO files <-> weights <-> goldens."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "artifacts"))
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first")
+
+
+def read_tensors(path):
+    """Python-side reader of the KVRT codec (mirrors rust/src/util/bytes.rs)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"KVRT"
+        (version,) = struct.unpack("<I", f.read(4))
+        assert version == 1
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            data = f.read(nbytes)
+            dtype = {0: np.float32, 1: np.int32}[code]
+            out[name] = np.frombuffer(data, dtype=dtype).reshape(dims)
+    return out
+
+
+@needs_artifacts
+def test_manifest_lists_every_bucket():
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    prefills = [a for a in m["artifacts"] if a["kind"] == "prefill"]
+    decodes = [a for a in m["artifacts"] if a["kind"] == "decode"]
+    assert len(prefills) == len(aot.CHUNK_SIZES) * len(aot.PAST_BUCKETS)
+    assert len(decodes) == len(aot.DECODE_BUCKETS)
+    for a in m["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), a["file"]
+
+
+@needs_artifacts
+def test_manifest_model_matches_tiny():
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    cfg = M.TINY
+    assert m["model"]["vocab"] == cfg.vocab
+    assert m["model"]["dim"] == cfg.dim
+    assert m["model"]["layers"] == cfg.layers
+    assert m["model"]["head_dim"] == cfg.head_dim
+    assert m["param_names"] == M.param_names(cfg)
+
+
+@needs_artifacts
+def test_hlo_entry_arity_matches_manifest():
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    n_params = len(m["param_names"])
+    a = m["artifacts"][0]
+    text = open(os.path.join(ART, a["file"])).read(20000)
+    layout = text.split("entry_computation_layout={", 1)[1]
+    layout = layout.split("->", 1)[0]
+    # one f32/s32 leaf per flat param + tokens + past_k + past_v + past_len
+    n_args = layout.count("f32[") + layout.count("s32[")
+    assert n_args == n_params + 4
+
+
+@needs_artifacts
+def test_weights_roundtrip_against_init():
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    tensors = read_tensors(os.path.join(ART, m["weights_file"]))
+    cfg = M.TINY
+    params = M.init_params(cfg, seed=0)
+    names = M.param_names(cfg)
+    assert list(tensors) == names
+    for name, ref in zip(names, params):
+        np.testing.assert_array_equal(tensors[name], np.asarray(ref))
+
+
+@needs_artifacts
+def test_goldens_reproduce():
+    import jax.numpy as jnp
+    g = json.load(open(os.path.join(ART, "goldens.json")))
+    cfg = M.TINY
+    params = M.init_params(cfg, seed=0)
+    toks = jnp.asarray(g["prefill_c32_p0"]["tokens"], jnp.int32)
+    zero = jnp.zeros((cfg.layers, cfg.kv_heads, 0, cfg.head_dim))
+    logits, kc, vc = M.prefill_chunk(cfg, params, toks, zero, zero,
+                                     jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(logits[:8], np.float64),
+                               g["prefill_c32_p0"]["logits_prefix"],
+                               rtol=1e-5)
+    assert int(np.argmax(np.asarray(logits))) == g["prefill_c32_p0"]["argmax"]
+
+
+def test_codec_writer_reader_roundtrip(tmp_path):
+    rng = np.random.RandomState(0)
+    tensors = [
+        ("a", rng.randn(3, 4).astype(np.float32)),
+        ("b.nested/name", np.arange(7, dtype=np.int32)),
+        ("scalarish", rng.randn(1).astype(np.float32)),
+    ]
+    p = tmp_path / "t.bin"
+    aot.write_tensors(str(p), tensors)
+    back = read_tensors(str(p))
+    assert list(back) == [n for n, _ in tensors]
+    for name, arr in tensors:
+        np.testing.assert_array_equal(back[name], arr)

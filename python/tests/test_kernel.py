@@ -1,0 +1,159 @@
+"""L1 correctness: Pallas chunked causal attention vs the pure-jnp oracle.
+
+This is the CORE numeric signal of the stack: everything above (the L2
+model, the AOT artifacts, the rust runtime) composes this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import chunked_causal_attention, _pick_block
+from compile.kernels.ref import chunked_causal_attention_ref, attention_mask
+
+
+def _mk(h, hkv, tq, past_pad, d, seed, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (h, tq, d), dtype)
+    k = jax.random.normal(k2, (hkv, past_pad + tq, d), dtype)
+    v = jax.random.normal(k3, (hkv, past_pad + tq, d), dtype)
+    return q, k, v
+
+
+def _check(h, hkv, tq, past_pad, past_len, d, seed=0, dtype=jnp.float32,
+           rtol=2e-5, atol=2e-5, **kw):
+    q, k, v = _mk(h, hkv, tq, past_pad, d, seed, dtype)
+    out = chunked_causal_attention(q, k, v, jnp.int32(past_len), past_pad, **kw)
+    ref = chunked_causal_attention_ref(q, k, v, jnp.int32(past_len), past_pad)
+    assert out.shape == q.shape
+    assert out.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+# --- fixed, fast edge cases -------------------------------------------------
+
+def test_no_past():
+    _check(h=4, hkv=4, tq=32, past_pad=0, past_len=0, d=32)
+
+
+def test_full_past_bucket():
+    _check(h=4, hkv=2, tq=32, past_pad=128, past_len=128, d=32)
+
+
+def test_empty_past_in_nonzero_bucket():
+    # Bucket allocated but nothing valid yet: only the chunk triangle counts.
+    _check(h=4, hkv=2, tq=32, past_pad=128, past_len=0, d=32)
+
+
+def test_partial_past():
+    _check(h=8, hkv=4, tq=64, past_pad=128, past_len=70, d=32)
+
+
+def test_single_query_decode_shape():
+    _check(h=8, hkv=4, tq=1, past_pad=128, past_len=57, d=32)
+
+
+def test_mqa_single_kv_head():
+    _check(h=8, hkv=1, tq=32, past_pad=128, past_len=90, d=32)
+
+
+def test_mha_no_grouping():
+    _check(h=4, hkv=4, tq=48, past_pad=64, past_len=33, d=16)
+
+
+def test_non_pow2_chunk():
+    _check(h=2, hkv=2, tq=96, past_pad=128, past_len=128, d=32)
+
+
+def test_small_blocks_agree_with_large():
+    q, k, v = _mk(4, 2, 64, 128, 32, seed=3)
+    a = chunked_causal_attention(q, k, v, jnp.int32(100), 128,
+                                 block_q=16, block_k=16)
+    b = chunked_causal_attention(q, k, v, jnp.int32(100), 128,
+                                 block_q=64, block_k=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_bf16_inputs():
+    _check(h=4, hkv=2, tq=32, past_pad=64, past_len=40, d=32,
+           dtype=jnp.bfloat16, rtol=3e-2, atol=3e-2)
+
+
+def test_masked_rows_match_dense_softmax_normalization():
+    # Values far apart in magnitude stress the online-softmax rescaling.
+    q, k, v = _mk(2, 2, 32, 64, 16, seed=9)
+    q = q * 8.0
+    out = chunked_causal_attention(q, k, v, jnp.int32(10), 64)
+    ref = chunked_causal_attention_ref(q, k, v, jnp.int32(10), 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_first_row_attends_only_to_past_and_self():
+    # Craft v so row 0's output exposes exactly its attention support.
+    h, hkv, tq, pad, d = 1, 1, 4, 8, 4
+    past_len = 3
+    q = jnp.ones((h, tq, d))
+    k = jnp.zeros((hkv, pad + tq, d))
+    v = jnp.zeros((hkv, pad + tq, d))
+    # Distinct values in valid past, chunk, and the forbidden zones.
+    v = v.at[:, :past_len, :].set(1.0)       # valid past
+    v = v.at[:, past_len:pad, :].set(100.0)  # invalid padding (masked)
+    v = v.at[:, pad, :].set(2.0)             # own position
+    v = v.at[:, pad + 1:, :].set(50.0)       # future (masked)
+    out = chunked_causal_attention(q, k, v, jnp.int32(past_len), pad)
+    # With all scores equal (k = 0), row 0 averages {1,1,1,2} = 1.25.
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.full(d, 1.25),
+                               rtol=1e-5)
+
+
+def test_pick_block():
+    assert _pick_block(64, 64) == 64
+    assert _pick_block(96, 64) == 48
+    assert _pick_block(1, 64) == 1
+    assert _pick_block(17, 8) == 1
+    assert _pick_block(640, 128) == 128
+
+
+def test_attention_mask_shape_and_support():
+    m = attention_mask(4, 8, jnp.int32(3))
+    m = np.asarray(m)
+    assert m.shape == (4, 12)
+    assert (m[:, :3] == 0).all()          # valid past
+    assert (m[:, 3:8] < -1e30).all()      # padding masked
+    assert m[0, 8] == 0 and m[0, 9] < -1e30  # causal frontier row 0
+    assert (m[3, 8:12] == 0).all()        # last row sees whole chunk
+
+
+# --- hypothesis sweeps -------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h_group=st.sampled_from([(1, 1), (2, 2), (4, 2), (8, 1), (8, 4)]),
+    tq=st.sampled_from([1, 8, 32, 64]),
+    past_pad=st.sampled_from([0, 32, 128]),
+    d=st.sampled_from([8, 32]),
+    frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_sweep(h_group, tq, past_pad, d, frac, seed):
+    h, hkv = h_group
+    past_len = int(round(frac * past_pad))
+    _check(h=h, hkv=hkv, tq=tq, past_pad=past_pad, past_len=past_len, d=d,
+           seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tq=st.sampled_from([8, 32]),
+    past_len=st.integers(0, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_bf16_sweep(tq, past_len, seed):
+    _check(h=4, hkv=2, tq=tq, past_pad=32, past_len=past_len, d=16,
+           seed=seed, dtype=jnp.bfloat16, rtol=5e-2, atol=5e-2)

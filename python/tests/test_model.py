@@ -1,0 +1,170 @@
+"""L2 correctness: the JAX model and the KV-Runahead chunking invariant.
+
+The decisive property (what makes KV-Runahead *correct*, paper Sec. 4.1):
+running the context in chunks, threading the KV-cache from one chunk to the
+next exactly as process i hands its cache to process i+1, must reproduce the
+single-shot prefill bit-for-bit up to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return M.TINY
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, seed=0)
+
+
+def _tokens(n, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, 256,
+                              dtype=jnp.int32)
+
+
+def chunked_prefill(cfg, params, tokens, splits, bucket):
+    """Reference KVR driver in python: run `tokens` in chunks per `splits`
+    (cumulative boundaries), carrying the padded KV cache forward."""
+    pk = jnp.zeros((cfg.layers, cfg.kv_heads, bucket, cfg.head_dim))
+    pv = jnp.zeros_like(pk)
+    past_len = 0
+    logits = None
+    bounds = [0] + list(splits) + [len(tokens)]
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        chunk = tokens[lo:hi]
+        cur_k = pk if past_len or bucket == 0 else pk[:, :, :0]
+        cur_v = pv if past_len or bucket == 0 else pv[:, :, :0]
+        pad = cur_k.shape[2]
+        logits, kc, vc = M.prefill_chunk(cfg, params, chunk, cur_k, cur_v,
+                                         jnp.int32(past_len))
+        pk = pk.at[:, :, past_len:past_len + (hi - lo)].set(kc)
+        pv = pv.at[:, :, past_len:past_len + (hi - lo)].set(vc)
+        past_len += hi - lo
+    return logits, pk, pv, past_len
+
+
+def test_param_inventory(cfg):
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    assert len(names) == len(set(names))
+    assert set(names) == set(shapes)
+    assert len(names) == 2 + 9 * cfg.layers + 1
+
+
+def test_param_count_is_tiny_but_real(cfg, params):
+    n = sum(int(np.prod(p.shape)) for p in params)
+    # ~3.4M parameters: big enough to be a real transformer, small enough
+    # to AOT-compile 15 buckets quickly.
+    assert 1_000_000 < n < 20_000_000
+
+
+def test_full_prefill_shapes(cfg, params):
+    toks = _tokens(64)
+    logits, kc, vc = M.full_prefill_reference(cfg, params, toks)
+    assert logits.shape == (cfg.vocab,)
+    assert kc.shape == (cfg.layers, cfg.kv_heads, 64, cfg.head_dim)
+    assert vc.shape == kc.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_chunked_equals_full_two_chunks(cfg, params):
+    toks = _tokens(96, seed=7)
+    full, _, _ = M.full_prefill_reference(cfg, params, toks)
+    chunked, _, _, _ = chunked_prefill(cfg, params, toks, [64], 128)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_chunked_equals_full_uneven_three_chunks(cfg, params):
+    # The paper's whole point: arbitrary *uneven* partitions must agree.
+    toks = _tokens(128, seed=11)
+    full, _, _ = M.full_prefill_reference(cfg, params, toks)
+    chunked, _, _, _ = chunked_prefill(cfg, params, toks, [48, 80], 128)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_kv_chunks_concatenate_to_full_cache(cfg, params):
+    toks = _tokens(96, seed=3)
+    _, kf, vf = M.full_prefill_reference(cfg, params, toks)
+    _, pk, pv, n = chunked_prefill(cfg, params, toks, [32], 128)
+    np.testing.assert_allclose(np.asarray(pk[:, :, :n]), np.asarray(kf),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(pv[:, :, :n]), np.asarray(vf),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_step_equals_incremental_prefill(cfg, params):
+    toks = _tokens(33, seed=5)
+    full, _, _ = M.full_prefill_reference(cfg, params, toks)
+    # prefill 32, then decode token 32 against the cache
+    logits, pk, pv, n = chunked_prefill(cfg, params, toks[:32], [], 128)
+    dl, _, _ = M.decode_step(cfg, params, toks[32:33], pk, pv, jnp.int32(32))
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(full),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_logits_depend_on_last_token(cfg, params):
+    t1 = _tokens(32, seed=1)
+    t2 = t1.at[-1].set((t1[-1] + 1) % 256)
+    l1, _, _ = M.full_prefill_reference(cfg, params, t1)
+    l2, _, _ = M.full_prefill_reference(cfg, params, t2)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_causality_future_tokens_do_not_affect_kv(cfg, params):
+    # K/V of position i must not change when a later token changes.
+    t1 = _tokens(64, seed=2)
+    t2 = t1.at[-1].set((t1[-1] + 1) % 256)
+    _, k1, v1 = M.full_prefill_reference(cfg, params, t1)
+    _, k2, v2 = M.full_prefill_reference(cfg, params, t2)
+    np.testing.assert_allclose(np.asarray(k1[:, :, :63]),
+                               np.asarray(k2[:, :, :63]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1[:, :, :63]),
+                               np.asarray(v2[:, :, :63]), rtol=1e-6)
+
+
+def test_rope_positions_matter(cfg, params):
+    # Same chunk at different past_len must yield different K (RoPE phase).
+    toks = _tokens(32, seed=4)
+    pad = 128
+    pk = jnp.zeros((cfg.layers, cfg.kv_heads, pad, cfg.head_dim))
+    _, k0, _ = M.prefill_chunk(cfg, params, toks, pk, pk, jnp.int32(0))
+    _, k16, _ = M.prefill_chunk(cfg, params, toks, pk, pk, jnp.int32(16))
+    assert not np.allclose(np.asarray(k0), np.asarray(k16))
+
+
+def test_mqa_and_mha_configs_run(cfg):
+    for kvh in (1, 4):  # MQA and MHA (heads=4 below)
+        c = M.ModelConfig(vocab=64, dim=64, layers=2, heads=4, kv_heads=kvh,
+                          ffn=128)
+        p = M.init_params(c, seed=1)
+        logits, kc, vc = M.full_prefill_reference(c, p, _tokens(16) % 64)
+        assert logits.shape == (64,)
+        assert kc.shape[1] == kvh
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.sampled_from([48, 96]),
+    cut_frac=st.floats(0.1, 0.9),
+    seed=st.integers(0, 1000),
+)
+def test_chunked_prefill_equivalence_sweep(n, cut_frac, seed):
+    cfg = M.ModelConfig(vocab=64, dim=64, layers=2, heads=4, kv_heads=2,
+                        ffn=128)
+    params = M.init_params(cfg, seed=0)
+    toks = _tokens(n, seed=seed) % 64
+    cut = max(1, min(n - 1, int(n * cut_frac)))
+    full, _, _ = M.full_prefill_reference(cfg, params, toks)
+    chunked, _, _, _ = chunked_prefill(cfg, params, toks, [cut], 128)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=5e-4, atol=5e-4)

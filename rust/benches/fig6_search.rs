@@ -1,0 +1,54 @@
+//! Fig. 6 — the partition search itself.
+//!
+//! (a) p=2 boundary sweep on a 16k context: TTFT(δ₁) is a valley with the
+//! optimum right of the even split (paper: δ₁ = +1536 → [0, 9728, 16384]).
+//! (b-d) hierarchical grid search levels for C=96 over 4 processes, the
+//! paper's toy example, plus the production-size 16k search.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::Evaluator;
+use kvr::net::Network;
+use kvr::partition::search::SearchConfig;
+use kvr::sim::kvr_timeline;
+
+fn main() {
+    let model = model_by_name("llama7b").unwrap();
+    let hw = hardware_by_name("a100-300gbps").unwrap();
+    let ev = Evaluator::new(model, hw);
+    let cm = ev.cm.clone();
+
+    println!("== Fig. 6 (a): TTFT vs delta_1, C=16384, p=2 ==");
+    let c = 16384;
+    for step in -4i64..=6 {
+        let d1 = step * 512;
+        let b = (c as i64 / 2 + d1) as usize;
+        let mut net = Network::new(2, cm.hw.net_bw, cm.hw.net_latency);
+        let sizes = [b, c - b];
+        let ttft = kvr_timeline(&cm, &mut net, &sizes).unwrap().ttft;
+        let bar = "#".repeat(((ttft - 2.5) * 80.0).max(0.0) as usize);
+        println!("  delta {:>6}: boundary {:>6}  TTFT {ttft:.4}  {bar}", d1, b);
+    }
+    let res2 = ev.search(c, 2, &SearchConfig::default()).unwrap();
+    println!("  ternary-search optimum: boundary {:?} TTFT {:.4} \
+              ({} evaluations; paper optimum [0, 9728, 16384])\n",
+             res2.partition.boundaries(), res2.ttft, res2.evaluations);
+
+    println!("== Fig. 6 (b-d): hierarchical grid search, C=96, p=4 ==");
+    let cfg = SearchConfig { min_stride: 1, ..Default::default() };
+    let res = ev.search(96, 4, &cfg).unwrap();
+    for (i, l) in res.levels.iter().enumerate() {
+        println!("  level {i}: stride {:>3}  evaluated {:>4}  best bounds \
+                  {:?}  TTFT {:.6}",
+                 l.stride, l.evaluated, l.best_boundaries, l.best_ttft);
+    }
+    println!("  final partition: {:?} (paper example result [0,28,70,96])\n",
+             res.partition.sizes());
+
+    println!("== production search: C=16384, p=4 ==");
+    let res = ev.search(16384, 4, &SearchConfig::default()).unwrap();
+    println!("  partition {:?}  ratios {:?}  TTFT {:.4}  evals {}",
+             res.partition.sizes(),
+             res.partition.ratios().iter().map(|r| (r * 100.0).round() / 100.0)
+                 .collect::<Vec<_>>(),
+             res.ttft, res.evaluations);
+}

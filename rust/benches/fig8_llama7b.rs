@@ -1,0 +1,93 @@
+//! Fig. 8 — Llama 7B TTFT: TSP vs KVR-E vs KVR-S.
+//!
+//! (a-c) 300 GB/s at p ∈ {2,4,8} over 4k–16k contexts (TSP OOMs at
+//! 16k/p=2), (d) scalability vs the TTFT(p)/TTFT*(p) lower bounds at 16k,
+//! (e,f) the 10 GB/s low-bandwidth setups where the KVR gap widens.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::{Evaluator, Method};
+use kvr::sim::kvr_zero_comm;
+
+fn ttft_cell(ev: &mut Evaluator, m: Method, c: usize, p: usize) -> String {
+    let e = ev.evaluate(m, c, p, None).unwrap();
+    if e.oom {
+        "OOM".into()
+    } else {
+        format!("{:.3}", e.ttft)
+    }
+}
+
+fn main() {
+    let model = model_by_name("llama7b").unwrap();
+
+    println!("== Fig. 8 (a-c): Llama 7B, 300 GB/s, TTFT seconds ==");
+    println!("{:>6} {:>5} | {:>8} {:>8} {:>8} | {:>9}", "ctx", "p", "TSP",
+             "KVR-E", "KVR-S", "S vs TSP");
+    let hw = hardware_by_name("a100-300gbps").unwrap();
+    let mut ev = Evaluator::new(model.clone(), hw);
+    for p in [2usize, 4, 8] {
+        for c in [4096usize, 8192, 12288, 16384] {
+            let tsp = ev.evaluate(Method::Tsp, c, p, None).unwrap();
+            let kvrs = ev.evaluate(Method::KvrS, c, p, None).unwrap();
+            let speedup = if tsp.oom {
+                "TSP OOM".into()
+            } else {
+                format!("{:.2}x", tsp.ttft / kvrs.ttft)
+            };
+            println!("{:>6} {:>5} | {:>8} {:>8} {:>8} | {:>9}", c, p,
+                     ttft_cell(&mut ev, Method::Tsp, c, p),
+                     ttft_cell(&mut ev, Method::KvrE, c, p),
+                     ttft_cell(&mut ev, Method::KvrS, c, p),
+                     speedup);
+        }
+        println!();
+    }
+    println!("paper: KVR-S 1.42x @ (4 GPU, 12k-16k), 1.41x @ (8 GPU, 16k); \
+              TSP OOM @ (2 GPU, 16k)\n");
+
+    println!("== Fig. 8 (d): scalability at 16k (TTFT seconds vs p) ==");
+    println!("{:>4} {:>8} {:>8} {:>8} | {:>8} {:>8}", "p", "TSP", "KVR-E",
+             "KVR-S", "TTFT(p)", "TTFT*(p)");
+    let c = 16384;
+    for p in [1usize, 2, 4, 8] {
+        if p == 1 {
+            let single = ev.evaluate(Method::Single, c, 1, None).unwrap();
+            println!("{:>4} {:>8.3} {:>8} {:>8} | {:>8.3} {:>8.3}", p,
+                     single.ttft, "-", "-", single.ttft,
+                     ev.cm.ttft_single(c));
+            continue;
+        }
+        let tsp = ev.evaluate(Method::Tsp, c, p, None).unwrap();
+        let kvre = ev.evaluate(Method::KvrE, c, p, None).unwrap();
+        let kvrs = ev.evaluate(Method::KvrS, c, p, None).unwrap();
+        // Practical bound TTFT(p): KVR-S partition with zero-cost comm.
+        let part = ev.searched_partition(c, p).unwrap();
+        let bound = kvr_zero_comm(&ev.cm, part.sizes()).unwrap().ttft;
+        let star = ev.cm.ttft_star(c, p);
+        let tsp_cell =
+            if tsp.oom { "OOM".into() } else { format!("{:.3}", tsp.ttft) };
+        println!("{:>4} {:>8} {:>8.3} {:>8.3} | {:>8.3} {:>8.3}", p, tsp_cell,
+                 kvre.ttft, kvrs.ttft, bound, star);
+    }
+    println!("paper: KVR-S within 17% of TTFT(p); TTFT*(p) tight until \
+              the non-parallelizable part dominates at p=8\n");
+
+    println!("== Fig. 8 (e,f): Llama 7B, 10 GB/s, TTFT seconds ==");
+    println!("{:>6} {:>5} | {:>8} {:>8} {:>8} | {:>9}", "ctx", "p", "TSP",
+             "KVR-E", "KVR-S", "S vs TSP");
+    let hw_lo = hardware_by_name("a100-10gbps").unwrap();
+    let mut ev_lo = Evaluator::new(model, hw_lo);
+    for p in [4usize, 8] {
+        for c in [8192usize, 12288, 16384] {
+            let tsp = ev_lo.evaluate(Method::Tsp, c, p, None).unwrap();
+            let kvrs = ev_lo.evaluate(Method::KvrS, c, p, None).unwrap();
+            println!("{:>6} {:>5} | {:>8} {:>8} {:>8} | {:>8.2}x", c, p,
+                     ttft_cell(&mut ev_lo, Method::Tsp, c, p),
+                     ttft_cell(&mut ev_lo, Method::KvrE, c, p),
+                     ttft_cell(&mut ev_lo, Method::KvrS, c, p),
+                     tsp.ttft / kvrs.ttft);
+        }
+    }
+    println!("paper: up to 1.55x (4 GPU, 8k) and 1.79x (4 GPU, 12k) on \
+              the 10 GB/s fabric");
+}

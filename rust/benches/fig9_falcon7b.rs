@@ -1,0 +1,34 @@
+//! Fig. 9 — Falcon 7B (MQA) TTFT: TSP vs KVR-E vs KVR-S at 4k/8k.
+//!
+//! The paper's point here: with the short 4k context KVR-E's gains cancel
+//! against chain-wait overheads, but KVR-S (load-balanced) still wins —
+//! 1.37x/1.47x at 4/8 GPUs, up to 1.63x at 8k.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::{Evaluator, Method};
+
+fn main() {
+    let model = model_by_name("falcon7b").unwrap();
+    for hw_name in ["a100-300gbps", "a100-10gbps"] {
+        let hw = hardware_by_name(hw_name).unwrap();
+        let mut ev = Evaluator::new(model.clone(), hw);
+        println!("== Fig. 9: Falcon 7B on {hw_name}, TTFT seconds ==");
+        println!("{:>6} {:>5} | {:>8} {:>8} {:>8} | {:>8} {:>8}", "ctx", "p",
+                 "TSP", "KVR-E", "KVR-S", "E vs TSP", "S vs TSP");
+        for p in [4usize, 8] {
+            for c in [4096usize, 8192] {
+                let tsp = ev.evaluate(Method::Tsp, c, p, None).unwrap();
+                let kvre = ev.evaluate(Method::KvrE, c, p, None).unwrap();
+                let kvrs = ev.evaluate(Method::KvrS, c, p, None).unwrap();
+                println!(
+                    "{:>6} {:>5} | {:>8.3} {:>8.3} {:>8.3} | {:>7.2}x {:>7.2}x",
+                    c, p, tsp.ttft, kvre.ttft, kvrs.ttft,
+                    tsp.ttft / kvre.ttft, tsp.ttft / kvrs.ttft
+                );
+            }
+        }
+        println!();
+    }
+    println!("paper: KVR-S 1.26x (4k) .. 1.63x (8k); KVR-E ~1.0x at 4k \
+              (unbalanced chain wait cancels the savings)");
+}

@@ -1,0 +1,103 @@
+//! Microbenchmarks of the L3 hot paths (in-repo criterion-style harness,
+//! `util::stats::Bench`) + exact traffic validation of paper Eqs. 4-7.
+//!
+//! These are the §Perf numbers in EXPERIMENTS.md: simulator throughput,
+//! search cost, network/collective ops, partition arithmetic, JSON parse.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::{Evaluator, Method};
+use kvr::net::{collective::ring_all_gather, Network};
+use kvr::partition::search::SearchConfig;
+use kvr::partition::Partition;
+use kvr::runtime::KvCache;
+use kvr::sim::cost::CostModel;
+use kvr::sim::{kvr_timeline, tsp_timeline};
+use kvr::util::json::Json;
+use kvr::util::stats::Bench;
+
+fn main() {
+    let model = model_by_name("llama7b").unwrap();
+    let hw = hardware_by_name("a100-300gbps").unwrap();
+    let cm = CostModel::new(model.clone(), hw.clone());
+
+    println!("== traffic identities (Eqs. 4-7) ==");
+    for p in [2usize, 4, 8] {
+        let c = 8192;
+        let mut net = Network::new(p, hw.net_bw, hw.net_latency);
+        let tsp = tsp_timeline(&cm, &mut net, c).unwrap();
+        let mut net = Network::new(p, hw.net_bw, hw.net_latency);
+        let part = Partition::even(c, p).into_sizes();
+        let kvr = kvr_timeline(&cm, &mut net, &part).unwrap();
+        let per_layer_tsp = tsp.net_kv_entries / model.layers as f64;
+        let per_layer_kvr = kvr.net_kv_entries / model.layers as f64;
+        println!(
+            "  p={p}: Net_tsp {per_layer_tsp:>8.0} (=(p-1)C={})  Net_kvr \
+             {per_layer_kvr:>8.0} (=(p-1)C/2={})  ratio {:.3}",
+            (p - 1) * c, (p - 1) * c / 2, per_layer_tsp / per_layer_kvr
+        );
+    }
+    println!();
+
+    println!("== L3 hot paths ==");
+    let bench = Bench::new(3, 30);
+    let cm2 = cm.clone();
+    bench.report("sim: kvr_timeline llama7b 16k p=8", move || {
+        let mut net = Network::new(8, 300e9, 8e-6);
+        let part = Partition::even(16384, 8).into_sizes();
+        kvr_timeline(&cm2, &mut net, &part).unwrap().ttft
+    });
+    let cm3 = cm.clone();
+    bench.report("sim: tsp_timeline llama7b 16k p=8", move || {
+        let mut net = Network::new(8, 300e9, 8e-6);
+        tsp_timeline(&cm3, &mut net, 16384).unwrap().ttft
+    });
+    let ev_model = model.clone();
+    let ev_hw = hw.clone();
+    Bench::new(1, 5).report("search: hierarchical 16k p=4", move || {
+        let ev = Evaluator::new(ev_model.clone(), ev_hw.clone());
+        ev.search(16384, 4, &SearchConfig::default()).unwrap().ttft
+    });
+    let ev_model = model.clone();
+    let ev_hw = hw.clone();
+    Bench::new(1, 5).report("search: coordinate 16k p=8", move || {
+        let ev = Evaluator::new(ev_model.clone(), ev_hw.clone());
+        ev.search(16384, 8, &SearchConfig::default()).unwrap().ttft
+    });
+    bench.report("net: ring all-gather p=8", || {
+        let mut net = Network::new(8, 300e9, 8e-6);
+        let shard = vec![1e6f64; 8];
+        ring_all_gather(&mut net, &shard, &shard, &vec![0.0; 8]).unwrap().finish
+    });
+    bench.report("partition: even+prefixes 16k p=8", || {
+        let p = Partition::even(16384, 8);
+        (p.prefixes().last().copied(), p.ratios().len())
+    });
+    bench.report("kvcache: append 32-token chunk (tiny model)", || {
+        let mut cache = KvCache::new(4, 4, 32, 512);
+        let chunk = vec![0.5f32; 4 * 4 * 32 * 32];
+        cache.append_chunk(32, &chunk, &chunk).unwrap();
+        cache.tokens
+    });
+    bench.report("kvcache: wire roundtrip 512 tokens (tiny model)", || {
+        let mut cache = KvCache::new(4, 4, 32, 512);
+        let chunk = vec![0.5f32; 4 * 4 * 512 * 32];
+        cache.append_chunk(512, &chunk, &chunk).unwrap();
+        let wire = cache.to_wire();
+        KvCache::from_wire(4, 4, 32, 512, &wire).unwrap().tokens
+    });
+    let manifest_text =
+        std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = manifest_text {
+        bench.report("json: parse manifest.json", move || {
+            Json::parse(&text).unwrap()
+        });
+    }
+
+    println!("\n== method evaluation throughput (drives the sweeps) ==");
+    let mut ev = Evaluator::new(model, hw);
+    ev.searched_partition(16384, 8).unwrap(); // warm the cache
+    let b = Bench::new(3, 50);
+    b.report("evaluate KVR-S 16k p=8 (cached search)", move || {
+        ev.evaluate(Method::KvrS, 16384, 8, None).unwrap().ttft
+    });
+}

@@ -1,0 +1,68 @@
+//! Table 1 — TSP vs KVR-S across the model zoo (Llama 7B/13B/30B,
+//! Falcon 1B/7B), 1k-16k contexts, 4 and 8 GPUs, 300 GB/s fabric.
+//! Paper speedups are printed alongside for direct comparison.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::{Evaluator, Method};
+
+/// (model, ctx, paper speedup @4 GPUs, paper speedup @8 GPUs); None where
+/// the paper has no entry.
+const PAPER: &[(&str, usize, Option<f64>, Option<f64>)] = &[
+    ("llama7b", 1024, Some(1.11), Some(1.19)),
+    ("llama7b", 2048, Some(1.11), Some(1.14)),
+    ("llama7b", 4096, Some(1.17), Some(1.14)),
+    ("llama7b", 8192, Some(1.30), Some(1.36)),
+    ("llama7b", 12288, Some(1.39), Some(1.37)),
+    ("llama7b", 16384, Some(1.42), Some(1.41)),
+    ("llama13b", 1024, Some(1.12), Some(1.16)),
+    ("llama13b", 2048, Some(1.09), Some(1.17)),
+    ("llama13b", 4096, Some(1.12), Some(1.17)),
+    ("llama13b", 8192, Some(1.27), Some(1.35)),
+    ("llama13b", 12288, Some(1.36), Some(1.37)),
+    ("llama13b", 16384, Some(1.41), Some(1.39)),
+    ("llama30b", 1024, Some(1.08), Some(1.19)),
+    ("llama30b", 2048, Some(1.06), Some(1.19)),
+    ("falcon1b", 1024, Some(1.18), Some(1.23)),
+    ("falcon1b", 2048, Some(1.12), Some(1.23)),
+    ("falcon1b", 4096, Some(1.26), Some(1.21)),
+    ("falcon1b", 8192, Some(1.28), Some(1.58)),
+    ("falcon7b", 1024, Some(1.12), Some(1.24)),
+    ("falcon7b", 2048, Some(1.13), Some(1.20)),
+    ("falcon7b", 4096, Some(1.30), Some(1.47)),
+    ("falcon7b", 8192, Some(1.46), Some(1.63)),
+];
+
+fn main() {
+    let hw = hardware_by_name("a100-300gbps").unwrap();
+    println!("== Table 1: TSP vs KVR-S, 300 GB/s (TTFT s; speedup x) ==");
+    println!(
+        "{:<10} {:>6} | {:>7} {:>7} {:>6} {:>6} | {:>7} {:>7} {:>6} {:>6}",
+        "model", "ctx", "TSP/4", "KVRS/4", "x4", "pap4", "TSP/8", "KVRS/8",
+        "x8", "pap8"
+    );
+    let mut current = String::new();
+    let mut ev: Option<Evaluator> = None;
+    for &(name, c, paper4, paper8) in PAPER {
+        if name != current {
+            current = name.to_string();
+            ev = Some(Evaluator::new(model_by_name(name).unwrap(), hw.clone()));
+        }
+        let ev = ev.as_mut().unwrap();
+        let mut cells = Vec::new();
+        let mut speeds = Vec::new();
+        for p in [4usize, 8] {
+            let tsp = ev.evaluate(Method::Tsp, c, p, None).unwrap();
+            let kvrs = ev.evaluate(Method::KvrS, c, p, None).unwrap();
+            cells.push((tsp.ttft, kvrs.ttft));
+            speeds.push(tsp.ttft / kvrs.ttft);
+        }
+        let fmt_paper =
+            |x: Option<f64>| x.map_or("-".into(), |v| format!("{v:.2}"));
+        println!(
+            "{:<10} {:>6} | {:>7.3} {:>7.3} {:>5.2}x {:>6} | {:>7.3} {:>7.3} \
+             {:>5.2}x {:>6}",
+            name, c, cells[0].0, cells[0].1, speeds[0], fmt_paper(paper4),
+            cells[1].0, cells[1].1, speeds[1], fmt_paper(paper8)
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! Table 3 / Appendix B — when does parallel inference help at all?
+//!
+//! KVR-S TTFT vs the single-GPU baseline on 10 GB/s and 1 GB/s fabrics.
+//! The paper's observation: beneficial cells form a lower triangle (long
+//! context x decent bandwidth); with 1 GB/s links more GPUs can *hurt*.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::engines::{Evaluator, Method};
+
+const PAPER: &[(usize, f64, [f64; 4])] = &[
+    // (ctx, base-1GPU, [10GB/2, 10GB/4, 1GB/2, 1GB/4])
+    (1024, 0.10, [0.10, 0.10, 0.11, 0.19]),
+    (2048, 0.24, [0.16, 0.19, 0.21, 0.35]),
+    (4096, 0.65, [0.38, 0.36, 0.84, 0.93]),
+    (8192, 1.95, [0.99, 0.72, 1.31, 2.06]),
+    (12288, 3.95, [1.82, 1.15, 2.28, 2.30]),
+];
+
+fn main() {
+    let model = model_by_name("llama7b").unwrap();
+    let mut base =
+        Evaluator::new(model.clone(), hardware_by_name("a100-10gbps").unwrap());
+    let mut lo =
+        Evaluator::new(model.clone(), hardware_by_name("a100-10gbps").unwrap());
+    let mut poor =
+        Evaluator::new(model, hardware_by_name("a100-1gbps").unwrap());
+
+    println!("== Table 3: KVR-S TTFT (s); * marks beneficial vs 1 GPU ==");
+    println!("{:>6} | {:>8} | {:>9} {:>9} | {:>9} {:>9} | paper row", "ctx",
+             "1 GPU", "10GB/2", "10GB/4", "1GB/2", "1GB/4");
+    for &(c, paper_base, paper_cells) in PAPER {
+        let single = base.evaluate(Method::Single, c, 1, None).unwrap().ttft;
+        let mut cells = Vec::new();
+        for (which, p) in [(0usize, 2usize), (0, 4), (1, 2), (1, 4)] {
+            let ev = if which == 0 { &mut lo } else { &mut poor };
+            let t = ev.evaluate(Method::KvrS, c, p, None).unwrap().ttft;
+            let mark = if t < single { "*" } else { " " };
+            cells.push(format!("{t:>8.3}{mark}"));
+        }
+        println!(
+            "{:>6} | {:>8.3} | {} {} | {} {} | base {:.2} {:?}",
+            c, single, cells[0], cells[1], cells[2], cells[3], paper_base,
+            paper_cells
+        );
+    }
+    println!("\npaper: beneficial cells form a lower triangle; at 1 GB/s \
+              going 2->4 GPUs degrades TTFT (e.g. 2k: 0.16 -> 0.19 at \
+              10 GB/s)");
+}

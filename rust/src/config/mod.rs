@@ -1,0 +1,236 @@
+//! Model / hardware / run configuration.
+//!
+//! The paper evaluates Llama 7B/13B/30B and Falcon 1B/7B on 8× A100 under
+//! 300 GB/s, 10 GB/s, and 1 GB/s interconnects. Those testbeds are encoded
+//! here as presets consumed by the cost model (`sim::cost`), the partition
+//! search, and the benches. The `tiny` preset mirrors
+//! `python/compile/model.py::TINY` — the model that actually runs through
+//! PJRT in the real path.
+
+mod presets;
+
+pub use presets::{hardware_preset, model_preset, HW_PRESETS, MODEL_PRESETS};
+
+use crate::error::{Error, Result};
+
+/// Attention sharing scheme (paper Appendix A, Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnKind {
+    /// Multi-head: one KV head per query head.
+    Mha,
+    /// Grouped-query: `kv_heads < heads` shared groups.
+    Gqa,
+    /// Multi-query: a single shared KV head.
+    Mqa,
+}
+
+/// Architecture shape of a causal decoder LLM — everything the analytic
+/// cost model needs (FLOP and byte counts depend on shapes only).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub layers: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    /// Bytes per element at inference precision (2 = fp16, paper Sec. 5).
+    pub bytes_per_el: usize,
+}
+
+impl ModelConfig {
+    pub fn attn_kind(&self) -> AttnKind {
+        if self.kv_heads == 1 {
+            AttnKind::Mqa
+        } else if self.kv_heads == self.heads {
+            AttnKind::Mha
+        } else {
+            AttnKind::Gqa
+        }
+    }
+
+    /// Width of the KV projection output (per token, per layer, K or V).
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Width of the Q projection output.
+    pub fn q_dim(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Bytes of (K,V) cache per token per layer — the unit of KV-Runahead
+    /// network traffic.
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
+        2 * self.kv_dim() * self.bytes_per_el
+    }
+
+    /// Bytes of (K,V) cache per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.kv_bytes_per_token_layer() * self.layers
+    }
+
+    /// Total parameter count (embedding + blocks + head).
+    pub fn param_count(&self) -> usize {
+        let d = self.dim;
+        let per_layer = d * self.q_dim()            // wq
+            + 2 * d * self.kv_dim()                 // wk, wv
+            + self.q_dim() * d                      // wo
+            + 3 * d * self.ffn                      // gate, up, down
+            + 2 * d;                                // two norms
+        self.vocab * d * 2 + self.layers * per_layer + d
+    }
+
+    /// Weight bytes at inference precision.
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count() * self.bytes_per_el
+    }
+
+    /// Clone with a different KV head count (MQA/GQA ablations, Table 2).
+    pub fn with_kv_heads(&self, kv_heads: usize, suffix: &str) -> ModelConfig {
+        let mut m = self.clone();
+        assert!(self.heads % kv_heads == 0, "kv_heads must divide heads");
+        m.kv_heads = kv_heads;
+        m.name = format!("{}-{}", self.name, suffix);
+        m
+    }
+}
+
+/// One compute fabric (the paper's "process is exclusively mapped to one
+/// GPU") plus the interconnect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareConfig {
+    pub name: String,
+    /// Peak dense-GEMM throughput at inference precision (FLOP/s).
+    pub peak_flops: f64,
+    /// Achievable fraction of peak for large GEMMs.
+    pub gemm_eff: f64,
+    /// Achievable fraction of peak for attention (score+context matmuls),
+    /// typically lower than GEMM due to softmax and memory traffic.
+    pub attn_eff: f64,
+    /// Device memory capacity in bytes (A100-80G).
+    pub mem_bytes: f64,
+    /// HBM bandwidth (bytes/s) — bounds the memory-bound extension phase.
+    pub mem_bw: f64,
+    /// Point-to-point interconnect bandwidth (bytes/s per direction).
+    pub net_bw: f64,
+    /// Per-message interconnect latency (s).
+    pub net_latency: f64,
+    /// Fixed non-parallelizable runtime cost per forward pass (framework,
+    /// tokenizer, sampler) — the reason Fig. 8(d) saturates at 8 GPUs and
+    /// short contexts sit at ~0.1 s in Table 1.
+    pub base_overhead: f64,
+    /// Per-layer launch/dispatch overhead (s).
+    pub layer_overhead: f64,
+}
+
+impl HardwareConfig {
+    /// Same fabric with a different interconnect tier (paper's 300/10/1
+    /// GB/s setups — they toggle the CUDA-direct link, we swap `net_bw`).
+    pub fn with_net(&self, bw: f64, latency: f64, name: &str) -> HardwareConfig {
+        let mut h = self.clone();
+        h.net_bw = bw;
+        h.net_latency = latency;
+        h.name = format!("{}-{}", self.name, name);
+        h
+    }
+}
+
+/// Parse a model preset by CLI name.
+pub fn model_by_name(name: &str) -> Result<ModelConfig> {
+    model_preset(name)
+        .ok_or_else(|| Error::Config(format!(
+            "unknown model `{name}` (have: {})",
+            MODEL_PRESETS.join(", ")
+        )))
+}
+
+/// Parse a hardware preset by CLI name.
+pub fn hardware_by_name(name: &str) -> Result<HardwareConfig> {
+    hardware_preset(name)
+        .ok_or_else(|| Error::Config(format!(
+            "unknown hardware `{name}` (have: {})",
+            HW_PRESETS.join(", ")
+        )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_parameter_count_is_about_7b() {
+        let m = model_by_name("llama7b").unwrap();
+        let n = m.param_count() as f64;
+        assert!((6.0e9..8.0e9).contains(&n), "param count {n}");
+        assert_eq!(m.attn_kind(), AttnKind::Mha);
+    }
+
+    #[test]
+    fn llama13b_and_30b_scale_up() {
+        let m7 = model_by_name("llama7b").unwrap().param_count();
+        let m13 = model_by_name("llama13b").unwrap().param_count();
+        let m30 = model_by_name("llama30b").unwrap().param_count();
+        assert!(m7 < m13 && m13 < m30);
+        assert!((11.0e9..15.0e9).contains(&(m13 as f64)), "{m13}");
+        assert!((28.0e9..36.0e9).contains(&(m30 as f64)), "{m30}");
+    }
+
+    #[test]
+    fn falcon7b_is_mqa() {
+        let m = model_by_name("falcon7b").unwrap();
+        assert_eq!(m.attn_kind(), AttnKind::Mqa);
+        let n = m.param_count() as f64;
+        assert!((5.5e9..8.5e9).contains(&n), "param count {n}");
+    }
+
+    #[test]
+    fn gqa_variant_reduces_kv_traffic() {
+        let m = model_by_name("llama7b").unwrap();
+        let gqa = m.with_kv_heads(8, "gqa8");
+        let mqa = m.with_kv_heads(1, "mqa");
+        assert_eq!(gqa.attn_kind(), AttnKind::Gqa);
+        assert_eq!(mqa.attn_kind(), AttnKind::Mqa);
+        assert!(gqa.kv_bytes_per_token() < m.kv_bytes_per_token());
+        assert!(mqa.kv_bytes_per_token() < gqa.kv_bytes_per_token());
+        // MQA shrinks KV traffic by exactly heads×.
+        assert_eq!(m.kv_bytes_per_token(), mqa.kv_bytes_per_token() * m.heads);
+    }
+
+    #[test]
+    fn tiny_matches_python_model() {
+        let m = model_by_name("tiny").unwrap();
+        assert_eq!((m.layers, m.dim, m.heads, m.kv_heads, m.ffn, m.vocab),
+                   (4, 256, 8, 4, 768, 384));
+        assert_eq!(m.head_dim, 32);
+    }
+
+    #[test]
+    fn hardware_presets_resolve() {
+        for name in HW_PRESETS {
+            let h = hardware_by_name(name).unwrap();
+            assert!(h.peak_flops > 0.0 && h.net_bw > 0.0);
+        }
+        assert!(hardware_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn a100_net_tiers() {
+        let hi = hardware_by_name("a100-300gbps").unwrap();
+        let lo = hardware_by_name("a100-10gbps").unwrap();
+        let poor = hardware_by_name("a100-1gbps").unwrap();
+        assert_eq!(hi.net_bw, 300e9);
+        assert_eq!(lo.net_bw, 10e9);
+        assert_eq!(poor.net_bw, 1e9);
+        assert_eq!(hi.peak_flops, lo.peak_flops);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama7b() {
+        // 2 (K,V) * 4096 * 2 bytes * 32 layers = 1 MiB per token.
+        let m = model_by_name("llama7b").unwrap();
+        assert_eq!(m.kv_bytes_per_token(), 2 * 4096 * 2 * 32);
+    }
+}

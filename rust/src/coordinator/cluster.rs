@@ -1,0 +1,466 @@
+//! Worker cluster: the real-execution KV-Runahead chain.
+//!
+//! `p` worker threads each own a PJRT [`Engine`] (non-`Send`, one client
+//! per thread — the paper's process-per-GPU topology). A parallel prefill
+//! follows Fig. 5 exactly:
+//!
+//! 1. the leader partitions the prompt (even / ratio / LUT policy, rounded
+//!    to the compiled chunk granularity),
+//! 2. every worker computes K/V for its chunk through the AOT executables,
+//! 3. worker i hands the *accumulated, contiguous* cache to worker i+1
+//!    over a point-to-point channel (`KvCache::to_wire`, valid rows only —
+//!    the traffic of Eq. 6),
+//! 4. the last worker emits the first-token logits and keeps the cache
+//!    (backed by its [`KvPool`] slab) for the extension phase.
+//!
+//! Decode steps route to the cache-owning worker. All timing is wall-clock
+//! (the simulator in `crate::sim` models the paper's A100 fabric; this
+//! path proves the system end-to-end on the host CPU).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::kvpool::KvPool;
+use crate::error::{Error, Result};
+use crate::partition::{lut::PartitionLut, Partition};
+use crate::runtime::{Engine, KvCache, Manifest};
+
+/// How the leader splits a prompt across workers.
+#[derive(Clone, Debug)]
+pub enum PartitionPolicy {
+    /// KVR-E: even chunks (rounded to granularity).
+    Even,
+    /// KVR-S: fixed searched ratios.
+    Ratios(Vec<f64>),
+    /// KVR-P: interpolate ratios from a lookup table per context length.
+    Lut(PartitionLut),
+}
+
+struct CacheMsg {
+    req_id: u64,
+    tokens: usize,
+    wire: Vec<u8>,
+}
+
+enum WorkerCmd {
+    Prefill {
+        req_id: u64,
+        tokens: Vec<i32>,
+        first: bool,
+        last: bool,
+    },
+    Decode {
+        req_id: u64,
+        token: i32,
+    },
+    Release {
+        req_id: u64,
+    },
+    Shutdown,
+}
+
+enum WorkerReply {
+    Started {
+        worker: usize,
+        result: std::result::Result<(), String>,
+    },
+    PrefillDone {
+        worker: usize,
+        req_id: u64,
+        /// Logits from the last worker only.
+        logits: Option<Vec<f32>>,
+        /// Accumulated cache rows after this worker's chunk (diagnostics).
+        #[allow(dead_code)]
+        cache_tokens: usize,
+        compute_s: f64,
+    },
+    DecodeDone {
+        req_id: u64,
+        logits: Vec<f32>,
+    },
+    Released {
+        req_id: u64,
+    },
+    Failed {
+        req_id: u64,
+        msg: String,
+    },
+}
+
+struct WorkerCtx {
+    index: usize,
+    warmup: bool,
+    art_dir: PathBuf,
+    cmd_rx: Receiver<WorkerCmd>,
+    reply_tx: Sender<WorkerReply>,
+    prev_rx: Option<Receiver<CacheMsg>>,
+    next_tx: Option<Sender<CacheMsg>>,
+    pool_tokens: usize,
+}
+
+fn worker_main(ctx: WorkerCtx) {
+    let engine = match Engine::new(&ctx.art_dir).and_then(|e| {
+        if ctx.warmup {
+            // Move every bucket compilation off the request path (§Perf:
+            // first-request TTFT 2.7 s -> ~25 ms on this host).
+            e.warmup_all()?;
+        }
+        Ok(e)
+    }) {
+        Ok(e) => {
+            let _ = ctx
+                .reply_tx
+                .send(WorkerReply::Started { worker: ctx.index, result: Ok(()) });
+            e
+        }
+        Err(e) => {
+            let _ = ctx.reply_tx.send(WorkerReply::Started {
+                worker: ctx.index,
+                result: Err(e.to_string()),
+            });
+            return;
+        }
+    };
+    let mut pool = KvPool::new(ctx.pool_tokens);
+    // req_id -> (cache, pool slab id).
+    let mut active: HashMap<u64, (KvCache, u64)> = HashMap::new();
+
+    while let Ok(cmd) = ctx.cmd_rx.recv() {
+        match cmd {
+            WorkerCmd::Shutdown => break,
+            WorkerCmd::Release { req_id } => {
+                if let Some((_, slab)) = active.remove(&req_id) {
+                    let _ = pool.release(slab);
+                }
+                let _ = ctx.reply_tx.send(WorkerReply::Released { req_id });
+            }
+            WorkerCmd::Decode { req_id, token } => {
+                let reply = (|| -> Result<Vec<f32>> {
+                    let (cache, slab) = active.get_mut(&req_id).ok_or_else(|| {
+                        Error::Coordinator(format!("no cache for request {req_id}"))
+                    })?;
+                    let out = engine.decode_step(token, cache)?;
+                    cache.append_chunk(1, &out.k_chunk, &out.v_chunk)?;
+                    if cache.tokens > pool.get(*slab).map(|s| s.len).unwrap_or(0) {
+                        let (new_slab, _moved) = pool.grow(*slab, cache.tokens + 32)?;
+                        *slab = new_slab.id;
+                    }
+                    Ok(out.logits)
+                })();
+                let _ = match reply {
+                    Ok(logits) => ctx
+                        .reply_tx
+                        .send(WorkerReply::DecodeDone { req_id, logits }),
+                    Err(e) => ctx.reply_tx.send(WorkerReply::Failed {
+                        req_id,
+                        msg: e.to_string(),
+                    }),
+                };
+            }
+            WorkerCmd::Prefill { req_id, tokens, first, last } => {
+                let t0 = Instant::now();
+                let outcome = (|| -> Result<(Option<Vec<f32>>, usize)> {
+                    // (1) Receive the accumulated cache from the
+                    //     predecessor (the chain's point-to-point recv).
+                    let cache = if first {
+                        engine.empty_cache()
+                    } else {
+                        let rx = ctx.prev_rx.as_ref().ok_or_else(|| {
+                            Error::Coordinator("chain recv on worker 0".into())
+                        })?;
+                        let msg = rx.recv().map_err(|_| {
+                            Error::Coordinator("chain sender disconnected".into())
+                        })?;
+                        if msg.req_id != req_id {
+                            return Err(Error::Coordinator(format!(
+                                "chain message for {} while prefilling {req_id}",
+                                msg.req_id
+                            )));
+                        }
+                        let m = &engine.manifest.model;
+                        KvCache::from_wire(
+                            m.layers, m.kv_heads, m.head_dim, msg.tokens,
+                            &msg.wire,
+                        )?
+                    };
+                    // (2) Run the local chunk through the AOT buckets.
+                    let (logits, cache) = engine.prefill(&tokens, cache)?;
+                    // (3) Forward the accumulated cache, or keep it (last).
+                    if last {
+                        let slab = pool.alloc(cache.tokens + 32)?;
+                        let n = cache.tokens;
+                        active.insert(req_id, (cache, slab.id));
+                        Ok((Some(logits), n))
+                    } else {
+                        let tx = ctx.next_tx.as_ref().ok_or_else(|| {
+                            Error::Coordinator("chain send on last worker".into())
+                        })?;
+                        let n = cache.tokens;
+                        tx.send(CacheMsg {
+                            req_id,
+                            tokens: n,
+                            wire: cache.to_wire(),
+                        })
+                        .map_err(|_| {
+                            Error::Coordinator("chain receiver disconnected".into())
+                        })?;
+                        Ok((None, n))
+                    }
+                })();
+                let _ = match outcome {
+                    Ok((logits, cache_tokens)) => {
+                        ctx.reply_tx.send(WorkerReply::PrefillDone {
+                            worker: ctx.index,
+                            req_id,
+                            logits,
+                            cache_tokens,
+                            compute_s: t0.elapsed().as_secs_f64(),
+                        })
+                    }
+                    Err(e) => ctx.reply_tx.send(WorkerReply::Failed {
+                        req_id,
+                        msg: e.to_string(),
+                    }),
+                };
+            }
+        }
+    }
+}
+
+/// Outcome of one parallel prefill.
+#[derive(Clone, Debug)]
+pub struct PrefillResult {
+    pub logits: Vec<f32>,
+    /// Wall-clock seconds from dispatch to first-token logits (real TTFT
+    /// on this host).
+    pub ttft: f64,
+    /// Worker that owns the cache for the extension phase.
+    pub owner: usize,
+    /// The partition actually used.
+    pub partition: Vec<usize>,
+    /// Per-worker compute seconds (diagnostics).
+    pub worker_compute: Vec<f64>,
+}
+
+/// The worker cluster (leader-side handle).
+pub struct Cluster {
+    cmd_txs: Vec<Sender<WorkerCmd>>,
+    reply_rx: Receiver<WorkerReply>,
+    handles: Vec<JoinHandle<()>>,
+    pub manifest: Manifest,
+    /// Stray replies not yet claimed (chain prefill answers arrive in any
+    /// worker order).
+    pending: Vec<WorkerReply>,
+}
+
+impl Cluster {
+    /// Spawn `p` workers over the artifact directory (lazy compilation).
+    pub fn new(art_dir: &Path, p: usize) -> Result<Cluster> {
+        Self::new_opts(art_dir, p, false)
+    }
+
+    /// Spawn `p` workers, optionally pre-compiling every shape bucket at
+    /// startup so no compilation happens on the request path.
+    pub fn new_opts(art_dir: &Path, p: usize, warmup: bool) -> Result<Cluster> {
+        if p == 0 {
+            return Err(Error::Coordinator("need at least one worker".into()));
+        }
+        let manifest = Manifest::load(art_dir)?;
+        let pool_tokens = manifest.max_context() * 8;
+        let (reply_tx, reply_rx) = channel::<WorkerReply>();
+        let mut cmd_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        let mut prev_rx: Option<Receiver<CacheMsg>> = None;
+        for i in 0..p {
+            let (cmd_tx, cmd_rx) = channel::<WorkerCmd>();
+            let (next_tx, next_rx) = if i + 1 < p {
+                let (tx, rx) = channel::<CacheMsg>();
+                (Some(tx), Some(rx))
+            } else {
+                (None, None)
+            };
+            let ctx = WorkerCtx {
+                index: i,
+                warmup,
+                art_dir: art_dir.to_path_buf(),
+                cmd_rx,
+                reply_tx: reply_tx.clone(),
+                prev_rx: prev_rx.take(),
+                next_tx,
+                pool_tokens,
+            };
+            handles.push(std::thread::spawn(move || worker_main(ctx)));
+            cmd_txs.push(cmd_tx);
+            prev_rx = next_rx;
+        }
+        let mut cluster =
+            Cluster { cmd_txs, reply_rx, handles, manifest, pending: Vec::new() };
+        // Wait for every engine to come up (PJRT client + weights upload).
+        let mut started = 0;
+        while started < p {
+            match cluster.reply_rx.recv() {
+                Ok(WorkerReply::Started { worker, result }) => {
+                    result.map_err(|e| {
+                        Error::Coordinator(format!("worker {worker}: {e}"))
+                    })?;
+                    started += 1;
+                }
+                Ok(other) => cluster.pending.push(other),
+                Err(_) => {
+                    return Err(Error::Coordinator(
+                        "workers died during startup".into(),
+                    ))
+                }
+            }
+        }
+        Ok(cluster)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cmd_txs.len()
+    }
+
+    /// Resolve the partition for a prompt of `c` tokens: ratios or even,
+    /// at artifact granularity, over at most `workers` chunks.
+    pub fn plan_partition(&self, c: usize, policy: &PartitionPolicy) -> Result<Partition> {
+        let g = self.manifest.granularity();
+        if c == 0 || c % g != 0 {
+            return Err(Error::Coordinator(format!(
+                "prompt length {c} must be a positive multiple of {g} \
+                 (pad with ByteTokenizer::pad_to_multiple)"
+            )));
+        }
+        let p_max = self.workers().min(c / g);
+        let ratios = match policy {
+            PartitionPolicy::Even => vec![1.0; p_max],
+            PartitionPolicy::Ratios(r) => r.clone(),
+            PartitionPolicy::Lut(lut) => lut.predict_ratios(c)?,
+        };
+        let k = ratios.len().min(p_max).max(1);
+        Partition::from_ratios(c, &ratios[..k], g)
+    }
+
+    fn recv_reply(&mut self) -> Result<WorkerReply> {
+        if !self.pending.is_empty() {
+            return Ok(self.pending.remove(0));
+        }
+        self.reply_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker channel closed".into()))
+    }
+
+    /// Run one KV-Runahead parallel prefill for a request.
+    pub fn parallel_prefill(
+        &mut self, req_id: u64, tokens: &[i32], policy: &PartitionPolicy,
+    ) -> Result<PrefillResult> {
+        if tokens.len() > self.manifest.max_context() {
+            return Err(Error::Coordinator(format!(
+                "prompt {} exceeds compiled max context {}",
+                tokens.len(),
+                self.manifest.max_context()
+            )));
+        }
+        let partition = self.plan_partition(tokens.len(), policy)?;
+        let sizes = partition.sizes().to_vec();
+        let k = sizes.len();
+        let t0 = Instant::now();
+        let mut offset = 0usize;
+        for (i, &sz) in sizes.iter().enumerate() {
+            self.cmd_txs[i]
+                .send(WorkerCmd::Prefill {
+                    req_id,
+                    tokens: tokens[offset..offset + sz].to_vec(),
+                    first: i == 0,
+                    last: i == k - 1,
+                })
+                .map_err(|_| Error::Coordinator(format!("worker {i} gone")))?;
+            offset += sz;
+        }
+        let mut logits: Option<Vec<f32>> = None;
+        let mut ttft = 0.0;
+        let mut worker_compute = vec![0.0f64; k];
+        let mut done = 0usize;
+        while done < k {
+            match self.recv_reply()? {
+                WorkerReply::PrefillDone {
+                    worker,
+                    req_id: rid,
+                    logits: lg,
+                    compute_s,
+                    ..
+                } if rid == req_id => {
+                    worker_compute[worker] = compute_s;
+                    if let Some(lg) = lg {
+                        logits = Some(lg);
+                        ttft = t0.elapsed().as_secs_f64();
+                    }
+                    done += 1;
+                }
+                WorkerReply::Failed { req_id: rid, msg } if rid == req_id => {
+                    return Err(Error::Coordinator(format!(
+                        "prefill {req_id} failed: {msg}"
+                    )));
+                }
+                other => self.pending.push(other),
+            }
+        }
+        Ok(PrefillResult {
+            logits: logits.ok_or_else(|| {
+                Error::Coordinator("no logits from last worker".into())
+            })?,
+            ttft,
+            owner: k - 1,
+            partition: sizes,
+            worker_compute,
+        })
+    }
+
+    /// One decode step on the cache-owning worker.
+    pub fn decode(&mut self, owner: usize, req_id: u64, token: i32) -> Result<Vec<f32>> {
+        self.cmd_txs[owner]
+            .send(WorkerCmd::Decode { req_id, token })
+            .map_err(|_| Error::Coordinator(format!("worker {owner} gone")))?;
+        loop {
+            match self.recv_reply()? {
+                WorkerReply::DecodeDone { req_id: rid, logits } if rid == req_id => {
+                    return Ok(logits)
+                }
+                WorkerReply::Failed { req_id: rid, msg } if rid == req_id => {
+                    return Err(Error::Coordinator(format!(
+                        "decode {req_id} failed: {msg}"
+                    )));
+                }
+                other => self.pending.push(other),
+            }
+        }
+    }
+
+    /// Free a request's cache.
+    pub fn release(&mut self, owner: usize, req_id: u64) -> Result<()> {
+        self.cmd_txs[owner]
+            .send(WorkerCmd::Release { req_id })
+            .map_err(|_| Error::Coordinator(format!("worker {owner} gone")))?;
+        loop {
+            match self.recv_reply()? {
+                WorkerReply::Released { req_id: rid } if rid == req_id => {
+                    return Ok(())
+                }
+                other => self.pending.push(other),
+            }
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(WorkerCmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

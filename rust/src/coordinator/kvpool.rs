@@ -1,0 +1,267 @@
+//! Contiguous KV-cache pool — admission control + slab bookkeeping.
+//!
+//! The paper (Sec. 4.3) requires KV tensors in *contiguous* memory for
+//! efficient network sends: fragmented caches cost an extra gather copy.
+//! This pool manages a fixed token budget as contiguous token-row extents
+//! with first-fit allocation and free-list coalescing; the scheduler uses
+//! it for backpressure (a request is admitted only when its worst-case
+//! cache extent fits) and the stats expose fragmentation.
+
+use crate::error::{Error, Result};
+
+/// A reserved contiguous extent (token rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slab {
+    pub id: u64,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// First-fit contiguous allocator over a token-row arena.
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    capacity: usize,
+    /// Free extents (offset, len), sorted by offset, coalesced.
+    free: Vec<(usize, usize)>,
+    /// Live slabs by id.
+    live: Vec<Slab>,
+    next_id: u64,
+}
+
+impl KvPool {
+    pub fn new(capacity_tokens: usize) -> Self {
+        Self {
+            capacity: capacity_tokens,
+            free: vec![(0, capacity_tokens)],
+            live: Vec::new(),
+            next_id: 1,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Tokens currently reserved.
+    pub fn used(&self) -> usize {
+        self.live.iter().map(|s| s.len).sum()
+    }
+
+    /// Tokens available in total (may be fragmented).
+    pub fn available(&self) -> usize {
+        self.capacity - self.used()
+    }
+
+    /// Largest single allocation currently possible.
+    pub fn largest_free_extent(&self) -> usize {
+        self.free.iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+
+    /// External fragmentation in [0, 1): 1 - largest_free/available.
+    pub fn fragmentation(&self) -> f64 {
+        let avail = self.available();
+        if avail == 0 {
+            return 0.0;
+        }
+        1.0 - self.largest_free_extent() as f64 / avail as f64
+    }
+
+    /// Reserve a contiguous extent of `len` token rows (first fit).
+    pub fn alloc(&mut self, len: usize) -> Result<Slab> {
+        if len == 0 {
+            return Err(Error::Coordinator("zero-length KV allocation".into()));
+        }
+        let pos = self
+            .free
+            .iter()
+            .position(|&(_, flen)| flen >= len)
+            .ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "KV pool exhausted: need {len} contiguous rows, largest \
+                     free extent {} (used {}/{})",
+                    self.largest_free_extent(),
+                    self.used(),
+                    self.capacity
+                ))
+            })?;
+        let (off, flen) = self.free[pos];
+        if flen == len {
+            self.free.remove(pos);
+        } else {
+            self.free[pos] = (off + len, flen - len);
+        }
+        let slab = Slab { id: self.next_id, offset: off, len };
+        self.next_id += 1;
+        self.live.push(slab);
+        Ok(slab)
+    }
+
+    /// Grow a slab in place if the adjacent free extent allows, otherwise
+    /// relocate it (returns the possibly-moved slab; the caller owns the
+    /// actual data copy — mirroring the "costly extra memory copy" the
+    /// paper warns about for fragmented caches).
+    pub fn grow(&mut self, id: u64, new_len: usize) -> Result<(Slab, bool)> {
+        let idx = self
+            .live
+            .iter()
+            .position(|s| s.id == id)
+            .ok_or_else(|| Error::Coordinator(format!("unknown slab {id}")))?;
+        let slab = self.live[idx];
+        if new_len <= slab.len {
+            return Ok((slab, false));
+        }
+        let need = new_len - slab.len;
+        let end = slab.offset + slab.len;
+        // In-place growth if the next free extent starts exactly at `end`.
+        if let Some(pos) =
+            self.free.iter().position(|&(off, flen)| off == end && flen >= need)
+        {
+            let (off, flen) = self.free[pos];
+            if flen == need {
+                self.free.remove(pos);
+            } else {
+                self.free[pos] = (off + need, flen - need);
+            }
+            self.live[idx].len = new_len;
+            return Ok((self.live[idx], false));
+        }
+        // Relocate: free then re-alloc (data copy signalled via `true`).
+        self.release(id)?;
+        let new = self.alloc(new_len)?;
+        Ok((new, true))
+    }
+
+    /// Release a slab back to the free list (coalescing neighbours).
+    pub fn release(&mut self, id: u64) -> Result<()> {
+        let idx = self
+            .live
+            .iter()
+            .position(|s| s.id == id)
+            .ok_or_else(|| Error::Coordinator(format!("unknown slab {id}")))?;
+        let slab = self.live.swap_remove(idx);
+        let ins = self
+            .free
+            .partition_point(|&(off, _)| off < slab.offset);
+        self.free.insert(ins, (slab.offset, slab.len));
+        // Coalesce around the insertion point.
+        let mut i = ins.saturating_sub(1);
+        while i + 1 < self.free.len() {
+            let (a_off, a_len) = self.free[i];
+            let (b_off, b_len) = self.free[i + 1];
+            if a_off + a_len == b_off {
+                self.free[i] = (a_off, a_len + b_len);
+                self.free.remove(i + 1);
+            } else if i + 1 <= ins {
+                i += 1;
+            } else {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Live slab lookup.
+    pub fn get(&self, id: u64) -> Option<Slab> {
+        self.live.iter().copied().find(|s| s.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{forall, prop};
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut pool = KvPool::new(1024);
+        let a = pool.alloc(256).unwrap();
+        let b = pool.alloc(512).unwrap();
+        assert_eq!(pool.used(), 768);
+        assert_ne!(a.id, b.id);
+        assert!(a.offset + a.len <= b.offset || b.offset + b.len <= a.offset);
+        pool.release(a.id).unwrap();
+        pool.release(b.id).unwrap();
+        assert_eq!(pool.used(), 0);
+        assert_eq!(pool.largest_free_extent(), 1024);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut pool = KvPool::new(100);
+        pool.alloc(80).unwrap();
+        let err = pool.alloc(40).unwrap_err().to_string();
+        assert!(err.contains("exhausted"), "{err}");
+    }
+
+    #[test]
+    fn coalescing_restores_contiguity() {
+        let mut pool = KvPool::new(300);
+        let a = pool.alloc(100).unwrap();
+        let b = pool.alloc(100).unwrap();
+        let c = pool.alloc(100).unwrap();
+        pool.release(a.id).unwrap();
+        pool.release(c.id).unwrap();
+        // Fragmented: two free extents of 100.
+        assert_eq!(pool.largest_free_extent(), 100);
+        assert!(pool.fragmentation() > 0.0);
+        pool.release(b.id).unwrap();
+        assert_eq!(pool.largest_free_extent(), 300);
+        assert_eq!(pool.fragmentation(), 0.0);
+    }
+
+    #[test]
+    fn grow_in_place_when_adjacent_free() {
+        let mut pool = KvPool::new(300);
+        let a = pool.alloc(100).unwrap();
+        let (grown, moved) = pool.grow(a.id, 200).unwrap();
+        assert!(!moved);
+        assert_eq!(grown.offset, a.offset);
+        assert_eq!(grown.len, 200);
+    }
+
+    #[test]
+    fn grow_relocates_when_blocked() {
+        let mut pool = KvPool::new(400);
+        let a = pool.alloc(100).unwrap();
+        let _b = pool.alloc(100).unwrap(); // blocks in-place growth
+        let (grown, moved) = pool.grow(a.id, 150).unwrap();
+        assert!(moved, "must relocate past the blocking slab");
+        assert_eq!(grown.len, 150);
+        assert_ne!(grown.offset, a.offset);
+    }
+
+    #[test]
+    fn prop_no_overlap_and_conservation() {
+        forall(150, 0x9001, |rng: &mut Rng| {
+            let mut pool = KvPool::new(2048);
+            let mut ids: Vec<u64> = Vec::new();
+            for _ in 0..rng.range(1, 40) {
+                if !ids.is_empty() && rng.bool(0.4) {
+                    let idx = rng.range(0, ids.len());
+                    pool.release(ids.swap_remove(idx)).unwrap();
+                } else if let Ok(slab) = pool.alloc(rng.range(1, 300)) {
+                    ids.push(slab.id);
+                }
+            }
+            // No two live slabs overlap.
+            let mut ok_overlap = true;
+            for (i, a) in pool.live.iter().enumerate() {
+                for b in pool.live.iter().skip(i + 1) {
+                    if a.offset < b.offset + b.len && b.offset < a.offset + a.len {
+                        ok_overlap = false;
+                    }
+                }
+            }
+            // used + free == capacity.
+            let free_total: usize = pool.free.iter().map(|&(_, l)| l).sum();
+            vec![
+                prop(ok_overlap, "live slabs never overlap"),
+                prop(pool.used() + free_total == pool.capacity(),
+                     "token conservation"),
+                prop(pool.free.windows(2).all(|w| w[0].0 + w[0].1 < w[1].0),
+                     "free list sorted and coalesced"),
+            ]
+        });
+    }
+}

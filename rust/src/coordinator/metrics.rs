@@ -1,0 +1,92 @@
+//! Serving metrics: TTFT / TPOT / throughput aggregation.
+
+use crate::util::stats::{fmt_time, Summary};
+
+/// Aggregated over one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub ttfts: Vec<f64>,
+    pub tpots: Vec<f64>,
+    pub e2es: Vec<f64>,
+    pub queue_waits: Vec<f64>,
+    pub tokens_out: usize,
+    pub requests: usize,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn record_request(&mut self, ttft: f64, tpot: &[f64], e2e: f64, queue: f64) {
+        self.ttfts.push(ttft);
+        self.tpots.extend_from_slice(tpot);
+        self.e2es.push(e2e);
+        self.queue_waits.push(queue);
+        self.tokens_out += 1 + tpot.len();
+        self.requests += 1;
+    }
+
+    /// Output tokens per second over the wall-clock window.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.wall_s
+    }
+
+    /// Multi-line human report (the serve example prints this).
+    pub fn report(&self) -> String {
+        if self.requests == 0 {
+            return "no requests completed".into();
+        }
+        let ttft = Summary::of(&self.ttfts);
+        let e2e = Summary::of(&self.e2es);
+        let queue = Summary::of(&self.queue_waits);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests {}   output tokens {}   wall {}   throughput {:.2} tok/s\n",
+            self.requests, self.tokens_out, fmt_time(self.wall_s), self.throughput()
+        ));
+        out.push_str(&format!(
+            "TTFT  mean {} p50 {} p95 {} max {}\n",
+            fmt_time(ttft.mean), fmt_time(ttft.p50), fmt_time(ttft.p95),
+            fmt_time(ttft.max)
+        ));
+        if !self.tpots.is_empty() {
+            let tpot = Summary::of(&self.tpots);
+            out.push_str(&format!(
+                "TPOT  mean {} p50 {} p95 {}\n",
+                fmt_time(tpot.mean), fmt_time(tpot.p50), fmt_time(tpot.p95)
+            ));
+        }
+        out.push_str(&format!(
+            "E2E   mean {} p95 {}   queue mean {}\n",
+            fmt_time(e2e.mean), fmt_time(e2e.p95), fmt_time(queue.mean)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_requests() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1, 0.1], 0.8, 0.0);
+        m.record_request(0.3, &[0.2], 0.6, 0.1);
+        m.wall_s = 2.0;
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.tokens_out, 5);
+        assert!((m.throughput() - 2.5).abs() < 1e-12);
+        let report = m.report();
+        assert!(report.contains("TTFT"));
+        assert!(report.contains("TPOT"));
+    }
+
+    #[test]
+    fn empty_metrics_do_not_panic() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.report(), "no requests completed");
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

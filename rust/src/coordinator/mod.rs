@@ -1,0 +1,24 @@
+//! L3 serving coordinator — the deployable layer around KV-Runahead.
+//!
+//! A leader thread owns the request queue, the context partitioner, and
+//! the scheduler; `p` worker threads own one PJRT [`crate::runtime::Engine`]
+//! each (process-per-GPU topology). A prefill runs as the paper's chain:
+//! the leader splits the prompt per the partition policy, workers compute
+//! their chunks and hand the accumulated KV-cache to their successor over
+//! point-to-point channels; the last worker emits the first token and owns
+//! the cache for the extension phase. Decode steps are continuously
+//! batched round-robin across active requests.
+
+pub mod cluster;
+pub mod kvpool;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod tokenizer;
+
+pub use cluster::{Cluster, PartitionPolicy};
+pub use kvpool::KvPool;
+pub use metrics::ServeMetrics;
+pub use request::{GenRequest, GenResponse};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use tokenizer::ByteTokenizer;

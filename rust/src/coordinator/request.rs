@@ -1,0 +1,26 @@
+//! Request/response types of the serving API.
+
+/// A generation request (prompt already tokenized).
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Arrival time relative to the serving clock (s); used by the
+    /// workload generator and the latency accounting.
+    pub arrival: f64,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated token ids (prompt excluded).
+    pub tokens: Vec<i32>,
+    /// Time to first token (s), measured from scheduling start.
+    pub ttft: f64,
+    /// Per-output-token latencies after the first (s).
+    pub tpot: Vec<f64>,
+    /// End-to-end latency including queueing (s).
+    pub e2e: f64,
+}

@@ -1,0 +1,138 @@
+//! Request scheduler: FIFO admission + continuously batched decode.
+//!
+//! Prefill occupies the whole worker chain (the paper's Fig. 3b dataflow),
+//! so prefills are serialized; decode steps of all active requests are
+//! interleaved round-robin between admissions (continuous batching at
+//! step granularity). Admission is bounded by `max_active` — the KV pool
+//! backpressure on the cache-owning worker.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::coordinator::cluster::{Cluster, PartitionPolicy};
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::coordinator::tokenizer::ByteTokenizer;
+use crate::error::Result;
+use crate::runtime::engine::argmax;
+
+/// Scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    pub policy: PartitionPolicy,
+    /// Max requests in the decode phase simultaneously.
+    pub max_active: usize,
+    /// Stop decoding a request when it emits this token.
+    pub eos_token: i32,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            policy: PartitionPolicy::Even,
+            max_active: 4,
+            eos_token: ByteTokenizer::EOS,
+        }
+    }
+}
+
+struct Active {
+    req: GenRequest,
+    owner: usize,
+    produced: Vec<i32>,
+    ttft: f64,
+    tpot: Vec<f64>,
+    queue_wait: f64,
+    started: Instant,
+    last_step: Instant,
+}
+
+/// FIFO + round-robin scheduler over a [`Cluster`].
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Serve a batch of requests to completion; returns per-request
+    /// responses (request order) and aggregate metrics.
+    pub fn serve(
+        &self, cluster: &mut Cluster, requests: Vec<GenRequest>,
+    ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        let serve_start = Instant::now();
+        let mut pending: VecDeque<GenRequest> = requests.into();
+        let mut active: Vec<Active> = Vec::new();
+        let mut done: Vec<GenResponse> = Vec::new();
+        let mut metrics = ServeMetrics::default();
+
+        while !pending.is_empty() || !active.is_empty() {
+            // Admit while there is room (prefill occupies the chain).
+            while active.len() < self.cfg.max_active {
+                let Some(req) = pending.front() else { break };
+                // Honour the arrival process: don't start work that has
+                // not "arrived" yet unless the cluster is otherwise idle.
+                let now = serve_start.elapsed().as_secs_f64();
+                if now < req.arrival && !active.is_empty() {
+                    break;
+                }
+                if now < req.arrival {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        req.arrival - now,
+                    ));
+                }
+                let req = pending.pop_front().unwrap();
+                let queue_wait =
+                    (serve_start.elapsed().as_secs_f64() - req.arrival).max(0.0);
+                let started = Instant::now();
+                let pre = cluster.parallel_prefill(
+                    req.id, &req.tokens, &self.cfg.policy,
+                )?;
+                let first = argmax(&pre.logits) as i32;
+                active.push(Active {
+                    owner: pre.owner,
+                    produced: vec![first],
+                    ttft: pre.ttft,
+                    tpot: Vec::new(),
+                    queue_wait,
+                    started,
+                    last_step: Instant::now(),
+                    req,
+                });
+            }
+
+            // One decode step for every active request (round-robin).
+            let mut i = 0;
+            while i < active.len() {
+                let a = &mut active[i];
+                let finished = a.produced.len() >= a.req.max_new_tokens
+                    || *a.produced.last().unwrap() == self.cfg.eos_token;
+                if finished {
+                    let a = active.swap_remove(i);
+                    cluster.release(a.owner, a.req.id)?;
+                    let e2e = a.started.elapsed().as_secs_f64() + a.queue_wait;
+                    metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
+                    done.push(GenResponse {
+                        id: a.req.id,
+                        tokens: a.produced,
+                        ttft: a.ttft,
+                        tpot: a.tpot,
+                        e2e,
+                    });
+                    continue;
+                }
+                let last = *a.produced.last().unwrap();
+                let logits = cluster.decode(a.owner, a.req.id, last)?;
+                a.tpot.push(a.last_step.elapsed().as_secs_f64());
+                a.last_step = Instant::now();
+                a.produced.push(argmax(&logits) as i32);
+                i += 1;
+            }
+        }
+        metrics.wall_s = serve_start.elapsed().as_secs_f64();
+        done.sort_by_key(|r| r.id);
+        Ok((done, metrics))
+    }
+}

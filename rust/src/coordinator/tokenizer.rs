@@ -1,0 +1,81 @@
+//! Byte-level tokenizer: token = byte value; ids 256+ are specials.
+//! (The offline stand-in for a real vocabulary — the serving path and the
+//! tiny model only need a reversible token stream.)
+
+/// Byte tokenizer with BOS/EOS specials.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const BOS: i32 = 256;
+    pub const EOS: i32 = 257;
+    /// Vocabulary slots used (the tiny model's vocab is padded past this).
+    pub const USED_VOCAB: usize = 258;
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(Self::BOS);
+        out.extend(text.as_bytes().iter().map(|&b| b as i32));
+        out
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Pad a token sequence up to a multiple of `granularity` by repeating
+    /// BOS at the *front* (keeps the informative suffix positions intact).
+    pub fn pad_to_multiple(&self, tokens: &[i32], granularity: usize) -> Vec<i32> {
+        let rem = tokens.len() % granularity;
+        if rem == 0 && !tokens.is_empty() {
+            return tokens.to_vec();
+        }
+        let pad = if tokens.is_empty() { granularity } else { granularity - rem };
+        let mut out = vec![Self::BOS; pad];
+        out.extend_from_slice(tokens);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let ids = t.encode("Antibiotics are a type of medication");
+        assert_eq!(ids[0], ByteTokenizer::BOS);
+        assert_eq!(t.decode(&ids), "Antibiotics are a type of medication");
+    }
+
+    #[test]
+    fn utf8_bytes_roundtrip() {
+        let t = ByteTokenizer;
+        let ids = t.encode("héllo");
+        assert_eq!(t.decode(&ids), "héllo");
+    }
+
+    #[test]
+    fn specials_are_dropped_on_decode() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[ByteTokenizer::BOS, 104, 105, ByteTokenizer::EOS]), "hi");
+    }
+
+    #[test]
+    fn padding_to_granularity() {
+        let t = ByteTokenizer;
+        let ids = t.encode("abcdefg"); // 8 tokens with BOS
+        let padded = t.pad_to_multiple(&ids, 32);
+        assert_eq!(padded.len(), 32);
+        assert_eq!(&padded[padded.len() - 7..],
+                   &ids[1..].iter().copied().collect::<Vec<_>>()[..]);
+        assert_eq!(t.pad_to_multiple(&padded, 32).len(), 32);
+        assert_eq!(t.pad_to_multiple(&[], 32).len(), 32);
+    }
+}

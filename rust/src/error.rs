@@ -1,0 +1,46 @@
+//! Library-wide error type.
+
+/// All errors surfaced by the `kvr` library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error("tensor codec: {0}")]
+    Codec(String),
+
+    #[error("cli: {0}")]
+    Cli(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("artifacts: {0}")]
+    Artifacts(String),
+
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    #[error("partition: {0}")]
+    Partition(String),
+
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    #[error("simulation: {0}")]
+    Sim(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,30 @@
+//! # kvr — KV-Runahead (ICML 2024) reproduction
+//!
+//! Scalable causal LLM inference by parallel key-value cache generation:
+//! the prompt phase is parallelized over `p` processes by dual-purposing
+//! the KV-cache interface — process `i` computes K/V for its context chunk,
+//! receives the accumulated cache from `i-1` via point-to-point async send,
+//! and forwards the concatenation to `i+1`; only the last process emits the
+//! first token. See `DESIGN.md` for the architecture and the experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map (three-layer rust + JAX + Pallas stack, python never on the
+//! request path):
+//!
+//! * **L3 (this crate)** — [`coordinator`] serving layer, [`engines`]
+//!   parallel-prefill strategies, [`partition`] context load-balancing,
+//!   [`sim`]/[`net`] the modeled A100 cluster, [`runtime`] the PJRT bridge.
+//! * **L2** — `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L1** — `python/compile/kernels/attention.py` (Pallas, interpret).
+
+pub mod config;
+pub mod coordinator;
+pub mod engines;
+pub mod error;
+pub mod net;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};

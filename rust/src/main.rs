@@ -1,0 +1,237 @@
+//! `kvr` — launcher CLI for the KV-Runahead reproduction.
+//!
+//! Subcommands:
+//!
+//! * `sim`       — evaluate TSP / KVR-E / KVR-S / KVR-P TTFT on the
+//!                 simulated A100 fabric for a (model, hw, ctx, procs) grid.
+//! * `search`    — run the hierarchical grid search and print the
+//!                 partition (optionally save a KVR-P lookup table).
+//! * `run`       — one-shot real generation through the PJRT cluster.
+//! * `serve`     — synthetic serving workload over the PJRT cluster with
+//!                 TTFT/TPOT/throughput report (the end-to-end driver).
+//! * `calibrate` — measure real per-bucket prefill latencies on this host.
+
+use std::path::PathBuf;
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::coordinator::{
+    ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
+    SchedulerConfig,
+};
+use kvr::engines::{Evaluator, Method};
+use kvr::error::Result;
+use kvr::partition::search::SearchConfig;
+use kvr::runtime::Engine;
+use kvr::util::cli::Args;
+use kvr::util::rng::Rng;
+use kvr::util::stats::fmt_time;
+
+const USAGE: &str = "\
+kvr — KV-Runahead (ICML 2024) reproduction
+
+USAGE:
+  kvr sim   [--model llama7b] [--hw a100-300gbps] [--ctx 4096,8192,16384]
+            [--procs 4,8] [--methods tsp,kvr-e,kvr-s]
+  kvr search [--model llama7b] [--hw a100-300gbps] [--ctx 16384] [--procs 4]
+            [--save lut.json]
+  kvr run   [--artifacts artifacts] [--workers 2] [--prompt TEXT]
+            [--max-new 32] [--policy even|searched]
+  kvr serve [--artifacts artifacts] [--workers 2] [--requests 8]
+            [--prompt-len 128] [--max-new 8] [--rate 2.0] [--seed 0]
+  kvr calibrate [--artifacts artifacts]
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&raw) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: &[String]) -> Result<()> {
+    let args = Args::parse(&raw[1..], &["quiet"])?;
+    match raw[0].as_str() {
+        "sim" => cmd_sim(&args),
+        "search" => cmd_search(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "calibrate" => cmd_calibrate(&args),
+        other => {
+            print!("{USAGE}");
+            Err(kvr::Error::Cli(format!("unknown subcommand `{other}`")))
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let model = model_by_name(&args.str_or("model", "llama7b"))?;
+    let hw = hardware_by_name(&args.str_or("hw", "a100-300gbps"))?;
+    let contexts = args.usize_list_or("ctx", &[4096, 8192, 12288, 16384])?;
+    let procs = args.usize_list_or("procs", &[4, 8])?;
+    let methods: Vec<Method> = args
+        .str_or("methods", "tsp,kvr-e,kvr-s")
+        .split(',')
+        .map(Method::parse)
+        .collect::<Result<_>>()?;
+    println!("model={} hw={} ({} GB/s links)", model.name, hw.name,
+             hw.net_bw / 1e9);
+    println!("{:>8} {:>6} {:>10} {:>10} {:>9} {:>8}", "ctx", "procs",
+             "method", "TTFT", "vs TSP", "mem GB");
+    let mut ev = Evaluator::new(model, hw);
+    for &p in &procs {
+        for &c in &contexts {
+            let tsp = ev.evaluate(Method::Tsp, c, p, None)?;
+            for &m in &methods {
+                let e = ev.evaluate(m, c, p, None)?;
+                let ttft = if e.oom { "OOM".to_string() } else { fmt_time(e.ttft) };
+                let speedup = if e.oom || tsp.oom {
+                    "-".to_string()
+                } else {
+                    format!("{:.2}x", tsp.ttft / e.ttft)
+                };
+                println!("{:>8} {:>6} {:>10} {:>10} {:>9} {:>8.1}", c, e.procs,
+                         m.label(), ttft, speedup, e.peak_mem_gb);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let model = model_by_name(&args.str_or("model", "llama7b"))?;
+    let hw = hardware_by_name(&args.str_or("hw", "a100-300gbps"))?;
+    let c = args.usize_or("ctx", 16384)?;
+    let p = args.usize_or("procs", 4)?;
+    let ev = Evaluator::new(model, hw);
+    let res = ev.search(c, p, &SearchConfig::default())?;
+    println!("context {c} over {p} processes: TTFT {}", fmt_time(res.ttft));
+    println!("partition sizes  : {:?}", res.partition.sizes());
+    println!("partition ratios : {:?}",
+             res.partition.ratios().iter().map(|r| (r * 1000.0).round() / 1000.0)
+                 .collect::<Vec<_>>());
+    println!("evaluations      : {}", res.evaluations);
+    for (i, l) in res.levels.iter().enumerate() {
+        println!("  level {i}: stride {:>5}  evals {:>5}  best {}",
+                 l.stride, l.evaluated, fmt_time(l.best_ttft));
+    }
+    if let Some(path) = args.get("save") {
+        let contexts = args.usize_list_or("lut-ctx", &[4096, 8192, 12288, 16384])?;
+        let mut e2 = Evaluator::new(ev.cm.model.clone(), ev.cm.hw.clone());
+        let lut = e2.build_lut(&contexts, p)?;
+        lut.save(&PathBuf::from(path))?;
+        println!("lookup table ({} entries) saved to {path}", contexts.len());
+    }
+    Ok(())
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 2)?;
+    let max_new = args.usize_or("max-new", 32)?;
+    let prompt = args.str_or("prompt",
+        "Antibiotics are a type of medication used to treat bacterial \
+         infections");
+    let tok = ByteTokenizer;
+    let mut cluster = Cluster::new(&artifacts_dir(args), workers)?;
+    let tokens = tok.pad_to_multiple(&tok.encode(&prompt),
+                                     cluster.manifest.granularity());
+    let policy = match args.str_or("policy", "even").as_str() {
+        "searched" => PartitionPolicy::Ratios(vec![0.4, 0.3, 0.2, 0.1]),
+        _ => PartitionPolicy::Even,
+    };
+    let pre = cluster.parallel_prefill(0, &tokens, &policy)?;
+    println!("partition {:?}  TTFT {}", pre.partition, fmt_time(pre.ttft));
+    let mut out = vec![kvr::runtime::engine::argmax(&pre.logits) as i32];
+    let t0 = std::time::Instant::now();
+    while out.len() < max_new && *out.last().unwrap() != ByteTokenizer::EOS {
+        let logits = cluster.decode(pre.owner, 0, *out.last().unwrap())?;
+        out.push(kvr::runtime::engine::argmax(&logits) as i32);
+    }
+    cluster.release(pre.owner, 0)?;
+    let gen_s = t0.elapsed().as_secs_f64();
+    println!("generated {} tokens ({} per token): {:?}", out.len(),
+             fmt_time(gen_s / (out.len().max(2) - 1) as f64), out);
+    println!("decoded: {:?}", tok.decode(&out));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 2)?;
+    let n_requests = args.usize_or("requests", 8)?;
+    let prompt_len = args.usize_or("prompt-len", 128)?;
+    let max_new = args.usize_or("max-new", 8)?;
+    let rate = args.f64_or("rate", 2.0)?;
+    let seed = args.u64_or("seed", 0)?;
+
+    let mut cluster = Cluster::new_opts(&artifacts_dir(args), workers, true)?;
+    let g = cluster.manifest.granularity();
+    let mut rng = Rng::new(seed);
+    let mut arrival = 0.0;
+    let requests: Vec<GenRequest> = (0..n_requests as u64)
+        .map(|id| {
+            arrival += rng.exp(rate);
+            let len = (prompt_len / g).max(1) * g;
+            GenRequest {
+                id,
+                tokens: (0..len).map(|_| rng.range(0, 256) as i32).collect(),
+                max_new_tokens: max_new,
+                arrival,
+            }
+        })
+        .collect();
+    let sched = Scheduler::new(SchedulerConfig::default());
+    let (responses, metrics) = sched.serve(&mut cluster, requests)?;
+    for r in &responses {
+        println!("req {:>3}: {} tokens  ttft {}  e2e {}", r.id,
+                 r.tokens.len(), fmt_time(r.ttft), fmt_time(r.e2e));
+    }
+    println!("\n{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifacts_dir(args))?;
+    println!("compiling + timing every bucket on this host...");
+    let specs = engine.manifest.artifacts.clone();
+    let mut rng = Rng::new(7);
+    for spec in &specs {
+        let tokens: Vec<i32> =
+            (0..spec.chunk).map(|_| rng.range(0, 256) as i32).collect();
+        let mut cache = kvr::runtime::KvCache::new(
+            engine.manifest.model.layers,
+            engine.manifest.model.kv_heads,
+            engine.manifest.model.head_dim,
+            spec.past,
+        );
+        // Mark half the past bucket as valid (mid-bucket workload).
+        if spec.past > 0 {
+            let half = spec.past / 2;
+            let n = engine.manifest.model.layers
+                * engine.manifest.model.kv_heads
+                * half
+                * engine.manifest.model.head_dim;
+            let z = vec![0.01f32; n];
+            cache.append_chunk(half, &z, &z)?;
+            cache = cache.padded_to(spec.past)?;
+        }
+        // Warm (includes compile) then measure.
+        let chunk_tokens = &tokens[..spec.chunk];
+        engine.prefill_chunk_in(spec, chunk_tokens, &cache)?;
+        let t0 = std::time::Instant::now();
+        let iters = 5;
+        for _ in 0..iters {
+            engine.prefill_chunk_in(spec, chunk_tokens, &cache)?;
+        }
+        println!("{:<22} {:>12} per call", spec.name,
+                 fmt_time(t0.elapsed().as_secs_f64() / iters as f64));
+    }
+    Ok(())
+}

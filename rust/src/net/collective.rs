@@ -1,0 +1,122 @@
+//! Collective operations built from point-to-point links, the way NCCL
+//! builds them. TSP's per-layer K/V exchange is a ring all-gather
+//! (Thakur et al. 2005): p-1 steps, each process forwarding the shard it
+//! just received to its ring successor. The whole collective is a global
+//! synchronization point: no participant finishes before the slowest chain
+//! of steps — exactly the behaviour the paper contrasts with KVR's one-way
+//! sends.
+
+use super::Network;
+use crate::error::Result;
+
+/// Outcome of one all-gather invocation.
+#[derive(Clone, Debug)]
+pub struct AllGatherResult {
+    /// Completion time per process (all equal to `finish` for a barrier-
+    /// semantics collective, kept per-process for inspection).
+    pub done: Vec<f64>,
+    /// Global completion (the synchronization point).
+    pub finish: f64,
+}
+
+/// Ring all-gather of per-process shards.
+///
+/// `shard_bytes[i]` / `shard_entries[i]` describe process i's local shard
+/// (for TSP these are all `C/p` KV rows). `ready[i]` is when process i has
+/// its shard computed. Per ring step s, process i sends the shard that
+/// originated at `(i - s) mod p` to `(i + 1) mod p`; after p-1 steps every
+/// process holds all shards. Each step waits for the whole previous step
+/// (NCCL ring semantics — the collective advances in lockstep).
+pub fn ring_all_gather(
+    net: &mut Network,
+    shard_bytes: &[f64],
+    shard_entries: &[f64],
+    ready: &[f64],
+) -> Result<AllGatherResult> {
+    let p = net.procs();
+    assert_eq!(shard_bytes.len(), p);
+    assert_eq!(ready.len(), p);
+    if p == 1 {
+        return Ok(AllGatherResult { done: ready.to_vec(), finish: ready[0] });
+    }
+    // All participants enter the collective together. Each step is a
+    // lockstep barrier, so a single scalar tracks the step horizon — no
+    // per-step allocation (this runs 32x per simulated prefill and the
+    // search sweeps evaluate hundreds of thousands of prefills; §Perf).
+    let mut step_ready: f64 = ready.iter().cloned().fold(0.0, f64::max);
+    for step in 0..p - 1 {
+        let mut barrier = 0.0f64;
+        for i in 0..p {
+            let origin = (i + p - step) % p;
+            let dst = (i + 1) % p;
+            let done = net.send(
+                i,
+                dst,
+                shard_bytes[origin],
+                shard_entries[origin],
+                step_ready,
+            )?;
+            barrier = barrier.max(done);
+        }
+        // Lockstep: next step starts when every transfer of this step landed.
+        step_ready = barrier;
+    }
+    Ok(AllGatherResult { done: vec![step_ready; p], finish: step_ready })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_process_is_free() {
+        let mut net = Network::new(1, 1e9, 1e-6);
+        let r = ring_all_gather(&mut net, &[100.0], &[1.0], &[2.0]).unwrap();
+        assert_eq!(r.finish, 2.0);
+        assert_eq!(net.stats.messages, 0);
+    }
+
+    #[test]
+    fn traffic_matches_eq4_total() {
+        // Paper Eq. 4-5: total TSP traffic = p(p-1)·C/p = (p-1)·C entries.
+        let p = 4;
+        let c = 1024.0;
+        let mut net = Network::new(p, 1e9, 0.0);
+        let shard = vec![c / p as f64; p];
+        let ready = vec![0.0; p];
+        ring_all_gather(&mut net, &shard, &shard, &ready).unwrap();
+        assert_eq!(net.stats.kv_entries, (p as f64 - 1.0) * c);
+        assert_eq!(net.stats.messages, p * (p - 1));
+    }
+
+    #[test]
+    fn finish_time_is_p_minus_1_steps() {
+        // Equal shards, bw 100 B/s, latency 0: each step = shard/bw.
+        let p = 4;
+        let mut net = Network::new(p, 100.0, 0.0);
+        let shard = vec![200.0; p];
+        let r = ring_all_gather(&mut net, &shard, &shard, &vec![0.0; p]).unwrap();
+        assert!((r.finish - 3.0 * 2.0).abs() < 1e-9, "{}", r.finish);
+    }
+
+    #[test]
+    fn waits_for_slowest_entrant() {
+        let p = 2;
+        let mut net = Network::new(p, 100.0, 0.0);
+        let r = ring_all_gather(&mut net, &[100.0, 100.0], &[1.0, 1.0],
+                                &[0.0, 5.0]).unwrap();
+        // Cannot start before t=5 (global sync), one step of 1s.
+        assert!((r.finish - 6.0).abs() < 1e-9, "{}", r.finish);
+    }
+
+    #[test]
+    fn all_processes_finish_together() {
+        let p = 3;
+        let mut net = Network::new(p, 50.0, 1e-3);
+        let r = ring_all_gather(&mut net, &[100.0, 150.0, 50.0],
+                                &[2.0, 3.0, 1.0], &[0.0, 0.1, 0.2]).unwrap();
+        for d in &r.done {
+            assert_eq!(*d, r.finish);
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Simulated interconnect substrate.
+//!
+//! The paper runs p processes on one node over NCCL with 300 GB/s or
+//! 10 GB/s links (plus a 1 GB/s setup in Appendix B) and, for Fig. 11, a
+//! "noisy sidecar" that saturates random adjacent GPU pairs. We model the
+//! fabric as directed point-to-point links with:
+//!
+//! * fixed per-message latency + bandwidth-limited transfer time,
+//! * serialization per link (one transfer at a time, FIFO),
+//! * piecewise-constant *contention factors* from injected noise flows,
+//! * exact per-method traffic accounting (validates paper Eqs. 5 and 7).
+//!
+//! Collectives are built from these p2p links the way NCCL builds them:
+//! [`collective::ring_all_gather`] is the (p-1)-step ring used by TSP.
+
+pub mod collective;
+pub mod noise;
+
+use crate::error::{Error, Result};
+
+/// Directed link id between two processes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId {
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// A bandwidth-reduction window on a link (from the noise sidecar):
+/// effective bandwidth is `bw * factor` inside `[start, end)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Contention {
+    pub start: f64,
+    pub end: f64,
+    pub factor: f64,
+}
+
+/// One directed link: latency, base bandwidth, contention windows, and a
+/// FIFO busy horizon (a link carries one transfer at a time).
+#[derive(Clone, Debug)]
+struct Link {
+    bw: f64,
+    #[allow(dead_code)] // per-link latency override (future asymmetric fabrics)
+    latency: f64,
+    busy_until: f64,
+    contention: Vec<Contention>,
+}
+
+impl Link {
+    /// Walk piecewise-constant effective bandwidth to find when `bytes`
+    /// finish if transmission starts at `t0`.
+    fn finish_time(&self, t0: f64, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return t0;
+        }
+        let mut t = t0;
+        let mut left = bytes;
+        // Contention windows are few (noise injects O(10) per run), so a
+        // linear scan per transfer is fine and allocation-free.
+        loop {
+            // Effective factor at time t and the horizon it holds until.
+            let mut factor = 1.0;
+            let mut horizon = f64::INFINITY;
+            for c in &self.contention {
+                if t >= c.start && t < c.end {
+                    factor *= c.factor;
+                    horizon = horizon.min(c.end);
+                } else if c.start > t {
+                    horizon = horizon.min(c.start);
+                }
+            }
+            let rate = self.bw * factor;
+            let span = horizon - t;
+            let can_send = rate * span;
+            if can_send >= left || !span.is_finite() {
+                return t + left / rate;
+            }
+            left -= can_send;
+            t = horizon;
+        }
+    }
+}
+
+/// Cumulative traffic statistics, per link and total.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficStats {
+    /// Total payload bytes put on the network.
+    pub total_bytes: f64,
+    /// Total number of messages.
+    pub messages: usize,
+    /// Total KV *entries* (token-rows of (K,V)) — the unit the paper counts
+    /// in Figs. 4/5 and Eqs. 4-7.
+    pub kv_entries: f64,
+}
+
+/// The simulated fabric for `p` processes (full mesh of directed links —
+/// TSP's ring and KVR's chain both draw from it).
+#[derive(Clone, Debug)]
+pub struct Network {
+    p: usize,
+    bw: f64,
+    latency: f64,
+    links: Vec<Link>, // dense p×p, index src*p+dst
+    pub stats: TrafficStats,
+}
+
+impl Network {
+    pub fn new(p: usize, bw: f64, latency: f64) -> Self {
+        assert!(p >= 1);
+        let link = Link { bw, latency, busy_until: 0.0, contention: Vec::new() };
+        Self {
+            p,
+            bw,
+            latency,
+            links: vec![link; p * p],
+            stats: TrafficStats::default(),
+        }
+    }
+
+    pub fn procs(&self) -> usize {
+        self.p
+    }
+
+    pub fn bandwidth(&self) -> f64 {
+        self.bw
+    }
+
+    fn link_mut(&mut self, id: LinkId) -> Result<&mut Link> {
+        if id.src >= self.p || id.dst >= self.p || id.src == id.dst {
+            return Err(Error::Sim(format!("bad link {id:?} for p={}", self.p)));
+        }
+        Ok(&mut self.links[id.src * self.p + id.dst])
+    }
+
+    /// Add a contention window (noise sidecar traffic) to a link.
+    pub fn add_contention(&mut self, id: LinkId, c: Contention) -> Result<()> {
+        self.link_mut(id)?.contention.push(c);
+        Ok(())
+    }
+
+    /// Schedule a transfer of `bytes` (representing `kv_entries` (K,V)
+    /// token-rows) from `src` to `dst`, ready to start at `ready`.
+    /// Returns the receive-complete time. FIFO per link.
+    pub fn send(
+        &mut self, src: usize, dst: usize, bytes: f64, kv_entries: f64,
+        ready: f64,
+    ) -> Result<f64> {
+        let latency = self.latency;
+        let link = self.link_mut(LinkId { src, dst })?;
+        let start = ready.max(link.busy_until);
+        let done = link.finish_time(start, bytes);
+        link.busy_until = done;
+        self.stats.total_bytes += bytes;
+        self.stats.messages += 1;
+        self.stats.kv_entries += kv_entries;
+        Ok(done + latency)
+    }
+
+    /// Pure cost query: how long would `bytes` take on an uncontended link.
+    pub fn ideal_transfer_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bw
+    }
+
+    /// Reset traffic counters (keep contention windows).
+    pub fn reset_stats(&mut self) {
+        self.stats = TrafficStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_latency_plus_bytes_over_bw() {
+        let mut n = Network::new(2, 100.0, 0.5);
+        let done = n.send(0, 1, 1000.0, 10.0, 0.0).unwrap();
+        assert!((done - (10.0 + 0.5)).abs() < 1e-12, "{done}");
+        assert_eq!(n.stats.messages, 1);
+        assert_eq!(n.stats.kv_entries, 10.0);
+    }
+
+    #[test]
+    fn links_serialize_fifo() {
+        let mut n = Network::new(2, 100.0, 0.0);
+        let first = n.send(0, 1, 500.0, 0.0, 0.0).unwrap(); // 5s
+        let second = n.send(0, 1, 500.0, 0.0, 1.0).unwrap(); // queued
+        assert_eq!(first, 5.0);
+        assert_eq!(second, 10.0);
+        // Reverse direction is an independent link.
+        let rev = n.send(1, 0, 500.0, 0.0, 0.0).unwrap();
+        assert_eq!(rev, 5.0);
+    }
+
+    #[test]
+    fn contention_slows_the_window_only() {
+        let mut n = Network::new(2, 100.0, 0.0);
+        n.add_contention(
+            LinkId { src: 0, dst: 1 },
+            Contention { start: 0.0, end: 2.0, factor: 0.5 },
+        )
+        .unwrap();
+        // 2s at 50 B/s moves 100 B; remaining 400 B at 100 B/s takes 4s.
+        let done = n.send(0, 1, 500.0, 0.0, 0.0).unwrap();
+        assert!((done - 6.0).abs() < 1e-9, "{done}");
+        // A transfer after the window is unaffected.
+        let done2 = n.send(0, 1, 100.0, 0.0, 6.0).unwrap();
+        assert!((done2 - 7.0).abs() < 1e-9, "{done2}");
+    }
+
+    #[test]
+    fn overlapping_contention_multiplies() {
+        let mut n = Network::new(2, 100.0, 0.0);
+        let id = LinkId { src: 0, dst: 1 };
+        n.add_contention(id, Contention { start: 0.0, end: 10.0, factor: 0.5 })
+            .unwrap();
+        n.add_contention(id, Contention { start: 0.0, end: 10.0, factor: 0.5 })
+            .unwrap();
+        let done = n.send(0, 1, 100.0, 0.0, 0.0).unwrap(); // 25 B/s
+        assert!((done - 4.0).abs() < 1e-9, "{done}");
+    }
+
+    #[test]
+    fn zero_byte_send_costs_latency_only() {
+        let mut n = Network::new(3, 1e9, 0.25);
+        let done = n.send(1, 2, 0.0, 0.0, 3.0).unwrap();
+        assert_eq!(done, 3.25);
+    }
+
+    #[test]
+    fn self_link_rejected() {
+        let mut n = Network::new(2, 1.0, 0.0);
+        assert!(n.send(1, 1, 1.0, 0.0, 0.0).is_err());
+        assert!(n.send(0, 2, 1.0, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn traffic_accumulates() {
+        let mut n = Network::new(4, 1e9, 0.0);
+        for i in 0..3 {
+            n.send(i, i + 1, 100.0, 1.0, 0.0).unwrap();
+        }
+        assert_eq!(n.stats.total_bytes, 300.0);
+        assert_eq!(n.stats.kv_entries, 3.0);
+        n.reset_stats();
+        assert_eq!(n.stats.messages, 0);
+    }
+}

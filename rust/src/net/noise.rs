@@ -1,0 +1,101 @@
+//! Noise sidecar: the paper's Fig. 11 robustness experiment generates
+//! "bidirectional network traffic between a random pair of adjacent GPUs",
+//! simulating dynamically changing non-uniform bandwidth. We reproduce it
+//! by injecting random contention windows on adjacent link pairs.
+
+use super::{Contention, LinkId, Network};
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+/// Configuration of the sidecar traffic generator.
+#[derive(Clone, Debug)]
+pub struct NoiseConfig {
+    /// Time horizon to fill with noise windows (s). Should exceed the
+    /// expected TTFT of the measured run.
+    pub horizon: f64,
+    /// Mean duration of one noise burst (s).
+    pub mean_burst: f64,
+    /// Fraction of the horizon covered by bursts (per adjacent pair).
+    pub duty_cycle: f64,
+    /// Bandwidth multiplier while a burst is active (0.5 = the sidecar
+    /// steals half the link, as a saturating bidirectional flow would).
+    pub factor: f64,
+}
+
+impl Default for NoiseConfig {
+    fn default() -> Self {
+        Self { horizon: 5.0, mean_burst: 0.02, duty_cycle: 0.5, factor: 0.5 }
+    }
+}
+
+/// Inject sidecar bursts: repeatedly pick a random adjacent pair
+/// `(i, i+1)` and stamp a bidirectional contention window on both
+/// directions. Returns the number of bursts injected.
+pub fn inject_noise(net: &mut Network, cfg: &NoiseConfig, rng: &mut Rng) -> Result<usize> {
+    let p = net.procs();
+    if p < 2 {
+        return Ok(0);
+    }
+    let mut bursts = 0;
+    let mut t = 0.0;
+    // Draw bursts until the horizon is covered at the requested duty cycle:
+    // alternate idle gaps and active windows, each exponentially sized.
+    while t < cfg.horizon {
+        let idle = rng.exp(cfg.duty_cycle / (cfg.mean_burst * (1.0 - cfg.duty_cycle)).max(1e-9));
+        let start = t + idle.min(cfg.horizon);
+        let dur = rng.exp(1.0 / cfg.mean_burst);
+        let end = (start + dur).min(cfg.horizon * 2.0);
+        if start >= cfg.horizon {
+            break;
+        }
+        let i = rng.range(0, p - 1);
+        for (src, dst) in [(i, i + 1), (i + 1, i)] {
+            net.add_contention(
+                LinkId { src, dst },
+                Contention { start, end, factor: cfg.factor },
+            )?;
+        }
+        bursts += 1;
+        t = end;
+    }
+    Ok(bursts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injects_bursts_deterministically() {
+        let mut net = Network::new(4, 1e9, 0.0);
+        let mut rng = Rng::new(7);
+        let n1 = inject_noise(&mut net, &NoiseConfig::default(), &mut rng).unwrap();
+        assert!(n1 > 0);
+
+        let mut net2 = Network::new(4, 1e9, 0.0);
+        let mut rng2 = Rng::new(7);
+        let n2 = inject_noise(&mut net2, &NoiseConfig::default(), &mut rng2).unwrap();
+        assert_eq!(n1, n2);
+    }
+
+    #[test]
+    fn single_process_has_no_links_to_noise() {
+        let mut net = Network::new(1, 1e9, 0.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(inject_noise(&mut net, &NoiseConfig::default(), &mut rng).unwrap(), 0);
+    }
+
+    #[test]
+    fn noisy_network_is_never_faster() {
+        let cfg = NoiseConfig { horizon: 10.0, mean_burst: 0.5, duty_cycle: 0.8, factor: 0.25 };
+        let mut quiet = Network::new(2, 100.0, 0.0);
+        let mut noisy = Network::new(2, 100.0, 0.0);
+        let mut rng = Rng::new(3);
+        inject_noise(&mut noisy, &cfg, &mut rng).unwrap();
+        for t0 in [0.0, 1.0, 3.5] {
+            let q = quiet.send(0, 1, 400.0, 0.0, t0).unwrap();
+            let n = noisy.send(0, 1, 400.0, 0.0, t0).unwrap();
+            assert!(n >= q - 1e-12, "noisy {n} < quiet {q}");
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Partitioning lookup table + interpolation — KVR-P (paper Sec. 4.2,
+//! Fig. 10).
+//!
+//! The table stores searched partitions (as ratios) at a few context
+//! lengths per (model, p, fabric). At inference time the partition for an
+//! unseen context is linearly interpolated from the two nearest entries —
+//! the paper shows this lands within 1.1–1.3% of the searched optimum even
+//! at 4k-token table intervals.
+
+use super::Partition;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One searched entry: context length → per-process ratios.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LutEntry {
+    pub context: usize,
+    pub ratios: Vec<f64>,
+    /// TTFT measured/simulated for the searched partition (bookkeeping).
+    pub ttft: f64,
+}
+
+/// Lookup table for one (model, process-count, fabric) triple.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionLut {
+    pub model: String,
+    pub procs: usize,
+    pub hw: String,
+    entries: Vec<LutEntry>, // sorted by context
+}
+
+impl PartitionLut {
+    pub fn new(model: &str, procs: usize, hw: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            procs,
+            hw: hw.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Insert a searched partition (keeps entries sorted by context).
+    pub fn insert(&mut self, context: usize, partition: &Partition, ttft: f64) -> Result<()> {
+        if partition.len() != self.procs {
+            return Err(Error::Partition(format!(
+                "partition arity {} != table procs {}",
+                partition.len(),
+                self.procs
+            )));
+        }
+        let entry =
+            LutEntry { context, ratios: partition.ratios(), ttft };
+        match self.entries.binary_search_by_key(&context, |e| e.context) {
+            Ok(i) => self.entries[i] = entry,
+            Err(i) => self.entries.insert(i, entry),
+        }
+        Ok(())
+    }
+
+    pub fn entries(&self) -> &[LutEntry] {
+        &self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Interpolated ratios for an arbitrary context (paper: "interpolate
+    /// from the two nearest known entries"). Clamps outside the covered
+    /// range to the nearest entry.
+    pub fn predict_ratios(&self, context: usize) -> Result<Vec<f64>> {
+        if self.entries.is_empty() {
+            return Err(Error::Partition("empty lookup table".into()));
+        }
+        let first = &self.entries[0];
+        let last = &self.entries[self.entries.len() - 1];
+        if context <= first.context {
+            return Ok(first.ratios.clone());
+        }
+        if context >= last.context {
+            return Ok(last.ratios.clone());
+        }
+        let hi_idx = self
+            .entries
+            .partition_point(|e| e.context < context);
+        let lo = &self.entries[hi_idx - 1];
+        let hi = &self.entries[hi_idx];
+        if lo.context == context {
+            return Ok(lo.ratios.clone());
+        }
+        let t = (context - lo.context) as f64 / (hi.context - lo.context) as f64;
+        let mut ratios: Vec<f64> = lo
+            .ratios
+            .iter()
+            .zip(&hi.ratios)
+            .map(|(a, b)| a * (1.0 - t) + b * t)
+            .collect();
+        let total: f64 = ratios.iter().sum();
+        for r in ratios.iter_mut() {
+            *r /= total;
+        }
+        Ok(ratios)
+    }
+
+    /// Interpolated concrete partition for `context`.
+    pub fn predict(&self, context: usize, granularity: usize) -> Result<Partition> {
+        Partition::from_ratios(context, &self.predict_ratios(context)?, granularity)
+    }
+
+    /// Serialize to JSON (stable entry order → diffable files).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.as_str().into()),
+            ("procs", self.procs.into()),
+            ("hw", self.hw.as_str().into()),
+            (
+                "entries",
+                Json::Array(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("context", e.context.into()),
+                                ("ratios", e.ratios.clone().into()),
+                                ("ttft", e.ttft.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut lut = PartitionLut::new(
+            j.req("model")?.as_str()?,
+            j.req("procs")?.as_usize()?,
+            j.req("hw")?.as_str()?,
+        );
+        for e in j.req("entries")?.as_array()? {
+            let ratios = e.req("ratios")?.as_f64_vec()?;
+            if ratios.len() != lut.procs {
+                return Err(Error::Partition(format!(
+                    "entry arity {} != procs {}",
+                    ratios.len(),
+                    lut.procs
+                )));
+            }
+            lut.entries.push(LutEntry {
+                context: e.req("context")?.as_usize()?,
+                ratios,
+                ttft: e.req("ttft")?.as_f64()?,
+            });
+        }
+        lut.entries.sort_by_key(|e| e.context);
+        Ok(lut)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_lut() -> PartitionLut {
+        let mut lut = PartitionLut::new("llama7b", 4, "a100-300gbps");
+        // Shapes like paper Fig. 10a: front-heavy, decaying ratios.
+        lut.insert(
+            8192,
+            &Partition::from_ratios(8192, &[0.34, 0.26, 0.22, 0.18], 1).unwrap(),
+            0.41,
+        )
+        .unwrap();
+        lut.insert(
+            12288,
+            &Partition::from_ratios(12288, &[0.36, 0.25, 0.20, 0.19], 1).unwrap(),
+            0.76,
+        )
+        .unwrap();
+        lut.insert(
+            16384,
+            &Partition::from_ratios(16384, &[0.38, 0.24, 0.20, 0.18], 1).unwrap(),
+            1.24,
+        )
+        .unwrap();
+        lut
+    }
+
+    #[test]
+    fn interpolates_between_neighbors() {
+        let lut = sample_lut();
+        // 10k sits between the 8k and 12k entries (the paper's example).
+        let r = lut.predict_ratios(10240).unwrap();
+        assert_eq!(r.len(), 4);
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(r[0] > 0.34 && r[0] < 0.36, "{r:?}");
+        let part = lut.predict(10240, 1).unwrap();
+        assert_eq!(part.context(), 10240);
+    }
+
+    #[test]
+    fn exact_entry_returned_verbatim() {
+        let lut = sample_lut();
+        let r = lut.predict_ratios(12288).unwrap();
+        let e: f64 = r.iter().sum();
+        assert!((e - 1.0).abs() < 1e-9);
+        assert!((r[0] - 0.36).abs() < 2e-3, "{r:?}");
+    }
+
+    #[test]
+    fn clamps_outside_range() {
+        let lut = sample_lut();
+        assert_eq!(lut.predict_ratios(1024).unwrap(),
+                   lut.entries()[0].ratios);
+        assert_eq!(lut.predict_ratios(32768).unwrap(),
+                   lut.entries()[2].ratios);
+    }
+
+    #[test]
+    fn insert_replaces_same_context() {
+        let mut lut = sample_lut();
+        let n = lut.entries().len();
+        lut.insert(8192, &Partition::even(8192, 4), 0.5).unwrap();
+        assert_eq!(lut.entries().len(), n);
+        assert!((lut.entries()[0].ratios[0] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let mut lut = PartitionLut::new("m", 4, "hw");
+        assert!(lut.insert(100, &Partition::even(100, 2), 0.1).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let lut = sample_lut();
+        let j = lut.to_json();
+        let back = PartitionLut::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, lut);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let lut = sample_lut();
+        let dir = std::env::temp_dir().join("kvr_lut_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lut.json");
+        lut.save(&path).unwrap();
+        assert_eq!(PartitionLut::load(&path).unwrap(), lut);
+    }
+
+    #[test]
+    fn empty_table_errors() {
+        let lut = PartitionLut::new("m", 2, "hw");
+        assert!(lut.predict_ratios(100).is_err());
+    }
+}

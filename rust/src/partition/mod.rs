@@ -1,0 +1,278 @@
+//! Context-level partitioning (paper Sec. 4.2).
+//!
+//! KV-Runahead's load balance lives here: the context `C` is split into
+//! `p` uneven chunks so that per-process attention rectangles
+//! `c_i × prefix_i` plus the chain wait times minimize TTFT. Provides:
+//!
+//! * [`Partition`] — validated sizes/boundaries arithmetic,
+//! * [`search`] — the paper's binary search (p=2, Fig. 6a) generalized to
+//!   a hierarchical grid search (Fig. 6b-d),
+//! * [`lut`] — the offline lookup table + interpolation that powers KVR-P
+//!   (Fig. 10).
+
+pub mod lut;
+pub mod search;
+
+use crate::error::{Error, Result};
+
+/// A partition of a context of length `c` into ordered chunk sizes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    sizes: Vec<usize>,
+}
+
+impl Partition {
+    /// Build from chunk sizes; every chunk must be non-empty.
+    pub fn from_sizes(sizes: Vec<usize>) -> Result<Self> {
+        if sizes.is_empty() {
+            return Err(Error::Partition("empty partition".into()));
+        }
+        if sizes.iter().any(|&s| s == 0) {
+            return Err(Error::Partition(format!(
+                "zero-sized chunk in {sizes:?}"
+            )));
+        }
+        Ok(Self { sizes })
+    }
+
+    /// Even partition (the TSP baseline and KVR-E): earlier chunks take
+    /// the remainder, sizes differ by at most 1.
+    pub fn even(c: usize, p: usize) -> Self {
+        assert!(p >= 1 && c >= p, "need c >= p (c={c}, p={p})");
+        let base = c / p;
+        let rem = c % p;
+        let sizes =
+            (0..p).map(|i| base + usize::from(i < rem)).collect::<Vec<_>>();
+        Self { sizes }
+    }
+
+    /// Build from interior boundaries `[b_1, .., b_{p-1}]` of `C[0..c]`.
+    pub fn from_boundaries(c: usize, bounds: &[usize]) -> Result<Self> {
+        let mut prev = 0usize;
+        let mut sizes = Vec::with_capacity(bounds.len() + 1);
+        for &b in bounds {
+            if b <= prev || b >= c {
+                return Err(Error::Partition(format!(
+                    "boundaries {bounds:?} not strictly inside (0, {c})"
+                )));
+            }
+            sizes.push(b - prev);
+            prev = b;
+        }
+        sizes.push(c - prev);
+        Self::from_sizes(sizes)
+    }
+
+    /// From per-process ratios (e.g. an interpolated LUT row): scaled to
+    /// sum exactly to `c`, optionally rounded to a `granularity` multiple
+    /// (the real PJRT path needs multiples of the smallest chunk bucket).
+    pub fn from_ratios(c: usize, ratios: &[f64], granularity: usize) -> Result<Self> {
+        if ratios.is_empty() || ratios.iter().any(|&r| r <= 0.0) {
+            return Err(Error::Partition(format!("bad ratios {ratios:?}")));
+        }
+        let g = granularity.max(1);
+        if c < ratios.len() * g {
+            return Err(Error::Partition(format!(
+                "context {c} too small for {} chunks at granularity {g}",
+                ratios.len()
+            )));
+        }
+        let total: f64 = ratios.iter().sum();
+        let mut sizes: Vec<usize> = ratios
+            .iter()
+            .map(|r| {
+                let raw = r / total * c as f64;
+                ((raw / g as f64).round() as usize).max(1) * g
+            })
+            .collect();
+        // Fix rounding drift on the largest chunk, keeping granularity.
+        let assigned: usize = sizes.iter().sum();
+        let mut drift = assigned as i64 - c as i64;
+        while drift != 0 {
+            let step = g.min(drift.unsigned_abs() as usize).max(1);
+            if drift > 0 {
+                // Shrink the largest chunk that can afford it.
+                let idx = (0..sizes.len())
+                    .filter(|&i| sizes[i] > step && sizes[i] - step >= g)
+                    .max_by_key(|&i| sizes[i])
+                    .ok_or_else(|| {
+                        Error::Partition("cannot fix rounding drift".into())
+                    })?;
+                sizes[idx] -= step;
+                drift -= step as i64;
+            } else {
+                let idx = (0..sizes.len()).max_by_key(|&i| sizes[i]).unwrap();
+                sizes[idx] += step;
+                drift += step as i64;
+            }
+        }
+        Self::from_sizes(sizes)
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn into_sizes(self) -> Vec<usize> {
+        self.sizes
+    }
+
+    pub fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sizes.is_empty()
+    }
+
+    pub fn context(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// Interior boundaries `[b_1, .., b_{p-1}]`.
+    pub fn boundaries(&self) -> Vec<usize> {
+        let mut acc = 0;
+        self.sizes[..self.sizes.len() - 1]
+            .iter()
+            .map(|&s| {
+                acc += s;
+                acc
+            })
+            .collect()
+    }
+
+    /// Prefix sums `prefix_i = Σ_{j≤i} c_j` (the KV rows process i holds).
+    pub fn prefixes(&self) -> Vec<usize> {
+        let mut acc = 0;
+        self.sizes
+            .iter()
+            .map(|&s| {
+                acc += s;
+                acc
+            })
+            .collect()
+    }
+
+    /// Chunk ratios (the LUT storage format, paper Fig. 10a).
+    pub fn ratios(&self) -> Vec<f64> {
+        let c = self.context() as f64;
+        self.sizes.iter().map(|&s| s as f64 / c).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{forall, prop};
+
+    #[test]
+    fn even_partition_sums_and_balances() {
+        let p = Partition::even(100, 3);
+        assert_eq!(p.sizes(), &[34, 33, 33]);
+        assert_eq!(p.context(), 100);
+        let q = Partition::even(96, 4);
+        assert_eq!(q.sizes(), &[24, 24, 24, 24]);
+    }
+
+    #[test]
+    fn boundaries_roundtrip() {
+        let p = Partition::from_boundaries(96, &[28, 70]).unwrap();
+        assert_eq!(p.sizes(), &[28, 42, 26]);
+        assert_eq!(p.boundaries(), vec![28, 70]);
+    }
+
+    #[test]
+    fn invalid_boundaries_rejected() {
+        assert!(Partition::from_boundaries(96, &[0]).is_err());
+        assert!(Partition::from_boundaries(96, &[96]).is_err());
+        assert!(Partition::from_boundaries(96, &[50, 40]).is_err());
+        assert!(Partition::from_sizes(vec![]).is_err());
+        assert!(Partition::from_sizes(vec![3, 0, 2]).is_err());
+    }
+
+    #[test]
+    fn prefixes_accumulate() {
+        let p = Partition::from_sizes(vec![4, 3, 2]).unwrap();
+        assert_eq!(p.prefixes(), vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn ratios_from_paper_fig10_interpolation() {
+        // Paper: 10k on 4 GPUs predicted [0.350, 0.255, 0.210, 0.185].
+        let part =
+            Partition::from_ratios(10240, &[0.350, 0.255, 0.210, 0.185], 1)
+                .unwrap();
+        assert_eq!(part.context(), 10240);
+        let r = part.ratios();
+        assert!((r[0] - 0.350).abs() < 0.01, "{r:?}");
+        assert!(r[0] > r[1] && r[1] > r[2] && r[2] > r[3], "{r:?}");
+    }
+
+    #[test]
+    fn ratios_respect_granularity() {
+        let part =
+            Partition::from_ratios(512, &[0.4, 0.3, 0.2, 0.1], 32).unwrap();
+        assert_eq!(part.context(), 512);
+        for s in part.sizes() {
+            assert_eq!(s % 32, 0, "{:?}", part.sizes());
+        }
+    }
+
+    #[test]
+    fn ratios_too_small_context_errors() {
+        assert!(Partition::from_ratios(64, &[0.5, 0.5, 0.5], 32).is_err());
+    }
+
+    #[test]
+    fn prop_even_partition_invariants() {
+        forall(200, 0xE7E7, |rng: &mut Rng| {
+            let p = rng.range(1, 9);
+            let c = rng.range(p, 20_000);
+            let part = Partition::even(c, p);
+            let max = *part.sizes().iter().max().unwrap();
+            let min = *part.sizes().iter().min().unwrap();
+            vec![
+                prop(part.context() == c, "even sums to C"),
+                prop(part.len() == p, "even has p chunks"),
+                prop(max - min <= 1, "even is balanced within 1"),
+            ]
+        });
+    }
+
+    #[test]
+    fn prop_boundaries_roundtrip() {
+        forall(200, 0xB0B0, |rng: &mut Rng| {
+            let p = rng.range(2, 8);
+            let c = rng.range(p * 4, 10_000);
+            let part = Partition::even(c, p);
+            let back =
+                Partition::from_boundaries(c, &part.boundaries()).unwrap();
+            vec![prop(back == part, "boundaries roundtrip")]
+        });
+    }
+
+    #[test]
+    fn prop_ratios_partition_sums_to_c() {
+        forall(200, 0xAAAA, |rng: &mut Rng| {
+            let p = rng.range(2, 9);
+            let g = *rng.choose(&[1usize, 16, 32]);
+            let c = rng.range(p * g.max(8), 30_000) / g * g;
+            if c < p * g {
+                return vec![];
+            }
+            let ratios: Vec<f64> =
+                (0..p).map(|_| rng.range_f64(0.05, 1.0)).collect();
+            match Partition::from_ratios(c, &ratios, g) {
+                Ok(part) => vec![
+                    prop(part.context() == c, "ratios sum to C"),
+                    prop(part.sizes().iter().all(|s| s % g == 0),
+                         "granularity respected"),
+                    prop(part.len() == p, "arity preserved"),
+                ],
+                // Infeasible combos must error, not mis-partition.
+                Err(_) => vec![prop(c < p * g * 2, "error only when tight")],
+            }
+        });
+    }
+}

@@ -1,0 +1,420 @@
+//! Partition search: the paper's Fig. 6 algorithms.
+//!
+//! * [`binary_search_two`] — p = 2 (Fig. 6a): TTFT over the single
+//!   boundary is unimodal (small-δ₁ ⇒ p₁ waits, large-δ₁ ⇒ p₀ drags), so a
+//!   ternary search on the boundary converges quickly.
+//! * [`hierarchical_grid_search`] — general p (Fig. 6b-d, Appendix D):
+//!   place 5 grid values per interior boundary around the incumbent,
+//!   evaluate all combinations, zoom the stride by 4× and repeat until the
+//!   minimum stride. The objective is pluggable (the benches use simulated
+//!   TTFT; the coordinator can use measured TTFT on the target fabric,
+//!   exactly the paper's offline procedure).
+
+use super::Partition;
+use crate::error::{Error, Result};
+
+/// One objective evaluation: chunk sizes → TTFT seconds (lower is better).
+pub type Objective<'a> = dyn FnMut(&[usize]) -> f64 + 'a;
+
+/// Search configuration (defaults mirror the paper: 5-point grids,
+/// stride shrinking 4× per level).
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Grid points per boundary per level (paper Appendix D uses 5).
+    pub grid_points: usize,
+    /// Stride shrink factor between levels (paper: 8 → 4 → … i.e. ÷2 in
+    /// Fig. 6, ÷4 in Appendix D; configurable).
+    pub shrink: usize,
+    /// Stop when the stride reaches this many tokens.
+    pub min_stride: usize,
+    /// Chunks are kept multiples of this (1 for the simulator; the real
+    /// PJRT path uses the smallest compiled chunk bucket).
+    pub granularity: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self { grid_points: 5, shrink: 2, min_stride: 1, granularity: 1 }
+    }
+}
+
+/// Per-level record (drives the Fig. 6 bench output).
+#[derive(Clone, Debug)]
+pub struct LevelTrace {
+    pub stride: usize,
+    pub evaluated: usize,
+    pub best_boundaries: Vec<usize>,
+    pub best_ttft: f64,
+}
+
+/// Search outcome.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub partition: Partition,
+    pub ttft: f64,
+    pub evaluations: usize,
+    pub levels: Vec<LevelTrace>,
+}
+
+fn eval_bounds(
+    c: usize, bounds: &[usize], granularity: usize, f: &mut Objective,
+) -> Option<f64> {
+    // Reject out-of-range/unsorted candidates and enforce granularity.
+    let mut prev = 0usize;
+    for &b in bounds {
+        if b <= prev || b >= c || b % granularity != 0 {
+            return None;
+        }
+        prev = b;
+    }
+    let part = Partition::from_boundaries(c, bounds).ok()?;
+    Some(f(part.sizes()))
+}
+
+/// Fig. 6a: find the best 2-way split of `c` by ternary search over the
+/// boundary. Falls back to scanning when the range is tiny.
+pub fn binary_search_two(
+    c: usize, cfg: &SearchConfig, f: &mut Objective,
+) -> Result<SearchResult> {
+    if c < 2 {
+        return Err(Error::Partition(format!("context {c} too short")));
+    }
+    let g = cfg.granularity.max(1);
+    let mut lo = g;
+    let mut hi = (c - 1) / g * g;
+    if hi < lo {
+        return Err(Error::Partition(format!(
+            "context {c} too short for granularity {g}"
+        )));
+    }
+    let mut evals = 0usize;
+    let eval = |b: usize, f: &mut Objective| -> f64 {
+        eval_bounds(c, &[b], g, f).unwrap_or(f64::INFINITY)
+    };
+    // Ternary search over a unimodal valley, on the granularity lattice.
+    while hi - lo > 3 * g {
+        let third = ((hi - lo) / 3 / g).max(1) * g;
+        let m1 = lo + third;
+        let m2 = hi - third;
+        let f1 = eval(m1, f);
+        let f2 = eval(m2, f);
+        evals += 2;
+        if f1 <= f2 {
+            hi = m2 - g;
+        } else {
+            lo = m1 + g;
+        }
+    }
+    // Final scan of the narrowed window.
+    let mut best_b = lo;
+    let mut best = f64::INFINITY;
+    let mut b = lo;
+    while b <= hi {
+        let v = eval(b, f);
+        evals += 1;
+        if v < best {
+            best = v;
+            best_b = b;
+        }
+        b += g;
+    }
+    Ok(SearchResult {
+        partition: Partition::from_boundaries(c, &[best_b])?,
+        ttft: best,
+        evaluations: evals,
+        levels: vec![LevelTrace {
+            stride: g,
+            evaluated: evals,
+            best_boundaries: vec![best_b],
+            best_ttft: best,
+        }],
+    })
+}
+
+/// Fig. 6(b-d): hierarchical grid search over the p-1 interior boundaries.
+///
+/// Level k evaluates the full `grid_points^(p-1)` cross product of offsets
+/// `{-2s, -s, 0, +s, +2s}` (for 5 points) around the incumbent boundaries,
+/// then shrinks `s` and recenters — the paper's zoom-in scan.
+pub fn hierarchical_grid_search(
+    c: usize, p: usize, cfg: &SearchConfig, f: &mut Objective,
+) -> Result<SearchResult> {
+    if p < 2 {
+        let part = Partition::from_sizes(vec![c])?;
+        let ttft = f(part.sizes());
+        return Ok(SearchResult {
+            partition: part,
+            ttft,
+            evaluations: 1,
+            levels: Vec::new(),
+        });
+    }
+    if p == 2 {
+        // The hierarchical search degenerates to the paper's binary search.
+        return binary_search_two(c, cfg, f);
+    }
+    let g = cfg.granularity.max(1);
+    if c < p * g {
+        return Err(Error::Partition(format!(
+            "context {c} too short for p={p} at granularity {g}"
+        )));
+    }
+
+    let dims = p - 1;
+    let half = (cfg.grid_points - 1) / 2;
+    // Two seeds: the even split, and the analytic balanced-rectangles
+    // profile — equal attention areas c_i·prefix_i = K give the recurrence
+    // x_i = (x_{i-1} + sqrt(x_{i-1}² + 4K)) / 2 (homogeneous in sqrt(K),
+    // so solve at K = 1 and rescale to x_{p-1} = C). This is exactly the
+    // front-heavy shape of the paper's Fig. 10a, and where the Eq. 1
+    // lower bound's per-process load C²(p+1)/(2p²) comes from. The zoom
+    // starts from whichever seed evaluates better.
+    let snap = |b: usize| -> usize { (b / g).max(1) * g };
+    let even_seed: Vec<usize> =
+        Partition::even(c, p).boundaries().into_iter().map(snap).collect();
+    let balanced_seed: Vec<usize> = {
+        let mut xs = Vec::with_capacity(p);
+        let mut x: f64 = 1.0; // x_0 = sqrt(K), K = 1
+        xs.push(x);
+        for _ in 1..p {
+            x = (x + (x * x + 4.0).sqrt()) / 2.0;
+            xs.push(x);
+        }
+        let scale = c as f64 / xs[p - 1];
+        xs[..p - 1].iter().map(|&v| snap((v * scale) as usize)).collect()
+    };
+    let mut evals = 0usize;
+    let mut center = even_seed.clone();
+    let mut best = f64::INFINITY;
+    for seed in [even_seed, balanced_seed] {
+        if let Some(v) = eval_bounds(c, &seed, g, f) {
+            evals += 1;
+            if v < best {
+                best = v;
+                center = seed;
+            }
+        }
+    }
+    let mut best_bounds = center.clone();
+    let mut levels = Vec::new();
+
+    // Initial stride: a quarter of the average chunk, on the lattice.
+    let mut stride = ((c / p / 4).max(cfg.min_stride) / g).max(1) * g;
+    loop {
+        let points = cfg.grid_points;
+        let mut level_best = best;
+        let mut level_bounds = best_bounds.clone();
+        let mut level_evals = 0usize;
+        if dims <= 3 {
+            // Full cross-product grid (paper Fig. 6b-d; feasible up to
+            // 4 processes: 5^3 = 125 evaluations per level).
+            let combos = points.pow(dims as u32);
+            let mut scratch = vec![0usize; dims];
+            for combo in 0..combos {
+                let mut idx = combo;
+                let mut valid = true;
+                for d in 0..dims {
+                    let offset = (idx % points) as i64 - half as i64;
+                    idx /= points;
+                    let b = center[d] as i64 + offset * stride as i64;
+                    if b <= 0 || b >= c as i64 {
+                        valid = false;
+                        break;
+                    }
+                    scratch[d] = b as usize;
+                }
+                if !valid {
+                    continue;
+                }
+                level_evals += 1;
+                if let Some(v) = eval_bounds(c, &scratch, g, f) {
+                    evals += 1;
+                    if v < level_best {
+                        level_best = v;
+                        level_bounds = scratch.clone();
+                    }
+                }
+            }
+        } else {
+            // Higher process counts: the full grid is 5^(p-1); sweep each
+            // boundary's 5 grid points with the others fixed instead, three
+            // passes per level (the paper's Appendix D notes searches are
+            // seeded/scope-limited in practice for exactly this reason).
+            for _pass in 0..3 {
+                for d in 0..dims {
+                    let mut cand = level_bounds.clone();
+                    for pt in 0..points {
+                        let offset = pt as i64 - half as i64;
+                        let b = center[d] as i64 + offset * stride as i64;
+                        if b <= 0 || b >= c as i64 {
+                            continue;
+                        }
+                        cand[d] = b as usize;
+                        level_evals += 1;
+                        if let Some(v) = eval_bounds(c, &cand, g, f) {
+                            evals += 1;
+                            if v < level_best {
+                                level_best = v;
+                                level_bounds = cand.clone();
+                            }
+                        }
+                    }
+                }
+                center = level_bounds.clone();
+            }
+        }
+        levels.push(LevelTrace {
+            stride,
+            evaluated: level_evals,
+            best_boundaries: level_bounds.clone(),
+            best_ttft: level_best,
+        });
+        if level_best < best {
+            best = level_best;
+            best_bounds = level_bounds;
+        }
+        center = best_bounds.clone();
+        if stride <= cfg.min_stride.max(g) {
+            break;
+        }
+        stride = (stride / cfg.shrink).max(cfg.min_stride.max(1));
+        stride = (stride / g).max(1) * g;
+    }
+
+    Ok(SearchResult {
+        partition: Partition::from_boundaries(c, &best_bounds)?,
+        ttft: best,
+        evaluations: evals,
+        levels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_by_name, model_by_name};
+    use crate::sim::{cost::CostModel, kvr_timeline, quiet_network};
+
+    /// Simulated-TTFT objective over the quiet 300 GB/s A100 fabric.
+    fn sim_objective(p: usize) -> impl FnMut(&[usize]) -> f64 {
+        let cm = CostModel::new(
+            model_by_name("llama7b").unwrap(),
+            hardware_by_name("a100-300gbps").unwrap(),
+        );
+        move |sizes: &[usize]| {
+            let mut net = quiet_network(&cm, p);
+            kvr_timeline(&cm, &mut net, sizes).unwrap().ttft
+        }
+    }
+
+    #[test]
+    fn binary_search_beats_even_split() {
+        let c = 16384;
+        let mut f = sim_objective(2);
+        let even = f(&[c / 2, c / 2]);
+        let res =
+            binary_search_two(c, &SearchConfig::default(), &mut f).unwrap();
+        assert!(res.ttft <= even, "searched {} vs even {even}", res.ttft);
+        // Fig. 6a: the optimum gives p0 MORE than half (δ₁ > 0).
+        assert!(res.partition.sizes()[0] > c / 2,
+                "{:?}", res.partition.sizes());
+    }
+
+    #[test]
+    fn binary_search_matches_exhaustive_scan_on_small_context() {
+        let c = 256;
+        let mut f = sim_objective(2);
+        let res =
+            binary_search_two(c, &SearchConfig::default(), &mut f).unwrap();
+        let mut brute = f64::INFINITY;
+        let mut brute_b = 0;
+        for b in 1..c {
+            let v = f(&[b, c - b]);
+            if v < brute {
+                brute = v;
+                brute_b = b;
+            }
+        }
+        assert!(res.ttft <= brute * 1.0001,
+                "ternary {} vs brute {brute} (b={brute_b})", res.ttft);
+    }
+
+    #[test]
+    fn grid_search_beats_even_for_4_processes() {
+        let c = 8192;
+        let mut f = sim_objective(4);
+        let even: Vec<usize> = Partition::even(c, 4).into_sizes();
+        let even_ttft = f(&even);
+        let res = hierarchical_grid_search(
+            c, 4, &SearchConfig::default(), &mut f,
+        )
+        .unwrap();
+        assert!(res.ttft < even_ttft,
+                "searched {} !< even {even_ttft}", res.ttft);
+        assert_eq!(res.partition.context(), c);
+        // Fig. 10a: earlier processes take more context.
+        let sizes = res.partition.sizes();
+        assert!(sizes[0] > sizes[sizes.len() - 1], "{sizes:?}");
+    }
+
+    #[test]
+    fn grid_search_close_to_brute_force_small_case() {
+        // C=96 over p=3 at granularity 4 is small enough to enumerate.
+        let c = 96;
+        let g = 4;
+        let cfg = SearchConfig { granularity: g, ..Default::default() };
+        let mut f = sim_objective(3);
+        let res = hierarchical_grid_search(c, 3, &cfg, &mut f).unwrap();
+        let mut brute = f64::INFINITY;
+        for b1 in (g..c).step_by(g) {
+            for b2 in (b1 + g..c).step_by(g) {
+                if let Some(v) = super::eval_bounds(c, &[b1, b2], g, &mut f) {
+                    brute = brute.min(v);
+                }
+            }
+        }
+        assert!(res.ttft <= brute * 1.02,
+                "grid {} vs brute {brute}", res.ttft);
+    }
+
+    #[test]
+    fn strides_shrink_monotonically() {
+        let mut f = sim_objective(4);
+        let res = hierarchical_grid_search(
+            4096, 4, &SearchConfig::default(), &mut f,
+        )
+        .unwrap();
+        for w in res.levels.windows(2) {
+            assert!(w[1].stride < w[0].stride || w[0].stride == 1);
+        }
+        // TTFT never regresses across levels.
+        for w in res.levels.windows(2) {
+            assert!(w[1].best_ttft <= w[0].best_ttft + 1e-12);
+        }
+    }
+
+    #[test]
+    fn granularity_respected_in_results() {
+        let cfg = SearchConfig { granularity: 32, ..Default::default() };
+        let mut f = sim_objective(4);
+        let res = hierarchical_grid_search(2048, 4, &cfg, &mut f).unwrap();
+        for s in res.partition.sizes() {
+            assert_eq!(s % 32, 0, "{:?}", res.partition.sizes());
+        }
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let mut calls = 0usize;
+        let mut f = |_: &[usize]| {
+            calls += 1;
+            1.0
+        };
+        let res = hierarchical_grid_search(
+            100, 1, &SearchConfig::default(), &mut f,
+        )
+        .unwrap();
+        assert_eq!(res.partition.sizes(), &[100]);
+        assert!(binary_search_two(1, &SearchConfig::default(), &mut f).is_err());
+    }
+}

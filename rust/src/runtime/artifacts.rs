@@ -1,0 +1,267 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (HLO file per shape bucket + the exact argument order).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One AOT-lowered HLO module (a `(kind, chunk, past)` shape bucket).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// "prefill" or "decode".
+    pub kind: String,
+    /// Chunk length (query tokens per call); decode uses 1.
+    pub chunk: usize,
+    /// Past-KV padding bucket the module was lowered for.
+    pub past: usize,
+    /// HLO text file name (relative to the artifact dir).
+    pub file: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub rope_theta: f64,
+    pub param_names: Vec<String>,
+    pub chunk_sizes: Vec<usize>,
+    pub past_buckets: Vec<usize>,
+    pub decode_buckets: Vec<usize>,
+    pub weights_file: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifacts(format!(
+                "{}: {e} (run `make artifacts` first)",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let m = j.req("model")?;
+        let model = ModelConfig {
+            name: "tiny".to_string(),
+            layers: m.req("layers")?.as_usize()?,
+            dim: m.req("dim")?.as_usize()?,
+            heads: m.req("heads")?.as_usize()?,
+            kv_heads: m.req("kv_heads")?.as_usize()?,
+            head_dim: m.req("head_dim")?.as_usize()?,
+            ffn: m.req("ffn")?.as_usize()?,
+            vocab: m.req("vocab")?.as_usize()?,
+            bytes_per_el: 4, // artifacts are f32 for the CPU PJRT path
+        };
+        let artifacts = j
+            .req("artifacts")?
+            .as_array()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.req("name")?.as_str()?.to_string(),
+                    kind: a.req("kind")?.as_str()?.to_string(),
+                    chunk: a.req("chunk")?.as_usize()?,
+                    past: a.req("past")?.as_usize()?,
+                    file: a.req("file")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let manifest = Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            rope_theta: m.req("rope_theta")?.as_f64()?,
+            param_names: j
+                .req("param_names")?
+                .as_array()?
+                .iter()
+                .map(|n| Ok(n.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            chunk_sizes: j.req("chunk_sizes")?.as_usize_vec()?,
+            past_buckets: j.req("past_buckets")?.as_usize_vec()?,
+            decode_buckets: j.req("decode_buckets")?.as_usize_vec()?,
+            weights_file: j.req("weights_file")?.as_str()?.to_string(),
+            artifacts,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.artifacts.is_empty() {
+            return Err(Error::Artifacts("manifest lists no artifacts".into()));
+        }
+        for a in &self.artifacts {
+            let path = self.dir.join(&a.file);
+            if !path.exists() {
+                return Err(Error::Artifacts(format!(
+                    "missing HLO file {}",
+                    path.display()
+                )));
+            }
+        }
+        if !self.dir.join(&self.weights_file).exists() {
+            return Err(Error::Artifacts(format!(
+                "missing weights file {}",
+                self.weights_file
+            )));
+        }
+        let mut chunks = self.chunk_sizes.clone();
+        chunks.sort_unstable();
+        if chunks != self.chunk_sizes {
+            return Err(Error::Artifacts("chunk_sizes not ascending".into()));
+        }
+        Ok(())
+    }
+
+    /// The prefill bucket for `(chunk, past)`, if compiled.
+    pub fn find_prefill(&self, chunk: usize, past: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "prefill" && a.chunk == chunk && a.past == past)
+    }
+
+    /// The decode bucket for a given past padding.
+    pub fn find_decode(&self, past: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "decode" && a.past == past)
+    }
+
+    /// Smallest compiled past bucket that fits `tokens` rows of cache.
+    pub fn past_bucket_for(&self, tokens: usize) -> Result<usize> {
+        self.past_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= tokens)
+            .min()
+            .ok_or_else(|| {
+                Error::Artifacts(format!(
+                    "no past bucket >= {tokens} (have {:?})",
+                    self.past_buckets
+                ))
+            })
+    }
+
+    /// Smallest compiled decode bucket that fits `tokens` rows.
+    pub fn decode_bucket_for(&self, tokens: usize) -> Result<usize> {
+        self.decode_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= tokens)
+            .min()
+            .ok_or_else(|| {
+                Error::Artifacts(format!(
+                    "no decode bucket >= {tokens} (have {:?})",
+                    self.decode_buckets
+                ))
+            })
+    }
+
+    /// Greedily decompose a chunk of `n` tokens into compiled chunk sizes
+    /// (largest-first). `n` must be a multiple of the smallest bucket.
+    pub fn decompose_chunk(&self, n: usize) -> Result<Vec<usize>> {
+        let min = *self.chunk_sizes.first().unwrap();
+        if n == 0 || n % min != 0 {
+            return Err(Error::Artifacts(format!(
+                "chunk {n} is not a positive multiple of the smallest \
+                 bucket {min}"
+            )));
+        }
+        let mut left = n;
+        let mut out = Vec::new();
+        for &size in self.chunk_sizes.iter().rev() {
+            while left >= size {
+                out.push(size);
+                left -= size;
+            }
+        }
+        debug_assert_eq!(left, 0);
+        Ok(out)
+    }
+
+    /// Max context the compiled buckets can prefill (past bucket + chunk).
+    pub fn max_context(&self) -> usize {
+        let max_past = self.past_buckets.iter().copied().max().unwrap_or(0);
+        let max_chunk = self.chunk_sizes.iter().copied().max().unwrap_or(0);
+        max_past + max_chunk
+    }
+
+    /// Partition granularity for the real path (smallest chunk bucket).
+    pub fn granularity(&self) -> usize {
+        *self.chunk_sizes.first().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.model.layers, 4);
+        assert_eq!(m.param_names.len(), 2 + 9 * m.model.layers + 1);
+        assert_eq!(
+            m.artifacts.len(),
+            m.chunk_sizes.len() * m.past_buckets.len() + m.decode_buckets.len()
+        );
+        assert!(m.find_prefill(32, 0).is_some());
+        assert!(m.find_prefill(7, 0).is_none());
+        assert!(m.find_decode(128).is_some());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.past_bucket_for(0).unwrap(), 0);
+        assert_eq!(m.past_bucket_for(1).unwrap(), 128);
+        assert_eq!(m.past_bucket_for(128).unwrap(), 128);
+        assert_eq!(m.past_bucket_for(129).unwrap(), 256);
+        assert!(m.past_bucket_for(100_000).is_err());
+        assert_eq!(m.decode_bucket_for(1).unwrap(), 128);
+    }
+
+    #[test]
+    fn chunk_decomposition_greedy() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.decompose_chunk(32).unwrap(), vec![32]);
+        assert_eq!(m.decompose_chunk(96).unwrap(), vec![64, 32]);
+        assert_eq!(m.decompose_chunk(288).unwrap(), vec![128, 128, 32]);
+        assert!(m.decompose_chunk(33).is_err());
+        assert!(m.decompose_chunk(0).is_err());
+    }
+
+    #[test]
+    fn max_context_is_past_plus_chunk() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.max_context(), 512 + 128);
+        assert_eq!(m.granularity(), 32);
+    }
+}

@@ -1,0 +1,261 @@
+//! Per-worker PJRT execution engine.
+//!
+//! One engine = one PJRT CPU client + the model weights resident as device
+//! buffers + a lazily compiled executable per shape bucket. The engine is
+//! deliberately *not* `Send` (`PjRtClient` is `Rc`-based): every worker
+//! thread builds its own, mirroring the paper's process-per-GPU layout.
+//!
+//! Hot-path design (see EXPERIMENTS.md §Perf): weights are uploaded once
+//! via `buffer_from_host_buffer` and every step runs `execute_b` over
+//! device buffers — per-chunk work is then just the tokens + KV upload,
+//! not the 3.4M-parameter re-upload a naive `execute::<Literal>` would do.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactSpec, KvCache, Manifest, Weights};
+
+/// Result of one prefill-chunk (or decode) execution.
+#[derive(Clone, Debug)]
+pub struct PrefillOutput {
+    /// LM-head logits of the chunk's last position (`[vocab]`).
+    pub logits: Vec<f32>,
+    /// `[L, Hkv, chunk, Dh]` keys of the chunk (to append to the cache).
+    pub k_chunk: Vec<f32>,
+    /// `[L, Hkv, chunk, Dh]` values of the chunk.
+    pub v_chunk: Vec<f32>,
+    /// Chunk length this output covers.
+    pub chunk: usize,
+}
+
+/// PJRT engine owning client, weights and compiled executables.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    /// Weights resident on the device, in HLO argument order.
+    param_buffers: Vec<xla::PjRtBuffer>,
+    /// name -> compiled executable (compiled on first use).
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executions performed (metrics).
+    pub executions: std::cell::Cell<usize>,
+}
+
+impl Engine {
+    /// Build an engine from an artifact directory (`make artifacts`).
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let weights = Weights::load(&manifest)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut param_buffers = Vec::with_capacity(weights.len());
+        for t in weights.tensors() {
+            let values = t.to_f32_vec()?;
+            param_buffers.push(client.buffer_from_host_buffer(
+                &values, &t.dims, None,
+            )?);
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            param_buffers,
+            exes: RefCell::new(HashMap::new()),
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Compile (or fetch) the executable for an artifact.
+    fn ensure_compiled(&self, spec: &ArtifactSpec) -> Result<()> {
+        if self.exes.borrow().contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Artifacts(format!("non-utf8 path {}", path.display()))
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.borrow_mut().insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile every bucket (used by latency-sensitive servers to move
+    /// compilation off the request path).
+    pub fn warmup_all(&self) -> Result<usize> {
+        let specs = self.manifest.artifacts.clone();
+        for spec in &specs {
+            self.ensure_compiled(spec)?;
+        }
+        Ok(specs.len())
+    }
+
+    /// Number of compiled buckets so far.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    fn run_bucket(
+        &self, spec: &ArtifactSpec, tokens: &[i32], cache: &KvCache,
+    ) -> Result<PrefillOutput> {
+        let m = &self.manifest.model;
+        if tokens.len() != spec.chunk {
+            return Err(Error::Runtime(format!(
+                "{}: got {} tokens, bucket expects {}",
+                spec.name,
+                tokens.len(),
+                spec.chunk
+            )));
+        }
+        if cache.capacity != spec.past {
+            return Err(Error::Runtime(format!(
+                "{}: cache capacity {} != bucket past {}",
+                spec.name, cache.capacity, spec.past
+            )));
+        }
+        self.ensure_compiled(spec)?;
+
+        let kv_dims = [m.layers, m.kv_heads, spec.past, m.head_dim];
+        let tok_buf =
+            self.client.buffer_from_host_buffer(tokens, &[spec.chunk], None)?;
+        let k_buf =
+            self.client.buffer_from_host_buffer(cache.k_flat(), &kv_dims, None)?;
+        let v_buf =
+            self.client.buffer_from_host_buffer(cache.v_flat(), &kv_dims, None)?;
+        let len_buf = self.client.buffer_from_host_buffer(
+            &[cache.tokens as i32],
+            &[],
+            None,
+        )?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.param_buffers.len() + 4);
+        args.extend(self.param_buffers.iter());
+        args.push(&tok_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&len_buf);
+
+        let exes = self.exes.borrow();
+        let exe = exes.get(&spec.name).expect("compiled above");
+        let result = exe.execute_b(&args)?;
+        self.executions.set(self.executions.get() + 1);
+        let literal = result[0][0].to_literal_sync()?;
+        let mut parts = literal.to_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "{}: expected 3 outputs, got {}",
+                spec.name,
+                parts.len()
+            )));
+        }
+        let v_chunk = parts.pop().unwrap().to_vec::<f32>()?;
+        let k_chunk = parts.pop().unwrap().to_vec::<f32>()?;
+        let logits = parts.pop().unwrap().to_vec::<f32>()?;
+        Ok(PrefillOutput { logits, k_chunk, v_chunk, chunk: spec.chunk })
+    }
+
+    /// Run one prefill chunk against the accumulated cache. The cache is
+    /// padded to the smallest compiled past bucket; `tokens.len()` must be
+    /// a compiled chunk size.
+    pub fn prefill_chunk(
+        &self, tokens: &[i32], cache: &KvCache,
+    ) -> Result<PrefillOutput> {
+        let past = if cache.tokens == 0 {
+            0
+        } else {
+            self.manifest.past_bucket_for(cache.tokens)?
+        };
+        let spec = self
+            .manifest
+            .find_prefill(tokens.len(), past)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no prefill bucket (chunk={}, past={past})",
+                    tokens.len()
+                ))
+            })?
+            .clone();
+        let padded = cache.padded_to(past)?;
+        self.run_bucket(&spec, tokens, &padded)
+    }
+
+    /// Prefill an arbitrary multiple-of-granularity token span, decomposing
+    /// into compiled chunk buckets and threading the cache through —
+    /// exactly what one KVR process does with its context partition.
+    /// Returns the last chunk's logits and the accumulated cache.
+    pub fn prefill(
+        &self, tokens: &[i32], mut cache: KvCache,
+    ) -> Result<(Vec<f32>, KvCache)> {
+        let m = &self.manifest.model;
+        let pieces = self.manifest.decompose_chunk(tokens.len())?;
+        let mut offset = 0usize;
+        let mut logits = Vec::new();
+        for piece in pieces {
+            let out =
+                self.prefill_chunk(&tokens[offset..offset + piece], &cache)?;
+            cache.append_chunk(piece, &out.k_chunk, &out.v_chunk)?;
+            // Keep the cache padded to its current bucket so appends are
+            // cheap; correctness only needs `tokens` to be right.
+            let _ = m;
+            logits = out.logits;
+            offset += piece;
+        }
+        Ok((logits, cache))
+    }
+
+    /// Run a specific bucket directly (calibration/benchmarks — the cache
+    /// must already be padded to `spec.past`).
+    pub fn prefill_chunk_in(
+        &self, spec: &ArtifactSpec, tokens: &[i32], cache: &KvCache,
+    ) -> Result<PrefillOutput> {
+        self.run_bucket(spec, tokens, cache)
+    }
+
+    /// One extension-phase step: a single token against the cache.
+    pub fn decode_step(
+        &self, token: i32, cache: &KvCache,
+    ) -> Result<PrefillOutput> {
+        let past = self.manifest.decode_bucket_for(cache.tokens)?;
+        let spec = self
+            .manifest
+            .find_decode(past)
+            .ok_or_else(|| {
+                Error::Runtime(format!("no decode bucket for past={past}"))
+            })?
+            .clone();
+        let padded = cache.padded_to(past)?;
+        self.run_bucket(&spec, &[token], &padded)
+    }
+
+    /// Fresh empty cache with this model's geometry.
+    pub fn empty_cache(&self) -> KvCache {
+        let m = &self.manifest.model;
+        KvCache::new(m.layers, m.kv_heads, m.head_dim, 0)
+    }
+}
+
+/// Greedy sampling: argmax over logits.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

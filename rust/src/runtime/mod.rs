@@ -1,0 +1,23 @@
+//! PJRT runtime: load the AOT artifacts emitted by `python/compile/aot.py`
+//! and execute them from the rust request path (python never runs here).
+//!
+//! * [`Manifest`] — parsed `artifacts/manifest.json`: model shape, flat
+//!   parameter order, and the registry of HLO shape buckets.
+//! * [`Weights`] — `weights.bin` (KVRT codec) as ready-to-feed literals.
+//! * [`Engine`] — one PJRT CPU client + lazily compiled executables per
+//!   shape bucket. `PjRtClient` is `Rc`-based (non-`Send`), so each worker
+//!   thread owns its own `Engine` — which also mirrors the paper's
+//!   process-per-GPU topology.
+//! * [`KvCache`] — host-side contiguous KV buffer with the
+//!   `[L, Hkv, T, Dh]` layout shared with the python model; chunk append +
+//!   bucket padding are the operations the KV-Runahead handoff needs.
+
+pub mod artifacts;
+pub mod engine;
+pub mod kv;
+pub mod weights;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use engine::{Engine, PrefillOutput};
+pub use kv::KvCache;
+pub use weights::Weights;

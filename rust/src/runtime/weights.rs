@@ -1,0 +1,111 @@
+//! Model weights: `weights.bin` (KVRT codec) → per-parameter f32 buffers
+//! in the exact flat order the lowered HLO expects.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::Manifest;
+use crate::util::bytes::{read_tensors, DType, HostTensor};
+
+/// All parameters, ordered per `manifest.param_names`.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    tensors: Vec<HostTensor>,
+}
+
+impl Weights {
+    /// Load and validate against the manifest's parameter order.
+    pub fn load(manifest: &Manifest) -> Result<Weights> {
+        Self::load_from(&manifest.dir.join(&manifest.weights_file), manifest)
+    }
+
+    pub fn load_from(path: &Path, manifest: &Manifest) -> Result<Weights> {
+        let tensors = read_tensors(path)?;
+        if tensors.len() != manifest.param_names.len() {
+            return Err(Error::Runtime(format!(
+                "weights file has {} tensors, manifest lists {}",
+                tensors.len(),
+                manifest.param_names.len()
+            )));
+        }
+        for (t, name) in tensors.iter().zip(&manifest.param_names) {
+            if &t.name != name {
+                return Err(Error::Runtime(format!(
+                    "weight order mismatch: file `{}` vs manifest `{name}`",
+                    t.name
+                )));
+            }
+            if t.dtype != DType::F32 {
+                return Err(Error::Runtime(format!("{name}: not f32")));
+            }
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn tensors(&self) -> &[HostTensor] {
+        &self.tensors
+    }
+
+    /// Build the parameter literals in HLO argument order.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.tensors
+            .iter()
+            .map(|t| {
+                let values = t.to_f32_vec()?;
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(&values).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    /// Total parameter count (sanity checks / reporting).
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.element_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_and_validates_real_weights() {
+        if !art_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let manifest = Manifest::load(&art_dir()).unwrap();
+        let w = Weights::load(&manifest).unwrap();
+        assert_eq!(w.len(), manifest.param_names.len());
+        // ~3.4M params for the tiny model.
+        assert!((1_000_000..20_000_000).contains(&w.param_count()),
+                "{}", w.param_count());
+        let lits = w.to_literals().unwrap();
+        assert_eq!(lits.len(), w.len());
+        assert_eq!(lits[0].element_count(),
+                   manifest.model.vocab * manifest.model.dim);
+    }
+
+    #[test]
+    fn rejects_wrong_order() {
+        if !art_dir().join("manifest.json").exists() {
+            return;
+        }
+        let mut manifest = Manifest::load(&art_dir()).unwrap();
+        manifest.param_names.swap(0, 1);
+        assert!(Weights::load(&manifest).is_err());
+    }
+}

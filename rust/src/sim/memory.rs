@@ -1,0 +1,117 @@
+//! Device-memory model — reproduces the paper's Fig. 8(a) OOM: TSP runs
+//! out of memory for a 16k context on 2 GPUs while KVR fits.
+//!
+//! Accounting (per process, bytes; see DESIGN.md §Substitutions):
+//!
+//! * **weights** — both schemes replicate the full weights: the paper's
+//!   TSP (Fig. 4) computes each chunk's Q/K/V with the *full* projection
+//!   matrices (sequence-sharded activations, replicated parameters), and
+//!   KVR processes each run all layers on their chunk.
+//! * **attention slab** — the materialized per-layer attention map, HF
+//!   style (fp16 scores + fp32 softmax in/out ≈ 10 B per map entry across
+//!   heads): TSP `(C/p)·C·heads`, KVR `c_i·prefix_i·heads`.
+//! * **KV cache** — TSP retains the all-gathered full-`C` cache on every
+//!   process (that is what the per-layer all-gather materializes); KVR
+//!   process i holds only `prefix_i` rows.
+//! * **allocator base** — CUDA context + workspace (~2 GB) and a 6%
+//!   fragmentation headroom on capacity.
+
+use crate::config::ModelConfig;
+
+/// Bytes per attention-map entry summed over precision copies
+/// (fp16 scores + fp32 mask-add output + fp32 softmax output + fp16 cast
+/// back — the HF compute-then-mask path of Fig. 1b).
+const SLAB_BYTES_PER_ENTRY: f64 = 12.0;
+/// CUDA context, cuBLAS workspace, activations not otherwise counted.
+const BASE_BYTES: f64 = 2.0e9;
+/// NCCL channel buffers + per-layer all-gather output double-buffering
+/// charged to TSP only (KVR's point-to-point sends reuse the cache
+/// allocation itself — contiguity requirement, paper Sec. 4.3).
+const NCCL_BASE: f64 = 1.5e9;
+/// Usable fraction of device capacity (fragmentation headroom).
+const HEADROOM: f64 = 0.95;
+
+/// Peak memory estimate of one TSP process (they are symmetric).
+pub fn tsp_peak_bytes(model: &ModelConfig, c: usize, p: usize) -> f64 {
+    let cq = c as f64 / p as f64;
+    let slab = cq * c as f64 * model.heads as f64 * SLAB_BYTES_PER_ENTRY;
+    let cache = c as f64 * model.kv_bytes_per_token() as f64;
+    // Gathered K/V double-buffer for the in-flight layer.
+    let gather = 2.0 * c as f64 * model.kv_bytes_per_token_layer() as f64;
+    model.weight_bytes() as f64 + slab + cache + gather + NCCL_BASE + BASE_BYTES
+}
+
+/// Peak memory estimate of KVR process `i` under `partition`.
+pub fn kvr_peak_bytes(model: &ModelConfig, partition: &[usize], i: usize) -> f64 {
+    let prefix: usize = partition[..=i].iter().sum();
+    let ci = partition[i] as f64;
+    let slab = ci * prefix as f64 * model.heads as f64 * SLAB_BYTES_PER_ENTRY;
+    let cache = prefix as f64 * model.kv_bytes_per_token() as f64;
+    model.weight_bytes() as f64 + slab + cache + BASE_BYTES
+}
+
+/// Max over KVR processes.
+pub fn kvr_peak_bytes_max(model: &ModelConfig, partition: &[usize]) -> f64 {
+    (0..partition.len())
+        .map(|i| kvr_peak_bytes(model, partition, i))
+        .fold(0.0, f64::max)
+}
+
+/// Would the scheme OOM on a device with `mem_bytes` capacity?
+pub fn ooms(peak_bytes: f64, mem_bytes: f64) -> bool {
+    peak_bytes > mem_bytes * HEADROOM
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_by_name;
+
+    const A100: f64 = 80e9;
+
+    #[test]
+    fn fig8a_tsp_ooms_at_16k_on_2_gpus() {
+        let m = model_by_name("llama7b").unwrap();
+        assert!(ooms(tsp_peak_bytes(&m, 16384, 2), A100));
+    }
+
+    #[test]
+    fn fig8a_kvr_fits_at_16k_on_2_gpus() {
+        // The searched partition from Fig. 6a: [0, 9728, 16384].
+        let m = model_by_name("llama7b").unwrap();
+        let part = [9728, 16384 - 9728];
+        assert!(!ooms(kvr_peak_bytes_max(&m, &part), A100));
+        // Even partitioning also fits (KVR-E ran in the paper's Fig. 8a).
+        assert!(!ooms(kvr_peak_bytes_max(&m, &[8192, 8192]), A100));
+    }
+
+    #[test]
+    fn tsp_fits_at_16k_on_4_gpus() {
+        // Fig. 8(a-c): the OOM is specific to p=2; p∈{4,8} measured fine.
+        let m = model_by_name("llama7b").unwrap();
+        assert!(!ooms(tsp_peak_bytes(&m, 16384, 4), A100));
+        assert!(!ooms(tsp_peak_bytes(&m, 16384, 8), A100));
+    }
+
+    #[test]
+    fn tsp_fits_at_12k_on_2_gpus() {
+        let m = model_by_name("llama7b").unwrap();
+        assert!(!ooms(tsp_peak_bytes(&m, 12288, 2), A100));
+    }
+
+    #[test]
+    fn kvr_memory_grows_with_process_rank_prefix() {
+        let m = model_by_name("llama7b").unwrap();
+        let part = [4096, 4096, 4096, 4096];
+        let p1 = kvr_peak_bytes(&m, &part, 1);
+        let p3 = kvr_peak_bytes(&m, &part, 3);
+        assert!(p3 > p1);
+    }
+
+    #[test]
+    fn larger_model_uses_more_memory() {
+        let m7 = model_by_name("llama7b").unwrap();
+        let m13 = model_by_name("llama13b").unwrap();
+        assert!(tsp_peak_bytes(&m13, 8192, 4) > tsp_peak_bytes(&m7, 8192, 4));
+    }
+}

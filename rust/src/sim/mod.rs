@@ -1,0 +1,333 @@
+//! Discrete-event simulation of parallel prefill on the modeled cluster.
+//!
+//! This is the substrate standing in for the paper's 8×A100 node (see
+//! DESIGN.md §2): per-process timelines advance through per-layer compute
+//! events (timed by [`cost::CostModel`]) and network events (timed by
+//! [`crate::net::Network`], including link FIFO serialization, contention
+//! noise, and collective barriers). The two dataflows are:
+//!
+//! * [`tsp_timeline`] — Fig. 4: even shards, per-layer ring all-gather of
+//!   K/V, globally synchronized, symmetric compute.
+//! * [`kvr_timeline`] — Fig. 5: uneven shards, per-layer point-to-point
+//!   `send` of the accumulated KV-cache down the chain `p_i → p_{i+1}`,
+//!   recv overlapped with the QKV projection and send overlapped with
+//!   attention (Sec. 4.3).
+//!
+//! Both return full per-process/per-layer traces so the benches can print
+//! the paper's figures and the tests can assert causality invariants.
+
+pub mod cost;
+pub mod memory;
+
+use crate::error::Result;
+use crate::net::{collective::ring_all_gather, Network};
+use cost::CostModel;
+
+/// Per-layer timing record of one process.
+#[derive(Clone, Debug, Default)]
+pub struct LayerTrace {
+    /// When the QKV projection started.
+    pub proj_start: f64,
+    /// When the needed KV (past cache ∪ local) was in place.
+    pub kv_ready: f64,
+    /// When attention + MLP finished (layer output ready).
+    pub done: f64,
+}
+
+/// Outcome of one simulated prefill.
+#[derive(Clone, Debug)]
+pub struct PrefillSim {
+    /// Time to first token (s).
+    pub ttft: f64,
+    /// trace[i][l]: process i, layer l.
+    pub trace: Vec<Vec<LayerTrace>>,
+    /// Total KV entries placed on the network (paper Eqs. 4–7 unit).
+    pub net_kv_entries: f64,
+    /// Total payload bytes placed on the network.
+    pub net_bytes: f64,
+    /// Peak simulated device memory over processes (bytes).
+    pub peak_mem_bytes: f64,
+    /// Whether the run would OOM on the modeled device.
+    pub oom: bool,
+}
+
+/// TSP (tensor/sequence parallel, Fig. 4): even context partition,
+/// per-layer all-gather of K/V, symmetric compute.
+pub fn tsp_timeline(cm: &CostModel, net: &mut Network, c: usize) -> Result<PrefillSim> {
+    let p = net.procs();
+    net.reset_stats();
+    let shard = c as f64 / p as f64;
+    let kv_row_bytes = cm.model.kv_bytes_per_token_layer() as f64;
+    let mut ready = vec![0.0f64; p];
+    let mut trace = vec![vec![LayerTrace::default(); cm.model.layers]; p];
+
+    // Hoisted per-layer scratch (the sweep benches run this timeline
+    // hundreds of thousands of times — see EXPERIMENTS.md §Perf).
+    let shard_bytes = vec![shard * kv_row_bytes; p];
+    let shard_entries = vec![shard; p];
+    let mut proj_done = vec![0.0f64; p];
+    for l in 0..cm.model.layers {
+        // (a) Local QKV projection of the shard.
+        for i in 0..p {
+            trace[i][l].proj_start = ready[i];
+            proj_done[i] = ready[i] + cm.proj_time(shard);
+        }
+        // (b) Ring all-gather of every shard's K/V — global sync point.
+        let gathered =
+            ring_all_gather(net, &shard_bytes, &shard_entries, &proj_done)?;
+        // (c) Symmetric attention over (C/p × C) + MLP.
+        for i in 0..p {
+            trace[i][l].kv_ready = gathered.done[i];
+            ready[i] = gathered.done[i]
+                + cm.attn_time(shard, c as f64)
+                + cm.hw.layer_overhead;
+            trace[i][l].done = ready[i];
+        }
+    }
+    // First token: LM head on the process owning the last position.
+    let ttft = ready[p - 1] + cm.lm_head_time() + cm.hw.base_overhead;
+    let peak = memory::tsp_peak_bytes(&cm.model, c, p);
+    Ok(PrefillSim {
+        ttft,
+        trace,
+        net_kv_entries: net.stats.kv_entries,
+        net_bytes: net.stats.total_bytes,
+        peak_mem_bytes: peak,
+        oom: memory::ooms(peak, cm.hw.mem_bytes),
+    })
+}
+
+/// KV-Runahead (Fig. 5): uneven partition; process i receives the
+/// accumulated cache from i-1 (overlapped with its QKV projection),
+/// concatenates, forwards `prefix_i` rows to i+1 (overlapped with its
+/// attention), then computes its `c_i × prefix_i` attention rectangle.
+pub fn kvr_timeline(
+    cm: &CostModel, net: &mut Network, partition: &[usize],
+) -> Result<PrefillSim> {
+    let p = net.procs();
+    assert_eq!(partition.len(), p, "partition arity != process count");
+    net.reset_stats();
+    let kv_row_bytes = cm.model.kv_bytes_per_token_layer() as f64;
+    let prefix: Vec<f64> = partition
+        .iter()
+        .scan(0f64, |acc, &c| {
+            *acc += c as f64;
+            Some(*acc)
+        })
+        .collect();
+
+    let mut ready = vec![0.0f64; p];
+    let mut trace = vec![vec![LayerTrace::default(); cm.model.layers]; p];
+
+    for l in 0..cm.model.layers {
+        // arrive[i]: when the layer-l cache message from i-1 lands. The
+        // chain runs strictly forward, so arrivals for this layer are
+        // produced (at i) before they are consumed (at i+1).
+        let mut arrive = vec![0.0f64; p];
+        for i in 0..p {
+            let ci = partition[i] as f64;
+            trace[i][l].proj_start = ready[i];
+            let proj_done = ready[i] + cm.proj_time(ci);
+            // Receive is asynchronous and overlapped with the projection
+            // (Sec. 4.3): the cache is required only at concat time.
+            let kv_ready = if i == 0 { proj_done } else { proj_done.max(arrive[i]) };
+            trace[i][l].kv_ready = kv_ready;
+            // Forward the accumulated cache right after concat; the send
+            // overlaps with the local attention compute (point-to-point,
+            // one-way — no global barrier).
+            if i + 1 < p {
+                arrive[i + 1] =
+                    net.send(i, i + 1, prefix[i] * kv_row_bytes, prefix[i], kv_ready)?;
+            }
+            ready[i] = kv_ready
+                + cm.attn_time(ci, prefix[i])
+                + cm.hw.layer_overhead;
+            trace[i][l].done = ready[i];
+        }
+    }
+    let ttft = ready[p - 1] + cm.lm_head_time() + cm.hw.base_overhead;
+    let peak = memory::kvr_peak_bytes_max(&cm.model, partition);
+    Ok(PrefillSim {
+        ttft,
+        trace,
+        net_kv_entries: net.stats.kv_entries,
+        net_bytes: net.stats.total_bytes,
+        peak_mem_bytes: peak,
+        oom: memory::ooms(peak, cm.hw.mem_bytes),
+    })
+}
+
+/// Single-process baseline (no network).
+pub fn single_timeline(cm: &CostModel, c: usize) -> PrefillSim {
+    let mut trace = vec![Vec::with_capacity(cm.model.layers)];
+    let mut t = 0.0;
+    for _ in 0..cm.model.layers {
+        let start = t;
+        t += cm.layer_time(c as f64, c as f64);
+        trace[0].push(LayerTrace { proj_start: start, kv_ready: start, done: t });
+    }
+    let peak = memory::kvr_peak_bytes_max(&cm.model, &[c]);
+    PrefillSim {
+        ttft: t + cm.lm_head_time() + cm.hw.base_overhead,
+        trace,
+        net_kv_entries: 0.0,
+        net_bytes: 0.0,
+        peak_mem_bytes: peak,
+        oom: memory::ooms(peak, cm.hw.mem_bytes),
+    }
+}
+
+/// Convenience: build a quiet network matching a cost model's hardware.
+pub fn quiet_network(cm: &CostModel, p: usize) -> Network {
+    Network::new(p, cm.hw.net_bw, cm.hw.net_latency)
+}
+
+/// Practical lower bound `TTFT(p)` from Fig. 8(d): KVR with the given
+/// partition and *zero-cost* communication.
+pub fn kvr_zero_comm(cm: &CostModel, partition: &[usize]) -> Result<PrefillSim> {
+    let mut net = Network::new(partition.len(), f64::INFINITY, 0.0);
+    kvr_timeline(cm, &mut net, partition)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_by_name, model_by_name};
+    use crate::partition::Partition;
+
+    fn cm(hw: &str) -> CostModel {
+        CostModel::new(model_by_name("llama7b").unwrap(),
+                       hardware_by_name(hw).unwrap())
+    }
+
+    #[test]
+    fn tsp_traffic_matches_eq5() {
+        // Eq. 5: Net_tsp = (p-1)·C KV entries *per layer*.
+        let cm = cm("a100-300gbps");
+        for p in [2usize, 4, 8] {
+            let mut net = quiet_network(&cm, p);
+            let c = 8192;
+            let sim = tsp_timeline(&cm, &mut net, c).unwrap();
+            let expect = (p as f64 - 1.0) * c as f64 * cm.model.layers as f64;
+            assert!((sim.net_kv_entries - expect).abs() < 1e-6,
+                    "p={p}: {} vs {expect}", sim.net_kv_entries);
+        }
+    }
+
+    #[test]
+    fn kvr_traffic_matches_eq7() {
+        // Eq. 7: Net_kvr = (p-1)/2·C entries per layer (even partition).
+        let cm = cm("a100-300gbps");
+        for p in [2usize, 4, 8] {
+            let mut net = quiet_network(&cm, p);
+            let c = 8192;
+            let part = Partition::even(c, p).into_sizes();
+            let sim = kvr_timeline(&cm, &mut net, &part).unwrap();
+            let expect =
+                (p as f64 - 1.0) / 2.0 * c as f64 * cm.model.layers as f64;
+            assert!((sim.net_kv_entries - expect).abs() < 1e-6,
+                    "p={p}: {} vs {expect}", sim.net_kv_entries);
+        }
+    }
+
+    #[test]
+    fn kvr_halves_tsp_traffic() {
+        let cm = cm("a100-300gbps");
+        let c = 16384;
+        let p = 8;
+        let mut n1 = quiet_network(&cm, p);
+        let mut n2 = quiet_network(&cm, p);
+        let tsp = tsp_timeline(&cm, &mut n1, c).unwrap();
+        let part = Partition::even(c, p).into_sizes();
+        let kvr = kvr_timeline(&cm, &mut n2, &part).unwrap();
+        assert!((tsp.net_bytes / kvr.net_bytes - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kvr_beats_tsp_on_long_context() {
+        // The headline: KVR-E already beats TSP at 300 GB/s for 8k+.
+        let cm = cm("a100-300gbps");
+        for (c, p) in [(8192usize, 4usize), (16384, 4), (16384, 8)] {
+            let mut n1 = quiet_network(&cm, p);
+            let mut n2 = quiet_network(&cm, p);
+            let tsp = tsp_timeline(&cm, &mut n1, c).unwrap();
+            let part = Partition::even(c, p).into_sizes();
+            let kvr = kvr_timeline(&cm, &mut n2, &part).unwrap();
+            assert!(kvr.ttft < tsp.ttft,
+                    "c={c} p={p}: kvr {} !< tsp {}", kvr.ttft, tsp.ttft);
+        }
+    }
+
+    #[test]
+    fn event_times_are_causal_and_monotone() {
+        let cm = cm("a100-10gbps");
+        let mut net = quiet_network(&cm, 4);
+        let sim = kvr_timeline(&cm, &mut net, &[3000, 2500, 1500, 1192]).unwrap();
+        for (i, proc_trace) in sim.trace.iter().enumerate() {
+            let mut prev_done = 0.0;
+            for lt in proc_trace {
+                assert!(lt.proj_start >= prev_done - 1e-12);
+                assert!(lt.kv_ready >= lt.proj_start);
+                assert!(lt.done > lt.kv_ready);
+                prev_done = lt.done;
+            }
+            // Chain dependency: kv_ready of i never precedes kv_ready of
+            // i-1 in the same layer (the cache flows down the chain).
+            if i > 0 {
+                for (l, lt) in proc_trace.iter().enumerate() {
+                    assert!(lt.kv_ready >= sim.trace[i - 1][l].kv_ready);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_process_matches_cost_model() {
+        let cm = cm("a100-300gbps");
+        let sim = single_timeline(&cm, 8192);
+        assert!((sim.ttft - cm.ttft_single(8192)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_comm_bound_is_never_slower_than_real_network() {
+        let cm = cm("a100-10gbps");
+        let part = Partition::even(12288, 4).into_sizes();
+        let mut net = quiet_network(&cm, 4);
+        let real = kvr_timeline(&cm, &mut net, &part).unwrap();
+        let ideal = kvr_zero_comm(&cm, &part).unwrap();
+        assert!(ideal.ttft <= real.ttft + 1e-12);
+    }
+
+    #[test]
+    fn low_bandwidth_hurts_tsp_more_than_kvr() {
+        // Fig. 8(e,f): the KVR advantage widens at 10 GB/s.
+        let c = 12288;
+        let p = 4;
+        let hi = cm("a100-300gbps");
+        let lo = cm("a100-10gbps");
+        let part = Partition::even(c, p).into_sizes();
+        let ttft = |cm: &CostModel, kvr: bool| {
+            let mut net = quiet_network(cm, p);
+            if kvr {
+                kvr_timeline(cm, &mut net, &part).unwrap().ttft
+            } else {
+                tsp_timeline(cm, &mut net, c).unwrap().ttft
+            }
+        };
+        let speedup_hi = ttft(&hi, false) / ttft(&hi, true);
+        let speedup_lo = ttft(&lo, false) / ttft(&lo, true);
+        assert!(speedup_lo > speedup_hi,
+                "lo {speedup_lo} should exceed hi {speedup_hi}");
+    }
+
+    #[test]
+    fn oom_surfaces_in_sim_result() {
+        let cm = cm("a100-300gbps");
+        let mut net = quiet_network(&cm, 2);
+        let sim = tsp_timeline(&cm, &mut net, 16384).unwrap();
+        assert!(sim.oom, "Fig. 8a: TSP 16k on 2 GPUs must OOM");
+        let mut net = quiet_network(&cm, 2);
+        let kvr = kvr_timeline(&cm, &mut net, &[9728, 6656]).unwrap();
+        assert!(!kvr.oom);
+    }
+}

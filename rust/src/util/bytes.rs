@@ -1,0 +1,237 @@
+//! KVRT tensor codec — the weights interchange format with the python side.
+//!
+//! Written by `python/compile/aot.py::write_tensors`; layout (all
+//! little-endian):
+//!
+//! ```text
+//! magic "KVRT" | u32 version=1 | u32 n_tensors
+//! per tensor: u32 name_len | name utf8 | u8 dtype | u8 ndim
+//!             u32 dims[ndim] | u64 data_len | raw data
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Element type codes shared with the python writer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        match c {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            other => Err(Error::Codec(format!("unknown dtype code {other}"))),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// A host tensor: raw little-endian bytes plus shape metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn f32(name: &str, dims: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(values.len(), dims.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { name: name.to_string(), dtype: DType::F32, dims, data }
+    }
+
+    pub fn i32(name: &str, dims: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(values.len(), dims.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { name: name.to_string(), dtype: DType::I32, dims, data }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::Codec(format!("{}: not f32", self.name)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_i32_vec(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::Codec(format!("{}: not i32", self.name)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)
+        .map_err(|e| Error::Codec(format!("truncated tensor file: {e}")))?;
+    Ok(buf)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let b = read_exact(r, 4)?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let b = read_exact(r, 8)?;
+    Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+}
+
+/// Read every tensor from a KVRT file, in file order.
+pub fn read_tensors(path: &Path) -> Result<Vec<HostTensor>> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Codec(format!("{}: {e}", path.display())))?;
+    let mut r = std::io::BufReader::new(file);
+    let magic = read_exact(&mut r, 4)?;
+    if magic != b"KVRT" {
+        return Err(Error::Codec("bad magic (not a KVRT file)".into()));
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        return Err(Error::Codec(format!("unsupported KVRT version {version}")));
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        let name = String::from_utf8(read_exact(&mut r, name_len)?)
+            .map_err(|_| Error::Codec("non-utf8 tensor name".into()))?;
+        let header = read_exact(&mut r, 2)?;
+        let dtype = DType::from_code(header[0])?;
+        let ndim = header[1] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let data_len = read_u64(&mut r)? as usize;
+        let expected = dims.iter().product::<usize>() * dtype.size();
+        if data_len != expected {
+            return Err(Error::Codec(format!(
+                "{name}: payload {data_len} bytes, shape implies {expected}"
+            )));
+        }
+        let data = read_exact(&mut r, data_len)?;
+        tensors.push(HostTensor { name, dtype, dims, data });
+    }
+    Ok(tensors)
+}
+
+/// Write tensors in KVRT v1 (used by tests and checkpointing).
+pub fn write_tensors(path: &Path, tensors: &[HostTensor]) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| Error::Codec(format!("{}: {e}", path.display())))?;
+    let mut w = std::io::BufWriter::new(file);
+    let emit = |w: &mut dyn Write, bytes: &[u8]| -> Result<()> {
+        w.write_all(bytes)
+            .map_err(|e| Error::Codec(format!("write failed: {e}")))
+    };
+    emit(&mut w, b"KVRT")?;
+    emit(&mut w, &1u32.to_le_bytes())?;
+    emit(&mut w, &(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        emit(&mut w, &(t.name.len() as u32).to_le_bytes())?;
+        emit(&mut w, t.name.as_bytes())?;
+        emit(&mut w, &[t.dtype.code(), t.dims.len() as u8])?;
+        for d in &t.dims {
+            emit(&mut w, &(*d as u32).to_le_bytes())?;
+        }
+        emit(&mut w, &(t.data.len() as u64).to_le_bytes())?;
+        emit(&mut w, &t.data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_tensors() {
+        let dir = std::env::temp_dir().join("kvrt_test_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let tensors = vec![
+            HostTensor::f32("w", vec![2, 3], &[1.0, 2.0, 3.0, -4.0, 0.5, 6.0]),
+            HostTensor::i32("ids", vec![4], &[0, -1, 7, 255]),
+            HostTensor::f32("scalar", vec![1], &[9.25]),
+        ];
+        write_tensors(&path, &tensors).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(back, tensors);
+        assert_eq!(back[0].to_f32_vec().unwrap()[3], -4.0);
+        assert_eq!(back[1].to_i32_vec().unwrap(), vec![0, -1, 7, 255]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("kvrt_test_magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_tensors(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_payload_mismatch() {
+        let dir = std::env::temp_dir().join("kvrt_test_mismatch");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        // Hand-craft a header whose data_len disagrees with the shape.
+        let mut raw: Vec<u8> = Vec::new();
+        raw.extend_from_slice(b"KVRT");
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(b"x");
+        raw.extend_from_slice(&[0u8, 1u8]); // f32, ndim 1
+        raw.extend_from_slice(&4u32.to_le_bytes()); // dims [4] -> 16 bytes
+        raw.extend_from_slice(&8u64.to_le_bytes()); // but claim 8
+        raw.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &raw).unwrap();
+        let err = read_tensors(&path).unwrap_err().to_string();
+        assert!(err.contains("shape implies"), "{err}");
+    }
+
+    #[test]
+    fn dtype_mismatch_is_an_error() {
+        let t = HostTensor::f32("w", vec![1], &[1.0]);
+        assert!(t.to_i32_vec().is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Hand-rolled CLI argument parsing (clap is not vendored offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (excluding argv[0]). `flag_names` lists options
+    /// that take no value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    i += 1;
+                    let v = raw.get(i).ok_or_else(|| {
+                        Error::Cli(format!("--{body} expects a value"))
+                    })?;
+                    out.options.insert(body.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Cli(format!("--{name}: `{v}` is not an unsigned int"))
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name}: `{v}` is not a number"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Cli(format!("--{name}: `{v}` is not an unsigned int"))
+            }),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--contexts 4096,8192`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim().parse().map_err(|_| {
+                        Error::Cli(format!("--{name}: `{x}` is not an unsigned int"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_and_options() {
+        let a = Args::parse(&raw(&["serve", "--workers", "4", "--quiet"]),
+                            &["quiet"]).unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 4);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&raw(&["--ctx=16384"]), &[]).unwrap();
+        assert_eq!(a.usize_or("ctx", 0).unwrap(), 16384);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw(&["--workers"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&raw(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&raw(&["--ctx", "1024, 2048,4096"]), &[]).unwrap();
+        assert_eq!(a.usize_list_or("ctx", &[]).unwrap(), vec![1024, 2048, 4096]);
+        assert_eq!(a.usize_list_or("other", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &[]).unwrap();
+        assert_eq!(a.str_or("model", "llama7b"), "llama7b");
+        assert_eq!(a.f64_or("bw", 300e9).unwrap(), 300e9);
+    }
+}

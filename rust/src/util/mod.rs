@@ -1,0 +1,9 @@
+//! Substrate utilities built in-repo (the offline vendor set has no clap /
+//! serde / criterion / proptest — see DESIGN.md §2).
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testkit;

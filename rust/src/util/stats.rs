@@ -1,0 +1,169 @@
+//! Summary statistics + a minimal criterion-style measurement loop.
+//!
+//! criterion is not vendored offline, so the benches under `rust/benches/`
+//! use [`Bench`] for warmed-up, repeated timing with mean/p50/p95 reporting.
+
+use std::time::Instant;
+
+/// Summary of a sample set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::of on empty sample set");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pct = pct.clamp(0.0, 100.0);
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Measurement loop: warmup iterations, then timed iterations; returns
+/// per-iteration seconds.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 20 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters }
+    }
+
+    /// Run `f` warmup+iters times; returns the timed per-call samples (sec).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Vec<f64> {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples
+    }
+
+    /// Run + summarize + print one `name: mean ± std [p50/p95]` row.
+    pub fn report<T>(&self, name: &str, f: impl FnMut() -> T) -> Summary {
+        let s = Summary::of(&self.run(f));
+        println!(
+            "{name:<44} {:>10}  ±{:>9}  p50 {:>10}  p95 {:>10}  (n={})",
+            fmt_time(s.mean),
+            fmt_time(s.std),
+            fmt_time(s.p50),
+            fmt_time(s.p95),
+            s.n
+        );
+        s
+    }
+}
+
+/// Human-format a duration given in seconds.
+pub fn fmt_time(sec: f64) -> String {
+    if sec >= 1.0 {
+        format!("{sec:.3}s")
+    } else if sec >= 1e-3 {
+        format!("{:.3}ms", sec * 1e3)
+    } else if sec >= 1e-6 {
+        format!("{:.3}us", sec * 1e6)
+    } else {
+        format!("{:.1}ns", sec * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_samples() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let sorted: Vec<f64> = (0..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 50.0), 50.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 100.0);
+        assert!((percentile_sorted(&sorted, 95.0) - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        assert_eq!(percentile_sorted(&[3.5], 99.0), 3.5);
+    }
+
+    #[test]
+    fn summary_orders_min_max() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0usize;
+        let b = Bench::new(2, 5);
+        let samples = b.run(|| count += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(count, 7);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).ends_with('s'));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5e-6).ends_with("us"));
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,83 @@
+//! In-repo property-testing harness (proptest is not vendored offline).
+//!
+//! A deliberately small core: deterministic case generation from a seed,
+//! a fixed case budget, and first-failure reporting with the generating
+//! seed so any failure is reproducible by pasting the seed into a unit
+//! test. Shrinking is left to the property author (generators take sizes,
+//! so re-running with a smaller size bound is the practical shrink here).
+//!
+//! ```ignore
+//! forall(128, 0xC0FFEE, |rng| {
+//!     let c = rng.range(1, 4096);
+//!     let p = rng.range(1, 9);
+//!     let part = Partition::even(c, p);
+//!     prop(part.sizes().iter().sum::<usize>() == c, "sizes sum to C")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property check.
+pub struct Check {
+    pub ok: bool,
+    pub label: &'static str,
+}
+
+/// Assert-style helper used inside properties.
+pub fn prop(ok: bool, label: &'static str) -> Check {
+    Check { ok, label }
+}
+
+/// Run `cases` random cases of `property`, seeding each case's [`Rng`]
+/// deterministically from `seed`. Panics (failing the enclosing `#[test]`)
+/// with the case index + per-case seed on the first violated property.
+pub fn forall(cases: usize, seed: u64, mut property: impl FnMut(&mut Rng) -> Vec<Check>) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        for check in property(&mut rng) {
+            assert!(
+                check.ok,
+                "property `{}` failed on case {case} (seed {case_seed:#x})",
+                check.label
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        forall(50, 1, |rng| {
+            runs += 1;
+            let x = rng.range(0, 100);
+            vec![prop(x < 100, "range upper bound")]
+        });
+        assert_eq!(runs, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always false` failed")]
+    fn failing_property_panics_with_label() {
+        forall(3, 2, |_| vec![prop(false, "always false")]);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        forall(10, 42, |rng| {
+            first.push(rng.next_u64());
+            vec![]
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall(10, 42, |rng| {
+            second.push(rng.next_u64());
+            vec![]
+        });
+        assert_eq!(first, second);
+    }
+}

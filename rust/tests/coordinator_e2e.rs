@@ -1,0 +1,134 @@
+//! End-to-end integration: multi-worker KVR chain + scheduler over real
+//! PJRT execution of the AOT artifacts.
+
+use std::path::PathBuf;
+
+use kvr::coordinator::{
+    ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
+    SchedulerConfig,
+};
+use kvr::runtime::Engine;
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    art_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn two_worker_chain_matches_single_engine() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let tok = ByteTokenizer;
+    let prompt = tok.pad_to_multiple(
+        &tok.encode("Antibiotics are a type of medication used to treat \
+                     bacterial infections at scale"),
+        32,
+    );
+
+    // Reference: single engine, single-process prefill.
+    let engine = Engine::new(&art_dir()).unwrap();
+    let (ref_logits, _) = engine.prefill(&prompt, engine.empty_cache()).unwrap();
+
+    // Two-worker KVR chain (even partition).
+    let mut cluster = Cluster::new(&art_dir(), 2).unwrap();
+    let pre = cluster
+        .parallel_prefill(1, &prompt, &PartitionPolicy::Even)
+        .unwrap();
+    assert_eq!(pre.partition.iter().sum::<usize>(), prompt.len());
+    assert_eq!(pre.partition.len(), 2);
+    for (i, (a, b)) in pre.logits.iter().zip(&ref_logits).enumerate() {
+        assert!((a - b).abs() < 2e-3, "logit[{i}]: chain {a} vs single {b}");
+    }
+    cluster.release(pre.owner, 1).unwrap();
+}
+
+#[test]
+fn uneven_ratio_policy_matches_even() {
+    if !have_artifacts() {
+        return;
+    }
+    let tok = ByteTokenizer;
+    let prompt = tok.pad_to_multiple(&vec![7i32; 170], 32); // 192 tokens
+    let mut cluster = Cluster::new(&art_dir(), 2).unwrap();
+
+    let even = cluster
+        .parallel_prefill(10, &prompt, &PartitionPolicy::Even)
+        .unwrap();
+    cluster.release(even.owner, 10).unwrap();
+    let skew = cluster
+        .parallel_prefill(11, &prompt, &PartitionPolicy::Ratios(vec![0.7, 0.3]))
+        .unwrap();
+    cluster.release(skew.owner, 11).unwrap();
+
+    assert_ne!(even.partition, skew.partition);
+    for (a, b) in even.logits.iter().zip(&skew.logits) {
+        assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn scheduler_serves_batch_with_decode() {
+    if !have_artifacts() {
+        return;
+    }
+    let tok = ByteTokenizer;
+    let mut cluster = Cluster::new(&art_dir(), 2).unwrap();
+    let mk = |id: u64, text: &str| GenRequest {
+        id,
+        tokens: tok.pad_to_multiple(&tok.encode(text), 32),
+        max_new_tokens: 4,
+        arrival: 0.0,
+    };
+    let requests = vec![
+        mk(0, "the quick brown fox"),
+        mk(1, "pack my box with five dozen jugs"),
+        mk(2, "lorem ipsum dolor sit amet"),
+    ];
+    let sched = Scheduler::new(SchedulerConfig {
+        max_active: 2,
+        ..Default::default()
+    });
+    let (responses, metrics) = sched.serve(&mut cluster, requests).unwrap();
+    assert_eq!(responses.len(), 3);
+    for r in &responses {
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 4);
+        assert!(r.ttft > 0.0);
+        assert_eq!(r.tpot.len(), r.tokens.len() - 1);
+    }
+    assert_eq!(metrics.requests, 3);
+    assert!(metrics.throughput() > 0.0);
+
+    // Determinism: the same prompt generates the same tokens.
+    let again = Scheduler::new(SchedulerConfig {
+        max_active: 1,
+        ..Default::default()
+    });
+    let (responses2, _) = again
+        .serve(
+            &mut cluster,
+            vec![mk(0, "the quick brown fox")],
+        )
+        .unwrap();
+    assert_eq!(responses2[0].tokens, responses[0].tokens);
+}
+
+#[test]
+fn plan_partition_respects_granularity_and_worker_count() {
+    if !have_artifacts() {
+        return;
+    }
+    let cluster = Cluster::new(&art_dir(), 4).unwrap();
+    let part = cluster.plan_partition(128, &PartitionPolicy::Even).unwrap();
+    // 128 tokens at granularity 32 over 4 workers -> [32; 4].
+    assert_eq!(part.sizes(), &[32, 32, 32, 32]);
+    // 64 tokens can use at most 2 workers.
+    let part = cluster.plan_partition(64, &PartitionPolicy::Even).unwrap();
+    assert_eq!(part.sizes(), &[32, 32]);
+    assert!(cluster.plan_partition(33, &PartitionPolicy::Even).is_err());
+    assert!(cluster.plan_partition(0, &PartitionPolicy::Even).is_err());
+}

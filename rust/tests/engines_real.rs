@@ -1,0 +1,70 @@
+//! Integration: real-path engine details — warmup, bucket accounting,
+//! LUT-driven partition policy on the live cluster.
+
+use std::path::PathBuf;
+
+use kvr::coordinator::{ByteTokenizer, Cluster, PartitionPolicy};
+use kvr::partition::lut::PartitionLut;
+use kvr::partition::Partition;
+use kvr::runtime::Engine;
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    art_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn engine_compiles_buckets_lazily_and_counts_executions() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::new(&art_dir()).unwrap();
+    assert_eq!(engine.compiled_count(), 0);
+    let toks: Vec<i32> = (0..32).collect();
+    let _ = engine.prefill_chunk(&toks, &engine.empty_cache()).unwrap();
+    assert_eq!(engine.compiled_count(), 1);
+    assert_eq!(engine.executions.get(), 1);
+    // Same bucket again: no new compilation.
+    let _ = engine.prefill_chunk(&toks, &engine.empty_cache()).unwrap();
+    assert_eq!(engine.compiled_count(), 1);
+    assert_eq!(engine.executions.get(), 2);
+}
+
+#[test]
+fn lut_policy_drives_real_partitioning() {
+    if !have_artifacts() {
+        return;
+    }
+    // A front-heavy LUT like the paper's Fig. 10a breakdowns.
+    let mut lut = PartitionLut::new("tiny", 2, "host-cpu");
+    lut.insert(128, &Partition::from_ratios(128, &[0.75, 0.25], 1).unwrap(), 0.1)
+        .unwrap();
+    lut.insert(512, &Partition::from_ratios(512, &[0.60, 0.40], 1).unwrap(), 0.4)
+        .unwrap();
+
+    let tok = ByteTokenizer;
+    let prompt = tok.pad_to_multiple(&vec![65i32; 300], 32); // 320 tokens
+    let mut cluster = Cluster::new(&art_dir(), 2).unwrap();
+    let pre = cluster
+        .parallel_prefill(5, &prompt, &PartitionPolicy::Lut(lut))
+        .unwrap();
+    // Interpolated ratio at 320 is ~(0.675, 0.325) -> front-heavy chunks,
+    // on the 32-token lattice.
+    assert_eq!(pre.partition.iter().sum::<usize>(), 320);
+    assert!(pre.partition[0] > pre.partition[1], "{:?}", pre.partition);
+    assert_eq!(pre.partition[0] % 32, 0);
+
+    // And the result matches the even policy numerically.
+    let even = cluster
+        .parallel_prefill(6, &prompt, &PartitionPolicy::Even)
+        .unwrap();
+    for (a, b) in pre.logits.iter().zip(&even.logits) {
+        assert!((a - b).abs() < 2e-3);
+    }
+    cluster.release(pre.owner, 5).unwrap();
+    cluster.release(even.owner, 6).unwrap();
+}

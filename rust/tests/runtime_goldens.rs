@@ -1,0 +1,154 @@
+//! Integration: AOT artifacts through PJRT vs python-exported goldens.
+//!
+//! Certifies the full L1→L2→runtime chain numerically with python out of
+//! the loop: the rust engine must reproduce the logits the JAX model
+//! produced at export time, and the chunked KV handoff must agree with the
+//! single-shot prefill (the KV-Runahead correctness invariant, Sec. 4.1).
+
+use std::path::PathBuf;
+
+use kvr::runtime::{engine::argmax, Engine};
+use kvr::util::json::Json;
+
+fn art_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn goldens() -> Option<Json> {
+    let path = art_dir().join("goldens.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).unwrap())
+}
+
+fn tokens_of(j: &Json, key: &str) -> Vec<i32> {
+    j.req(key)
+        .unwrap()
+        .req("tokens")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_i64().unwrap() as i32)
+        .collect()
+}
+
+fn logits_prefix_of(j: &Json, key: &str) -> Vec<f64> {
+    j.req(key).unwrap().req("logits_prefix").unwrap().as_f64_vec().unwrap()
+}
+
+#[test]
+fn prefill_matches_python_goldens() {
+    let Some(g) = goldens() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Engine::new(&art_dir()).unwrap();
+    let toks = tokens_of(&g, "prefill_c32_p0");
+    let (logits, cache) = engine.prefill(&toks, engine.empty_cache()).unwrap();
+    assert_eq!(cache.tokens, 32);
+
+    let expect = logits_prefix_of(&g, "prefill_c32_p0");
+    for (i, e) in expect.iter().enumerate() {
+        assert!(
+            (logits[i] as f64 - e).abs() < 1e-3,
+            "logit[{i}]: rust {} vs python {e}",
+            logits[i]
+        );
+    }
+    let expect_argmax =
+        g.req("prefill_c32_p0").unwrap().req("argmax").unwrap().as_i64().unwrap();
+    assert_eq!(argmax(&logits) as i64, expect_argmax);
+}
+
+#[test]
+fn chunked_handoff_equals_single_shot() {
+    // 64 tokens in one 64-chunk == two 32-chunks threading the cache —
+    // exactly the process-to-process handoff, run inside one engine.
+    let Some(g) = goldens() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Engine::new(&art_dir()).unwrap();
+    let toks = tokens_of(&g, "prefill_c64_p0_full");
+    assert_eq!(toks.len(), 64);
+
+    // Single shot (one c64_p0 bucket call).
+    let out_full = engine.prefill_chunk(&toks, &engine.empty_cache()).unwrap();
+
+    // Chunked: 32 with no past, then 32 against the accumulated cache.
+    let out_a = engine.prefill_chunk(&toks[..32], &engine.empty_cache()).unwrap();
+    let mut cache = engine.empty_cache();
+    cache.append_chunk(32, &out_a.k_chunk, &out_a.v_chunk).unwrap();
+    let out_b = engine.prefill_chunk(&toks[32..], &cache).unwrap();
+
+    for i in 0..out_full.logits.len() {
+        assert!(
+            (out_full.logits[i] - out_b.logits[i]).abs() < 1e-3,
+            "logit[{i}]: full {} vs chunked {}",
+            out_full.logits[i],
+            out_b.logits[i]
+        );
+    }
+
+    // And both match the python export.
+    let expect = logits_prefix_of(&g, "prefill_c64_p0_full");
+    for (i, e) in expect.iter().enumerate() {
+        assert!((out_full.logits[i] as f64 - e).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn decode_matches_python_goldens() {
+    let Some(g) = goldens() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Engine::new(&art_dir()).unwrap();
+    let toks = tokens_of(&g, "prefill_c32_p0");
+    let (_, cache) = engine.prefill(&toks, engine.empty_cache()).unwrap();
+
+    let d = g.req("decode_p128").unwrap();
+    let token = d.req("token").unwrap().as_i64().unwrap() as i32;
+    let out = engine.decode_step(token, &cache).unwrap();
+    let expect = d.req("logits_prefix").unwrap().as_f64_vec().unwrap();
+    for (i, e) in expect.iter().enumerate() {
+        assert!(
+            (out.logits[i] as f64 - e).abs() < 1e-3,
+            "decode logit[{i}]: rust {} vs python {e}",
+            out.logits[i]
+        );
+    }
+    assert_eq!(argmax(&out.logits) as i64,
+               d.req("argmax").unwrap().as_i64().unwrap());
+}
+
+#[test]
+fn uneven_kvr_partition_equals_even_one() {
+    // The paper's whole point, on real PJRT execution: any partition of
+    // the context produces identical first-token logits.
+    let Some(g) = goldens() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Engine::new(&art_dir()).unwrap();
+    let toks = tokens_of(&g, "prefill_c64_p0_full");
+    let toks160: Vec<i32> =
+        toks.iter().cycle().take(160).copied().collect();
+
+    // Partition A: [96, 64] — process 0 then process 1 (same engine).
+    let (_, cache_a0) = engine.prefill(&toks160[..96], engine.empty_cache()).unwrap();
+    let (logits_a, _) = engine.prefill(&toks160[96..], cache_a0).unwrap();
+
+    // Partition B: [32, 128].
+    let (_, cache_b0) = engine.prefill(&toks160[..32], engine.empty_cache()).unwrap();
+    let (logits_b, _) = engine.prefill(&toks160[32..], cache_b0).unwrap();
+
+    for i in 0..logits_a.len() {
+        assert!(
+            (logits_a[i] - logits_b[i]).abs() < 2e-3,
+            "logit[{i}]: A {} vs B {}",
+            logits_a[i],
+            logits_b[i]
+        );
+    }
+}
