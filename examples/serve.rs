@@ -1,29 +1,126 @@
 //! End-to-end serving driver (the validation workload from DESIGN.md):
-//! spin up a worker cluster over the real AOT-compiled tiny model, submit
-//! a Poisson stream of batched requests, and report TTFT / TPOT /
+//! submit a Poisson stream of batched requests and report TTFT / TPOT /
 //! throughput — the serving-paper analogue of a training loss curve.
 //!
+//! Two substrates:
+//!
+//! * real (default): worker cluster over the AOT-compiled tiny model —
+//!   `make artifacts` first;
+//! * `--sim`: the modeled A100 cluster (`SimCluster`) — runs anywhere.
+//!
+//! `--prefix-cache` turns on cross-request prefix-KV reuse. In sim mode
+//! the same workload is served cache-off then cache-on so the TTFT win
+//! and hit rate print side by side:
+//!
 //! ```bash
-//! make artifacts
+//! cargo run --release --example serve -- --sim --prefix-cache \
+//!     --requests 16 --shared-prefix 0.75
 //! cargo run --release --example serve -- --workers 2 --requests 12
 //! ```
 
+use kvr::config::{hardware_by_name, model_by_name};
 use kvr::coordinator::{
     ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
-    SchedulerConfig,
+    SchedulerConfig, SimCluster,
 };
+use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
+use kvr::sim::cost::CostModel;
 use kvr::util::cli::Args;
 use kvr::util::rng::Rng;
 use kvr::util::stats::fmt_time;
 
-fn main() -> kvr::Result<()> {
-    let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &[])?;
+fn cache_config(args: &Args, block_default: usize) -> kvr::Result<PrefixCacheConfig> {
+    let base = PrefixCacheConfig::default();
+    Ok(PrefixCacheConfig {
+        block_tokens: args.usize_or("block-tokens", block_default)?,
+        hot_capacity_tokens: args.usize_or("hot-tokens", base.hot_capacity_tokens)?,
+        cold_capacity_tokens: args.usize_or("cold-tokens", base.cold_capacity_tokens)?,
+        cold_load_bw: args.f64_or("cold-bw", base.cold_load_bw)?,
+        cold_load_latency: args.f64_or("cold-latency", base.cold_load_latency)?,
+    })
+}
+
+/// Poisson arrivals over prompts sharing a `frac` common prefix.
+fn sim_workload(
+    rng: &mut Rng, n: usize, prompt_len: usize, frac: f64, rate: f64,
+    max_new: usize,
+) -> Vec<GenRequest> {
+    let shared = (prompt_len as f64 * frac) as usize;
+    let mut arrival = 0.0;
+    (0..n as u64)
+        .map(|id| {
+            arrival += rng.exp(rate);
+            let mut tokens: Vec<i32> = (0..shared as i32).collect();
+            tokens.extend(
+                (0..(prompt_len - shared) as i32)
+                    .map(|i| i * 131 + 7 + id as i32),
+            );
+            GenRequest { id, tokens, max_new_tokens: max_new, arrival }
+        })
+        .collect()
+}
+
+fn serve_sim(args: &Args) -> kvr::Result<()> {
+    let model = model_by_name(&args.str_or("model", "llama7b"))?;
+    let hw = hardware_by_name(&args.str_or("hw", "a100-300gbps"))?;
+    let procs = args.usize_or("workers", 4)?;
+    let n = args.usize_or("requests", 16)?;
+    let prompt_len = args.usize_or("prompt-len", 8192)?;
+    let frac = args.f64_or("shared-prefix", 0.75)?;
+    let rate = args.f64_or("rate", 1.5)?;
+    let max_new = args.usize_or("max-new", 8)?;
+    let seed = args.u64_or("seed", 42)?;
+    let with_cache = args.flag("prefix-cache");
+
+    let mut rng = Rng::new(seed);
+    let requests = sim_workload(&mut rng, n, prompt_len, frac, rate, max_new);
+    println!(
+        "simulated cluster: {} on {} with {procs} processes\n\
+         workload: {n} requests x {prompt_len} prompt tokens, {:.0}% shared \
+         prefix, Poisson rate {rate}/s\n",
+        model.name, hw.name, frac * 100.0
+    );
+
+    let (_, base) =
+        SimCluster::new(model.clone(), hw.clone(), procs).serve(&requests)?;
+    println!("== prefix cache OFF ==\n{}", base.report());
+
+    if with_cache {
+        let cfg = cache_config(args, 512)?;
+        let mut cluster = SimCluster::new(model, hw, procs)
+            .with_prefix_cache(cfg.clone());
+        let (_, cached) = cluster.serve(&requests)?;
+        println!(
+            "== prefix cache ON (block {} tok, hot {} tok, cold {} tok @ \
+             {:.0} GB/s) ==\n{}",
+            cfg.block_tokens,
+            cfg.hot_capacity_tokens,
+            cfg.cold_capacity_tokens,
+            cfg.cold_load_bw / 1e9,
+            cached.report()
+        );
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+        let off = mean(&base.ttfts);
+        let on = mean(&cached.ttfts);
+        println!(
+            "mean TTFT {} -> {}  ({:.2}x)   hit-rate {:.0}%   reused {} tokens",
+            fmt_time(off),
+            fmt_time(on),
+            off / on,
+            cached.prefix_hit_rate() * 100.0,
+            cached.reused_tokens
+        );
+    }
+    Ok(())
+}
+
+fn serve_real(args: &Args) -> kvr::Result<()> {
     let workers = args.usize_or("workers", 2)?;
     let n = args.usize_or("requests", 12)?;
     let rate = args.f64_or("rate", 1.5)?; // mean arrivals per second
     let max_new = args.usize_or("max-new", 6)?;
     let seed = args.u64_or("seed", 42)?;
+    let frac = args.f64_or("shared-prefix", 0.5)?;
 
     let art = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
     // Pre-compile every bucket at startup: compilation never lands on the
@@ -33,9 +130,11 @@ fn main() -> kvr::Result<()> {
     let max_ctx = cluster.manifest.max_context();
     println!("cluster: {workers} workers, granularity {g}, max ctx {max_ctx}");
 
-    // Poisson arrivals, mixed prompt lengths (the serving workload).
+    // Poisson arrivals; a shared corpus head gives real prefix overlap.
     let tok = ByteTokenizer;
     let mut rng = Rng::new(seed);
+    let system = "You are a careful assistant. Answer with precise, \
+                  sourced statements and keep every reply short. ";
     let corpus = [
         "Antibiotics are a type of medication used to treat bacterial \
          infections. They work by killing bacteria or preventing them from \
@@ -47,13 +146,18 @@ fn main() -> kvr::Result<()> {
         "The quick brown fox jumps over the lazy dog while the five boxing \
          wizards jump quickly over a shimmering glass of liquid measure.",
     ];
+    let budget = max_ctx.saturating_sub(max_new + g);
+    let shared_chars = ((system.len() as f64 * frac.clamp(0.0, 1.0)) as usize)
+        .min(budget.saturating_sub(32));
     let mut arrival = 0.0;
     let requests: Vec<GenRequest> = (0..n as u64)
         .map(|id| {
             arrival += rng.exp(rate);
             let text = corpus[rng.range(0, corpus.len())];
-            let take = rng.range(24, text.len().min(max_ctx - max_new - g));
-            let tokens = tok.pad_to_multiple(&tok.encode(&text[..take]), g);
+            let take =
+                rng.range(24, text.len().min(budget - shared_chars).max(25));
+            let prompt = format!("{}{}", &system[..shared_chars], &text[..take]);
+            let tokens = tok.pad_to_multiple(&tok.encode(&prompt), g);
             GenRequest { id, tokens, max_new_tokens: max_new, arrival }
         })
         .collect();
@@ -61,11 +165,20 @@ fn main() -> kvr::Result<()> {
     println!("workload: {n} requests, {total_prompt} prompt tokens, Poisson \
               rate {rate}/s, {max_new} new tokens each\n");
 
-    let sched = Scheduler::new(SchedulerConfig {
+    let mut sched = Scheduler::new(SchedulerConfig {
         policy: PartitionPolicy::Even,
         max_active: 3,
         ..Default::default()
     });
+    if args.flag("prefix-cache") {
+        // Block size must be a granularity multiple for the AOT buckets.
+        let cfg = cache_config(args, g)?;
+        let cm = CostModel::new(
+            cluster.manifest.model.clone(),
+            hardware_by_name(&args.str_or("hw", "host-cpu"))?,
+        );
+        sched = sched.with_prefix_cache(PrefixCache::new(cfg), cm);
+    }
     let (responses, metrics) = sched.serve(&mut cluster, requests)?;
 
     for r in &responses {
@@ -81,4 +194,14 @@ fn main() -> kvr::Result<()> {
     }
     println!("\n== aggregate ==\n{}", metrics.report());
     Ok(())
+}
+
+fn main() -> kvr::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["sim", "prefix-cache"])?;
+    if args.flag("sim") {
+        serve_sim(&args)
+    } else {
+        serve_real(&args)
+    }
 }

@@ -1,0 +1,98 @@
+//! Prefix-reuse sweep: mean TTFT and hit rate of the shared-prefix
+//! serving workload across shared-prefix fractions and cold-tier load
+//! bandwidths, on the modeled A100 cluster.
+//!
+//! ```bash
+//! cargo bench --bench prefix_reuse
+//! # or: cargo run --release --bench prefix_reuse -- --requests 32
+//! ```
+//!
+//! Expected shape: at fraction 0 the cache never hits and TTFT matches
+//! the cache-off baseline; the TTFT win grows with the shared fraction;
+//! at very low cold bandwidth the hybrid planner declines loads and the
+//! TTFT win collapses back to the baseline instead of regressing.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::coordinator::{GenRequest, SimCluster};
+use kvr::prefixcache::PrefixCacheConfig;
+use kvr::util::rng::Rng;
+use kvr::util::stats::fmt_time;
+
+fn workload(
+    n: usize, prompt_len: usize, frac: f64, rate: f64, seed: u64,
+) -> Vec<GenRequest> {
+    let mut rng = Rng::new(seed);
+    let shared = (prompt_len as f64 * frac) as usize;
+    let mut arrival = 0.0;
+    (0..n as u64)
+        .map(|id| {
+            arrival += rng.exp(rate);
+            let mut tokens: Vec<i32> = (0..shared as i32).collect();
+            tokens.extend(
+                (0..(prompt_len - shared) as i32)
+                    .map(|i| i * 131 + 7 + id as i32),
+            );
+            GenRequest { id, tokens, max_new_tokens: 4, arrival }
+        })
+        .collect()
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = kvr::util::cli::Args::parse(&raw, &[]).unwrap();
+    let n = args.usize_or("requests", 16).unwrap();
+    let prompt_len = args.usize_or("prompt-len", 8192).unwrap();
+    let procs = args.usize_or("procs", 4).unwrap();
+    let model = model_by_name(&args.str_or("model", "llama7b")).unwrap();
+    let hw = hardware_by_name(&args.str_or("hw", "a100-300gbps")).unwrap();
+
+    let fractions = [0.0, 0.25, 0.5, 0.9];
+    let cold_bws = [300e9, 10e9, 1e8];
+
+    println!(
+        "prefix-reuse sweep: {} on {}, p={procs}, {n} requests x \
+         {prompt_len} tokens\n",
+        model.name, hw.name
+    );
+    println!(
+        "{:>8} {:>12} {:>12} {:>9} {:>9} {:>14}",
+        "shared", "cold bw", "mean TTFT", "vs off", "hit-rate", "reused tokens"
+    );
+    for &frac in &fractions {
+        let reqs = workload(n, prompt_len, frac, 1.5, 42);
+        let (_, off) = SimCluster::new(model.clone(), hw.clone(), procs)
+            .serve(&reqs)
+            .unwrap();
+        let off_ttft = mean(&off.ttfts);
+        for &bw in &cold_bws {
+            let cfg = PrefixCacheConfig {
+                block_tokens: 512,
+                hot_capacity_tokens: 32 * 512,
+                cold_capacity_tokens: 512 * 512,
+                cold_load_bw: bw,
+                cold_load_latency: 1e-3,
+            };
+            let mut cluster = SimCluster::new(model.clone(), hw.clone(), procs)
+                .with_prefix_cache(cfg);
+            let (_, on) = cluster.serve(&reqs).unwrap();
+            println!(
+                "{:>7.0}% {:>9.1} GB/s {:>12} {:>8.2}x {:>8.0}% {:>14}",
+                frac * 100.0,
+                bw / 1e9,
+                fmt_time(mean(&on.ttfts)),
+                off_ttft / mean(&on.ttfts),
+                on.prefix_hit_rate() * 100.0,
+                on.reused_tokens,
+            );
+        }
+    }
+    println!(
+        "\nbaseline (cache off) mean TTFT at each fraction is the `vs off` \
+         denominator; hybrid planning keeps the low-bandwidth rows from \
+         regressing below 1.0x."
+    );
+}

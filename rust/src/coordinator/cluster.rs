@@ -45,12 +45,28 @@ struct CacheMsg {
     wire: Vec<u8>,
 }
 
+/// A cached prompt prefix (from [`crate::prefixcache::PrefixCache`]) that
+/// seeds the chain head instead of an empty cache: the workers then
+/// compute only the uncached suffix.
+#[derive(Clone, Debug)]
+pub struct ReusedPrefix {
+    /// Reused token rows (must be a multiple of the artifact granularity).
+    pub tokens: usize,
+    /// KV wire bytes of those rows ([`KvCache::to_wire`] layout).
+    pub wire: Vec<u8>,
+}
+
 enum WorkerCmd {
     Prefill {
         req_id: u64,
         tokens: Vec<i32>,
         first: bool,
         last: bool,
+        /// Chain-head cache seed (first worker only).
+        seed: Option<ReusedPrefix>,
+        /// Ship the accumulated cache back with the reply (last worker
+        /// only — the scheduler admits it into the prefix cache).
+        want_wire: bool,
     },
     Decode {
         req_id: u64,
@@ -75,6 +91,8 @@ enum WorkerReply {
         /// Accumulated cache rows after this worker's chunk (diagnostics).
         #[allow(dead_code)]
         cache_tokens: usize,
+        /// Full accumulated cache (last worker, on request only).
+        wire: Option<Vec<u8>>,
         compute_s: f64,
     },
     DecodeDone {
@@ -132,10 +150,18 @@ fn worker_main(ctx: WorkerCtx) {
         match cmd {
             WorkerCmd::Shutdown => break,
             WorkerCmd::Release { req_id } => {
-                if let Some((_, slab)) = active.remove(&req_id) {
-                    let _ = pool.release(slab);
-                }
-                let _ = ctx.reply_tx.send(WorkerReply::Released { req_id });
+                let _ = match active.remove(&req_id) {
+                    Some((_, slab)) => {
+                        let _ = pool.release(slab);
+                        ctx.reply_tx.send(WorkerReply::Released { req_id })
+                    }
+                    // Unknown request (double release / wrong owner): a
+                    // real error, not a silent success.
+                    None => ctx.reply_tx.send(WorkerReply::Failed {
+                        req_id,
+                        msg: format!("no cache for request {req_id}"),
+                    }),
+                };
             }
             WorkerCmd::Decode { req_id, token } => {
                 let reply = (|| -> Result<Vec<f32>> {
@@ -160,13 +186,24 @@ fn worker_main(ctx: WorkerCtx) {
                     }),
                 };
             }
-            WorkerCmd::Prefill { req_id, tokens, first, last } => {
+            WorkerCmd::Prefill { req_id, tokens, first, last, seed, want_wire } => {
                 let t0 = Instant::now();
-                let outcome = (|| -> Result<(Option<Vec<f32>>, usize)> {
+                let outcome = (|| -> Result<(Option<Vec<f32>>, usize, Option<Vec<u8>>)> {
                     // (1) Receive the accumulated cache from the
-                    //     predecessor (the chain's point-to-point recv).
+                    //     predecessor (the chain's point-to-point recv) —
+                    //     or, at the chain head, start from the reused
+                    //     prefix the prefix cache provided.
                     let cache = if first {
-                        engine.empty_cache()
+                        match &seed {
+                            None => engine.empty_cache(),
+                            Some(s) => {
+                                let m = &engine.manifest.model;
+                                KvCache::from_wire(
+                                    m.layers, m.kv_heads, m.head_dim,
+                                    s.tokens, &s.wire,
+                                )?
+                            }
+                        }
                     } else {
                         let rx = ctx.prev_rx.as_ref().ok_or_else(|| {
                             Error::Coordinator("chain recv on worker 0".into())
@@ -190,10 +227,11 @@ fn worker_main(ctx: WorkerCtx) {
                     let (logits, cache) = engine.prefill(&tokens, cache)?;
                     // (3) Forward the accumulated cache, or keep it (last).
                     if last {
+                        let wire = want_wire.then(|| cache.to_wire());
                         let slab = pool.alloc(cache.tokens + 32)?;
                         let n = cache.tokens;
                         active.insert(req_id, (cache, slab.id));
-                        Ok((Some(logits), n))
+                        Ok((Some(logits), n, wire))
                     } else {
                         let tx = ctx.next_tx.as_ref().ok_or_else(|| {
                             Error::Coordinator("chain send on last worker".into())
@@ -207,16 +245,17 @@ fn worker_main(ctx: WorkerCtx) {
                         .map_err(|_| {
                             Error::Coordinator("chain receiver disconnected".into())
                         })?;
-                        Ok((None, n))
+                        Ok((None, n, None))
                     }
                 })();
                 let _ = match outcome {
-                    Ok((logits, cache_tokens)) => {
+                    Ok((logits, cache_tokens, wire)) => {
                         ctx.reply_tx.send(WorkerReply::PrefillDone {
                             worker: ctx.index,
                             req_id,
                             logits,
                             cache_tokens,
+                            wire,
                             compute_s: t0.elapsed().as_secs_f64(),
                         })
                     }
@@ -239,10 +278,15 @@ pub struct PrefillResult {
     pub ttft: f64,
     /// Worker that owns the cache for the extension phase.
     pub owner: usize,
-    /// The partition actually used.
+    /// The partition actually used (suffix chunks only under reuse).
     pub partition: Vec<usize>,
+    /// Reused-prefix rows the chain was seeded with (0 without reuse).
+    pub reused_tokens: usize,
     /// Per-worker compute seconds (diagnostics).
     pub worker_compute: Vec<f64>,
+    /// Full accumulated prompt cache (only when requested at dispatch —
+    /// the scheduler admits it into the prefix cache).
+    pub wire: Option<Vec<u8>>,
 }
 
 /// The worker cluster (leader-side handle).
@@ -326,6 +370,19 @@ impl Cluster {
     /// Resolve the partition for a prompt of `c` tokens: ratios or even,
     /// at artifact granularity, over at most `workers` chunks.
     pub fn plan_partition(&self, c: usize, policy: &PartitionPolicy) -> Result<Partition> {
+        self.plan_partition_suffix(c, 0, policy)
+    }
+
+    /// Resolve the partition for the `c`-token suffix after `start`
+    /// reused rows. LUT rows are searched for zero-offset contexts whose
+    /// per-chunk cost grows with causal depth; under reuse every chunk
+    /// already attends over the reused rows and the per-token cost is
+    /// nearly uniform, so the LUT policy degrades to even rather than
+    /// applying ratios tuned for the wrong regime (offset-aware LUTs are
+    /// a ROADMAP item). Explicit `Ratios` are honoured as given.
+    pub fn plan_partition_suffix(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> Result<Partition> {
         let g = self.manifest.granularity();
         if c == 0 || c % g != 0 {
             return Err(Error::Coordinator(format!(
@@ -337,10 +394,11 @@ impl Cluster {
         let ratios = match policy {
             PartitionPolicy::Even => vec![1.0; p_max],
             PartitionPolicy::Ratios(r) => r.clone(),
-            PartitionPolicy::Lut(lut) => lut.predict_ratios(c)?,
+            PartitionPolicy::Lut(lut) if start == 0 => lut.predict_ratios(c)?,
+            PartitionPolicy::Lut(_) => vec![1.0; p_max],
         };
         let k = ratios.len().min(p_max).max(1);
-        Partition::from_ratios(c, &ratios[..k], g)
+        Partition::from_ratios(c, &ratios[..k], g).map(|p| p.with_start(start))
     }
 
     fn recv_reply(&mut self) -> Result<WorkerReply> {
@@ -356,6 +414,18 @@ impl Cluster {
     pub fn parallel_prefill(
         &mut self, req_id: u64, tokens: &[i32], policy: &PartitionPolicy,
     ) -> Result<PrefillResult> {
+        self.parallel_prefill_reused(req_id, tokens, None, policy, false)
+    }
+
+    /// Parallel prefill with an optional reused prompt prefix: the chain
+    /// head is seeded with `reused.wire` and the workers compute only the
+    /// remaining suffix (partitioned with a start offset so the causal
+    /// accounting stays correct). `want_wire` ships the full accumulated
+    /// cache back for prefix-cache admission.
+    pub fn parallel_prefill_reused(
+        &mut self, req_id: u64, tokens: &[i32], reused: Option<ReusedPrefix>,
+        policy: &PartitionPolicy, want_wire: bool,
+    ) -> Result<PrefillResult> {
         if tokens.len() > self.manifest.max_context() {
             return Err(Error::Coordinator(format!(
                 "prompt {} exceeds compiled max context {}",
@@ -363,11 +433,27 @@ impl Cluster {
                 self.manifest.max_context()
             )));
         }
-        let partition = self.plan_partition(tokens.len(), policy)?;
+        let start = reused.as_ref().map_or(0, |r| r.tokens);
+        let g = self.manifest.granularity();
+        if start % g != 0 {
+            return Err(Error::Coordinator(format!(
+                "reused prefix {start} not a multiple of granularity {g} \
+                 (use a block size that is)"
+            )));
+        }
+        if start >= tokens.len() {
+            return Err(Error::Coordinator(format!(
+                "reused prefix {start} must leave a suffix of prompt {}",
+                tokens.len()
+            )));
+        }
+        let partition =
+            self.plan_partition_suffix(tokens.len() - start, start, policy)?;
         let sizes = partition.sizes().to_vec();
         let k = sizes.len();
         let t0 = Instant::now();
-        let mut offset = 0usize;
+        let mut offset = start;
+        let mut seed = reused;
         for (i, &sz) in sizes.iter().enumerate() {
             self.cmd_txs[i]
                 .send(WorkerCmd::Prefill {
@@ -375,11 +461,14 @@ impl Cluster {
                     tokens: tokens[offset..offset + sz].to_vec(),
                     first: i == 0,
                     last: i == k - 1,
+                    seed: seed.take(),
+                    want_wire: want_wire && i == k - 1,
                 })
                 .map_err(|_| Error::Coordinator(format!("worker {i} gone")))?;
             offset += sz;
         }
         let mut logits: Option<Vec<f32>> = None;
+        let mut wire: Option<Vec<u8>> = None;
         let mut ttft = 0.0;
         let mut worker_compute = vec![0.0f64; k];
         let mut done = 0usize;
@@ -389,6 +478,7 @@ impl Cluster {
                     worker,
                     req_id: rid,
                     logits: lg,
+                    wire: w,
                     compute_s,
                     ..
                 } if rid == req_id => {
@@ -396,6 +486,9 @@ impl Cluster {
                     if let Some(lg) = lg {
                         logits = Some(lg);
                         ttft = t0.elapsed().as_secs_f64();
+                    }
+                    if w.is_some() {
+                        wire = w;
                     }
                     done += 1;
                 }
@@ -414,12 +507,25 @@ impl Cluster {
             ttft,
             owner: k - 1,
             partition: sizes,
+            reused_tokens: start,
             worker_compute,
+            wire,
         })
+    }
+
+    fn check_owner(&self, owner: usize) -> Result<()> {
+        if owner >= self.cmd_txs.len() {
+            return Err(Error::Coordinator(format!(
+                "owner {owner} out of range (cluster has {} workers)",
+                self.cmd_txs.len()
+            )));
+        }
+        Ok(())
     }
 
     /// One decode step on the cache-owning worker.
     pub fn decode(&mut self, owner: usize, req_id: u64, token: i32) -> Result<Vec<f32>> {
+        self.check_owner(owner)?;
         self.cmd_txs[owner]
             .send(WorkerCmd::Decode { req_id, token })
             .map_err(|_| Error::Coordinator(format!("worker {owner} gone")))?;
@@ -438,8 +544,10 @@ impl Cluster {
         }
     }
 
-    /// Free a request's cache.
+    /// Free a request's cache. Releasing an unknown request (double
+    /// release, wrong owner) is an error.
     pub fn release(&mut self, owner: usize, req_id: u64) -> Result<()> {
+        self.check_owner(owner)?;
         self.cmd_txs[owner]
             .send(WorkerCmd::Release { req_id })
             .map_err(|_| Error::Coordinator(format!("worker {owner} gone")))?;
@@ -447,6 +555,11 @@ impl Cluster {
             match self.recv_reply()? {
                 WorkerReply::Released { req_id: rid } if rid == req_id => {
                     return Ok(())
+                }
+                WorkerReply::Failed { req_id: rid, msg } if rid == req_id => {
+                    return Err(Error::Coordinator(format!(
+                        "release {req_id} failed: {msg}"
+                    )));
                 }
                 other => self.pending.push(other),
             }

@@ -232,6 +232,58 @@ mod tests {
     }
 
     #[test]
+    fn prop_coalescing_invariants_under_alloc_free_grow() {
+        // Free-list coalescing must hold under arbitrary interleavings of
+        // alloc / release / grow: tokens are conserved, free extents stay
+        // sorted and disjoint (strict gaps — adjacency would mean a
+        // missed coalesce), and fragmentation stays in [0, 1).
+        forall(200, 0xC0A1, |rng: &mut Rng| {
+            let capacity = rng.range(64, 4096);
+            let mut pool = KvPool::new(capacity);
+            let mut ids: Vec<u64> = Vec::new();
+            for _ in 0..rng.range(1, 60) {
+                match rng.range(0, 10) {
+                    0..=4 => {
+                        if let Ok(slab) = pool.alloc(rng.range(1, 200)) {
+                            ids.push(slab.id);
+                        }
+                    }
+                    5..=7 if !ids.is_empty() => {
+                        let idx = rng.range(0, ids.len());
+                        pool.release(ids.swap_remove(idx)).unwrap();
+                    }
+                    _ if !ids.is_empty() => {
+                        let idx = rng.range(0, ids.len());
+                        let len = pool.get(ids[idx]).unwrap().len;
+                        if let Ok((slab, _moved)) =
+                            pool.grow(ids[idx], len + rng.range(1, 64))
+                        {
+                            ids[idx] = slab.id;
+                        } else {
+                            // Failed grow released the slab (relocate
+                            // path frees first): forget it.
+                            ids.swap_remove(idx);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let free_total: usize = pool.free.iter().map(|&(_, l)| l).sum();
+            let frag = pool.fragmentation();
+            vec![
+                prop(pool.used() + free_total == pool.capacity(),
+                     "used + free == capacity"),
+                prop(pool.free.windows(2).all(|w| w[0].0 + w[0].1 < w[1].0),
+                     "free extents sorted, disjoint, coalesced"),
+                prop((0.0..1.0).contains(&frag), "fragmentation in [0, 1)"),
+                prop(pool.free.iter().all(|&(off, len)| {
+                    len > 0 && off + len <= pool.capacity()
+                }), "free extents well-formed"),
+            ]
+        });
+    }
+
+    #[test]
     fn prop_no_overlap_and_conservation() {
         forall(150, 0x9001, |rng: &mut Rng| {
             let mut pool = KvPool::new(2048);

@@ -1,5 +1,8 @@
-//! Serving metrics: TTFT / TPOT / throughput aggregation.
+//! Serving metrics: TTFT / TPOT / throughput aggregation, plus
+//! prefix-cache effectiveness (hit rate, reused tokens, load/recompute
+//! block counts).
 
+use crate::prefixcache::planner::PrefillPlan;
 use crate::util::stats::{fmt_time, Summary};
 
 /// Aggregated over one serving run.
@@ -12,6 +15,16 @@ pub struct ServeMetrics {
     pub tokens_out: usize,
     pub requests: usize,
     pub wall_s: f64,
+    /// Prefix-cache lookups performed at admission.
+    pub prefix_lookups: usize,
+    /// Lookups that matched at least one cached block.
+    pub prefix_hits: usize,
+    /// Prompt tokens whose KV was reused instead of recomputed.
+    pub reused_tokens: usize,
+    /// Cached blocks the hybrid planner chose to load.
+    pub loaded_blocks: usize,
+    /// Cached blocks the hybrid planner chose to recompute.
+    pub recomputed_blocks: usize,
 }
 
 impl ServeMetrics {
@@ -22,6 +35,26 @@ impl ServeMetrics {
         self.queue_waits.push(queue);
         self.tokens_out += 1 + tpot.len();
         self.requests += 1;
+    }
+
+    /// Record one admission-time prefix-cache plan.
+    pub fn record_prefix(&mut self, plan: &PrefillPlan) {
+        self.prefix_lookups += 1;
+        if plan.matched_tokens > 0 {
+            self.prefix_hits += 1;
+        }
+        self.reused_tokens += plan.reuse_tokens;
+        let loaded = plan.loaded_blocks().count();
+        self.loaded_blocks += loaded;
+        self.recomputed_blocks += plan.blocks.len() - loaded;
+    }
+
+    /// Fraction of prefix-cache lookups that found a cached prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
     }
 
     /// Output tokens per second over the wall-clock window.
@@ -58,9 +91,26 @@ impl ServeMetrics {
             ));
         }
         out.push_str(&format!(
-            "E2E   mean {} p95 {}   queue mean {}\n",
-            fmt_time(e2e.mean), fmt_time(e2e.p95), fmt_time(queue.mean)
+            "E2E   mean {} p95 {}\n",
+            fmt_time(e2e.mean), fmt_time(e2e.p95)
         ));
+        out.push_str(&format!(
+            "queue mean {} p50 {} p95 {} max {}\n",
+            fmt_time(queue.mean), fmt_time(queue.p50), fmt_time(queue.p95),
+            fmt_time(queue.max)
+        ));
+        if self.prefix_lookups > 0 {
+            out.push_str(&format!(
+                "prefix-cache  hit-rate {:.0}% ({}/{})   reused {} tokens   \
+                 loaded {} / recomputed {} cached blocks\n",
+                self.prefix_hit_rate() * 100.0,
+                self.prefix_hits,
+                self.prefix_lookups,
+                self.reused_tokens,
+                self.loaded_blocks,
+                self.recomputed_blocks,
+            ));
+        }
         out
     }
 }
@@ -68,6 +118,7 @@ impl ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prefixcache::planner::PrefillPlan;
 
     #[test]
     fn aggregates_requests() {
@@ -84,9 +135,54 @@ mod tests {
     }
 
     #[test]
+    fn report_summarizes_queue_waits() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.25);
+        m.record_request(0.5, &[0.1], 1.2, 0.75);
+        m.wall_s = 2.0;
+        let report = m.report();
+        let queue_line = report
+            .lines()
+            .find(|l| l.starts_with("queue"))
+            .expect("queue-wait summary line");
+        // mean 0.5, p50 0.5, max 0.75 — all on the line.
+        assert!(queue_line.contains("mean 500.000ms"), "{queue_line}");
+        assert!(queue_line.contains("p50 500.000ms"), "{queue_line}");
+        assert!(queue_line.contains("max 750.000ms"), "{queue_line}");
+    }
+
+    #[test]
+    fn prefix_counters_aggregate_and_report() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.0);
+        m.wall_s = 1.0;
+        // Miss, then a hit that reuses 256 tokens.
+        m.record_prefix(&PrefillPlan::cold(512, 0.4));
+        let mut hit = PrefillPlan::cold(512, 0.4);
+        hit.matched_tokens = 256;
+        hit.reuse_tokens = 256;
+        m.record_prefix(&hit);
+        assert_eq!(m.prefix_lookups, 2);
+        assert_eq!(m.prefix_hits, 1);
+        assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(m.reused_tokens, 256);
+        let report = m.report();
+        assert!(report.contains("prefix-cache  hit-rate 50%"), "{report}");
+        assert!(report.contains("reused 256 tokens"), "{report}");
+    }
+
+    #[test]
+    fn report_omits_prefix_line_without_cache() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[], 0.5, 0.0);
+        assert!(!m.report().contains("prefix-cache"));
+    }
+
+    #[test]
     fn empty_metrics_do_not_panic() {
         let m = ServeMetrics::default();
         assert_eq!(m.report(), "no requests completed");
         assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.prefix_hit_rate(), 0.0);
     }
 }

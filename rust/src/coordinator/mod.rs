@@ -8,17 +8,23 @@
 //! point-to-point channels; the last worker emits the first token and owns
 //! the cache for the extension phase. Decode steps are continuously
 //! batched round-robin across active requests.
+//!
+//! [`SimCluster`] mirrors the serving API over the modeled fabric
+//! (`crate::sim`) so serving workloads — including the prefix cache's
+//! compute-or-load prefill — run end to end without PJRT artifacts.
 
 pub mod cluster;
 pub mod kvpool;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
+pub mod simcluster;
 pub mod tokenizer;
 
-pub use cluster::{Cluster, PartitionPolicy};
+pub use cluster::{Cluster, PartitionPolicy, ReusedPrefix};
 pub use kvpool::KvPool;
 pub use metrics::ServeMetrics;
 pub use request::{GenRequest, GenResponse};
 pub use scheduler::{Scheduler, SchedulerConfig};
+pub use simcluster::SimCluster;
 pub use tokenizer::ByteTokenizer;

@@ -5,16 +5,25 @@
 //! interleaved round-robin between admissions (continuous batching at
 //! step granularity). Admission is bounded by `max_active` — the KV pool
 //! backpressure on the cache-owning worker.
+//!
+//! With a prefix cache attached ([`Scheduler::with_prefix_cache`]),
+//! admission first consults the cache: the hybrid planner picks a
+//! compute-or-load cut, the reused blocks are leased (pinned) for the
+//! prefill, the chain head is seeded with the reassembled prefix KV, and
+//! the finished prompt's cache is admitted back for future requests.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::coordinator::cluster::{Cluster, PartitionPolicy};
+use crate::coordinator::cluster::{Cluster, PartitionPolicy, ReusedPrefix};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::tokenizer::ByteTokenizer;
 use crate::error::Result;
+use crate::prefixcache::PrefixCache;
 use crate::runtime::engine::argmax;
+use crate::runtime::KvCache;
+use crate::sim::cost::CostModel;
 
 /// Scheduler knobs.
 #[derive(Clone, Debug)]
@@ -50,17 +59,72 @@ struct Active {
 /// FIFO + round-robin scheduler over a [`Cluster`].
 pub struct Scheduler {
     cfg: SchedulerConfig,
+    /// Prefix cache + the cost model pricing its compute-or-load plans.
+    cache: Option<(PrefixCache, CostModel)>,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
-        Self { cfg }
+        Self { cfg, cache: None }
+    }
+
+    /// Attach a prefix cache; `cm` prices the hybrid plans (use the
+    /// hardware preset matching the deployment, e.g. `host-cpu` for the
+    /// real tiny-model path). The cache's block size must be a multiple
+    /// of the cluster's artifact granularity.
+    pub fn with_prefix_cache(mut self, cache: PrefixCache, cm: CostModel) -> Self {
+        self.cache = Some((cache, cm));
+        self
+    }
+
+    /// Prefix-cache statistics (None when no cache is attached).
+    pub fn prefix_cache_stats(&self) -> Option<&crate::prefixcache::CacheStats> {
+        self.cache.as_ref().map(|(pc, _)| pc.stats())
+    }
+
+    /// Admission-time cache consult: plan, lease, and reassemble the
+    /// reused prefix for one request. Returns `(reused, lease,
+    /// want_wire)`; metrics record what will actually run (a declined
+    /// plan is recorded as full recompute, not as the aspirational cut).
+    fn plan_reuse(
+        &mut self, cluster: &Cluster, req: &GenRequest,
+        metrics: &mut ServeMetrics,
+    ) -> Result<(Option<ReusedPrefix>, Option<crate::prefixcache::Lease>, bool)>
+    {
+        let Some((pc, cm)) = self.cache.as_mut() else {
+            return Ok((None, None, false));
+        };
+        let plan = pc.plan_prefill(cm, &req.tokens, cluster.workers())?;
+        let m = &cluster.manifest.model;
+        let g = cluster.manifest.granularity();
+        let reused = pc
+            .reused_cache(&plan, m.layers, m.kv_heads, m.head_dim)
+            // Reuse must land on an AOT chunk boundary; otherwise fall
+            // back to full recompute rather than failing the prefill.
+            .filter(|kv| kv.tokens % g == 0 && kv.tokens < req.tokens.len())
+            .map(|kv| ReusedPrefix { tokens: kv.tokens, wire: kv.to_wire() });
+        let lease = if reused.is_some() {
+            Some(pc.lease(&plan)?)
+        } else {
+            None
+        };
+        if reused.is_some() || plan.reuse_tokens == 0 {
+            metrics.record_prefix(&plan);
+        } else {
+            metrics.record_prefix(&plan.declined());
+        }
+        // Ship the prompt cache back only when it holds blocks the store
+        // is missing — a fully cached prompt has nothing new to admit
+        // and skips the full-KV wire copy on the reply path.
+        let bt = pc.config().block_tokens;
+        let want_wire = plan.matched_tokens < (req.tokens.len() / bt) * bt;
+        Ok((reused, lease, want_wire))
     }
 
     /// Serve a batch of requests to completion; returns per-request
     /// responses (request order) and aggregate metrics.
     pub fn serve(
-        &self, cluster: &mut Cluster, requests: Vec<GenRequest>,
+        &mut self, cluster: &mut Cluster, requests: Vec<GenRequest>,
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
         let serve_start = Instant::now();
         let mut pending: VecDeque<GenRequest> = requests.into();
@@ -87,9 +151,38 @@ impl Scheduler {
                 let queue_wait =
                     (serve_start.elapsed().as_secs_f64() - req.arrival).max(0.0);
                 let started = Instant::now();
-                let pre = cluster.parallel_prefill(
-                    req.id, &req.tokens, &self.cfg.policy,
-                )?;
+                let (reused, lease, want_wire) =
+                    self.plan_reuse(cluster, &req, &mut metrics)?;
+                let pre = match cluster.parallel_prefill_reused(
+                    req.id, &req.tokens, reused, &self.cfg.policy, want_wire,
+                ) {
+                    Ok(pre) => pre,
+                    Err(e) => {
+                        // Never leak the lease: a pinned block would be
+                        // unevictable for the cache's lifetime.
+                        if let Some((pc, _)) = self.cache.as_mut() {
+                            if let Some(lease) = lease {
+                                pc.release(lease);
+                            }
+                        }
+                        return Err(e);
+                    }
+                };
+                if let Some((pc, _)) = self.cache.as_mut() {
+                    if let Some(lease) = lease {
+                        pc.release(lease);
+                    }
+                    // Admit the finished prompt's KV for future sharers.
+                    if let Some(wire) = &pre.wire {
+                        let m = &cluster.manifest.model;
+                        if let Ok(kv) = KvCache::from_wire(
+                            m.layers, m.kv_heads, m.head_dim,
+                            req.tokens.len(), wire,
+                        ) {
+                            pc.admit_from_cache(&req.tokens, &kv);
+                        }
+                    }
+                }
                 let first = argmax(&pre.logits) as i32;
                 active.push(Active {
                     owner: pre.owner,

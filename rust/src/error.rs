@@ -1,40 +1,55 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled Display/Error impls — external
+//! derive crates are not vendored offline, see DESIGN.md §2).
+
+use std::fmt;
 
 /// All errors surfaced by the `kvr` library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("json: {0}")]
     Json(String),
-
-    #[error("tensor codec: {0}")]
     Codec(String),
-
-    #[error("cli: {0}")]
     Cli(String),
-
-    #[error("config: {0}")]
     Config(String),
-
-    #[error("artifacts: {0}")]
     Artifacts(String),
-
-    #[error("runtime: {0}")]
     Runtime(String),
-
-    #[error("partition: {0}")]
     Partition(String),
-
-    #[error("coordinator: {0}")]
     Coordinator(String),
-
-    #[error("simulation: {0}")]
     Sim(String),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Codec(m) => write!(f, "tensor codec: {m}"),
+            Error::Cli(m) => write!(f, "cli: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Artifacts(m) => write!(f, "artifacts: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Partition(m) => write!(f, "partition: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Sim(m) => write!(f, "simulation: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -44,3 +59,23 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_the_subsystem() {
+        assert_eq!(Error::Json("bad".into()).to_string(), "json: bad");
+        assert_eq!(
+            Error::Coordinator("worker gone".into()).to_string(),
+            "coordinator: worker gone"
+        );
+        assert!(Error::Io(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing"
+        ))
+        .to_string()
+        .starts_with("io: "));
+    }
+}

@@ -13,7 +13,9 @@
 //!
 //! * **L3 (this crate)** — [`coordinator`] serving layer, [`engines`]
 //!   parallel-prefill strategies, [`partition`] context load-balancing,
-//!   [`sim`]/[`net`] the modeled A100 cluster, [`runtime`] the PJRT bridge.
+//!   [`prefixcache`] cross-request prefix-KV reuse with hybrid
+//!   compute-or-load prefill, [`sim`]/[`net`] the modeled A100 cluster,
+//!   [`runtime`] the PJRT bridge.
 //! * **L2** — `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L1** — `python/compile/kernels/attention.py` (Pallas, interpret).
 
@@ -23,6 +25,7 @@ pub mod engines;
 pub mod error;
 pub mod net;
 pub mod partition;
+pub mod prefixcache;
 pub mod runtime;
 pub mod sim;
 pub mod util;

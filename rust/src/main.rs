@@ -16,12 +16,14 @@ use std::path::PathBuf;
 use kvr::config::{hardware_by_name, model_by_name};
 use kvr::coordinator::{
     ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
-    SchedulerConfig,
+    SchedulerConfig, SimCluster,
 };
 use kvr::engines::{Evaluator, Method};
 use kvr::error::Result;
 use kvr::partition::search::SearchConfig;
+use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::runtime::Engine;
+use kvr::sim::cost::CostModel;
 use kvr::util::cli::Args;
 use kvr::util::rng::Rng;
 use kvr::util::stats::fmt_time;
@@ -38,7 +40,15 @@ USAGE:
             [--max-new 32] [--policy even|searched]
   kvr serve [--artifacts artifacts] [--workers 2] [--requests 8]
             [--prompt-len 128] [--max-new 8] [--rate 2.0] [--seed 0]
+            [--sim] [--model llama7b] [--hw a100-300gbps]
+            [--shared-prefix 0.5] [--prefix-cache] [--block-tokens N]
+            [--hot-tokens N] [--cold-tokens N] [--cold-bw BYTES_PER_S]
+            [--cold-latency S]
   kvr calibrate [--artifacts artifacts]
+
+Prefix cache: `--prefix-cache` reuses cached prompt-prefix KV across
+requests (hybrid compute-or-load per block). `--sim` serves on the
+modeled A100 cluster instead of the PJRT tiny model.
 ";
 
 fn main() {
@@ -54,7 +64,7 @@ fn main() {
 }
 
 fn dispatch(raw: &[String]) -> Result<()> {
-    let args = Args::parse(&raw[1..], &["quiet"])?;
+    let args = Args::parse(&raw[1..], &["quiet", "sim", "prefix-cache"])?;
     match raw[0].as_str() {
         "sim" => cmd_sim(&args),
         "search" => cmd_search(&args),
@@ -163,31 +173,86 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn prefix_cache_config(args: &Args, block_default: usize) -> Result<PrefixCacheConfig> {
+    let base = PrefixCacheConfig::default();
+    Ok(PrefixCacheConfig {
+        block_tokens: args.usize_or("block-tokens", block_default)?,
+        hot_capacity_tokens: args
+            .usize_or("hot-tokens", base.hot_capacity_tokens)?,
+        cold_capacity_tokens: args
+            .usize_or("cold-tokens", base.cold_capacity_tokens)?,
+        cold_load_bw: args.f64_or("cold-bw", base.cold_load_bw)?,
+        cold_load_latency: args.f64_or("cold-latency", base.cold_load_latency)?,
+    })
+}
+
+/// Shared-prefix workload: `frac` of every prompt is a common system
+/// prefix, the rest unique per request.
+fn shared_prefix_requests(
+    rng: &mut Rng, n: usize, prompt_len: usize, frac: f64, rate: f64,
+    max_new: usize, granularity: usize,
+) -> Vec<GenRequest> {
+    let len = (prompt_len / granularity).max(1) * granularity;
+    let shared = (len as f64 * frac.clamp(0.0, 1.0)) as usize;
+    let mut arrival = 0.0;
+    (0..n as u64)
+        .map(|id| {
+            arrival += rng.exp(rate);
+            let mut tokens: Vec<i32> =
+                (0..shared).map(|i| (i % 251) as i32).collect();
+            tokens.extend(
+                (0..len - shared).map(|_| rng.range(0, 256) as i32),
+            );
+            GenRequest { id, tokens, max_new_tokens: max_new, arrival }
+        })
+        .collect()
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 2)?;
     let n_requests = args.usize_or("requests", 8)?;
-    let prompt_len = args.usize_or("prompt-len", 128)?;
     let max_new = args.usize_or("max-new", 8)?;
     let rate = args.f64_or("rate", 2.0)?;
     let seed = args.u64_or("seed", 0)?;
+    let frac = args.f64_or("shared-prefix", 0.5)?;
+    let mut rng = Rng::new(seed);
 
+    if args.flag("sim") {
+        let model = model_by_name(&args.str_or("model", "llama7b"))?;
+        let hw = hardware_by_name(&args.str_or("hw", "a100-300gbps"))?;
+        let prompt_len = args.usize_or("prompt-len", 8192)?;
+        let requests = shared_prefix_requests(
+            &mut rng, n_requests, prompt_len, frac, rate, max_new, 1,
+        );
+        let mut cluster = SimCluster::new(model, hw, workers);
+        if args.flag("prefix-cache") {
+            cluster =
+                cluster.with_prefix_cache(prefix_cache_config(args, 512)?);
+        }
+        let (responses, metrics) = cluster.serve(&requests)?;
+        for r in &responses {
+            println!("req {:>3}: ttft {}  e2e {}", r.id, fmt_time(r.ttft),
+                     fmt_time(r.e2e));
+        }
+        println!("\n{}", metrics.report());
+        return Ok(());
+    }
+
+    let prompt_len = args.usize_or("prompt-len", 128)?;
     let mut cluster = Cluster::new_opts(&artifacts_dir(args), workers, true)?;
     let g = cluster.manifest.granularity();
-    let mut rng = Rng::new(seed);
-    let mut arrival = 0.0;
-    let requests: Vec<GenRequest> = (0..n_requests as u64)
-        .map(|id| {
-            arrival += rng.exp(rate);
-            let len = (prompt_len / g).max(1) * g;
-            GenRequest {
-                id,
-                tokens: (0..len).map(|_| rng.range(0, 256) as i32).collect(),
-                max_new_tokens: max_new,
-                arrival,
-            }
-        })
-        .collect();
-    let sched = Scheduler::new(SchedulerConfig::default());
+    let requests = shared_prefix_requests(
+        &mut rng, n_requests, prompt_len, frac, rate, max_new, g,
+    );
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    if args.flag("prefix-cache") {
+        let cm = CostModel::new(
+            cluster.manifest.model.clone(),
+            hardware_by_name(&args.str_or("hw", "host-cpu"))?,
+        );
+        sched = sched
+            .with_prefix_cache(PrefixCache::new(prefix_cache_config(args, g)?), cm);
+    }
     let (responses, metrics) = sched.serve(&mut cluster, requests)?;
     for r in &responses {
         println!("req {:>3}: {} tokens  ttft {}  e2e {}", r.id,

@@ -16,9 +16,18 @@ pub mod search;
 use crate::error::{Error, Result};
 
 /// A partition of a context of length `c` into ordered chunk sizes.
+///
+/// With prefix-KV reuse (`prefixcache`) the partition may cover only the
+/// *uncached suffix* of a prompt: `start` is the number of already-cached
+/// token rows in front of chunk 0. Causal accounting (attention
+/// rectangles, chain traffic, peak memory) must count those rows even
+/// though no process recomputes them — [`Self::prefixes`] therefore
+/// includes `start`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Partition {
     sizes: Vec<usize>,
+    /// Token rows before chunk 0 whose KV is reused, not recomputed.
+    start: usize,
 }
 
 impl Partition {
@@ -32,7 +41,7 @@ impl Partition {
                 "zero-sized chunk in {sizes:?}"
             )));
         }
-        Ok(Self { sizes })
+        Ok(Self { sizes, start: 0 })
     }
 
     /// Even partition (the TSP baseline and KVR-E): earlier chunks take
@@ -43,7 +52,7 @@ impl Partition {
         let rem = c % p;
         let sizes =
             (0..p).map(|i| base + usize::from(i < rem)).collect::<Vec<_>>();
-        Self { sizes }
+        Self { sizes, start: 0 }
     }
 
     /// Build from interior boundaries `[b_1, .., b_{p-1}]` of `C[0..c]`.
@@ -109,6 +118,18 @@ impl Partition {
         Self::from_sizes(sizes)
     }
 
+    /// Same chunk sizes, planned after `start` reused token rows (the
+    /// suffix-only partition a prefix-cache hit produces).
+    pub fn with_start(mut self, start: usize) -> Self {
+        self.start = start;
+        self
+    }
+
+    /// Reused token rows in front of chunk 0 (0 without prefix reuse).
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
     pub fn sizes(&self) -> &[usize] {
         &self.sizes
     }
@@ -125,8 +146,14 @@ impl Partition {
         self.sizes.is_empty()
     }
 
+    /// Tokens covered by the chunks (the computed suffix only).
     pub fn context(&self) -> usize {
         self.sizes.iter().sum()
+    }
+
+    /// Full causal context: reused prefix + computed chunks.
+    pub fn total_context(&self) -> usize {
+        self.start + self.context()
     }
 
     /// Interior boundaries `[b_1, .., b_{p-1}]`.
@@ -141,9 +168,10 @@ impl Partition {
             .collect()
     }
 
-    /// Prefix sums `prefix_i = Σ_{j≤i} c_j` (the KV rows process i holds).
+    /// Prefix sums `prefix_i = start + Σ_{j≤i} c_j` (the KV rows process i
+    /// holds — reused rows included, since attention spans them too).
     pub fn prefixes(&self) -> Vec<usize> {
-        let mut acc = 0;
+        let mut acc = self.start;
         self.sizes
             .iter()
             .map(|&s| {
@@ -195,6 +223,21 @@ mod tests {
     fn prefixes_accumulate() {
         let p = Partition::from_sizes(vec![4, 3, 2]).unwrap();
         assert_eq!(p.prefixes(), vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn start_offset_shifts_prefixes_only() {
+        // A suffix partition after 6 reused rows: chunk sizes unchanged,
+        // causal prefixes (and so attention/traffic accounting) shifted.
+        let p = Partition::from_sizes(vec![4, 3, 2]).unwrap().with_start(6);
+        assert_eq!(p.start(), 6);
+        assert_eq!(p.sizes(), &[4, 3, 2]);
+        assert_eq!(p.context(), 9);
+        assert_eq!(p.total_context(), 15);
+        assert_eq!(p.prefixes(), vec![10, 13, 15]);
+        assert_eq!(p.boundaries(), vec![4, 7]); // suffix-relative
+        // Default construction stays offset-free.
+        assert_eq!(Partition::even(9, 3).start(), 0);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Content-addressed prefix index over token IDs.
+//!
+//! Prompts are cut into fixed-size blocks of `block_tokens` tokens and
+//! addressed by a *hash chain*: block j's id hashes its own tokens onto
+//! block j-1's id, so equal ids imply equal full token prefixes — the
+//! property that makes a cached block reusable by any request whose
+//! prompt starts with the same tokens (system prompts, few-shot
+//! templates, multi-turn history). Lookups walk the chain until the
+//! first unknown id, giving the longest cached prefix in O(prompt).
+//!
+//! Ids are 128 bits (two independent 64-bit chains) and every match
+//! additionally re-compares the candidate block's tokens against the
+//! stored ones. Accidental aliasing therefore needs a simultaneous
+//! collision of both chain states between different prefixes —
+//! negligible for any realistic corpus, though the chains are not
+//! cryptographic and the store makes no adversarial-integrity claim.
+
+use std::collections::HashMap;
+
+/// Stable identity of one cached block (128-bit two-chain hash).
+pub type BlockId = u128;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const CHAIN2_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// SplitMix64 finalizer — the second chain's per-token mixer.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Chain-hash the blocks of `tokens`: entry j is the id of block j given
+/// blocks 0..j (only *full* blocks are addressable).
+pub fn chain_ids(tokens: &[i32], block_tokens: usize) -> Vec<BlockId> {
+    assert!(block_tokens > 0, "block_tokens must be positive");
+    let mut ids = Vec::with_capacity(tokens.len() / block_tokens);
+    let mut h1 = FNV_OFFSET;
+    let mut h2 = CHAIN2_SEED;
+    for block in tokens.chunks_exact(block_tokens) {
+        for &t in block {
+            h1 = fnv1a(h1, &t.to_le_bytes());
+            h2 = mix(h2 ^ (t as u32 as u64));
+        }
+        ids.push(((h1 as u128) << 64) | h2 as u128);
+    }
+    ids
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    /// The block's own tokens — collision check on match.
+    tokens: Vec<i32>,
+}
+
+/// Block-granular longest-prefix index.
+#[derive(Clone, Debug)]
+pub struct BlockIndex {
+    block_tokens: usize,
+    nodes: HashMap<BlockId, Node>,
+}
+
+impl BlockIndex {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        Self { block_tokens, nodes: HashMap::new() }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Indexed blocks.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Ids of the longest indexed prefix of `tokens` (full blocks only).
+    pub fn longest_match(&self, tokens: &[i32]) -> Vec<BlockId> {
+        let ids = chain_ids(tokens, self.block_tokens);
+        let mut out = Vec::new();
+        for (j, id) in ids.into_iter().enumerate() {
+            let block = &tokens[j * self.block_tokens..(j + 1) * self.block_tokens];
+            match self.nodes.get(&id) {
+                Some(node) if node.tokens == block => out.push(id),
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// Index every full block of `tokens`; returns all block ids in order
+    /// (pre-existing ids included — insertion is idempotent).
+    pub fn insert(&mut self, tokens: &[i32]) -> Vec<BlockId> {
+        let ids = chain_ids(tokens, self.block_tokens);
+        for (j, &id) in ids.iter().enumerate() {
+            let block = &tokens[j * self.block_tokens..(j + 1) * self.block_tokens];
+            self.nodes
+                .entry(id)
+                .or_insert_with(|| Node { tokens: block.to_vec() });
+        }
+        ids
+    }
+
+    /// Drop one block from the index (store eviction of the cold tier).
+    /// Descendant blocks become unreachable by [`Self::longest_match`]
+    /// (the walk stops at the hole) and age out of the store on their own.
+    pub fn remove(&mut self, id: BlockId) {
+        self.nodes.remove(&id);
+    }
+
+    pub fn contains(&self, id: BlockId) -> bool {
+        self.nodes.contains_key(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, seed: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 31 + seed).collect()
+    }
+
+    #[test]
+    fn chain_ids_are_prefix_stable() {
+        let a = toks(64, 0);
+        let mut b = a.clone();
+        b.extend(toks(32, 1000));
+        // Shared 64-token prefix → identical first two ids; the third
+        // (divergent) block differs.
+        let ia = chain_ids(&a, 32);
+        let ib = chain_ids(&b, 32);
+        assert_eq!(ia.len(), 2);
+        assert_eq!(ib.len(), 3);
+        assert_eq!(ia[..2], ib[..2]);
+    }
+
+    #[test]
+    fn chain_ids_depend_on_ancestry() {
+        // The same block content after different prefixes gets different
+        // ids — block KV depends on everything before it.
+        let tail = toks(32, 7);
+        let mut a = toks(32, 0);
+        a.extend(&tail);
+        let mut b = toks(32, 1);
+        b.extend(&tail);
+        assert_ne!(chain_ids(&a, 32)[1], chain_ids(&b, 32)[1]);
+    }
+
+    #[test]
+    fn longest_match_finds_shared_prefix() {
+        let mut idx = BlockIndex::new(32);
+        let mut prompt_a = toks(96, 0); // 3 blocks
+        let ids_a = idx.insert(&prompt_a);
+        assert_eq!(ids_a.len(), 3);
+        assert_eq!(idx.len(), 3);
+
+        // Same full prompt matches everything.
+        assert_eq!(idx.longest_match(&prompt_a), ids_a);
+        // A prompt sharing 2 blocks then diverging matches only those.
+        let mut prompt_b = toks(64, 0);
+        prompt_b.extend(toks(64, 999));
+        assert_eq!(idx.longest_match(&prompt_b), ids_a[..2]);
+        // A divergent first block matches nothing.
+        assert!(idx.longest_match(&toks(96, 5)).is_empty());
+        // Partial trailing blocks are never addressable.
+        prompt_a.truncate(80);
+        assert_eq!(idx.longest_match(&prompt_a), ids_a[..2]);
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut idx = BlockIndex::new(16);
+        let p = toks(48, 3);
+        let first = idx.insert(&p);
+        let second = idx.insert(&p);
+        assert_eq!(first, second);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn remove_creates_a_hole_the_walk_stops_at() {
+        let mut idx = BlockIndex::new(16);
+        let p = toks(64, 2); // 4 blocks
+        let ids = idx.insert(&p);
+        idx.remove(ids[1]);
+        // Blocks 2 and 3 are still indexed but unreachable.
+        assert!(idx.contains(ids[2]));
+        assert_eq!(idx.longest_match(&p), ids[..1]);
+    }
+}

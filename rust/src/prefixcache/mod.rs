@@ -1,0 +1,377 @@
+//! Prefix KV-cache store with hybrid compute-or-load prefill.
+//!
+//! KV-Runahead parallelizes KV-cache *generation*; this subsystem stops
+//! regenerating KV that previous requests already produced. Prompts that
+//! share a prefix (system prompts, few-shot templates, multi-turn
+//! history) share its KV exactly, so the store keeps block-granular KV
+//! keyed by token content and the serving layer prefills only the
+//! uncached suffix — runahead and prefix reuse compose: the partitioner
+//! plans over the suffix with a nonzero start offset
+//! ([`crate::partition::Partition::with_start`]).
+//!
+//! Three parts (see `DESIGN.md` §Prefix cache):
+//!
+//! * [`index::BlockIndex`] — content-addressed longest-prefix match over
+//!   hash-chained token blocks, collision-checked;
+//! * [`store::BlockStore`] — two-tier residency: hot blocks in a
+//!   [`crate::coordinator::KvPool`] slab arena, cold blocks behind a
+//!   modeled load bandwidth, LRU eviction, lease pinning;
+//! * [`planner`] — the per-request compute-or-load cut, priced with
+//!   [`crate::sim::cost::CostModel`].
+//!
+//! The [`PrefixCache`] facade ties them together for both execution
+//! paths: the simulated cluster reuses block *timings*, the real PJRT
+//! cluster additionally stores block KV wire payloads and seeds worker 0
+//! of the chain with the reassembled prefix.
+
+pub mod index;
+pub mod planner;
+pub mod store;
+
+use crate::error::Result;
+use crate::runtime::KvCache;
+use crate::sim::cost::CostModel;
+
+use index::{BlockId, BlockIndex};
+use planner::{BlockAction, PrefillPlan};
+use store::{BlockStore, Tier};
+
+/// Prefix-cache knobs (CLI: `--prefix-cache`, `--block-tokens`,
+/// `--hot-tokens`, `--cold-tokens`, `--cold-bw`).
+#[derive(Clone, Debug)]
+pub struct PrefixCacheConfig {
+    /// Tokens per block — the reuse granule. For the real cluster this
+    /// must be a multiple of the artifact chunk granularity.
+    pub block_tokens: usize,
+    /// Hot-tier capacity (token rows in the device slab arena).
+    pub hot_capacity_tokens: usize,
+    /// Cold-tier capacity (token rows in the modeled persistence tier).
+    pub cold_capacity_tokens: usize,
+    /// Cold-tier load bandwidth (bytes/s) — the compute-or-load pivot.
+    pub cold_load_bw: f64,
+    /// Per-load fixed latency of the cold tier (s).
+    pub cold_load_latency: f64,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        Self {
+            block_tokens: 256,
+            hot_capacity_tokens: 64 * 256,
+            cold_capacity_tokens: 512 * 256,
+            // A PCIe-gen4-x16-class staging tier.
+            cold_load_bw: 10e9,
+            cold_load_latency: 1e-3,
+        }
+    }
+}
+
+/// Aggregate cache effectiveness counters — *planner-level* decisions
+/// over the cache's lifetime (possibly across serving runs). What a
+/// serving run actually applied — a plan can be declined when payloads
+/// are missing or off-granularity — is recorded per run in
+/// [`crate::coordinator::ServeMetrics`].
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    /// Admission-time lookups performed.
+    pub lookups: usize,
+    /// Lookups that matched at least one cached block.
+    pub hits: usize,
+    /// Tokens covered by matches (before the compute-or-load cut).
+    pub matched_tokens: usize,
+    /// Tokens the planner actually reused (prefill work avoided).
+    pub reused_tokens: usize,
+    /// Reused blocks served from the hot tier.
+    pub loaded_hot_blocks: usize,
+    /// Reused blocks streamed from the cold tier.
+    pub loaded_cold_blocks: usize,
+    /// Matched blocks the planner chose to recompute anyway.
+    pub recomputed_blocks: usize,
+    /// Blocks admitted (including refreshes).
+    pub admitted_blocks: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups that found a cached prefix.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+}
+
+/// Pins the loaded blocks of one in-flight request against eviction.
+/// Must be handed back via [`PrefixCache::release`].
+#[must_use = "a lease pins cache blocks until released"]
+#[derive(Debug)]
+pub struct Lease {
+    blocks: Vec<BlockId>,
+}
+
+/// The prefix KV-cache: index + two-tier store + planner + stats.
+#[derive(Clone, Debug)]
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    index: BlockIndex,
+    store: BlockStore,
+    stats: CacheStats,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> Self {
+        let index = BlockIndex::new(cfg.block_tokens);
+        let store = BlockStore::new(
+            cfg.block_tokens,
+            cfg.hot_capacity_tokens,
+            cfg.cold_capacity_tokens,
+        );
+        Self { cfg, index, store, stats: CacheStats::default() }
+    }
+
+    pub fn config(&self) -> &PrefixCacheConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Longest *usable* cached prefix: indexed AND resident in the store
+    /// (an index hit whose block was dropped is not reusable). Touches
+    /// the LRU clock of every returned block.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Vec<(BlockId, Tier)> {
+        let mut out = Vec::new();
+        for id in self.index.longest_match(tokens) {
+            let Some(tier) = self.store.tier(id) else { break };
+            self.store.touch(id);
+            out.push((id, tier));
+        }
+        out
+    }
+
+    /// Admission-time planning: find the cached prefix and choose the
+    /// compute-or-load cut for a chain of `procs` processes.
+    pub fn plan_prefill(
+        &mut self, cm: &CostModel, tokens: &[i32], procs: usize,
+    ) -> Result<PrefillPlan> {
+        let matched = self.lookup(tokens);
+        let plan = planner::plan(cm, &self.cfg, tokens.len(), &matched, procs)?;
+        self.stats.lookups += 1;
+        if !matched.is_empty() {
+            self.stats.hits += 1;
+        }
+        self.stats.matched_tokens += plan.matched_tokens;
+        self.stats.reused_tokens += plan.reuse_tokens;
+        for b in &plan.blocks {
+            match (b.action, b.tier) {
+                (BlockAction::Load, Tier::Hot) => {
+                    self.stats.loaded_hot_blocks += 1
+                }
+                (BlockAction::Load, Tier::Cold) => {
+                    self.stats.loaded_cold_blocks += 1
+                }
+                (BlockAction::Recompute, _) => {
+                    self.stats.recomputed_blocks += 1
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Pin the plan's loaded blocks for the lifetime of the prefill.
+    pub fn lease(&mut self, plan: &PrefillPlan) -> Result<Lease> {
+        let mut blocks = Vec::new();
+        for b in plan.loaded_blocks() {
+            self.store.pin(b.id)?;
+            blocks.push(b.id);
+        }
+        Ok(Lease { blocks })
+    }
+
+    /// Release a lease (prefill done or aborted).
+    pub fn release(&mut self, lease: Lease) {
+        for id in lease.blocks {
+            self.store.unpin(id);
+        }
+    }
+
+    /// Index + admit every full block of a finished prompt (modeled runs
+    /// carry no payload).
+    pub fn admit(&mut self, tokens: &[i32]) {
+        self.admit_payloads(tokens, None)
+    }
+
+    /// Real-path admission: slice the prompt's accumulated [`KvCache`]
+    /// into per-block wire payloads so later requests can seed the chain
+    /// head with real KV. `kv` must hold at least the prompt's rows.
+    pub fn admit_from_cache(&mut self, tokens: &[i32], kv: &KvCache) {
+        self.admit_payloads(tokens, Some(kv))
+    }
+
+    fn admit_payloads(&mut self, tokens: &[i32], kv: Option<&KvCache>) {
+        let bt = self.cfg.block_tokens;
+        if let Some(kv) = kv {
+            // A short or stale cache cannot back payload blocks.
+            if kv.tokens < (tokens.len() / bt) * bt {
+                return;
+            }
+        }
+        let ids = self.index.insert(tokens);
+        for (j, id) in ids.into_iter().enumerate() {
+            let payload = kv.map(|c| c.block_wire(j * bt, bt));
+            for dropped in self.store.admit(id, payload) {
+                self.index.remove(dropped);
+            }
+            self.stats.admitted_blocks += 1;
+        }
+    }
+
+    /// Reassemble the reused-prefix KV for the real execution path from
+    /// the plan's loaded blocks. `None` when any payload is missing
+    /// (modeled blocks, or admission raced an eviction) — callers then
+    /// fall back to full recompute.
+    pub fn reused_cache(
+        &self, plan: &PrefillPlan, layers: usize, kv_heads: usize,
+        head_dim: usize,
+    ) -> Option<KvCache> {
+        if plan.reuse_tokens == 0 {
+            return None;
+        }
+        let wires: Option<Vec<&[u8]>> =
+            plan.loaded_blocks().map(|b| self.store.payload(b.id)).collect();
+        KvCache::from_block_wires(
+            layers,
+            kv_heads,
+            head_dim,
+            self.cfg.block_tokens,
+            &wires?,
+        )
+        .ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_by_name, model_by_name};
+
+    fn cm() -> CostModel {
+        CostModel::new(
+            model_by_name("llama7b").unwrap(),
+            hardware_by_name("a100-300gbps").unwrap(),
+        )
+    }
+
+    fn cache(hot_blocks: usize, cold_blocks: usize) -> PrefixCache {
+        PrefixCache::new(PrefixCacheConfig {
+            block_tokens: 512,
+            hot_capacity_tokens: hot_blocks * 512,
+            cold_capacity_tokens: cold_blocks * 512,
+            cold_load_bw: 300e9,
+            cold_load_latency: 1e-4,
+        })
+    }
+
+    fn prompt(shared_blocks: usize, tail: i32) -> Vec<i32> {
+        let mut p: Vec<i32> = (0..(shared_blocks * 512) as i32).collect();
+        p.extend((0..512).map(|i| i * 7 + tail));
+        p
+    }
+
+    #[test]
+    fn lookup_after_admit_matches_shared_prefix() {
+        let cm = cm();
+        let mut pc = cache(16, 64);
+        let a = prompt(4, 1);
+        assert!(pc.plan_prefill(&cm, &a, 4).unwrap().reuse_tokens == 0);
+        pc.admit(&a);
+
+        // A sibling prompt with the same 4-block system prefix.
+        let b = prompt(4, 2);
+        let plan = pc.plan_prefill(&cm, &b, 4).unwrap();
+        assert_eq!(plan.matched_tokens, 4 * 512);
+        assert!(plan.reuse_tokens > 0);
+        assert!(plan.est_ttft_s < plan.est_ttft_cold_s);
+        let s = pc.stats();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.hits, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.reused_tokens, plan.reuse_tokens);
+    }
+
+    #[test]
+    fn lease_pins_blocks_against_eviction() {
+        let cm = cm();
+        // Hot fits 2 blocks, cold fits nothing: eviction means dropping.
+        let mut pc = cache(2, 0);
+        let a: Vec<i32> = (0..1024).collect();
+        pc.admit(&a);
+        let plan = pc.plan_prefill(&cm, &a, 2).unwrap();
+        // Planner keeps a suffix for compute; at least block 0 is loaded.
+        assert!(plan.reuse_tokens >= 512);
+        let lease = pc.lease(&plan).unwrap();
+
+        // Pressure from two other prompts cannot displace leased blocks.
+        pc.admit(&(5000..6024).collect::<Vec<i32>>());
+        pc.admit(&(9000..10024).collect::<Vec<i32>>());
+        assert!(!pc.lookup(&a).is_empty(), "leased prefix evicted");
+
+        // After release the same pressure evicts it.
+        pc.release(lease);
+        pc.admit(&(5000..6024).collect::<Vec<i32>>());
+        pc.admit(&(9000..10024).collect::<Vec<i32>>());
+        assert!(pc.lookup(&a).is_empty());
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure_prefers_stale_prefixes() {
+        let mut pc = cache(4, 0); // 4 hot blocks, no cold tier
+        let a: Vec<i32> = (0..1024).collect(); // 2 blocks
+        let b: Vec<i32> = (2000..3024).collect(); // 2 blocks
+        pc.admit(&a);
+        pc.admit(&b);
+        // Touch `a` so `b` is stale, then admit 2 fresh blocks.
+        assert_eq!(pc.lookup(&a).len(), 2);
+        pc.admit(&(7000..8024).collect::<Vec<i32>>());
+        assert_eq!(pc.lookup(&a).len(), 2, "recently used prefix kept");
+        assert!(pc.lookup(&b).is_empty(), "stale prefix evicted");
+    }
+
+    #[test]
+    fn dropped_blocks_leave_no_stale_index_entries() {
+        let mut pc = cache(1, 1);
+        pc.admit(&(0..512).collect::<Vec<i32>>());
+        pc.admit(&(1000..1512).collect::<Vec<i32>>());
+        pc.admit(&(2000..2512).collect::<Vec<i32>>());
+        // Capacity is 2 blocks total; at most 2 indexed.
+        assert!(pc.index.len() <= 2);
+    }
+
+    #[test]
+    fn reused_cache_roundtrips_real_payloads() {
+        let (l, h, d) = (2, 2, 4);
+        let mut pc = PrefixCache::new(PrefixCacheConfig {
+            block_tokens: 4,
+            hot_capacity_tokens: 64,
+            cold_capacity_tokens: 64,
+            cold_load_bw: 300e9,
+            cold_load_latency: 1e-6,
+        });
+        let tokens: Vec<i32> = (0..12).collect();
+        let mut kv = KvCache::new(l, h, d, 12);
+        let n = l * h * 12 * d;
+        let flat: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+        kv.append_chunk(12, &flat, &flat).unwrap();
+        pc.admit_from_cache(&tokens, &kv);
+
+        let cm = cm();
+        let plan = pc.plan_prefill(&cm, &tokens, 2).unwrap();
+        assert!(plan.reuse_tokens > 0);
+        let reused = pc.reused_cache(&plan, l, h, d).unwrap();
+        assert_eq!(reused.tokens, plan.reuse_tokens);
+        // The reassembled rows equal the original front rows.
+        let want = kv.block_wire(0, plan.reuse_tokens);
+        assert_eq!(reused.to_wire(), want);
+    }
+}

@@ -1,0 +1,272 @@
+//! Hybrid compute-or-load planner (Jin et al. 2024's question, answered
+//! with this repo's cost model): given the longest cached prefix of a
+//! prompt, how many of its blocks should a request *load* from the store
+//! and how many should it *recompute* as part of the runahead prefill?
+//!
+//! Loading block j costs its tier's bandwidth-limited transfer time and
+//! is independent of position; recomputing it costs the marginal chain
+//! compute, which grows with causal depth. The planner evaluates every
+//! cut `r` (blocks `0..r` loaded, the rest recomputed with the suffix)
+//! by pricing the loads and simulating the suffix prefill with
+//! [`kvr_timeline_offset`] on a quiet fabric, then takes the argmin —
+//! the per-block crossover falls out of the scan. Low load bandwidth
+//! therefore flips the decision to compute, exactly as the paper's
+//! compute-vs-load tradeoff demands.
+
+use crate::error::Result;
+use crate::partition::Partition;
+use crate::sim::cost::CostModel;
+use crate::sim::{kvr_timeline_offset, quiet_network};
+
+use super::index::BlockId;
+use super::store::Tier;
+use super::PrefixCacheConfig;
+
+/// What the planner decided for one cached block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockAction {
+    /// Reuse the stored KV (hot: already resident; cold: stream it in).
+    Load,
+    /// Cheaper to regenerate with the runahead suffix prefill.
+    Recompute,
+}
+
+/// Per-block plan entry.
+#[derive(Clone, Debug)]
+pub struct PlannedBlock {
+    pub id: BlockId,
+    pub tier: Tier,
+    pub action: BlockAction,
+    /// Modeled load seconds for this block (0-cost when recomputed).
+    pub load_s: f64,
+}
+
+/// The hybrid prefill plan for one request.
+#[derive(Clone, Debug)]
+pub struct PrefillPlan {
+    pub prompt_tokens: usize,
+    /// Longest cached prefix found (tokens).
+    pub matched_tokens: usize,
+    /// Tokens actually reused (≤ matched — the compute-or-load cut).
+    pub reuse_tokens: usize,
+    /// Total modeled load seconds for the reused blocks.
+    pub load_s: f64,
+    /// Modeled TTFT of the chosen plan (loads + suffix prefill).
+    pub est_ttft_s: f64,
+    /// Modeled TTFT with the cache ignored (full recompute baseline).
+    pub est_ttft_cold_s: f64,
+    pub blocks: Vec<PlannedBlock>,
+}
+
+impl PrefillPlan {
+    /// A no-reuse plan (cache miss or cache disabled).
+    pub fn cold(c: usize, est_ttft_s: f64) -> Self {
+        Self {
+            prompt_tokens: c,
+            matched_tokens: 0,
+            reuse_tokens: 0,
+            load_s: 0.0,
+            est_ttft_s,
+            est_ttft_cold_s: est_ttft_s,
+            blocks: Vec::new(),
+        }
+    }
+
+    /// Blocks the plan loads (the ones a lease must pin).
+    pub fn loaded_blocks(&self) -> impl Iterator<Item = &PlannedBlock> + '_ {
+        self.blocks.iter().filter(|b| b.action == BlockAction::Load)
+    }
+
+    /// The same lookup with reuse declined — what actually ran when the
+    /// serving layer could not apply the plan (payload missing, block
+    /// size off the artifact granularity): every matched block
+    /// recomputes. Metrics must record this, not the aspirational plan.
+    pub fn declined(&self) -> PrefillPlan {
+        PrefillPlan {
+            prompt_tokens: self.prompt_tokens,
+            matched_tokens: self.matched_tokens,
+            reuse_tokens: 0,
+            load_s: 0.0,
+            est_ttft_s: self.est_ttft_cold_s,
+            est_ttft_cold_s: self.est_ttft_cold_s,
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| PlannedBlock {
+                    id: b.id,
+                    tier: b.tier,
+                    action: BlockAction::Recompute,
+                    load_s: 0.0,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Modeled seconds to materialize one block's KV from its tier.
+pub fn block_load_s(cm: &CostModel, cfg: &PrefixCacheConfig, tier: Tier) -> f64 {
+    let bytes =
+        (cfg.block_tokens * cm.model.kv_bytes_per_token()) as f64;
+    match tier {
+        // Hot blocks are resident in the device arena: an HBM touch.
+        Tier::Hot => bytes / cm.hw.mem_bw,
+        Tier::Cold => cfg.cold_load_latency + bytes / cfg.cold_load_bw,
+    }
+}
+
+/// Modeled TTFT of prefilling `suffix` tokens after `start` resident
+/// rows, even runahead partition over at most `procs` processes.
+fn suffix_ttft(cm: &CostModel, procs: usize, suffix: usize, start: usize) -> Result<f64> {
+    let p = procs.min(suffix).max(1);
+    let part = Partition::even(suffix, p);
+    let mut net = quiet_network(cm, p);
+    Ok(kvr_timeline_offset(cm, &mut net, part.sizes(), start)?.ttft)
+}
+
+/// Choose the compute-or-load cut for a prompt of `c` tokens whose
+/// longest cached prefix is `matched` (in block order, with tiers).
+pub fn plan(
+    cm: &CostModel, cfg: &PrefixCacheConfig, c: usize,
+    matched: &[(BlockId, Tier)], procs: usize,
+) -> Result<PrefillPlan> {
+    assert!(c > 0, "empty prompt");
+    let bt = cfg.block_tokens;
+    // Always recompute at least the final tokens: the first-token logits
+    // come out of real suffix compute, never out of the cache.
+    let max_reuse_blocks = matched.len().min(c.saturating_sub(1) / bt);
+
+    let est_ttft_cold_s = suffix_ttft(cm, procs, c, 0)?;
+    let mut best_r = 0usize;
+    let mut best_est = est_ttft_cold_s;
+    let mut load_acc = 0.0f64;
+    let mut best_load = 0.0f64;
+    for r in 1..=max_reuse_blocks {
+        load_acc += block_load_s(cm, cfg, matched[r - 1].1);
+        let est = load_acc + suffix_ttft(cm, procs, c - r * bt, r * bt)?;
+        // Ties favor more reuse (same latency, fewer FLOPs burned).
+        if est <= best_est {
+            best_est = est;
+            best_r = r;
+            best_load = load_acc;
+        }
+    }
+
+    let blocks = matched
+        .iter()
+        .enumerate()
+        .map(|(j, &(id, tier))| PlannedBlock {
+            id,
+            tier,
+            action: if j < best_r {
+                BlockAction::Load
+            } else {
+                BlockAction::Recompute
+            },
+            load_s: if j < best_r { block_load_s(cm, cfg, tier) } else { 0.0 },
+        })
+        .collect();
+    Ok(PrefillPlan {
+        prompt_tokens: c,
+        matched_tokens: matched.len() * bt,
+        reuse_tokens: best_r * bt,
+        load_s: best_load,
+        est_ttft_s: best_est,
+        est_ttft_cold_s,
+        blocks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_by_name, model_by_name};
+
+    fn cm() -> CostModel {
+        CostModel::new(
+            model_by_name("llama7b").unwrap(),
+            hardware_by_name("a100-300gbps").unwrap(),
+        )
+    }
+
+    fn cfg(bw: f64) -> PrefixCacheConfig {
+        PrefixCacheConfig {
+            block_tokens: 512,
+            cold_load_bw: bw,
+            ..PrefixCacheConfig::default()
+        }
+    }
+
+    fn cold_match(blocks: usize) -> Vec<(BlockId, Tier)> {
+        (1..=blocks as u128).map(|id| (id, Tier::Cold)).collect()
+    }
+
+    #[test]
+    fn fast_tier_loads_slow_tier_recomputes() {
+        // The acceptance tradeoff: at NVLink-class load bandwidth the
+        // planner reuses every cached block; at floppy-disk bandwidth it
+        // recomputes everything.
+        let cm = cm();
+        let matched = cold_match(8); // 4096 of 8192 tokens cached
+        let fast = plan(&cm, &cfg(300e9), 8192, &matched, 4).unwrap();
+        assert_eq!(fast.reuse_tokens, 4096);
+        assert!(fast.est_ttft_s < fast.est_ttft_cold_s);
+        assert!(fast.loaded_blocks().count() == 8);
+
+        let slow = plan(&cm, &cfg(1e6), 8192, &matched, 4).unwrap();
+        assert_eq!(slow.reuse_tokens, 0);
+        assert_eq!(slow.est_ttft_s, slow.est_ttft_cold_s);
+        assert!(slow.loaded_blocks().count() == 0);
+        assert!(slow
+            .blocks
+            .iter()
+            .all(|b| b.action == BlockAction::Recompute));
+    }
+
+    #[test]
+    fn hot_blocks_are_near_free_to_reuse() {
+        let cm = cm();
+        let cfg = cfg(1e6); // cold tier useless...
+        let matched: Vec<_> =
+            (1..=8u128).map(|id| (id, Tier::Hot)).collect();
+        // ...but hot blocks sidestep it entirely.
+        let p = plan(&cm, &cfg, 8192, &matched, 4).unwrap();
+        assert_eq!(p.reuse_tokens, 4096);
+        assert!(p.load_s < 0.01, "{}", p.load_s);
+    }
+
+    #[test]
+    fn full_prompt_coverage_still_computes_a_suffix() {
+        // Even a 100% cached prompt must run real compute for the final
+        // block so the first token comes from live logits.
+        let cm = cm();
+        let matched = cold_match(16); // covers all 8192 tokens
+        let p = plan(&cm, &cfg(300e9), 8192, &matched, 4).unwrap();
+        assert!(p.reuse_tokens < 8192);
+        assert!(p.reuse_tokens >= 8192 - 512);
+    }
+
+    #[test]
+    fn cache_miss_degenerates_to_cold_plan() {
+        let cm = cm();
+        let p = plan(&cm, &cfg(300e9), 4096, &[], 4).unwrap();
+        assert_eq!(p.reuse_tokens, 0);
+        assert_eq!(p.matched_tokens, 0);
+        assert_eq!(p.est_ttft_s, p.est_ttft_cold_s);
+    }
+
+    #[test]
+    fn intermediate_bandwidth_lands_a_partial_cut() {
+        // Sweep bandwidths: reuse must be monotone non-decreasing in load
+        // bandwidth — the crossover moves block by block.
+        let cm = cm();
+        let matched = cold_match(8);
+        let mut prev = 0usize;
+        for bw in [1e6, 1e8, 1e9, 1e10, 300e9] {
+            let p = plan(&cm, &cfg(bw), 8192, &matched, 4).unwrap();
+            assert!(p.reuse_tokens >= prev,
+                    "reuse shrank at bw={bw}: {} < {prev}", p.reuse_tokens);
+            prev = p.reuse_tokens;
+        }
+        assert_eq!(prev, 4096);
+    }
+}

@@ -1,0 +1,296 @@
+//! Two-tier block store: hot blocks resident in a [`KvPool`] slab arena,
+//! cold blocks in a modeled persistence tier (CPU DRAM / NVMe) behind a
+//! configurable load bandwidth.
+//!
+//! Every block occupies exactly `block_tokens` KV rows, so hot-tier slabs
+//! are uniform and the arena never fragments. Admission always targets
+//! the hot tier; under pressure the LRU *unpinned* hot block is demoted
+//! to cold, and the cold tier itself drops its LRU unpinned block when
+//! over capacity (the facade un-indexes dropped ids). Live requests pin
+//! the blocks they reuse via leases, which eviction must skip — a block
+//! being streamed into a prefill can never be reclaimed under it.
+
+use std::collections::HashMap;
+
+use crate::coordinator::kvpool::KvPool;
+use crate::error::{Error, Result};
+
+use super::index::BlockId;
+
+/// Residency tier of a cached block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Resident in the device slab arena — reusable at HBM speed.
+    Hot,
+    /// In the modeled persistence tier — reusable after a bandwidth-
+    /// limited load.
+    Cold,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    tier: Tier,
+    /// Hot-tier slab id (arena bookkeeping), `None` when cold.
+    slab: Option<u64>,
+    /// KV wire bytes (real execution path); `None` in modeled runs.
+    payload: Option<Vec<u8>>,
+    last_use: u64,
+    pins: u32,
+}
+
+/// Tier movement counters.
+#[derive(Clone, Debug, Default)]
+pub struct StoreStats {
+    /// Hot → cold demotions under arena pressure.
+    pub demotions: usize,
+    /// Cold → hot promotions on re-admission.
+    pub promotions: usize,
+    /// Blocks dropped entirely from the cold tier.
+    pub drops: usize,
+}
+
+/// LRU two-tier residency manager for prefix blocks.
+#[derive(Clone, Debug)]
+pub struct BlockStore {
+    block_tokens: usize,
+    hot: KvPool,
+    cold_capacity_blocks: usize,
+    entries: HashMap<BlockId, Entry>,
+    clock: u64,
+    pub stats: StoreStats,
+}
+
+impl BlockStore {
+    pub fn new(
+        block_tokens: usize, hot_capacity_tokens: usize,
+        cold_capacity_tokens: usize,
+    ) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        Self {
+            block_tokens,
+            hot: KvPool::new(hot_capacity_tokens),
+            cold_capacity_blocks: cold_capacity_tokens / block_tokens,
+            entries: HashMap::new(),
+            clock: 0,
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn contains(&self, id: BlockId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    pub fn tier(&self, id: BlockId) -> Option<Tier> {
+        self.entries.get(&id).map(|e| e.tier)
+    }
+
+    pub fn payload(&self, id: BlockId) -> Option<&[u8]> {
+        self.entries.get(&id).and_then(|e| e.payload.as_deref())
+    }
+
+    pub fn hot_blocks(&self) -> usize {
+        self.entries.values().filter(|e| e.tier == Tier::Hot).count()
+    }
+
+    pub fn cold_blocks(&self) -> usize {
+        self.entries.values().filter(|e| e.tier == Tier::Cold).count()
+    }
+
+    /// Hot-arena token rows in use (block-granular by construction).
+    pub fn hot_used_tokens(&self) -> usize {
+        self.hot.used()
+    }
+
+    /// Mark a block recently used (reuse path).
+    pub fn touch(&mut self, id: BlockId) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.last_use = clock;
+        }
+    }
+
+    /// Pin a block against eviction (one lease = one pin).
+    pub fn pin(&mut self, id: BlockId) -> Result<()> {
+        let e = self.entries.get_mut(&id).ok_or_else(|| {
+            Error::Coordinator(format!("pin of unknown block {id:#x}"))
+        })?;
+        e.pins += 1;
+        Ok(())
+    }
+
+    /// Drop one pin (lease release). Unknown ids are ignored — the block
+    /// may have been dropped between lease and release only if it was
+    /// never pinned, which admission forbids; stale releases are no-ops.
+    pub fn unpin(&mut self, id: BlockId) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// LRU unpinned block of `tier`, if any.
+    fn lru_unpinned(&self, tier: Tier) -> Option<BlockId> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.tier == tier && e.pins == 0)
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(&id, _)| id)
+    }
+
+    /// Reserve one hot slab, demoting LRU unpinned hot blocks to cold as
+    /// needed. `None` when every hot block is pinned and the arena is full.
+    fn reserve_hot_slab(&mut self) -> Option<u64> {
+        loop {
+            if let Ok(slab) = self.hot.alloc(self.block_tokens) {
+                return Some(slab.id);
+            }
+            let victim = self.lru_unpinned(Tier::Hot)?;
+            let e = self.entries.get_mut(&victim).expect("victim exists");
+            if let Some(slab) = e.slab.take() {
+                self.hot.release(slab).expect("victim slab is live");
+            }
+            e.tier = Tier::Cold;
+            self.stats.demotions += 1;
+        }
+    }
+
+    /// Admit (or refresh) a block, targeting hot residency. Returns the
+    /// ids dropped from the cold tier to stay within capacity — the
+    /// caller must un-index them.
+    pub fn admit(&mut self, id: BlockId, payload: Option<Vec<u8>>) -> Vec<BlockId> {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.last_use = clock;
+            if payload.is_some() {
+                e.payload = payload;
+            }
+            if e.tier == Tier::Cold {
+                if let Some(slab) = self.reserve_hot_slab() {
+                    let e = self.entries.get_mut(&id).expect("admitted above");
+                    e.tier = Tier::Hot;
+                    e.slab = Some(slab);
+                    self.stats.promotions += 1;
+                }
+            }
+        } else {
+            let (tier, slab) = match self.reserve_hot_slab() {
+                Some(slab) => (Tier::Hot, Some(slab)),
+                None => (Tier::Cold, None),
+            };
+            self.entries.insert(
+                id,
+                Entry { tier, slab, payload, last_use: clock, pins: 0 },
+            );
+        }
+        self.enforce_cold_capacity()
+    }
+
+    fn enforce_cold_capacity(&mut self) -> Vec<BlockId> {
+        let mut dropped = Vec::new();
+        while self.cold_blocks() > self.cold_capacity_blocks {
+            let Some(victim) = self.lru_unpinned(Tier::Cold) else { break };
+            self.entries.remove(&victim);
+            self.stats.drops += 1;
+            dropped.push(victim);
+        }
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: usize = 32;
+
+    #[test]
+    fn admit_fills_hot_then_demotes_lru() {
+        // Hot arena holds 2 blocks; cold holds 4.
+        let mut s = BlockStore::new(B, 2 * B, 4 * B);
+        let dropped: Vec<_> =
+            [1u128, 2, 3].iter().flat_map(|&id| s.admit(id, None)).collect();
+        assert!(dropped.is_empty());
+        // Block 1 was LRU → demoted; 2 and 3 hot.
+        assert_eq!(s.tier(1), Some(Tier::Cold));
+        assert_eq!(s.tier(2), Some(Tier::Hot));
+        assert_eq!(s.tier(3), Some(Tier::Hot));
+        assert_eq!(s.hot_used_tokens(), 2 * B);
+        assert_eq!(s.stats.demotions, 1);
+    }
+
+    #[test]
+    fn touch_updates_lru_order() {
+        let mut s = BlockStore::new(B, 2 * B, 4 * B);
+        s.admit(1, None);
+        s.admit(2, None);
+        s.touch(1); // now 2 is LRU
+        s.admit(3, None);
+        assert_eq!(s.tier(1), Some(Tier::Hot));
+        assert_eq!(s.tier(2), Some(Tier::Cold));
+    }
+
+    #[test]
+    fn pinned_blocks_survive_pressure() {
+        let mut s = BlockStore::new(B, 2 * B, 8 * B);
+        s.admit(1, None);
+        s.admit(2, None);
+        s.pin(1).unwrap();
+        s.pin(2).unwrap();
+        // Arena full of pinned blocks → newcomers land cold.
+        s.admit(3, None);
+        assert_eq!(s.tier(1), Some(Tier::Hot));
+        assert_eq!(s.tier(2), Some(Tier::Hot));
+        assert_eq!(s.tier(3), Some(Tier::Cold));
+        assert_eq!(s.stats.demotions, 0);
+        // After release, pressure demotes again.
+        s.unpin(1);
+        s.admit(4, None);
+        assert_eq!(s.tier(1), Some(Tier::Cold));
+        assert_eq!(s.tier(4), Some(Tier::Hot));
+    }
+
+    #[test]
+    fn cold_overflow_drops_lru_and_reports_ids() {
+        // Hot: 1 block, cold: 2 blocks.
+        let mut s = BlockStore::new(B, B, 2 * B);
+        for id in 1..=3u128 {
+            assert!(s.admit(id, None).is_empty());
+        }
+        // 1 and 2 are cold, 3 hot. One more overflows cold.
+        let dropped = s.admit(4, None);
+        assert_eq!(dropped, vec![1]);
+        assert!(!s.contains(1));
+        assert_eq!(s.stats.drops, 1);
+    }
+
+    #[test]
+    fn readmission_promotes_cold_blocks() {
+        let mut s = BlockStore::new(B, B, 4 * B);
+        s.admit(1, None);
+        s.admit(2, None); // demotes 1
+        assert_eq!(s.tier(1), Some(Tier::Cold));
+        s.admit(1, None); // promote back, demoting 2
+        assert_eq!(s.tier(1), Some(Tier::Hot));
+        assert_eq!(s.tier(2), Some(Tier::Cold));
+        assert!(s.stats.promotions >= 1);
+    }
+
+    #[test]
+    fn payload_is_kept_and_refreshed() {
+        let mut s = BlockStore::new(B, 2 * B, 2 * B);
+        s.admit(1, Some(vec![7u8; 4]));
+        assert_eq!(s.payload(1), Some(&[7u8, 7, 7, 7][..]));
+        // Refresh without payload keeps the old bytes.
+        s.admit(1, None);
+        assert_eq!(s.payload(1), Some(&[7u8, 7, 7, 7][..]));
+        assert_eq!(s.payload(99), None);
+    }
+
+    #[test]
+    fn pin_unknown_block_errors() {
+        let mut s = BlockStore::new(B, B, B);
+        assert!(s.pin(42).is_err());
+        s.unpin(42); // stale release is a no-op
+    }
+}

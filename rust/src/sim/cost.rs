@@ -102,13 +102,30 @@ impl CostModel {
     /// Total KVR dot products for a partition (Σ c_i · prefix_i) — used by
     /// tests against the paper's Fig. 5 example.
     pub fn kvr_dots(partition: &[usize]) -> f64 {
-        let mut prefix = 0usize;
+        Self::kvr_dots_offset(partition, 0)
+    }
+
+    /// KVR dot products when the partition covers only the suffix after
+    /// `start` reused KV rows: each chunk still attends over the reused
+    /// prefix (`prefix_i = start + Σ_{j≤i} c_j`), but no process spends
+    /// compute producing those rows.
+    pub fn kvr_dots_offset(partition: &[usize], start: usize) -> f64 {
+        let mut prefix = start;
         let mut dots = 0f64;
         for &c in partition {
             prefix += c;
             dots += c as f64 * prefix as f64;
         }
         dots
+    }
+
+    /// One extension-phase (decode) step over `past` cached tokens —
+    /// memory-bound: the step streams the weights plus the KV cache from
+    /// HBM (the regime the paper's Sec. 2 extension phase sits in).
+    pub fn decode_step_time(&self, past: usize) -> f64 {
+        let bytes = self.model.weight_bytes() as f64
+            + past as f64 * self.model.kv_bytes_per_token() as f64;
+        bytes / self.hw.mem_bw + self.hw.base_overhead
     }
 
     /// Per-process TSP dot products for context `c` over `p` processes.
@@ -139,6 +156,32 @@ mod tests {
             18.0
         );
         assert_eq!(CostModel::tsp_dots_per_proc(9, 3), 27.0);
+    }
+
+    #[test]
+    fn offset_dots_count_reused_prefix_in_attention_only() {
+        // Fig. 5 partition (4,3,2) after 5 reused rows: rectangles are
+        // c_i × (5 + prefix_i) — 4·9 + 3·12 + 2·14 = 100.
+        assert_eq!(CostModel::kvr_dots_offset(&[4, 3, 2], 5), 100.0);
+        // Zero offset degenerates to the classic count.
+        assert_eq!(
+            CostModel::kvr_dots_offset(&[4, 3, 2], 0),
+            CostModel::kvr_dots(&[4, 3, 2])
+        );
+        // Reuse strictly reduces total dots vs recomputing the prefix.
+        assert!(CostModel::kvr_dots_offset(&[3, 2], 4)
+            < CostModel::kvr_dots(&[4, 3, 2]));
+    }
+
+    #[test]
+    fn decode_step_time_grows_with_past() {
+        let m = cm();
+        let t0 = m.decode_step_time(0);
+        let t16k = m.decode_step_time(16384);
+        assert!(t0 > 0.0);
+        assert!(t16k > t0);
+        // Memory-bound sanity: llama7b weights at 2 TB/s ≈ 6.7 ms + base.
+        assert!((0.001..0.2).contains(&t16k), "{t16k}");
     }
 
     #[test]

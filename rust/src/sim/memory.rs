@@ -43,7 +43,17 @@ pub fn tsp_peak_bytes(model: &ModelConfig, c: usize, p: usize) -> f64 {
 
 /// Peak memory estimate of KVR process `i` under `partition`.
 pub fn kvr_peak_bytes(model: &ModelConfig, partition: &[usize], i: usize) -> f64 {
-    let prefix: usize = partition[..=i].iter().sum();
+    kvr_peak_bytes_offset(model, partition, 0, i)
+}
+
+/// Peak memory of KVR process `i` when the partition covers the suffix
+/// after `start` reused KV rows: the reused rows are resident on every
+/// process up to its rank (they ride the chain like computed rows), so
+/// both the attention slab and the cache count them.
+pub fn kvr_peak_bytes_offset(
+    model: &ModelConfig, partition: &[usize], start: usize, i: usize,
+) -> f64 {
+    let prefix: usize = start + partition[..=i].iter().sum::<usize>();
     let ci = partition[i] as f64;
     let slab = ci * prefix as f64 * model.heads as f64 * SLAB_BYTES_PER_ENTRY;
     let cache = prefix as f64 * model.kv_bytes_per_token() as f64;
@@ -52,8 +62,15 @@ pub fn kvr_peak_bytes(model: &ModelConfig, partition: &[usize], i: usize) -> f64
 
 /// Max over KVR processes.
 pub fn kvr_peak_bytes_max(model: &ModelConfig, partition: &[usize]) -> f64 {
+    kvr_peak_bytes_max_offset(model, partition, 0)
+}
+
+/// Max over KVR processes with a reused-prefix offset.
+pub fn kvr_peak_bytes_max_offset(
+    model: &ModelConfig, partition: &[usize], start: usize,
+) -> f64 {
     (0..partition.len())
-        .map(|i| kvr_peak_bytes(model, partition, i))
+        .map(|i| kvr_peak_bytes_offset(model, partition, start, i))
         .fold(0.0, f64::max)
 }
 
@@ -106,6 +123,21 @@ mod tests {
         let p1 = kvr_peak_bytes(&m, &part, 1);
         let p3 = kvr_peak_bytes(&m, &part, 3);
         assert!(p3 > p1);
+    }
+
+    #[test]
+    fn reused_prefix_counts_toward_peak_memory() {
+        // A suffix partition with 8k reused rows must cost the same as the
+        // tail of the full-compute partition — reuse saves FLOPs, not
+        // resident KV bytes.
+        let m = model_by_name("llama7b").unwrap();
+        let full = kvr_peak_bytes(&m, &[8192, 4096, 4096], 2);
+        let suffix = kvr_peak_bytes_offset(&m, &[4096, 4096], 8192, 1);
+        assert!((full - suffix).abs() < 1.0, "{full} vs {suffix}");
+        assert!(
+            kvr_peak_bytes_max_offset(&m, &[4096, 4096], 8192)
+                > kvr_peak_bytes_max(&m, &[4096, 4096])
+        );
     }
 
     #[test]

@@ -104,13 +104,25 @@ pub fn tsp_timeline(cm: &CostModel, net: &mut Network, c: usize) -> Result<Prefi
 pub fn kvr_timeline(
     cm: &CostModel, net: &mut Network, partition: &[usize],
 ) -> Result<PrefillSim> {
+    kvr_timeline_offset(cm, net, partition, 0)
+}
+
+/// [`kvr_timeline`] over the *uncached suffix* of a prompt: `start` KV
+/// rows are reused from a prefix cache (`crate::prefixcache`) and assumed
+/// resident on process 0 before the run (the planner accounts their load
+/// time separately). The reused rows still ride the chain — process i
+/// forwards `start + Σ_{j≤i} c_j` rows — and every attention rectangle
+/// spans them, so FLOP, traffic, and memory accounting stay causal.
+pub fn kvr_timeline_offset(
+    cm: &CostModel, net: &mut Network, partition: &[usize], start: usize,
+) -> Result<PrefillSim> {
     let p = net.procs();
     assert_eq!(partition.len(), p, "partition arity != process count");
     net.reset_stats();
     let kv_row_bytes = cm.model.kv_bytes_per_token_layer() as f64;
     let prefix: Vec<f64> = partition
         .iter()
-        .scan(0f64, |acc, &c| {
+        .scan(start as f64, |acc, &c| {
             *acc += c as f64;
             Some(*acc)
         })
@@ -146,7 +158,7 @@ pub fn kvr_timeline(
         }
     }
     let ttft = ready[p - 1] + cm.lm_head_time() + cm.hw.base_overhead;
-    let peak = memory::kvr_peak_bytes_max(&cm.model, partition);
+    let peak = memory::kvr_peak_bytes_max_offset(&cm.model, partition, start);
     Ok(PrefillSim {
         ttft,
         trace,
@@ -277,6 +289,72 @@ mod tests {
                 for (l, lt) in proc_trace.iter().enumerate() {
                     assert!(lt.kv_ready >= sim.trace[i - 1][l].kv_ready);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_offset_timeline_matches_classic_kvr() {
+        let cm = cm("a100-10gbps");
+        let part = Partition::even(12288, 4).into_sizes();
+        let mut n1 = quiet_network(&cm, 4);
+        let mut n2 = quiet_network(&cm, 4);
+        let a = kvr_timeline(&cm, &mut n1, &part).unwrap();
+        let b = kvr_timeline_offset(&cm, &mut n2, &part, 0).unwrap();
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.net_bytes, b.net_bytes);
+        assert_eq!(a.peak_mem_bytes, b.peak_mem_bytes);
+    }
+
+    #[test]
+    fn suffix_prefill_is_faster_but_carries_prefix_traffic() {
+        // Reusing the first half of a 16k prompt must cut TTFT well below
+        // the full-compute run, while the chain still forwards the reused
+        // rows (traffic exceeds the offset-free suffix run's).
+        let cm = cm("a100-300gbps");
+        let p = 4;
+        let c = 16384;
+        let full = Partition::even(c, p).into_sizes();
+        let suffix = Partition::even(c / 2, p).into_sizes();
+
+        let mut n1 = quiet_network(&cm, p);
+        let full_sim = kvr_timeline(&cm, &mut n1, &full).unwrap();
+        let mut n2 = quiet_network(&cm, p);
+        let reuse_sim =
+            kvr_timeline_offset(&cm, &mut n2, &suffix, c / 2).unwrap();
+        let mut n3 = quiet_network(&cm, p);
+        let short_sim = kvr_timeline(&cm, &mut n3, &suffix).unwrap();
+
+        assert!(reuse_sim.ttft < full_sim.ttft,
+                "{} !< {}", reuse_sim.ttft, full_sim.ttft);
+        assert!(reuse_sim.net_kv_entries > short_sim.net_kv_entries);
+        // Per layer, the chain forwards start + prefix_i rows for i < p-1.
+        let expect: f64 = (0..p - 1)
+            .map(|i| (c / 2 + (i + 1) * c / 2 / p) as f64)
+            .sum::<f64>()
+            * cm.model.layers as f64;
+        assert!((reuse_sim.net_kv_entries - expect).abs() < 1e-6,
+                "{} vs {expect}", reuse_sim.net_kv_entries);
+        // Memory accounting covers the reused rows (same causal context).
+        assert!((reuse_sim.peak_mem_bytes - full_sim.peak_mem_bytes).abs()
+                    / full_sim.peak_mem_bytes
+                < 0.35);
+    }
+
+    #[test]
+    fn offset_timeline_stays_causal() {
+        let cm = cm("a100-10gbps");
+        let mut net = quiet_network(&cm, 3);
+        let sim =
+            kvr_timeline_offset(&cm, &mut net, &[2048, 1024, 1024], 4096)
+                .unwrap();
+        for proc_trace in &sim.trace {
+            let mut prev_done = 0.0;
+            for lt in proc_trace {
+                assert!(lt.proj_start >= prev_done - 1e-12);
+                assert!(lt.kv_ready >= lt.proj_start);
+                assert!(lt.done > lt.kv_ready);
+                prev_done = lt.done;
             }
         }
     }

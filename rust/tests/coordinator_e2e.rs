@@ -89,7 +89,7 @@ fn scheduler_serves_batch_with_decode() {
         mk(1, "pack my box with five dozen jugs"),
         mk(2, "lorem ipsum dolor sit amet"),
     ];
-    let sched = Scheduler::new(SchedulerConfig {
+    let mut sched = Scheduler::new(SchedulerConfig {
         max_active: 2,
         ..Default::default()
     });
@@ -104,7 +104,7 @@ fn scheduler_serves_batch_with_decode() {
     assert!(metrics.throughput() > 0.0);
 
     // Determinism: the same prompt generates the same tokens.
-    let again = Scheduler::new(SchedulerConfig {
+    let mut again = Scheduler::new(SchedulerConfig {
         max_active: 1,
         ..Default::default()
     });
@@ -115,6 +115,92 @@ fn scheduler_serves_batch_with_decode() {
         )
         .unwrap();
     assert_eq!(responses2[0].tokens, responses[0].tokens);
+}
+
+#[test]
+fn reused_prefix_prefill_matches_full_prefill() {
+    if !have_artifacts() {
+        return;
+    }
+    let tok = ByteTokenizer;
+    let prompt = tok.pad_to_multiple(
+        &tok.encode("Large language model inference has two phases: the \
+                     prompt phase that produces the first token, and the \
+                     extension phase that produces every subsequent token"),
+        32,
+    );
+    let mut cluster = Cluster::new(&art_dir(), 2).unwrap();
+
+    // Full prefill, shipping the cache wire back (prefix-cache admission
+    // path).
+    let full = cluster
+        .parallel_prefill_reused(20, &prompt, None, &PartitionPolicy::Even, true)
+        .unwrap();
+    let wire = full.wire.clone().expect("wire requested");
+    cluster.release(full.owner, 20).unwrap();
+
+    // Replay with the first half reused from that wire: the suffix-only
+    // chain must produce identical first-token logits.
+    let half = prompt.len() / 2 / 32 * 32;
+    let m = cluster.manifest.model.clone();
+    let head = kvr::runtime::KvCache::from_wire(
+        m.layers, m.kv_heads, m.head_dim, prompt.len(), &wire,
+    )
+    .unwrap();
+    let reused = kvr::coordinator::ReusedPrefix {
+        tokens: half,
+        wire: head.block_wire(0, half),
+    };
+    let replay = cluster
+        .parallel_prefill_reused(
+            21, &prompt, Some(reused), &PartitionPolicy::Even, false,
+        )
+        .unwrap();
+    assert_eq!(replay.reused_tokens, half);
+    assert_eq!(replay.partition.iter().sum::<usize>(), prompt.len() - half);
+    for (i, (a, b)) in replay.logits.iter().zip(&full.logits).enumerate() {
+        assert!((a - b).abs() < 2e-3, "logit[{i}]: reused {a} vs full {b}");
+    }
+    cluster.release(replay.owner, 21).unwrap();
+}
+
+#[test]
+fn decode_and_release_error_paths() {
+    if !have_artifacts() {
+        return;
+    }
+    let tok = ByteTokenizer;
+    let prompt = tok.pad_to_multiple(&tok.encode("error path probe"), 32);
+    let mut cluster = Cluster::new(&art_dir(), 2).unwrap();
+    let pre = cluster
+        .parallel_prefill(30, &prompt, &PartitionPolicy::Even)
+        .unwrap();
+
+    // Unknown request id.
+    let err = cluster.decode(pre.owner, 999, 1).unwrap_err().to_string();
+    assert!(err.contains("no cache for request 999"), "{err}");
+    // Wrong owner: worker 0 never owns the cache in a 2-worker chain.
+    let wrong = 1 - pre.owner.min(1);
+    let err = cluster.decode(wrong, 30, 1).unwrap_err().to_string();
+    assert!(err.contains("no cache for request 30"), "{err}");
+    // Out-of-range owner is rejected before any worker send.
+    let err = cluster.decode(7, 30, 1).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+    assert!(cluster.release(7, 30).is_err());
+    // Release to the wrong owner fails and leaves the cache intact.
+    let err = cluster.release(wrong, 30).unwrap_err().to_string();
+    assert!(err.contains("no cache for request 30"), "{err}");
+    assert!(cluster.decode(pre.owner, 30, 1).is_ok());
+
+    // Proper release succeeds exactly once; double release is an error.
+    cluster.release(pre.owner, 30).unwrap();
+    let err = cluster.release(pre.owner, 30).unwrap_err().to_string();
+    assert!(err.contains("no cache for request 30"), "{err}");
+    // The cluster stays usable after the error paths.
+    let again = cluster
+        .parallel_prefill(31, &prompt, &PartitionPolicy::Even)
+        .unwrap();
+    cluster.release(again.owner, 31).unwrap();
 }
 
 #[test]

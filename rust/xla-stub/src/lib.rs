@@ -1,0 +1,147 @@
+//! Offline stub of the `xla` PJRT bindings (API-compatible with the
+//! subset `kvr::runtime` uses — see the root `Cargo.toml` for how to
+//! swap in the real crate).
+//!
+//! Everything compiles and links; the only runtime entry point into
+//! PJRT, [`PjRtClient::cpu`], returns an error, so the real execution
+//! path degrades to a clean "PJRT unavailable" failure while the
+//! simulated paths (which never touch this crate) run everywhere.
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Error type matching the real bindings' surface.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT unavailable: kvr was built against the in-repo xla stub \
+         (rust/xla-stub). Swap the `xla` path dependency in Cargo.toml \
+         for the real xla bindings to enable the real execution path."
+            .into(),
+    ))
+}
+
+/// Host literal (stub: shape metadata only).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    elements: usize,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { elements: data.len() }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.elements
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (stub: never constructible at run time).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _not_send: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: `cpu()` always reports PJRT unavailable). `Rc`
+/// keeps it `!Send`, matching the real bindings' one-client-per-thread
+/// constraint that the worker topology relies on.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self, _data: &[T], _dims: &[usize], _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Clone, Default)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug, Clone, Default)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_helpers_work_offline() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0]).reshape(&[3]).unwrap();
+        assert_eq!(lit.element_count(), 3);
+    }
+}
