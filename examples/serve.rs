@@ -8,9 +8,11 @@
 //!   `make artifacts` first;
 //! * `--sim`: the modeled A100 cluster (`SimCluster`) — runs anywhere.
 //!
-//! `--prefix-cache` turns on cross-request prefix-KV reuse. In sim mode
-//! the same workload is served cache-off then cache-on so the TTFT win
-//! and hit rate print side by side:
+//! `--prefix-cache` turns on cross-request prefix-KV reuse;
+//! `--decode-batch` caps how many requests one batched decode step
+//! advances (1 = per-request decode). In sim mode the same workload is
+//! served cache-off then cache-on so the TTFT win and hit rate print
+//! side by side:
 //!
 //! ```bash
 //! cargo run --release --example serve -- --sim --prefix-cache \
@@ -70,6 +72,7 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
     let rate = args.f64_or("rate", 1.5)?;
     let max_new = args.usize_or("max-new", 8)?;
     let seed = args.u64_or("seed", 42)?;
+    let decode_batch = args.usize_or("decode-batch", 8)?.max(1);
     let with_cache = args.flag("prefix-cache");
 
     let mut rng = Rng::new(seed);
@@ -77,17 +80,19 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
     println!(
         "simulated cluster: {} on {} with {procs} processes\n\
          workload: {n} requests x {prompt_len} prompt tokens, {:.0}% shared \
-         prefix, Poisson rate {rate}/s\n",
+         prefix, Poisson rate {rate}/s, decode batch {decode_batch}\n",
         model.name, hw.name, frac * 100.0
     );
 
-    let (_, base) =
-        SimCluster::new(model.clone(), hw.clone(), procs).serve(&requests)?;
+    let (_, base) = SimCluster::new(model.clone(), hw.clone(), procs)
+        .with_decode_batch(decode_batch)
+        .serve(&requests)?;
     println!("== prefix cache OFF ==\n{}", base.report());
 
     if with_cache {
         let cfg = cache_config(args, 512)?;
         let mut cluster = SimCluster::new(model, hw, procs)
+            .with_decode_batch(decode_batch)
             .with_prefix_cache(cfg.clone());
         let (_, cached) = cluster.serve(&requests)?;
         println!(
@@ -168,6 +173,7 @@ fn serve_real(args: &Args) -> kvr::Result<()> {
     let mut sched = Scheduler::new(SchedulerConfig {
         policy: PartitionPolicy::Even,
         max_active: 3,
+        decode_batch: args.usize_or("decode-batch", 8)?.max(1),
         ..Default::default()
     });
     if args.flag("prefix-cache") {

@@ -43,7 +43,9 @@ fn mean(xs: &[f64]) -> f64 {
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = kvr::util::cli::Args::parse(&raw, &[]).unwrap();
+    // `cargo bench` appends a bare `--bench` to harness-false binaries;
+    // accept it as a flag so the documented invocation doesn't panic.
+    let args = kvr::util::cli::Args::parse(&raw, &["bench"]).unwrap();
     let n = args.usize_or("requests", 16).unwrap();
     let prompt_len = args.usize_or("prompt-len", 8192).unwrap();
     let procs = args.usize_or("procs", 4).unwrap();

@@ -72,6 +72,14 @@ enum WorkerCmd {
         req_id: u64,
         token: i32,
     },
+    /// One decode step for several requests owned by this worker. The
+    /// worker advances them back-to-back in a single command turn — the
+    /// real-path stand-in for a batched decode kernel sharing one weight
+    /// read (the channel round-trip is paid once per batch, not per
+    /// request).
+    DecodeBatch {
+        items: Vec<(u64, i32)>,
+    },
     Release {
         req_id: u64,
     },
@@ -99,6 +107,11 @@ enum WorkerReply {
         req_id: u64,
         logits: Vec<f32>,
     },
+    /// Per-request outcomes of one [`WorkerCmd::DecodeBatch`], in command
+    /// order (one failure does not poison its batchmates).
+    DecodeBatchDone {
+        results: Vec<(u64, std::result::Result<Vec<f32>, String>)>,
+    },
     Released {
         req_id: u64,
     },
@@ -117,6 +130,24 @@ struct WorkerCtx {
     prev_rx: Option<Receiver<CacheMsg>>,
     next_tx: Option<Sender<CacheMsg>>,
     pool_tokens: usize,
+}
+
+/// Advance one request a single decode step on this worker: run the
+/// engine, append the new KV row, grow the slab when the cache outruns it.
+fn decode_one(
+    engine: &Engine, pool: &mut KvPool,
+    active: &mut HashMap<u64, (KvCache, u64)>, req_id: u64, token: i32,
+) -> Result<Vec<f32>> {
+    let (cache, slab) = active.get_mut(&req_id).ok_or_else(|| {
+        Error::Coordinator(format!("no cache for request {req_id}"))
+    })?;
+    let out = engine.decode_step(token, cache)?;
+    cache.append_chunk(1, &out.k_chunk, &out.v_chunk)?;
+    if cache.tokens > pool.get(*slab).map(|s| s.len).unwrap_or(0) {
+        let (new_slab, _moved) = pool.grow(*slab, cache.tokens + 32)?;
+        *slab = new_slab.id;
+    }
+    Ok(out.logits)
 }
 
 fn worker_main(ctx: WorkerCtx) {
@@ -164,18 +195,7 @@ fn worker_main(ctx: WorkerCtx) {
                 };
             }
             WorkerCmd::Decode { req_id, token } => {
-                let reply = (|| -> Result<Vec<f32>> {
-                    let (cache, slab) = active.get_mut(&req_id).ok_or_else(|| {
-                        Error::Coordinator(format!("no cache for request {req_id}"))
-                    })?;
-                    let out = engine.decode_step(token, cache)?;
-                    cache.append_chunk(1, &out.k_chunk, &out.v_chunk)?;
-                    if cache.tokens > pool.get(*slab).map(|s| s.len).unwrap_or(0) {
-                        let (new_slab, _moved) = pool.grow(*slab, cache.tokens + 32)?;
-                        *slab = new_slab.id;
-                    }
-                    Ok(out.logits)
-                })();
+                let reply = decode_one(&engine, &mut pool, &mut active, req_id, token);
                 let _ = match reply {
                     Ok(logits) => ctx
                         .reply_tx
@@ -185,6 +205,18 @@ fn worker_main(ctx: WorkerCtx) {
                         msg: e.to_string(),
                     }),
                 };
+            }
+            WorkerCmd::DecodeBatch { items } => {
+                let results = items
+                    .into_iter()
+                    .map(|(req_id, token)| {
+                        let r =
+                            decode_one(&engine, &mut pool, &mut active, req_id, token)
+                                .map_err(|e| e.to_string());
+                        (req_id, r)
+                    })
+                    .collect();
+                let _ = ctx.reply_tx.send(WorkerReply::DecodeBatchDone { results });
             }
             WorkerCmd::Prefill { req_id, tokens, first, last, seed, want_wire } => {
                 let t0 = Instant::now();
@@ -542,6 +574,92 @@ impl Cluster {
                 other => self.pending.push(other),
             }
         }
+    }
+
+    /// One decode step for many requests at once. `steps` is
+    /// `(owner, req_id, last_token)` per request. Steps are grouped by
+    /// owner worker; each group is dispatched as a single
+    /// [`WorkerCmd::DecodeBatch`] and the groups advance concurrently
+    /// across worker threads. Requests whose owners differ thus fall
+    /// back to per-request decode — each sits alone in its group — while
+    /// co-owned requests share one command turn (the real-path stand-in
+    /// for a batched kernel's shared weight read). Returns logits
+    /// aligned with `steps`; the first per-request failure is propagated
+    /// after every group's reply has drained.
+    pub fn decode_batch(
+        &mut self, steps: &[(usize, u64, i32)],
+    ) -> Result<Vec<Vec<f32>>> {
+        if steps.is_empty() {
+            return Ok(Vec::new());
+        }
+        for &(owner, _, _) in steps {
+            self.check_owner(owner)?;
+        }
+        // Group by owner, preserving step order within each group.
+        let mut groups: Vec<(usize, Vec<(u64, i32)>)> = Vec::new();
+        for &(owner, req_id, token) in steps {
+            match groups.iter_mut().find(|(o, _)| *o == owner) {
+                Some((_, items)) => items.push((req_id, token)),
+                None => groups.push((owner, vec![(req_id, token)])),
+            }
+        }
+        // Dispatch; on a dead worker, stop sending but remember how many
+        // groups are in flight — their replies must still be drained.
+        let mut sent = 0usize;
+        let mut send_err: Option<Error> = None;
+        for (owner, items) in groups {
+            match self.cmd_txs[owner].send(WorkerCmd::DecodeBatch { items }) {
+                Ok(()) => sent += 1,
+                Err(_) => {
+                    send_err =
+                        Some(Error::Coordinator(format!("worker {owner} gone")));
+                    break;
+                }
+            }
+        }
+        // Drain every dispatched group's reply before propagating any
+        // failure so the reply channel holds no orphans for the next call.
+        let mut by_req: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut first_err: Option<String> = None;
+        let mut done = 0usize;
+        while done < sent {
+            match self.recv_reply()? {
+                WorkerReply::DecodeBatchDone { results } => {
+                    for (req_id, r) in results {
+                        match r {
+                            Ok(logits) => {
+                                by_req.insert(req_id, logits);
+                            }
+                            Err(msg) => {
+                                if first_err.is_none() {
+                                    first_err = Some(format!(
+                                        "decode {req_id} failed: {msg}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    done += 1;
+                }
+                other => self.pending.push(other),
+            }
+        }
+        if let Some(e) = send_err {
+            return Err(e);
+        }
+        if let Some(msg) = first_err {
+            return Err(Error::Coordinator(msg));
+        }
+        steps
+            .iter()
+            .map(|&(_, req_id, _)| {
+                by_req.remove(&req_id).ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "no decode reply for request {req_id}"
+                    ))
+                })
+            })
+            .collect()
     }
 
     /// Free a request's cache. Releasing an unknown request (double

@@ -25,6 +25,16 @@ pub struct ServeMetrics {
     pub loaded_blocks: usize,
     /// Cached blocks the hybrid planner chose to recompute.
     pub recomputed_blocks: usize,
+    /// Decode step events executed (one event may advance many requests).
+    pub decode_steps: usize,
+    /// Σ batch size over decode steps (mean occupancy = sum / steps).
+    pub decode_batch_sum: usize,
+    /// Largest decode batch observed.
+    pub max_decode_batch: usize,
+    /// Decode steps that advanced exactly one request.
+    pub solo_steps: usize,
+    /// Decode steps that advanced two or more requests together.
+    pub batched_steps: usize,
 }
 
 impl ServeMetrics {
@@ -47,6 +57,29 @@ impl ServeMetrics {
         let loaded = plan.loaded_blocks().count();
         self.loaded_blocks += loaded;
         self.recomputed_blocks += plan.blocks.len() - loaded;
+    }
+
+    /// Record one batched decode step that advanced `batch` requests.
+    pub fn record_decode_step(&mut self, batch: usize) {
+        if batch == 0 {
+            return;
+        }
+        self.decode_steps += 1;
+        self.decode_batch_sum += batch;
+        self.max_decode_batch = self.max_decode_batch.max(batch);
+        if batch == 1 {
+            self.solo_steps += 1;
+        } else {
+            self.batched_steps += 1;
+        }
+    }
+
+    /// Mean decode batch occupancy (0 when no decode step ran).
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decode_batch_sum as f64 / self.decode_steps as f64
     }
 
     /// Fraction of prefix-cache lookups that found a cached prefix.
@@ -99,6 +132,17 @@ impl ServeMetrics {
             fmt_time(queue.mean), fmt_time(queue.p50), fmt_time(queue.p95),
             fmt_time(queue.max)
         ));
+        if self.decode_steps > 0 {
+            out.push_str(&format!(
+                "decode  {} steps   mean batch {:.2}   max batch {}   \
+                 ({} solo / {} batched)\n",
+                self.decode_steps,
+                self.mean_decode_batch(),
+                self.max_decode_batch,
+                self.solo_steps,
+                self.batched_steps,
+            ));
+        }
         if self.prefix_lookups > 0 {
             out.push_str(&format!(
                 "prefix-cache  hit-rate {:.0}% ({}/{})   reused {} tokens   \
@@ -169,6 +213,34 @@ mod tests {
         let report = m.report();
         assert!(report.contains("prefix-cache  hit-rate 50%"), "{report}");
         assert!(report.contains("reused 256 tokens"), "{report}");
+    }
+
+    #[test]
+    fn decode_occupancy_counters_aggregate_and_report() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1, 0.1], 0.8, 0.0);
+        m.wall_s = 1.0;
+        m.record_decode_step(1);
+        m.record_decode_step(4);
+        m.record_decode_step(3);
+        m.record_decode_step(0); // ignored — nothing advanced
+        assert_eq!(m.decode_steps, 3);
+        assert_eq!(m.solo_steps, 1);
+        assert_eq!(m.batched_steps, 2);
+        assert_eq!(m.max_decode_batch, 4);
+        assert!((m.mean_decode_batch() - 8.0 / 3.0).abs() < 1e-12);
+        let report = m.report();
+        assert!(report.contains("mean batch 2.67"), "{report}");
+        assert!(report.contains("max batch 4"), "{report}");
+        assert!(report.contains("1 solo / 2 batched"), "{report}");
+    }
+
+    #[test]
+    fn report_omits_decode_line_without_steps() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[], 0.5, 0.0);
+        assert!(!m.report().contains("mean batch"));
+        assert_eq!(m.mean_decode_batch(), 0.0);
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! the leader splits the prompt per the partition policy, workers compute
 //! their chunks and hand the accumulated KV-cache to their successor over
 //! point-to-point channels; the last worker emits the first token and owns
-//! the cache for the extension phase. Decode steps are continuously
-//! batched round-robin across active requests.
+//! the cache for the extension phase. Decode advances the whole active set
+//! in owner-grouped batches ([`Cluster::decode_batch`]): co-owned requests
+//! share one worker command turn, distinct owners step concurrently.
 //!
 //! [`SimCluster`] mirrors the serving API over the modeled fabric
 //! (`crate::sim`) so serving workloads — including the prefix cache's

@@ -1,10 +1,14 @@
 //! Request scheduler: FIFO admission + continuously batched decode.
 //!
 //! Prefill occupies the whole worker chain (the paper's Fig. 3b dataflow),
-//! so prefills are serialized; decode steps of all active requests are
-//! interleaved round-robin between admissions (continuous batching at
-//! step granularity). Admission is bounded by `max_active` — the KV pool
-//! backpressure on the cache-owning worker.
+//! so prefills are serialized; decode steps of all active requests run as
+//! *owner-grouped batches* between admissions (continuous batching at
+//! step granularity): each round the scheduler gathers every live
+//! request's next step and dispatches them through
+//! [`Cluster::decode_batch`], which advances co-owned requests in one
+//! worker command turn and distinct owners concurrently. `decode_batch`
+//! caps the per-round batch; admission is bounded by `max_active` — the
+//! KV pool backpressure on the cache-owning worker.
 //!
 //! With a prefix cache attached ([`Scheduler::with_prefix_cache`]),
 //! admission first consults the cache: the hybrid planner picks a
@@ -15,6 +19,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::config::ModelConfig;
 use crate::coordinator::cluster::{Cluster, PartitionPolicy, ReusedPrefix};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::request::{GenRequest, GenResponse};
@@ -31,6 +36,9 @@ pub struct SchedulerConfig {
     pub policy: PartitionPolicy,
     /// Max requests in the decode phase simultaneously.
     pub max_active: usize,
+    /// Max requests advanced per batched decode round (1 = per-request
+    /// decode; larger rounds amortize the per-step dispatch).
+    pub decode_batch: usize,
     /// Stop decoding a request when it emits this token.
     pub eos_token: i32,
 }
@@ -40,6 +48,7 @@ impl Default for SchedulerConfig {
         Self {
             policy: PartitionPolicy::Even,
             max_active: 4,
+            decode_batch: 8,
             eos_token: ByteTokenizer::EOS,
         }
     }
@@ -86,17 +95,18 @@ impl Scheduler {
     /// reused prefix for one request. Returns `(reused, lease,
     /// want_wire)`; metrics record what will actually run (a declined
     /// plan is recorded as full recompute, not as the aspirational cut).
+    /// Takes the cluster shape as primitives (`workers`, `model`,
+    /// artifact granularity `g`) so the decline accounting is testable
+    /// without PJRT artifacts.
     fn plan_reuse(
-        &mut self, cluster: &Cluster, req: &GenRequest,
-        metrics: &mut ServeMetrics,
+        &mut self, workers: usize, m: &ModelConfig, g: usize,
+        req: &GenRequest, metrics: &mut ServeMetrics,
     ) -> Result<(Option<ReusedPrefix>, Option<crate::prefixcache::Lease>, bool)>
     {
         let Some((pc, cm)) = self.cache.as_mut() else {
             return Ok((None, None, false));
         };
-        let plan = pc.plan_prefill(cm, &req.tokens, cluster.workers())?;
-        let m = &cluster.manifest.model;
-        let g = cluster.manifest.granularity();
+        let plan = pc.plan_prefill(cm, &req.tokens, workers)?;
         let reused = pc
             .reused_cache(&plan, m.layers, m.kv_heads, m.head_dim)
             // Reuse must land on an AOT chunk boundary; otherwise fall
@@ -151,8 +161,13 @@ impl Scheduler {
                 let queue_wait =
                     (serve_start.elapsed().as_secs_f64() - req.arrival).max(0.0);
                 let started = Instant::now();
-                let (reused, lease, want_wire) =
-                    self.plan_reuse(cluster, &req, &mut metrics)?;
+                let (reused, lease, want_wire) = self.plan_reuse(
+                    cluster.workers(),
+                    &cluster.manifest.model,
+                    cluster.manifest.granularity(),
+                    &req,
+                    &mut metrics,
+                )?;
                 let pre = match cluster.parallel_prefill_reused(
                     req.id, &req.tokens, reused, &self.cfg.policy, want_wire,
                 ) {
@@ -196,36 +211,174 @@ impl Scheduler {
                 });
             }
 
-            // One decode step for every active request (round-robin).
+            // Retire finished requests, then advance every survivor one
+            // step in owner-grouped batches (continuous batching: the
+            // whole active set moves together between admissions).
             let mut i = 0;
             while i < active.len() {
-                let a = &mut active[i];
+                let a = &active[i];
                 let finished = a.produced.len() >= a.req.max_new_tokens
                     || *a.produced.last().unwrap() == self.cfg.eos_token;
-                if finished {
-                    let a = active.swap_remove(i);
-                    cluster.release(a.owner, a.req.id)?;
-                    let e2e = a.started.elapsed().as_secs_f64() + a.queue_wait;
-                    metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
-                    done.push(GenResponse {
-                        id: a.req.id,
-                        tokens: a.produced,
-                        ttft: a.ttft,
-                        tpot: a.tpot,
-                        e2e,
-                    });
+                if !finished {
+                    i += 1;
                     continue;
                 }
-                let last = *a.produced.last().unwrap();
-                let logits = cluster.decode(a.owner, a.req.id, last)?;
-                a.tpot.push(a.last_step.elapsed().as_secs_f64());
-                a.last_step = Instant::now();
-                a.produced.push(argmax(&logits) as i32);
-                i += 1;
+                let a = active.swap_remove(i);
+                cluster.release(a.owner, a.req.id)?;
+                let e2e = a.started.elapsed().as_secs_f64() + a.queue_wait;
+                metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
+                done.push(GenResponse {
+                    id: a.req.id,
+                    tokens: a.produced,
+                    ttft: a.ttft,
+                    tpot: a.tpot,
+                    e2e,
+                });
+            }
+            for chunk in active.chunks_mut(self.cfg.decode_batch.max(1)) {
+                let steps: Vec<(usize, u64, i32)> = chunk
+                    .iter()
+                    .map(|a| (a.owner, a.req.id, *a.produced.last().unwrap()))
+                    .collect();
+                let logits = cluster.decode_batch(&steps)?;
+                // Occupancy counts what actually batched: decode_batch
+                // groups by owner worker, so a chunk spanning k owners is
+                // k steps of their group sizes, not one step of chunk len.
+                let mut group_sizes: Vec<(usize, usize)> = Vec::new();
+                for &(owner, _, _) in &steps {
+                    match group_sizes.iter_mut().find(|(o, _)| *o == owner) {
+                        Some((_, n)) => *n += 1,
+                        None => group_sizes.push((owner, 1)),
+                    }
+                }
+                for &(_, n) in &group_sizes {
+                    metrics.record_decode_step(n);
+                }
+                for (a, lg) in chunk.iter_mut().zip(logits) {
+                    a.tpot.push(a.last_step.elapsed().as_secs_f64());
+                    a.last_step = Instant::now();
+                    a.produced.push(argmax(&lg) as i32);
+                }
             }
         }
         metrics.wall_s = serve_start.elapsed().as_secs_f64();
         done.sort_by_key(|r| r.id);
         Ok((done, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_by_name, model_by_name};
+    use crate::prefixcache::{PrefixCache, PrefixCacheConfig};
+
+    fn cache_parts() -> (PrefixCache, CostModel) {
+        let pc = PrefixCache::new(PrefixCacheConfig {
+            block_tokens: 32,
+            hot_capacity_tokens: 64 * 32,
+            cold_capacity_tokens: 256 * 32,
+            cold_load_bw: 300e9,
+            cold_load_latency: 1e-5,
+        });
+        let cm = CostModel::new(
+            model_by_name("tiny").unwrap(),
+            hardware_by_name("host-cpu").unwrap(),
+        );
+        (pc, cm)
+    }
+
+    fn req(tokens: Vec<i32>) -> GenRequest {
+        GenRequest { id: 0, tokens, max_new_tokens: 1, arrival: 0.0 }
+    }
+
+    #[test]
+    fn declined_plan_recorded_as_recompute_while_store_keeps_plan_view() {
+        // Admit a prompt WITHOUT payloads (modeled admission), then plan
+        // the same prompt again: the planner proposes reuse, but the real
+        // path cannot seed the chain (no wire bytes), so plan_reuse must
+        // decline — ServeMetrics records what actually ran (full
+        // recompute), while store-level CacheStats keeps the planner's
+        // aspirational view. The two must diverge by exactly the
+        // declined reuse.
+        let (pc, cm) = cache_parts();
+        let model = cm.model.clone();
+        let mut sched =
+            Scheduler::new(SchedulerConfig::default()).with_prefix_cache(pc, cm);
+        let tokens: Vec<i32> = (0..128).map(|i| i % 251).collect();
+        let mut metrics = ServeMetrics::default();
+
+        // First sight: cold miss, nothing to reuse.
+        let (reused, lease, want_wire) = sched
+            .plan_reuse(2, &model, 32, &req(tokens.clone()), &mut metrics)
+            .unwrap();
+        assert!(reused.is_none() && lease.is_none());
+        assert!(want_wire, "cold prompt should request the wire for admission");
+        // Payload-less admission (what the modeled path stores).
+        if let Some((pc, _)) = sched.cache.as_mut() {
+            pc.admit(&tokens);
+        }
+
+        // Second sight: the planner matches, the serving layer declines.
+        let (reused, lease, _) = sched
+            .plan_reuse(2, &model, 32, &req(tokens.clone()), &mut metrics)
+            .unwrap();
+        assert!(reused.is_none(), "no payloads -> nothing to seed");
+        assert!(lease.is_none(), "declined plans must not pin blocks");
+
+        let stats = sched.prefix_cache_stats().unwrap();
+        // Store saw the match and counted the planner's intended reuse...
+        assert_eq!(stats.lookups, 2);
+        assert_eq!(stats.hits, 1);
+        assert!(stats.reused_tokens > 0);
+        // ...but the run metrics recorded the decline: a hit happened,
+        // zero tokens were actually reused, every matched block recomputed.
+        assert_eq!(metrics.prefix_lookups, 2);
+        assert_eq!(metrics.prefix_hits, 1);
+        assert_eq!(metrics.reused_tokens, 0);
+        assert_eq!(metrics.loaded_blocks, 0);
+        assert_eq!(
+            metrics.recomputed_blocks, stats.loaded_hot_blocks
+                + stats.loaded_cold_blocks
+                + stats.recomputed_blocks,
+            "declined loads must be re-recorded as recomputes"
+        );
+    }
+
+    #[test]
+    fn off_granularity_reuse_declines_without_pinning() {
+        // Payload-backed blocks whose reuse cut is not a multiple of the
+        // artifact granularity can plan reuse but never apply it: the
+        // boundary filter in plan_reuse rejects the cut, no lease pins
+        // anything, and metrics record full recompute.
+        let (pc, cm) = cache_parts(); // 32-token blocks
+        let model = cm.model.clone();
+        let mut sched =
+            Scheduler::new(SchedulerConfig::default()).with_prefix_cache(pc, cm);
+        let tokens: Vec<i32> = (0..96).collect();
+        let mut metrics = ServeMetrics::default();
+        sched
+            .plan_reuse(2, &model, 48, &req(tokens.clone()), &mut metrics)
+            .unwrap();
+        // Real-path admission with actual KV wire payloads.
+        let mut kv = crate::runtime::KvCache::new(
+            model.layers, model.kv_heads, model.head_dim, 96,
+        );
+        let n = model.layers * model.kv_heads * 96 * model.head_dim;
+        let flat: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        kv.append_chunk(96, &flat, &flat).unwrap();
+        if let Some((pc, _)) = sched.cache.as_mut() {
+            pc.admit_from_cache(&tokens, &kv);
+        }
+        // Any reuse cut (a 32-token multiple) misses the 48-granularity
+        // chunk boundary, so the plan must be declined despite payloads.
+        let (reused, lease, _) = sched
+            .plan_reuse(2, &model, 48, &req(tokens), &mut metrics)
+            .unwrap();
+        assert!(reused.is_none());
+        assert!(lease.is_none());
+        assert_eq!(metrics.reused_tokens, 0);
+        let stats = sched.prefix_cache_stats().unwrap();
+        assert!(stats.reused_tokens > 0, "planner wanted reuse");
     }
 }

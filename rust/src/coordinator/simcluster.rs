@@ -3,19 +3,29 @@
 //! the prefix cache) run on the modeled 8×A100 fabric without PJRT
 //! artifacts.
 //!
-//! Virtual-time model, mirroring the real [`super::Scheduler`]:
+//! Virtual-time model (DESIGN.md §4), mirroring the real
+//! [`super::Scheduler`]: one event-driven timeline that prefills and
+//! decode steps contend for.
 //!
-//! * prefills are serialized — the runahead chain occupies every process
-//!   (Fig. 3b), so the virtual clock advances by each request's prefix
-//!   loads plus its suffix prefill TTFT;
-//! * decode steps run on the cache-owning process off the chain's
-//!   critical path (continuous batching), so they shape per-request
-//!   TPOT/E2E but not the clock;
+//! * prefills are serialized and exclusive — the runahead chain occupies
+//!   every process (Fig. 3b), so an admission advances the clock by the
+//!   request's prefix loads plus its suffix prefill TTFT;
+//! * decode runs as *batched step events* on the same clock: each event
+//!   advances up to `decode_batch` active requests one token, priced by
+//!   [`CostModel::decode_batch_step_time`] (weights streamed once per
+//!   step, per-request KV on top), and rotates the active set so every
+//!   request shares the batch fairly;
+//! * admission happens at step boundaries: an arrived request preempts
+//!   the next decode event (continuous batching at step granularity),
+//!   so queueing and decode-tail latency emerge from the event order and
+//!   `wall_s` covers the full timeline including the decode tail;
 //! * with a prefix cache, admission runs the hybrid planner, leases the
 //!   reused blocks across the prefill, and admits the finished prompt.
 //!
 //! Responses carry timing only (`tokens` are zero placeholders — the
 //! modeled cluster computes costs, not logits).
+
+use std::collections::VecDeque;
 
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::coordinator::metrics::ServeMetrics;
@@ -26,22 +36,53 @@ use crate::prefixcache::{CacheStats, PrefixCache, PrefixCacheConfig};
 use crate::sim::cost::CostModel;
 use crate::sim::{kvr_timeline_offset, quiet_network};
 
+/// Default cap on requests advanced per batched decode event.
+pub const DEFAULT_DECODE_BATCH: usize = 8;
+
+/// One request in the decode phase of the virtual timeline.
+struct ActiveSim {
+    id: u64,
+    arrival: f64,
+    prompt_tokens: usize,
+    max_new_tokens: usize,
+    /// Tokens generated so far (the prefill's first token included) —
+    /// all of them already sit in the KV cache when the next step runs.
+    produced: usize,
+    ttft: f64,
+    tpot: Vec<f64>,
+    queue_wait: f64,
+}
+
 /// Serving simulator over the modeled fabric.
 pub struct SimCluster {
     cm: CostModel,
     procs: usize,
     cache: Option<PrefixCache>,
+    decode_batch: usize,
 }
 
 impl SimCluster {
     pub fn new(model: ModelConfig, hw: HardwareConfig, procs: usize) -> Self {
         assert!(procs >= 1, "need at least one process");
-        Self { cm: CostModel::new(model, hw), procs, cache: None }
+        Self {
+            cm: CostModel::new(model, hw),
+            procs,
+            cache: None,
+            decode_batch: DEFAULT_DECODE_BATCH,
+        }
     }
 
     /// Attach a prefix cache with the given knobs.
     pub fn with_prefix_cache(mut self, cfg: PrefixCacheConfig) -> Self {
         self.cache = Some(PrefixCache::new(cfg));
+        self
+    }
+
+    /// Cap the number of requests advanced per batched decode event
+    /// (1 = per-request decode, the pre-batching model).
+    pub fn with_decode_batch(mut self, decode_batch: usize) -> Self {
+        assert!(decode_batch >= 1, "decode batch must be at least 1");
+        self.decode_batch = decode_batch;
         self
     }
 
@@ -53,6 +94,34 @@ impl SimCluster {
         self.cache.as_ref().map(|pc| pc.stats())
     }
 
+    /// Retire every active request that hit its token budget at virtual
+    /// time `clock`, recording metrics and building its response.
+    fn retire_finished(
+        active: &mut Vec<ActiveSim>, clock: f64, metrics: &mut ServeMetrics,
+        done: &mut Vec<GenResponse>,
+    ) {
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].produced < active[i].max_new_tokens.max(1) {
+                i += 1;
+                continue;
+            }
+            let a = active.swap_remove(i);
+            // E2E is wall time on the shared timeline: it includes decode
+            // stalls where an interleaved prefill held the chain, which
+            // per-step TPOT entries deliberately do not.
+            let e2e = clock - a.arrival;
+            metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
+            done.push(GenResponse {
+                id: a.id,
+                tokens: vec![0; a.produced],
+                ttft: a.ttft,
+                tpot: a.tpot,
+                e2e,
+            });
+        }
+    }
+
     /// Serve a batch of requests in virtual time; returns per-request
     /// responses (request order) and aggregate metrics.
     pub fn serve(
@@ -62,60 +131,89 @@ impl SimCluster {
         order.sort_by(|a, b| {
             a.arrival.partial_cmp(&b.arrival).expect("finite arrivals")
         });
+        let mut pending: VecDeque<&GenRequest> = order.into();
+        let mut active: Vec<ActiveSim> = Vec::new();
         let mut metrics = ServeMetrics::default();
-        let mut done = Vec::with_capacity(order.len());
+        let mut done = Vec::with_capacity(pending.len());
         let mut clock = 0.0f64;
-        for req in order {
-            assert!(!req.tokens.is_empty(), "empty prompt {}", req.id);
-            clock = clock.max(req.arrival);
-            let queue_wait = clock - req.arrival;
 
-            // Admission: consult the cache, lease the reused blocks.
-            let (load_s, reuse, lease) = match self.cache.as_mut() {
-                None => (0.0, 0, None),
-                Some(pc) => {
-                    let plan =
-                        pc.plan_prefill(&self.cm, &req.tokens, self.procs)?;
-                    let lease = pc.lease(&plan)?;
-                    metrics.record_prefix(&plan);
-                    (plan.load_s, plan.reuse_tokens, Some(lease))
+        while !pending.is_empty() || !active.is_empty() {
+            // Admission event: the head-of-line request takes the chain as
+            // soon as it has arrived (preempting further decode events); an
+            // otherwise-idle timeline jumps forward to the next arrival.
+            let admit = pending
+                .front()
+                .is_some_and(|req| req.arrival <= clock || active.is_empty());
+            if admit {
+                let req = pending.pop_front().unwrap();
+                assert!(!req.tokens.is_empty(), "empty prompt {}", req.id);
+                clock = clock.max(req.arrival);
+                let queue_wait = clock - req.arrival;
+
+                // Consult the cache, lease the reused blocks.
+                let (load_s, reuse, lease) = match self.cache.as_mut() {
+                    None => (0.0, 0, None),
+                    Some(pc) => {
+                        let plan =
+                            pc.plan_prefill(&self.cm, &req.tokens, self.procs)?;
+                        let lease = pc.lease(&plan)?;
+                        metrics.record_prefix(&plan);
+                        (plan.load_s, plan.reuse_tokens, Some(lease))
+                    }
+                };
+
+                // Suffix-only runahead prefill after the reused rows.
+                let suffix = req.tokens.len() - reuse;
+                let p = self.procs.min(suffix).max(1);
+                let part = Partition::even(suffix, p).with_start(reuse);
+                let mut net = quiet_network(&self.cm, p);
+                let sim_run =
+                    kvr_timeline_offset(&self.cm, &mut net, part.sizes(), reuse);
+                // Release before propagating any sim error — a leaked lease
+                // would pin its blocks for the cache's lifetime.
+                if let Some(pc) = self.cache.as_mut() {
+                    if let Some(lease) = lease {
+                        pc.release(lease);
+                    }
                 }
-            };
-
-            // Suffix-only runahead prefill after the reused rows.
-            let suffix = req.tokens.len() - reuse;
-            let p = self.procs.min(suffix).max(1);
-            let part = Partition::even(suffix, p).with_start(reuse);
-            let mut net = quiet_network(&self.cm, p);
-            let sim_run =
-                kvr_timeline_offset(&self.cm, &mut net, part.sizes(), reuse);
-            // Release before propagating any sim error — a leaked lease
-            // would pin its blocks for the cache's lifetime.
-            if let Some(pc) = self.cache.as_mut() {
-                if let Some(lease) = lease {
-                    pc.release(lease);
+                let ttft = load_s + sim_run?.ttft;
+                if let Some(pc) = self.cache.as_mut() {
+                    pc.admit(&req.tokens);
                 }
-            }
-            let sim = sim_run?;
-            let ttft = load_s + sim.ttft;
-            if let Some(pc) = self.cache.as_mut() {
-                pc.admit(&req.tokens);
+                clock += ttft;
+                active.push(ActiveSim {
+                    id: req.id,
+                    arrival: req.arrival,
+                    prompt_tokens: req.tokens.len(),
+                    max_new_tokens: req.max_new_tokens,
+                    produced: 1,
+                    ttft,
+                    tpot: Vec::new(),
+                    queue_wait,
+                });
+                Self::retire_finished(&mut active, clock, &mut metrics, &mut done);
+                continue;
             }
 
-            // Extension phase: memory-bound decode, off the chain.
-            let tpot: Vec<f64> = (0..req.max_new_tokens.saturating_sub(1))
-                .map(|i| self.cm.decode_step_time(req.tokens.len() + i))
+            // Decode event: one batched step over the first `decode_batch`
+            // active requests, then rotate so a deep active set shares the
+            // batch round-robin.
+            let b = active.len().min(self.decode_batch);
+            let pasts: Vec<usize> = active[..b]
+                .iter()
+                // Past covers the prompt AND every token generated so far
+                // (they were appended to the cache by earlier steps).
+                .map(|a| a.prompt_tokens + a.produced)
                 .collect();
-            let e2e = queue_wait + ttft + tpot.iter().sum::<f64>();
-            metrics.record_request(ttft, &tpot, e2e, queue_wait);
-            done.push(GenResponse {
-                id: req.id,
-                tokens: vec![0; req.max_new_tokens.max(1)],
-                ttft,
-                tpot,
-                e2e,
-            });
-            clock += ttft;
+            let dt = self.cm.decode_batch_step_time(&pasts);
+            clock += dt;
+            metrics.record_decode_step(b);
+            for a in &mut active[..b] {
+                a.tpot.push(dt);
+                a.produced += 1;
+            }
+            active.rotate_left(b);
+            Self::retire_finished(&mut active, clock, &mut metrics, &mut done);
         }
         metrics.wall_s = clock;
         done.sort_by_key(|r| r.id);
@@ -228,5 +326,105 @@ mod tests {
         // Second run recomputes only the mandated final block.
         assert_eq!(m.reused_tokens, 4096 - 512);
         assert!(resp[1].ttft < resp[0].ttft);
+    }
+
+    #[test]
+    fn batched_decode_beats_per_request_decode() {
+        // Acceptance: the same workload at batch >= 4 yields strictly
+        // higher modeled throughput than per-request decode, and both
+        // timelines cover their decode tails.
+        let mut reqs = shared_prefix_workload(8, 2048, 512);
+        for r in &mut reqs {
+            r.max_new_tokens = 32;
+        }
+        let (_, solo) = sim(4).with_decode_batch(1).serve(&reqs).unwrap();
+        let (_, batched) = sim(4).with_decode_batch(4).serve(&reqs).unwrap();
+        assert!(
+            batched.throughput() > solo.throughput(),
+            "batched {} !> solo {}",
+            batched.throughput(),
+            solo.throughput()
+        );
+        assert!(batched.wall_s < solo.wall_s);
+        // Occupancy counters reflect the modes.
+        assert_eq!(solo.max_decode_batch, 1);
+        assert_eq!(solo.batched_steps, 0);
+        assert!(batched.max_decode_batch >= 4);
+        assert!(batched.batched_steps > 0);
+        assert!(batched.mean_decode_batch() > 1.0);
+        // Same tokens served either way.
+        assert_eq!(solo.tokens_out, batched.tokens_out);
+    }
+
+    #[test]
+    fn wall_clock_covers_the_decode_tail() {
+        // Regression for the prefill-only wall_s bug: every request
+        // finishes within the reported wall clock (arrival + e2e <= wall),
+        // so modeled throughput can never exceed what the timeline
+        // produced.
+        for batch in [1usize, 4, 8] {
+            let mut reqs = shared_prefix_workload(6, 2048, 512);
+            for r in &mut reqs {
+                r.max_new_tokens = 24;
+            }
+            let (resp, m) = sim(4).with_decode_batch(batch).serve(&reqs).unwrap();
+            let max_e2e = m.e2es.iter().cloned().fold(0.0f64, f64::max);
+            assert!(
+                m.wall_s >= max_e2e - 1e-9,
+                "batch {batch}: wall {} < max e2e {max_e2e}",
+                m.wall_s
+            );
+            for (r, req) in resp.iter().zip(&reqs) {
+                assert!(req.arrival + r.e2e <= m.wall_s + 1e-9);
+                // E2E covers queueing, prefill, and every decode step.
+                let floor = r.ttft + r.tpot.iter().sum::<f64>();
+                assert!(r.e2e >= floor - 1e-9, "e2e {} < {floor}", r.e2e);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_past_includes_generated_tokens() {
+        // Off-by-one regression: a lone request's step i attends over
+        // prompt + (i+1) generated tokens, so each TPOT entry must price
+        // a strictly deeper past than the last — and the first entry must
+        // already include the prefill's token.
+        let cm = sim(1).cm.clone();
+        let reqs = vec![GenRequest {
+            id: 0,
+            tokens: (0..1024).collect(),
+            max_new_tokens: 5,
+            arrival: 0.0,
+        }];
+        let (resp, _) = sim(1).serve(&reqs).unwrap();
+        let tpot = &resp[0].tpot;
+        assert_eq!(tpot.len(), 4);
+        for (i, &dt) in tpot.iter().enumerate() {
+            // Step i runs over past = prompt + (i + 1) produced tokens.
+            let want = cm.decode_step_time(1024 + i + 1);
+            assert!((dt - want).abs() < 1e-15, "step {i}: {dt} vs {want}");
+        }
+    }
+
+    #[test]
+    fn deep_active_set_shares_the_batch_round_robin() {
+        // 12 actives with an 8-wide batch: rotation must advance everyone
+        // to completion with no starvation.
+        let reqs: Vec<GenRequest> = (0..12u64)
+            .map(|id| GenRequest {
+                id,
+                tokens: (0..512).map(|i| i + id as i32 * 7919).collect(),
+                max_new_tokens: 8,
+                arrival: 0.0,
+            })
+            .collect();
+        let (resp, m) = sim(4).with_decode_batch(8).serve(&reqs).unwrap();
+        assert_eq!(resp.len(), 12);
+        for r in &resp {
+            assert_eq!(r.tokens.len(), 8);
+            assert_eq!(r.tpot.len(), 7);
+        }
+        assert_eq!(m.max_decode_batch, 8);
+        assert_eq!(m.tokens_out, 12 * 8);
     }
 }

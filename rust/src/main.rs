@@ -41,14 +41,16 @@ USAGE:
   kvr serve [--artifacts artifacts] [--workers 2] [--requests 8]
             [--prompt-len 128] [--max-new 8] [--rate 2.0] [--seed 0]
             [--sim] [--model llama7b] [--hw a100-300gbps]
-            [--shared-prefix 0.5] [--prefix-cache] [--block-tokens N]
-            [--hot-tokens N] [--cold-tokens N] [--cold-bw BYTES_PER_S]
-            [--cold-latency S]
+            [--decode-batch 8] [--shared-prefix 0.5] [--prefix-cache]
+            [--block-tokens N] [--hot-tokens N] [--cold-tokens N]
+            [--cold-bw BYTES_PER_S] [--cold-latency S]
   kvr calibrate [--artifacts artifacts]
 
 Prefix cache: `--prefix-cache` reuses cached prompt-prefix KV across
 requests (hybrid compute-or-load per block). `--sim` serves on the
-modeled A100 cluster instead of the PJRT tiny model.
+modeled A100 cluster instead of the PJRT tiny model. `--decode-batch`
+caps how many requests one batched decode step advances (1 = per-request
+decode).
 ";
 
 fn main() {
@@ -215,6 +217,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.f64_or("rate", 2.0)?;
     let seed = args.u64_or("seed", 0)?;
     let frac = args.f64_or("shared-prefix", 0.5)?;
+    let decode_batch = args.usize_or("decode-batch", 8)?.max(1);
     let mut rng = Rng::new(seed);
 
     if args.flag("sim") {
@@ -224,7 +227,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let requests = shared_prefix_requests(
             &mut rng, n_requests, prompt_len, frac, rate, max_new, 1,
         );
-        let mut cluster = SimCluster::new(model, hw, workers);
+        let mut cluster =
+            SimCluster::new(model, hw, workers).with_decode_batch(decode_batch);
         if args.flag("prefix-cache") {
             cluster =
                 cluster.with_prefix_cache(prefix_cache_config(args, 512)?);
@@ -244,7 +248,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = shared_prefix_requests(
         &mut rng, n_requests, prompt_len, frac, rate, max_new, g,
     );
-    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let mut sched = Scheduler::new(SchedulerConfig {
+        decode_batch,
+        ..Default::default()
+    });
     if args.flag("prefix-cache") {
         let cm = CostModel::new(
             cluster.manifest.model.clone(),

@@ -180,10 +180,19 @@ impl PrefixCache {
     }
 
     /// Pin the plan's loaded blocks for the lifetime of the prefill.
+    /// All-or-nothing: if any pin fails (a block vanished between plan
+    /// and lease), every block already pinned is unpinned before the
+    /// error propagates — a half-built lease must never leak pins, or
+    /// its blocks would be unevictable for the cache's lifetime.
     pub fn lease(&mut self, plan: &PrefillPlan) -> Result<Lease> {
         let mut blocks = Vec::new();
         for b in plan.loaded_blocks() {
-            self.store.pin(b.id)?;
+            if let Err(e) = self.store.pin(b.id) {
+                for id in blocks {
+                    self.store.unpin(id);
+                }
+                return Err(e);
+            }
             blocks.push(b.id);
         }
         Ok(Lease { blocks })
@@ -322,6 +331,38 @@ mod tests {
         pc.admit(&(5000..6024).collect::<Vec<i32>>());
         pc.admit(&(9000..10024).collect::<Vec<i32>>());
         assert!(pc.lookup(&a).is_empty());
+    }
+
+    #[test]
+    fn failed_lease_leaves_no_pins_behind() {
+        // Regression: a pin failure on block k used to leak the pins on
+        // blocks 0..k forever (the half-built lease was dropped without
+        // unpinning). Force a mid-lease failure and prove the earlier
+        // blocks are still evictable afterwards.
+        let cm = cm();
+        let mut pc = cache(2, 0); // hot fits 2 blocks, no cold tier
+        let a: Vec<i32> = (0..1024).collect();
+        pc.admit(&a);
+        let mut plan = pc.plan_prefill(&cm, &a, 2).unwrap();
+        assert!(plan.loaded_blocks().count() >= 1);
+        // A block the store has never seen: pinning it must fail after
+        // the real blocks were already pinned.
+        plan.blocks.push(planner::PlannedBlock {
+            id: 0xdead_beef,
+            tier: Tier::Hot,
+            action: BlockAction::Load,
+            load_s: 0.0,
+        });
+        let err = pc.lease(&plan).unwrap_err().to_string();
+        assert!(err.contains("unknown block"), "{err}");
+
+        // Had the pins leaked, this pressure could not displace `a`.
+        pc.admit(&(5000..6024).collect::<Vec<i32>>());
+        pc.admit(&(9000..10024).collect::<Vec<i32>>());
+        assert!(
+            pc.lookup(&a).is_empty(),
+            "failed lease left blocks pinned against eviction"
+        );
     }
 
     #[test]

@@ -122,9 +122,24 @@ impl CostModel {
     /// One extension-phase (decode) step over `past` cached tokens —
     /// memory-bound: the step streams the weights plus the KV cache from
     /// HBM (the regime the paper's Sec. 2 extension phase sits in).
+    /// Degenerate batch-of-one case of [`Self::decode_batch_step_time`].
     pub fn decode_step_time(&self, past: usize) -> f64 {
+        self.decode_batch_step_time(&[past])
+    }
+
+    /// One *batched* extension-phase step: `pasts[i]` is request i's
+    /// cached context length. The batch streams the weights **once** —
+    /// every request's matmul reads the same tiles — plus each request's
+    /// own KV cache, so batch size b costs far less than b independent
+    /// steps (the continuous-batching amortization; Li et al. 2024's
+    /// survey calls this the standard system-level decode lever).
+    pub fn decode_batch_step_time(&self, pasts: &[usize]) -> f64 {
+        if pasts.is_empty() {
+            return 0.0;
+        }
+        let kv_rows: f64 = pasts.iter().map(|&p| p as f64).sum();
         let bytes = self.model.weight_bytes() as f64
-            + past as f64 * self.model.kv_bytes_per_token() as f64;
+            + kv_rows * self.model.kv_bytes_per_token() as f64;
         bytes / self.hw.mem_bw + self.hw.base_overhead
     }
 
@@ -182,6 +197,55 @@ mod tests {
         assert!(t16k > t0);
         // Memory-bound sanity: llama7b weights at 2 TB/s ≈ 6.7 ms + base.
         assert!((0.001..0.2).contains(&t16k), "{t16k}");
+    }
+
+    #[test]
+    fn batch_of_one_equals_single_decode_step() {
+        // Acceptance: `decode_batch_step_time(&[p])` IS `decode_step_time(p)`.
+        let m = cm();
+        for past in [0usize, 1, 512, 4096, 16384] {
+            assert_eq!(m.decode_batch_step_time(&[past]), m.decode_step_time(past));
+        }
+        assert_eq!(m.decode_batch_step_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn batched_decode_amortizes_weight_streaming() {
+        // One batched step over b requests streams the weights once; b
+        // solo steps stream them b times. The batch must sit strictly
+        // between one solo step and b solo steps, and per-token cost
+        // must fall monotonically with batch size.
+        let m = cm();
+        let past = 4096usize;
+        let solo = m.decode_step_time(past);
+        let mut prev_per_tok = f64::INFINITY;
+        for b in [1usize, 2, 4, 8, 16] {
+            let batch = m.decode_batch_step_time(&vec![past; b]);
+            assert!(batch >= solo, "b={b}: {batch} < {solo}");
+            assert!(
+                batch < solo * b as f64 || b == 1,
+                "b={b}: batch {batch} !< {b} solo steps {}",
+                solo * b as f64
+            );
+            let per_tok = batch / b as f64;
+            assert!(per_tok < prev_per_tok + 1e-15, "b={b}");
+            prev_per_tok = per_tok;
+        }
+    }
+
+    #[test]
+    fn mixed_context_batch_prices_each_requests_kv() {
+        // Heterogeneous pasts: the step pays the sum of all KV bytes, so
+        // swapping a short context for a long one strictly raises cost.
+        let m = cm();
+        let short = m.decode_batch_step_time(&[1024, 1024, 1024, 1024]);
+        let mixed = m.decode_batch_step_time(&[1024, 1024, 1024, 16384]);
+        assert!(mixed > short);
+        // Order never matters — only the KV row total does.
+        assert_eq!(
+            m.decode_batch_step_time(&[16384, 1024, 1024, 1024]),
+            mixed
+        );
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //!
 //! Both return full per-process/per-layer traces so the benches can print
 //! the paper's figures and the tests can assert causality invariants.
+//!
+//! These timelines cover one prefill. The *serving-level* event loop —
+//! admissions interleaved with batched decode steps on one virtual clock
+//! — lives in [`crate::coordinator::SimCluster`], priced by
+//! [`cost::CostModel::decode_batch_step_time`] for the extension phase.
 
 pub mod cost;
 pub mod memory;
