@@ -6,7 +6,10 @@
 //!
 //! * real (default): worker cluster over the AOT-compiled tiny model —
 //!   `make artifacts` first;
-//! * `--sim`: the modeled A100 cluster (`SimCluster`) — runs anywhere.
+//! * `--sim`: the modeled A100 cluster (`SimBackend`) — runs anywhere.
+//!
+//! Both substrates are served by the same `Scheduler` event loop
+//! (DESIGN.md §5) — only the backend (and its clock) differs.
 //!
 //! `--prefix-cache` turns on cross-request prefix-KV reuse;
 //! `--decode-batch` caps how many requests one batched decode step
@@ -23,7 +26,7 @@
 use kvr::config::{hardware_by_name, model_by_name};
 use kvr::coordinator::{
     ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
-    SchedulerConfig, SimCluster,
+    SchedulerConfig, SimBackend,
 };
 use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::sim::cost::CostModel;
@@ -84,17 +87,26 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
         model.name, hw.name, frac * 100.0
     );
 
-    let (_, base) = SimCluster::new(model.clone(), hw.clone(), procs)
-        .with_decode_batch(decode_batch)
-        .serve(&requests)?;
+    // The unified engine: the same Scheduler loop as the real path,
+    // driving the modeled backend on a virtual clock.
+    let sim_sched = || {
+        Scheduler::new(SchedulerConfig {
+            max_active: usize::MAX,
+            decode_batch,
+            ..Default::default()
+        })
+    };
+    let mut backend = SimBackend::new(model.clone(), hw.clone(), procs);
+    let (_, base) = sim_sched().serve(&mut backend, requests.clone())?;
     println!("== prefix cache OFF ==\n{}", base.report());
 
     if with_cache {
         let cfg = cache_config(args, 512)?;
-        let mut cluster = SimCluster::new(model, hw, procs)
-            .with_decode_batch(decode_batch)
-            .with_prefix_cache(cfg.clone());
-        let (_, cached) = cluster.serve(&requests)?;
+        let mut backend = SimBackend::new(model, hw, procs);
+        let cm = backend.cost_model().clone();
+        let (_, cached) = sim_sched()
+            .with_prefix_cache(PrefixCache::new(cfg.clone()), cm)
+            .serve(&mut backend, requests)?;
         println!(
             "== prefix cache ON (block {} tok, hot {} tok, cold {} tok @ \
              {:.0} GB/s) ==\n{}",

@@ -14,7 +14,7 @@
 //! end-to-end at each batch cap: throughput climbs with occupancy.
 
 use kvr::config::{hardware_by_name, model_by_name};
-use kvr::coordinator::{GenRequest, SimCluster};
+use kvr::coordinator::{GenRequest, Scheduler, SchedulerConfig, SimBackend};
 use kvr::sim::cost::CostModel;
 use kvr::util::stats::fmt_time;
 
@@ -80,9 +80,13 @@ fn main() {
         "decode-batch", "wall", "throughput", "mean batch", "TPOT p50"
     );
     for &b in &batches {
-        let mut cluster =
-            SimCluster::new(model.clone(), hw.clone(), procs).with_decode_batch(b);
-        let (_, m) = cluster.serve(&requests).unwrap();
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), procs);
+        let mut sched = Scheduler::new(SchedulerConfig {
+            max_active: usize::MAX,
+            decode_batch: b,
+            ..Default::default()
+        });
+        let (_, m) = sched.serve(&mut backend, requests.clone()).unwrap();
         let tpot = kvr::util::stats::Summary::of(&m.tpots);
         println!(
             "{:>12} {:>12} {:>10.1} tok/s {:>12.2} {:>10}",

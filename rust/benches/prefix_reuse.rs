@@ -13,10 +13,19 @@
 //! TTFT win collapses back to the baseline instead of regressing.
 
 use kvr::config::{hardware_by_name, model_by_name};
-use kvr::coordinator::{GenRequest, SimCluster};
-use kvr::prefixcache::PrefixCacheConfig;
+use kvr::coordinator::{GenRequest, Scheduler, SchedulerConfig, SimBackend};
+use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::util::rng::Rng;
 use kvr::util::stats::fmt_time;
+
+/// The unified serving engine over the modeled backend (sim defaults:
+/// unbounded admission, default decode batch).
+fn sim_scheduler() -> Scheduler {
+    Scheduler::new(SchedulerConfig {
+        max_active: usize::MAX,
+        ..Default::default()
+    })
+}
 
 fn workload(
     n: usize, prompt_len: usize, frac: f64, rate: f64, seed: u64,
@@ -66,9 +75,9 @@ fn main() {
     );
     for &frac in &fractions {
         let reqs = workload(n, prompt_len, frac, 1.5, 42);
-        let (_, off) = SimCluster::new(model.clone(), hw.clone(), procs)
-            .serve(&reqs)
-            .unwrap();
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), procs);
+        let (_, off) =
+            sim_scheduler().serve(&mut backend, reqs.clone()).unwrap();
         let off_ttft = mean(&off.ttfts);
         for &bw in &cold_bws {
             let cfg = PrefixCacheConfig {
@@ -78,9 +87,12 @@ fn main() {
                 cold_load_bw: bw,
                 cold_load_latency: 1e-3,
             };
-            let mut cluster = SimCluster::new(model.clone(), hw.clone(), procs)
-                .with_prefix_cache(cfg);
-            let (_, on) = cluster.serve(&reqs).unwrap();
+            let mut backend = SimBackend::new(model.clone(), hw.clone(), procs);
+            let cm = backend.cost_model().clone();
+            let (_, on) = sim_scheduler()
+                .with_prefix_cache(PrefixCache::new(cfg), cm)
+                .serve(&mut backend, reqs.clone())
+                .unwrap();
             println!(
                 "{:>7.0}% {:>9.1} GB/s {:>12} {:>8.2}x {:>8.0}% {:>14}",
                 frac * 100.0,

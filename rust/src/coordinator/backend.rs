@@ -1,0 +1,250 @@
+//! The serving-backend abstraction (DESIGN.md §5): one event loop, many
+//! substrates.
+//!
+//! [`crate::coordinator::Scheduler::serve`] owns the serving *policy* —
+//! admission ordering, prefix-cache planning and leasing, decode-batch
+//! rotation, retirement, metrics. Everything substrate-specific sits
+//! behind [`ServingBackend`]:
+//!
+//! * [`crate::coordinator::Cluster`] — real execution over PJRT worker
+//!   threads; time is wall-clock, logits are real.
+//! * [`crate::coordinator::SimBackend`] — the modeled A100 fabric
+//!   (`crate::sim`); time is virtual, tokens are placeholders.
+//!
+//! The two differ in how time passes, so the loop never reads a wall
+//! clock directly: it asks the backend for a [`Clock`]. [`WallClock`]
+//! *sleeps* to future arrivals and lets real work advance time by
+//! itself; [`VirtualClock`] *jumps* to arrivals and is advanced
+//! explicitly by the modeled cost of each event. Either way the loop
+//! code is identical — the paper's dual-purposing idea applied to the
+//! serving layer itself.
+//!
+//! Lease-safety invariant (DESIGN.md §5): any error path out of
+//! [`ServingBackend::prefill`] must end with the scheduler releasing the
+//! admission's [`crate::prefixcache::Lease`] before the error
+//! propagates; a leaked lease pins its blocks for the cache's lifetime.
+
+use std::time::Instant;
+
+use crate::config::ModelConfig;
+use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
+use crate::coordinator::request::GenRequest;
+use crate::error::Result;
+use crate::partition::Partition;
+
+/// The serving timeline: seconds since the serve loop started.
+///
+/// Object-safe so `Box<dyn Clock>` can come out of
+/// [`ServingBackend::clock`].
+pub trait Clock {
+    /// Seconds elapsed on the serving timeline.
+    fn now(&self) -> f64;
+    /// Block (wall) or jump (virtual) until the timeline reaches `t`.
+    /// A `t` in the past is a no-op — time never runs backwards.
+    fn wait_until(&mut self, t: f64);
+    /// Charge `dt` seconds of backend work to the timeline. Real work
+    /// already took real time, so [`WallClock`] ignores this; a
+    /// [`VirtualClock`] advances by exactly the modeled cost.
+    fn advance(&mut self, dt: f64);
+}
+
+/// Wall-clock timeline for real backends: `wait_until` sleeps the
+/// thread, `advance` is a no-op.
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn start() -> Self {
+        Self { t0: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(t - now));
+        }
+    }
+
+    fn advance(&mut self, _dt: f64) {}
+}
+
+/// Virtual timeline for modeled backends: `wait_until` jumps, `advance`
+/// adds the modeled event cost.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    t: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.t
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        self.t = self.t.max(t);
+    }
+
+    fn advance(&mut self, dt: f64) {
+        self.t += dt;
+    }
+}
+
+/// Outcome of one backend prefill.
+#[derive(Clone, Debug)]
+pub struct PrefillOutcome {
+    /// Worker/process that owns the KV cache for the extension phase.
+    pub owner: usize,
+    /// The prompt's first generated token (0 on modeled backends).
+    pub first_token: i32,
+    /// Seconds to first token: measured (real) or modeled (sim, prefix
+    /// loads included). The scheduler charges this to the clock.
+    pub ttft: f64,
+    /// Reused-prefix rows the chain was seeded with (0 without reuse).
+    pub reused_tokens: usize,
+    /// Full accumulated prompt-KV wire bytes, when requested at dispatch
+    /// (the scheduler admits it into the prefix cache). Payload-less
+    /// backends return `None`.
+    pub wire: Option<Vec<u8>>,
+}
+
+/// One request's next decode step, as the scheduler dispatches it.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeStep {
+    /// Worker/process owning the request's KV cache.
+    pub owner: usize,
+    pub req_id: u64,
+    /// Token fed into this step (the previous step's output).
+    pub last_token: i32,
+    /// KV rows already cached for the request: prompt plus every token
+    /// generated so far (modeled backends price the step with this).
+    pub past_tokens: usize,
+}
+
+/// Outcome of one batched decode event.
+#[derive(Clone, Debug)]
+pub struct DecodeOutcome {
+    /// Next token per dispatched step, aligned with the input slice
+    /// (0 placeholders on modeled backends).
+    pub tokens: Vec<i32>,
+    /// Seconds the event occupied the backend — measured (real) or
+    /// modeled (sim). Charged to the clock; every rider's TPOT entry.
+    pub step_s: f64,
+    /// Sizes of the step groups that actually co-executed (the real
+    /// path batches per cache-owning worker, so one event may split
+    /// into several groups; modeled backends report one group).
+    pub groups: Vec<usize>,
+}
+
+/// A serving substrate the unified [`crate::coordinator::Scheduler`]
+/// event loop can drive.
+///
+/// Object safe: `&mut dyn ServingBackend` works wherever the concrete
+/// type is erased (plugin-style deployment wiring).
+pub trait ServingBackend {
+    /// Number of chain processes a prefill partitions over.
+    fn workers(&self) -> usize;
+
+    /// Model shape served by this backend (KV layout, byte sizing).
+    fn model(&self) -> &ModelConfig;
+
+    /// Chunk granularity prompts and reuse cuts must align to
+    /// (1 = unconstrained; the real path's AOT bucket size otherwise).
+    fn granularity(&self) -> usize;
+
+    /// Whether prefix reuse needs real KV wire payloads (the real chain
+    /// seeds worker 0 with them) or timing-only reuse suffices
+    /// (modeled backends). Drives the scheduler's decline rules.
+    fn needs_kv_payloads(&self) -> bool;
+
+    /// A fresh timeline for one serve run.
+    fn clock(&self) -> Box<dyn Clock>;
+
+    /// Partition a `c`-token suffix after `start` reused rows.
+    fn plan_partition(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> Result<Partition>;
+
+    /// Run one runahead prefill. `reused` seeds the chain head (modeled
+    /// backends only honour `reused.tokens`); `load_s` is the modeled
+    /// time to materialize those rows (real backends measure instead);
+    /// `want_wire` ships the accumulated prompt KV back for prefix-cache
+    /// admission.
+    fn prefill(
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool,
+    ) -> Result<PrefillOutcome>;
+
+    /// Advance each step's request by one token in a single event.
+    fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<DecodeOutcome>;
+
+    /// Free a retired request's KV.
+    fn release(&mut self, owner: usize, req_id: u64) -> Result<()>;
+
+    /// Aggregate KV bytes of the requests currently active on this
+    /// backend (modeled from tracked rows — the decode-side
+    /// backpressure signal).
+    fn kv_bytes_active(&self) -> f64;
+
+    /// Would admitting a prompt of `prompt_tokens` — plus its full
+    /// decode budget of `max_new_tokens` rows — fit on top of the
+    /// active KV footprint? Backends without a memory model accept.
+    fn admit_capacity(&self, prompt_tokens: usize, max_new_tokens: usize) -> bool {
+        let _ = (prompt_tokens, max_new_tokens);
+        true
+    }
+
+    /// How many of `want` candidate decode steps the next event may
+    /// advance (each advanced request grows its KV one row). Backends
+    /// without a memory model return `want`; implementations must keep
+    /// it `>= 1` so an active set always drains.
+    fn decode_capacity(&self, want: usize) -> usize {
+        want
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_jumps_and_advances() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.wait_until(2.5);
+        assert_eq!(c.now(), 2.5);
+        // Time never runs backwards.
+        c.wait_until(1.0);
+        assert_eq!(c.now(), 2.5);
+        c.advance(0.5);
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    fn wall_clock_ignores_advance_and_monotone() {
+        let mut c = WallClock::start();
+        let t1 = c.now();
+        c.advance(1000.0);
+        let t2 = c.now();
+        assert!(t2 < 500.0, "advance must not move a wall clock");
+        assert!(t2 >= t1);
+        // A past deadline returns immediately.
+        c.wait_until(0.0);
+        // A near-future deadline sleeps to it.
+        let target = c.now() + 0.02;
+        c.wait_until(target);
+        assert!(c.now() >= target);
+    }
+}

@@ -23,9 +23,15 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::config::ModelConfig;
+use crate::coordinator::backend::{
+    Clock, DecodeOutcome, DecodeStep, PrefillOutcome, ServingBackend, WallClock,
+};
 use crate::coordinator::kvpool::KvPool;
+use crate::coordinator::request::GenRequest;
 use crate::error::{Error, Result};
 use crate::partition::{lut::PartitionLut, Partition};
+use crate::runtime::engine::argmax;
 use crate::runtime::{Engine, KvCache, Manifest};
 
 /// How the leader splits a prompt across workers.
@@ -43,6 +49,22 @@ struct CacheMsg {
     req_id: u64,
     tokens: usize,
     wire: Vec<u8>,
+}
+
+/// Group decode steps `(owner, req_id, token)` by owner worker,
+/// preserving step order within each group — the unit that shares one
+/// [`WorkerCmd::DecodeBatch`] command turn. Both the dispatch path and
+/// the occupancy reporting derive from this one function, so the
+/// reported group sizes can never drift from what actually co-executed.
+fn group_by_owner(steps: &[(usize, u64, i32)]) -> Vec<(usize, Vec<(u64, i32)>)> {
+    let mut groups: Vec<(usize, Vec<(u64, i32)>)> = Vec::new();
+    for &(owner, req_id, token) in steps {
+        match groups.iter_mut().find(|(o, _)| *o == owner) {
+            Some((_, items)) => items.push((req_id, token)),
+            None => groups.push((owner, vec![(req_id, token)])),
+        }
+    }
+    groups
 }
 
 /// A cached prompt prefix (from [`crate::prefixcache::PrefixCache`]) that
@@ -330,6 +352,11 @@ pub struct Cluster {
     /// Stray replies not yet claimed (chain prefill answers arrive in any
     /// worker order).
     pending: Vec<WorkerReply>,
+    /// Leader-side KV rows per request served through the
+    /// [`ServingBackend`] trait (prompt + tokens generated so far) — the
+    /// `kv_bytes_active` backpressure signal. Requests driven through
+    /// the inherent API directly are not tracked.
+    active_rows: HashMap<u64, usize>,
 }
 
 impl Cluster {
@@ -372,8 +399,14 @@ impl Cluster {
             cmd_txs.push(cmd_tx);
             prev_rx = next_rx;
         }
-        let mut cluster =
-            Cluster { cmd_txs, reply_rx, handles, manifest, pending: Vec::new() };
+        let mut cluster = Cluster {
+            cmd_txs,
+            reply_rx,
+            handles,
+            manifest,
+            pending: Vec::new(),
+            active_rows: HashMap::new(),
+        };
         // Wait for every engine to come up (PJRT client + weights upload).
         let mut started = 0;
         while started < p {
@@ -595,14 +628,7 @@ impl Cluster {
         for &(owner, _, _) in steps {
             self.check_owner(owner)?;
         }
-        // Group by owner, preserving step order within each group.
-        let mut groups: Vec<(usize, Vec<(u64, i32)>)> = Vec::new();
-        for &(owner, req_id, token) in steps {
-            match groups.iter_mut().find(|(o, _)| *o == owner) {
-                Some((_, items)) => items.push((req_id, token)),
-                None => groups.push((owner, vec![(req_id, token)])),
-            }
-        }
+        let groups = group_by_owner(steps);
         // Dispatch; on a dead worker, stop sending but remember how many
         // groups are in flight — their replies must still be drained.
         let mut sent = 0usize;
@@ -682,6 +708,94 @@ impl Cluster {
                 other => self.pending.push(other),
             }
         }
+    }
+}
+
+/// The real-execution serving backend: wall-clock time, real logits.
+/// The unified [`crate::coordinator::Scheduler`] event loop drives the
+/// worker chain through this impl; the inherent methods remain the
+/// lower-level API for direct use.
+impl ServingBackend for Cluster {
+    fn workers(&self) -> usize {
+        Cluster::workers(self)
+    }
+
+    fn model(&self) -> &ModelConfig {
+        &self.manifest.model
+    }
+
+    fn granularity(&self) -> usize {
+        self.manifest.granularity()
+    }
+
+    fn needs_kv_payloads(&self) -> bool {
+        true
+    }
+
+    fn clock(&self) -> Box<dyn Clock> {
+        Box::new(WallClock::start())
+    }
+
+    fn plan_partition(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> Result<Partition> {
+        self.plan_partition_suffix(c, start, policy)
+    }
+
+    fn prefill(
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, _load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool,
+    ) -> Result<PrefillOutcome> {
+        let pre = self.parallel_prefill_reused(
+            req.id, &req.tokens, reused, policy, want_wire,
+        )?;
+        self.active_rows.insert(req.id, req.tokens.len() + 1);
+        Ok(PrefillOutcome {
+            owner: pre.owner,
+            first_token: argmax(&pre.logits) as i32,
+            ttft: pre.ttft,
+            reused_tokens: pre.reused_tokens,
+            wire: pre.wire,
+        })
+    }
+
+    fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<DecodeOutcome> {
+        let t0 = Instant::now();
+        let triples: Vec<(usize, u64, i32)> = steps
+            .iter()
+            .map(|s| (s.owner, s.req_id, s.last_token))
+            .collect();
+        let logits = Cluster::decode_batch(self, &triples)?;
+        let step_s = t0.elapsed().as_secs_f64();
+        for s in steps {
+            self.active_rows.insert(s.req_id, s.past_tokens + 1);
+        }
+        Ok(DecodeOutcome {
+            tokens: logits.iter().map(|lg| argmax(lg) as i32).collect(),
+            step_s,
+            // Report what actually co-executed: an event spanning k
+            // owners is k groups of their sizes, not one group of the
+            // event size — derived from the same grouping the dispatch
+            // used.
+            groups: group_by_owner(&triples)
+                .into_iter()
+                .map(|(_, items)| items.len())
+                .collect(),
+        })
+    }
+
+    fn release(&mut self, owner: usize, req_id: u64) -> Result<()> {
+        // Drop the row tracking only once the worker actually freed the
+        // cache — a failed release must keep the kv_bytes_active
+        // backpressure signal honest about what the worker still holds.
+        Cluster::release(self, owner, req_id)?;
+        self.active_rows.remove(&req_id);
+        Ok(())
+    }
+
+    fn kv_bytes_active(&self) -> f64 {
+        self.active_rows.values().sum::<usize>() as f64
+            * self.manifest.model.kv_bytes_per_token() as f64
     }
 }
 

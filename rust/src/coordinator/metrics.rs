@@ -82,6 +82,21 @@ impl ServeMetrics {
         self.decode_batch_sum as f64 / self.decode_steps as f64
     }
 
+    /// TTFT distribution (mean/p50/p95/... seconds) over the completed
+    /// requests; `None` before any request finished. The percentile
+    /// source of truth for latency experiments (e.g. measuring the
+    /// chunked-prefill TPOT-p95 win) — the same numbers [`Self::report`]
+    /// formats.
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        (!self.ttfts.is_empty()).then(|| Summary::of(&self.ttfts))
+    }
+
+    /// TPOT distribution over every decode step ridden by a completed
+    /// request; `None` when no request decoded past its first token.
+    pub fn tpot_summary(&self) -> Option<Summary> {
+        (!self.tpots.is_empty()).then(|| Summary::of(&self.tpots))
+    }
+
     /// Fraction of prefix-cache lookups that found a cached prefix.
     pub fn prefix_hit_rate(&self) -> f64 {
         if self.prefix_lookups == 0 {
@@ -103,7 +118,7 @@ impl ServeMetrics {
         if self.requests == 0 {
             return "no requests completed".into();
         }
-        let ttft = Summary::of(&self.ttfts);
+        let ttft = self.ttft_summary().expect("requests > 0");
         let e2e = Summary::of(&self.e2es);
         let queue = Summary::of(&self.queue_waits);
         let mut out = String::new();
@@ -116,8 +131,7 @@ impl ServeMetrics {
             fmt_time(ttft.mean), fmt_time(ttft.p50), fmt_time(ttft.p95),
             fmt_time(ttft.max)
         ));
-        if !self.tpots.is_empty() {
-            let tpot = Summary::of(&self.tpots);
+        if let Some(tpot) = self.tpot_summary() {
             out.push_str(&format!(
                 "TPOT  mean {} p50 {} p95 {}\n",
                 fmt_time(tpot.mean), fmt_time(tpot.p50), fmt_time(tpot.p95)
@@ -256,5 +270,36 @@ mod tests {
         assert_eq!(m.report(), "no requests completed");
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.prefix_hit_rate(), 0.0);
+        assert!(m.ttft_summary().is_none());
+        assert!(m.tpot_summary().is_none());
+    }
+
+    #[test]
+    fn latency_percentiles_on_a_known_distribution() {
+        // TTFTs 1..=100 and one TPOT entry per value: linear-interpolated
+        // percentiles land at exactly 50.5 (p50) and 95.05 (p95), the
+        // same values util::stats computes for the raw samples.
+        let mut m = ServeMetrics::default();
+        for i in 1..=100 {
+            let v = i as f64;
+            m.record_request(v, &[v / 10.0], v, 0.0);
+        }
+        m.wall_s = 1.0;
+        let ttft = m.ttft_summary().unwrap();
+        assert!((ttft.p50 - 50.5).abs() < 1e-12, "{}", ttft.p50);
+        assert!((ttft.p95 - 95.05).abs() < 1e-12, "{}", ttft.p95);
+        assert!((ttft.mean - 50.5).abs() < 1e-12);
+        let tpot = m.tpot_summary().unwrap();
+        assert!((tpot.p50 - 5.05).abs() < 1e-12, "{}", tpot.p50);
+        assert!((tpot.p95 - 9.505).abs() < 1e-12, "{}", tpot.p95);
+        // Insertion order must not matter: reversed samples, same
+        // percentiles.
+        let mut rev = ServeMetrics::default();
+        for i in (1..=100).rev() {
+            rev.record_request(i as f64, &[], i as f64, 0.0);
+        }
+        let r = rev.ttft_summary().unwrap();
+        assert_eq!(r.p50, ttft.p50);
+        assert_eq!(r.p95, ttft.p95);
     }
 }

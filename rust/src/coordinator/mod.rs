@@ -1,31 +1,46 @@
 //! L3 serving coordinator — the deployable layer around KV-Runahead.
 //!
-//! A leader thread owns the request queue, the context partitioner, and
-//! the scheduler; `p` worker threads own one PJRT [`crate::runtime::Engine`]
-//! each (process-per-GPU topology). A prefill runs as the paper's chain:
-//! the leader splits the prompt per the partition policy, workers compute
-//! their chunks and hand the accumulated KV-cache to their successor over
-//! point-to-point channels; the last worker emits the first token and owns
-//! the cache for the extension phase. Decode advances the whole active set
-//! in owner-grouped batches ([`Cluster::decode_batch`]): co-owned requests
-//! share one worker command turn, distinct owners step concurrently.
+//! One serving engine, two substrates (DESIGN.md §5): the
+//! [`Scheduler`] event loop owns admission ordering, prefix-cache
+//! planning and leasing, decode-batch rotation, retirement, and
+//! [`ServeMetrics`], and drives any [`ServingBackend`] on that
+//! backend's [`Clock`]:
 //!
-//! [`SimCluster`] mirrors the serving API over the modeled fabric
-//! (`crate::sim`) so serving workloads — including the prefix cache's
-//! compute-or-load prefill — run end to end without PJRT artifacts.
+//! * [`Cluster`] — real execution. `p` worker threads own one PJRT
+//!   [`crate::runtime::Engine`] each (process-per-GPU topology); a
+//!   prefill runs as the paper's chain — the leader splits the prompt
+//!   per the partition policy, workers compute their chunks and hand
+//!   the accumulated KV-cache to their successor over point-to-point
+//!   channels; the last worker emits the first token and owns the cache
+//!   for the extension phase. Decode advances owner-grouped batches
+//!   ([`Cluster::decode_batch`]). Time is a [`WallClock`].
+//! * [`SimBackend`] — the modeled A100 fabric (`crate::sim`), so
+//!   serving workloads — including the prefix cache's compute-or-load
+//!   prefill and decode-side memory pressure — run end to end without
+//!   PJRT artifacts. Time is a [`VirtualClock`].
+//!
+//! [`SimCluster`] remains as a thin compatibility shim over
+//! `Scheduler` + `SimBackend`.
 
+pub mod backend;
 pub mod cluster;
 pub mod kvpool;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
+pub mod simbackend;
 pub mod simcluster;
 pub mod tokenizer;
 
+pub use backend::{
+    Clock, DecodeOutcome, DecodeStep, PrefillOutcome, ServingBackend,
+    VirtualClock, WallClock,
+};
 pub use cluster::{Cluster, PartitionPolicy, ReusedPrefix};
 pub use kvpool::KvPool;
 pub use metrics::ServeMetrics;
 pub use request::{GenRequest, GenResponse};
 pub use scheduler::{Scheduler, SchedulerConfig};
-pub use simcluster::SimCluster;
+pub use simbackend::SimBackend;
+pub use simcluster::{SimCluster, DEFAULT_DECODE_BATCH};
 pub use tokenizer::ByteTokenizer;

@@ -1,32 +1,45 @@
-//! Request scheduler: FIFO admission + continuously batched decode.
+//! The serving engine: one event-driven admission → runahead-prefill →
+//! batched-decode → retire loop over any [`ServingBackend`].
 //!
-//! Prefill occupies the whole worker chain (the paper's Fig. 3b dataflow),
-//! so prefills are serialized; decode steps of all active requests run as
-//! *owner-grouped batches* between admissions (continuous batching at
-//! step granularity): each round the scheduler gathers every live
-//! request's next step and dispatches them through
-//! [`Cluster::decode_batch`], which advances co-owned requests in one
-//! worker command turn and distinct owners concurrently. `decode_batch`
-//! caps the per-round batch; admission is bounded by `max_active` — the
-//! KV pool backpressure on the cache-owning worker.
+//! The loop owns serving *policy* for every substrate (DESIGN.md §5):
 //!
-//! With a prefix cache attached ([`Scheduler::with_prefix_cache`]),
-//! admission first consults the cache: the hybrid planner picks a
-//! compute-or-load cut, the reused blocks are leased (pinned) for the
-//! prefill, the chain head is seeded with the reassembled prefix KV, and
-//! the finished prompt's cache is admitted back for future requests.
+//! * **admission ordering** — pending requests are served in arrival
+//!   order (sorted up front, so an out-of-order submission can never
+//!   stall the line behind a later-arriving head-of-line request), gated
+//!   by `max_active` and the backend's KV-memory capacity;
+//! * **prefix-cache planning** — with a cache attached
+//!   ([`Scheduler::with_prefix_cache`]), admission runs the hybrid
+//!   compute-or-load planner, leases the reused blocks across the
+//!   prefill, and admits the finished prompt's KV back for future
+//!   sharers. Decline rules (payload-backed backends only apply a plan
+//!   they can actually seed the chain with) live here, once;
+//! * **decode-batch rotation** — between admissions the active set
+//!   advances in `decode_batch`-capped events, rotating so deep sets
+//!   share the batch round-robin (continuous batching at step
+//!   granularity: an arrived request preempts the next decode event);
+//! * **retirement and metrics** — finished requests release their KV
+//!   and fold into [`ServeMetrics`].
+//!
+//! Time is the backend's [`Clock`](crate::coordinator::Clock): the
+//! identical loop serves the real PJRT
+//! [`Cluster`](crate::coordinator::Cluster) on a wall clock and the
+//! modeled [`SimBackend`](crate::coordinator::SimBackend) on a virtual
+//! one.
+//!
+//! Lease-safety invariant: every path out of an admission — success or
+//! error — releases the admission's [`Lease`] before returning; a
+//! leaked lease would pin its blocks for the cache's lifetime.
 
 use std::collections::VecDeque;
-use std::time::Instant;
 
 use crate::config::ModelConfig;
-use crate::coordinator::cluster::{Cluster, PartitionPolicy, ReusedPrefix};
+use crate::coordinator::backend::{DecodeStep, ServingBackend};
+use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::tokenizer::ByteTokenizer;
 use crate::error::Result;
-use crate::prefixcache::PrefixCache;
-use crate::runtime::engine::argmax;
+use crate::prefixcache::{Lease, PrefixCache};
 use crate::runtime::KvCache;
 use crate::sim::cost::CostModel;
 
@@ -36,7 +49,7 @@ pub struct SchedulerConfig {
     pub policy: PartitionPolicy,
     /// Max requests in the decode phase simultaneously.
     pub max_active: usize,
-    /// Max requests advanced per batched decode round (1 = per-request
+    /// Max requests advanced per batched decode event (1 = per-request
     /// decode; larger rounds amortize the per-step dispatch).
     pub decode_batch: usize,
     /// Stop decoding a request when it emits this token.
@@ -61,11 +74,42 @@ struct Active {
     ttft: f64,
     tpot: Vec<f64>,
     queue_wait: f64,
-    started: Instant,
-    last_step: Instant,
 }
 
-/// FIFO + round-robin scheduler over a [`Cluster`].
+/// Retire every active request that finished by time `now`, releasing
+/// its backend KV and folding it into the metrics.
+fn retire_finished<B: ServingBackend + ?Sized>(
+    backend: &mut B, eos: i32, now: f64, active: &mut Vec<Active>,
+    metrics: &mut ServeMetrics, done: &mut Vec<GenResponse>,
+) -> Result<()> {
+    let mut i = 0;
+    while i < active.len() {
+        let a = &active[i];
+        let finished = a.produced.len() >= a.req.max_new_tokens.max(1)
+            || *a.produced.last().unwrap() == eos;
+        if !finished {
+            i += 1;
+            continue;
+        }
+        let a = active.swap_remove(i);
+        backend.release(a.owner, a.req.id)?;
+        // E2E is time on the shared serving timeline: it includes
+        // queueing and decode stalls where an interleaved prefill held
+        // the chain, which per-step TPOT entries deliberately do not.
+        let e2e = now - a.req.arrival;
+        metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
+        done.push(GenResponse {
+            id: a.req.id,
+            tokens: a.produced,
+            ttft: a.ttft,
+            tpot: a.tpot,
+            e2e,
+        });
+    }
+    Ok(())
+}
+
+/// The unified serving engine over any [`ServingBackend`].
 pub struct Scheduler {
     cfg: SchedulerConfig,
     /// Prefix cache + the cost model pricing its compute-or-load plans.
@@ -80,10 +124,24 @@ impl Scheduler {
     /// Attach a prefix cache; `cm` prices the hybrid plans (use the
     /// hardware preset matching the deployment, e.g. `host-cpu` for the
     /// real tiny-model path). The cache's block size must be a multiple
-    /// of the cluster's artifact granularity.
+    /// of the backend's granularity.
     pub fn with_prefix_cache(mut self, cache: PrefixCache, cm: CostModel) -> Self {
-        self.cache = Some((cache, cm));
+        self.attach_prefix_cache(cache, cm);
         self
+    }
+
+    /// In-place form of [`Self::with_prefix_cache`] for callers that
+    /// hold the scheduler behind a reference.
+    pub fn attach_prefix_cache(&mut self, cache: PrefixCache, cm: CostModel) {
+        self.cache = Some((cache, cm));
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    pub fn config_mut(&mut self) -> &mut SchedulerConfig {
+        &mut self.cfg
     }
 
     /// Prefix-cache statistics (None when no cache is attached).
@@ -91,28 +149,38 @@ impl Scheduler {
         self.cache.as_ref().map(|(pc, _)| pc.stats())
     }
 
-    /// Admission-time cache consult: plan, lease, and reassemble the
-    /// reused prefix for one request. Returns `(reused, lease,
-    /// want_wire)`; metrics record what will actually run (a declined
-    /// plan is recorded as full recompute, not as the aspirational cut).
-    /// Takes the cluster shape as primitives (`workers`, `model`,
-    /// artifact granularity `g`) so the decline accounting is testable
-    /// without PJRT artifacts.
+    /// Admission-time cache consult: plan, lease, and (on payload-backed
+    /// backends) reassemble the reused prefix for one request. Returns
+    /// `(reused, load_s, lease, want_wire)`; metrics record what will
+    /// actually run (a declined plan is recorded as full recompute, not
+    /// as the aspirational cut). Takes the backend shape as primitives
+    /// (`workers`, `model`, granularity `g`, whether reuse `payloads`
+    /// are required) so the decline accounting is testable without PJRT
+    /// artifacts.
     fn plan_reuse(
-        &mut self, workers: usize, m: &ModelConfig, g: usize,
+        &mut self, workers: usize, m: &ModelConfig, g: usize, payloads: bool,
         req: &GenRequest, metrics: &mut ServeMetrics,
-    ) -> Result<(Option<ReusedPrefix>, Option<crate::prefixcache::Lease>, bool)>
-    {
+    ) -> Result<(Option<ReusedPrefix>, f64, Option<Lease>, bool)> {
         let Some((pc, cm)) = self.cache.as_mut() else {
-            return Ok((None, None, false));
+            return Ok((None, 0.0, None, false));
         };
         let plan = pc.plan_prefill(cm, &req.tokens, workers)?;
-        let reused = pc
-            .reused_cache(&plan, m.layers, m.kv_heads, m.head_dim)
-            // Reuse must land on an AOT chunk boundary; otherwise fall
-            // back to full recompute rather than failing the prefill.
-            .filter(|kv| kv.tokens % g == 0 && kv.tokens < req.tokens.len())
-            .map(|kv| ReusedPrefix { tokens: kv.tokens, wire: kv.to_wire() });
+        let reused = if payloads {
+            pc.reused_cache(&plan, m.layers, m.kv_heads, m.head_dim)
+                // Reuse must land on an AOT chunk boundary; otherwise
+                // fall back to full recompute rather than failing the
+                // prefill.
+                .filter(|kv| kv.tokens % g == 0 && kv.tokens < req.tokens.len())
+                .map(|kv| ReusedPrefix { tokens: kv.tokens, wire: kv.to_wire() })
+        } else {
+            // Timing-only backends apply the planner's cut directly —
+            // there is no payload to decline over.
+            (plan.reuse_tokens > 0 && plan.reuse_tokens < req.tokens.len())
+                .then(|| ReusedPrefix {
+                    tokens: plan.reuse_tokens,
+                    wire: Vec::new(),
+                })
+        };
         let lease = if reused.is_some() {
             Some(pc.lease(&plan)?)
         } else {
@@ -123,55 +191,69 @@ impl Scheduler {
         } else {
             metrics.record_prefix(&plan.declined());
         }
+        let load_s = if reused.is_some() { plan.load_s } else { 0.0 };
         // Ship the prompt cache back only when it holds blocks the store
         // is missing — a fully cached prompt has nothing new to admit
-        // and skips the full-KV wire copy on the reply path.
-        let bt = pc.config().block_tokens;
-        let want_wire = plan.matched_tokens < (req.tokens.len() / bt) * bt;
-        Ok((reused, lease, want_wire))
+        // and skips the full-KV wire copy on the reply path. Payload-less
+        // backends admit block timings after the prefill instead.
+        let want_wire = payloads && {
+            let bt = pc.config().block_tokens;
+            plan.matched_tokens < (req.tokens.len() / bt) * bt
+        };
+        Ok((reused, load_s, lease, want_wire))
     }
 
-    /// Serve a batch of requests to completion; returns per-request
-    /// responses (request order) and aggregate metrics.
-    pub fn serve(
-        &mut self, cluster: &mut Cluster, requests: Vec<GenRequest>,
+    /// Serve a batch of requests to completion on `backend`; returns
+    /// per-request responses (request order) and aggregate metrics.
+    pub fn serve<B: ServingBackend + ?Sized>(
+        &mut self, backend: &mut B, requests: Vec<GenRequest>,
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
-        let serve_start = Instant::now();
+        let model = backend.model().clone();
+        let workers = backend.workers();
+        let granularity = backend.granularity();
+        let payloads = backend.needs_kv_payloads();
+        let policy = self.cfg.policy.clone();
+        let max_active = self.cfg.max_active.max(1);
+        let decode_batch = self.cfg.decode_batch.max(1);
+        let eos = self.cfg.eos_token;
+        let mut clock = backend.clock();
+
+        // Admission order is arrival order on every backend (a stable
+        // sort keeps submission order among simultaneous arrivals).
+        let mut requests = requests;
+        requests.sort_by(|a, b| {
+            a.arrival.partial_cmp(&b.arrival).expect("finite arrivals")
+        });
         let mut pending: VecDeque<GenRequest> = requests.into();
         let mut active: Vec<Active> = Vec::new();
-        let mut done: Vec<GenResponse> = Vec::new();
+        let mut done: Vec<GenResponse> = Vec::with_capacity(pending.len());
         let mut metrics = ServeMetrics::default();
 
         while !pending.is_empty() || !active.is_empty() {
-            // Admit while there is room (prefill occupies the chain).
-            while active.len() < self.cfg.max_active {
-                let Some(req) = pending.front() else { break };
-                // Honour the arrival process: don't start work that has
-                // not "arrived" yet unless the cluster is otherwise idle.
-                let now = serve_start.elapsed().as_secs_f64();
-                if now < req.arrival && !active.is_empty() {
-                    break;
-                }
-                if now < req.arrival {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(
-                        req.arrival - now,
-                    ));
-                }
+            // Admission event: the head-of-line request takes the chain
+            // as soon as it has arrived (preempting further decode
+            // events) and there is room — both scheduler room
+            // (`max_active`) and backend KV-memory room; an otherwise
+            // idle timeline advances to the next arrival instead of
+            // deadlocking on a request that can never co-reside.
+            let admit = pending.front().is_some_and(|req| {
+                (req.arrival <= clock.now() || active.is_empty())
+                    && active.len() < max_active
+                    && (active.is_empty()
+                        || backend
+                            .admit_capacity(req.tokens.len(), req.max_new_tokens))
+            });
+            if admit {
                 let req = pending.pop_front().unwrap();
-                let queue_wait =
-                    (serve_start.elapsed().as_secs_f64() - req.arrival).max(0.0);
-                let started = Instant::now();
-                let (reused, lease, want_wire) = self.plan_reuse(
-                    cluster.workers(),
-                    &cluster.manifest.model,
-                    cluster.manifest.granularity(),
-                    &req,
-                    &mut metrics,
+                clock.wait_until(req.arrival);
+                let queue_wait = (clock.now() - req.arrival).max(0.0);
+                let (reused, load_s, lease, want_wire) = self.plan_reuse(
+                    workers, &model, granularity, payloads, &req, &mut metrics,
                 )?;
-                let pre = match cluster.parallel_prefill_reused(
-                    req.id, &req.tokens, reused, &self.cfg.policy, want_wire,
-                ) {
-                    Ok(pre) => pre,
+                let out = match backend
+                    .prefill(&req, reused, load_s, &policy, want_wire)
+                {
+                    Ok(out) => out,
                     Err(e) => {
                         // Never leak the lease: a pinned block would be
                         // unevictable for the cache's lifetime.
@@ -187,81 +269,71 @@ impl Scheduler {
                     if let Some(lease) = lease {
                         pc.release(lease);
                     }
-                    // Admit the finished prompt's KV for future sharers.
-                    if let Some(wire) = &pre.wire {
-                        let m = &cluster.manifest.model;
+                    // Admit the finished prompt's KV for future sharers:
+                    // wire payloads when the backend shipped them,
+                    // block timings otherwise.
+                    if !payloads {
+                        pc.admit(&req.tokens);
+                    } else if let Some(wire) = &out.wire {
                         if let Ok(kv) = KvCache::from_wire(
-                            m.layers, m.kv_heads, m.head_dim,
+                            model.layers, model.kv_heads, model.head_dim,
                             req.tokens.len(), wire,
                         ) {
                             pc.admit_from_cache(&req.tokens, &kv);
                         }
                     }
                 }
-                let first = argmax(&pre.logits) as i32;
+                clock.advance(out.ttft);
                 active.push(Active {
-                    owner: pre.owner,
-                    produced: vec![first],
-                    ttft: pre.ttft,
+                    owner: out.owner,
+                    produced: vec![out.first_token],
+                    ttft: out.ttft,
                     tpot: Vec::new(),
                     queue_wait,
-                    started,
-                    last_step: Instant::now(),
                     req,
                 });
+                retire_finished(
+                    backend, eos, clock.now(), &mut active, &mut metrics,
+                    &mut done,
+                )?;
+                continue;
             }
 
-            // Retire finished requests, then advance every survivor one
-            // step in owner-grouped batches (continuous batching: the
-            // whole active set moves together between admissions).
-            let mut i = 0;
-            while i < active.len() {
-                let a = &active[i];
-                let finished = a.produced.len() >= a.req.max_new_tokens
-                    || *a.produced.last().unwrap() == self.cfg.eos_token;
-                if !finished {
-                    i += 1;
-                    continue;
-                }
-                let a = active.swap_remove(i);
-                cluster.release(a.owner, a.req.id)?;
-                let e2e = a.started.elapsed().as_secs_f64() + a.queue_wait;
-                metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
-                done.push(GenResponse {
-                    id: a.req.id,
-                    tokens: a.produced,
-                    ttft: a.ttft,
-                    tpot: a.tpot,
-                    e2e,
-                });
+            // Decode event: one batched step over the first
+            // `decode_batch` active requests (clamped by the backend's
+            // KV-memory headroom), then rotate so a deep active set
+            // shares the batch round-robin.
+            let want = active.len().min(decode_batch);
+            let b = backend.decode_capacity(want).clamp(1, want);
+            let steps: Vec<DecodeStep> = active[..b]
+                .iter()
+                .map(|a| DecodeStep {
+                    owner: a.owner,
+                    req_id: a.req.id,
+                    last_token: *a.produced.last().unwrap(),
+                    // Past covers the prompt AND every token generated so
+                    // far (they were appended by earlier steps).
+                    past_tokens: a.req.tokens.len() + a.produced.len(),
+                })
+                .collect();
+            let out = backend.decode_batch(&steps)?;
+            clock.advance(out.step_s);
+            // Occupancy counts what actually batched: the real path
+            // groups by owner worker, so one event may split into
+            // several co-executing groups.
+            for &group in &out.groups {
+                metrics.record_decode_step(group);
             }
-            for chunk in active.chunks_mut(self.cfg.decode_batch.max(1)) {
-                let steps: Vec<(usize, u64, i32)> = chunk
-                    .iter()
-                    .map(|a| (a.owner, a.req.id, *a.produced.last().unwrap()))
-                    .collect();
-                let logits = cluster.decode_batch(&steps)?;
-                // Occupancy counts what actually batched: decode_batch
-                // groups by owner worker, so a chunk spanning k owners is
-                // k steps of their group sizes, not one step of chunk len.
-                let mut group_sizes: Vec<(usize, usize)> = Vec::new();
-                for &(owner, _, _) in &steps {
-                    match group_sizes.iter_mut().find(|(o, _)| *o == owner) {
-                        Some((_, n)) => *n += 1,
-                        None => group_sizes.push((owner, 1)),
-                    }
-                }
-                for &(_, n) in &group_sizes {
-                    metrics.record_decode_step(n);
-                }
-                for (a, lg) in chunk.iter_mut().zip(logits) {
-                    a.tpot.push(a.last_step.elapsed().as_secs_f64());
-                    a.last_step = Instant::now();
-                    a.produced.push(argmax(&lg) as i32);
-                }
+            for (a, &tok) in active[..b].iter_mut().zip(&out.tokens) {
+                a.tpot.push(out.step_s);
+                a.produced.push(tok);
             }
+            active.rotate_left(b);
+            retire_finished(
+                backend, eos, clock.now(), &mut active, &mut metrics, &mut done,
+            )?;
         }
-        metrics.wall_s = serve_start.elapsed().as_secs_f64();
+        metrics.wall_s = clock.now();
         done.sort_by_key(|r| r.id);
         Ok((done, metrics))
     }
@@ -295,12 +367,12 @@ mod tests {
     #[test]
     fn declined_plan_recorded_as_recompute_while_store_keeps_plan_view() {
         // Admit a prompt WITHOUT payloads (modeled admission), then plan
-        // the same prompt again: the planner proposes reuse, but the real
-        // path cannot seed the chain (no wire bytes), so plan_reuse must
-        // decline — ServeMetrics records what actually ran (full
-        // recompute), while store-level CacheStats keeps the planner's
-        // aspirational view. The two must diverge by exactly the
-        // declined reuse.
+        // the same prompt again: the planner proposes reuse, but a
+        // payload-backed backend cannot seed the chain (no wire bytes),
+        // so plan_reuse must decline — ServeMetrics records what
+        // actually ran (full recompute), while store-level CacheStats
+        // keeps the planner's aspirational view. The two must diverge by
+        // exactly the declined reuse.
         let (pc, cm) = cache_parts();
         let model = cm.model.clone();
         let mut sched =
@@ -309,8 +381,8 @@ mod tests {
         let mut metrics = ServeMetrics::default();
 
         // First sight: cold miss, nothing to reuse.
-        let (reused, lease, want_wire) = sched
-            .plan_reuse(2, &model, 32, &req(tokens.clone()), &mut metrics)
+        let (reused, _, lease, want_wire) = sched
+            .plan_reuse(2, &model, 32, true, &req(tokens.clone()), &mut metrics)
             .unwrap();
         assert!(reused.is_none() && lease.is_none());
         assert!(want_wire, "cold prompt should request the wire for admission");
@@ -320,11 +392,12 @@ mod tests {
         }
 
         // Second sight: the planner matches, the serving layer declines.
-        let (reused, lease, _) = sched
-            .plan_reuse(2, &model, 32, &req(tokens.clone()), &mut metrics)
+        let (reused, load_s, lease, _) = sched
+            .plan_reuse(2, &model, 32, true, &req(tokens.clone()), &mut metrics)
             .unwrap();
         assert!(reused.is_none(), "no payloads -> nothing to seed");
         assert!(lease.is_none(), "declined plans must not pin blocks");
+        assert_eq!(load_s, 0.0, "declined plans charge no load time");
 
         let stats = sched.prefix_cache_stats().unwrap();
         // Store saw the match and counted the planner's intended reuse...
@@ -358,7 +431,7 @@ mod tests {
         let tokens: Vec<i32> = (0..96).collect();
         let mut metrics = ServeMetrics::default();
         sched
-            .plan_reuse(2, &model, 48, &req(tokens.clone()), &mut metrics)
+            .plan_reuse(2, &model, 48, true, &req(tokens.clone()), &mut metrics)
             .unwrap();
         // Real-path admission with actual KV wire payloads.
         let mut kv = crate::runtime::KvCache::new(
@@ -372,13 +445,45 @@ mod tests {
         }
         // Any reuse cut (a 32-token multiple) misses the 48-granularity
         // chunk boundary, so the plan must be declined despite payloads.
-        let (reused, lease, _) = sched
-            .plan_reuse(2, &model, 48, &req(tokens), &mut metrics)
+        let (reused, _, lease, _) = sched
+            .plan_reuse(2, &model, 48, true, &req(tokens), &mut metrics)
             .unwrap();
         assert!(reused.is_none());
         assert!(lease.is_none());
         assert_eq!(metrics.reused_tokens, 0);
         let stats = sched.prefix_cache_stats().unwrap();
         assert!(stats.reused_tokens > 0, "planner wanted reuse");
+    }
+
+    #[test]
+    fn timing_only_backends_apply_the_plan_without_payloads() {
+        // The modeled path (payloads = false) reuses by timing alone:
+        // the same payload-less store state that forces a real-path
+        // decline yields an applied plan with the planner's cut and its
+        // load seconds.
+        let (pc, cm) = cache_parts();
+        let model = cm.model.clone();
+        let mut sched =
+            Scheduler::new(SchedulerConfig::default()).with_prefix_cache(pc, cm);
+        let tokens: Vec<i32> = (0..128).map(|i| i % 251).collect();
+        let mut metrics = ServeMetrics::default();
+        if let Some((pc, _)) = sched.cache.as_mut() {
+            pc.admit(&tokens);
+        }
+        let (reused, load_s, lease, want_wire) = sched
+            .plan_reuse(2, &model, 1, false, &req(tokens.clone()), &mut metrics)
+            .unwrap();
+        let reused = reused.expect("timing-only reuse applies");
+        assert!(reused.wire.is_empty(), "no payload travels on the sim path");
+        assert!(reused.tokens > 0 && reused.tokens < tokens.len());
+        assert!(load_s >= 0.0);
+        assert!(lease.is_some(), "applied plans pin their blocks");
+        assert!(!want_wire, "payload-less backends never ship wire back");
+        assert_eq!(metrics.reused_tokens, reused.tokens);
+        if let Some((pc, _)) = sched.cache.as_mut() {
+            if let Some(lease) = lease {
+                pc.release(lease);
+            }
+        }
     }
 }

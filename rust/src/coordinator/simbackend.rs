@@ -1,0 +1,388 @@
+//! Modeled serving backend: the [`crate::sim`] discrete-event prefill
+//! timelines and [`CostModel`] decode pricing behind the
+//! [`ServingBackend`] trait, so serving workloads run on the modeled
+//! 8×A100 fabric without PJRT artifacts.
+//!
+//! Per-event semantics (DESIGN.md §4/§5): a prefill occupies the whole
+//! chain and costs its prefix loads plus the suffix runahead TTFT
+//! ([`crate::sim::kvr_timeline_offset`]); a decode event advances its
+//! batch in one [`CostModel::decode_batch_step_time`] step (weights
+//! streamed once, per-request KV on top). Logits are never computed —
+//! tokens come back as 0 placeholders.
+//!
+//! With [`SimBackend::with_memory_pressure`], admission and decode are
+//! additionally gated on the aggregate active-KV footprint against the
+//! modeled device memory ([`crate::sim::memory::decode_peak_bytes`]):
+//! a request is only admitted when its prompt *plus its full decode
+//! budget* fits alongside every active request's reservation, so the
+//! decode phase can never grow past capacity. Off by default — the
+//! pre-pressure timelines (and the [`crate::coordinator::SimCluster`]
+//! compatibility goldens) are unchanged unless opted in.
+
+use std::collections::HashMap;
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::coordinator::backend::{
+    Clock, DecodeOutcome, DecodeStep, PrefillOutcome, ServingBackend,
+    VirtualClock,
+};
+use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
+use crate::coordinator::request::GenRequest;
+use crate::error::Result;
+use crate::partition::Partition;
+use crate::sim::cost::CostModel;
+use crate::sim::{kvr_timeline_offset, memory, quiet_network};
+
+/// Serving backend over the modeled fabric.
+pub struct SimBackend {
+    cm: CostModel,
+    procs: usize,
+    mem_pressure: bool,
+    /// req_id -> resident KV rows (prompt + tokens generated so far)
+    /// plus the remaining decode budget reserved at admission.
+    active: HashMap<u64, ActiveKv>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ActiveKv {
+    rows: usize,
+    /// Decode rows still to come (reserved so admission control keeps
+    /// the decode phase from growing past device memory).
+    reserved: usize,
+}
+
+impl SimBackend {
+    pub fn new(model: ModelConfig, hw: HardwareConfig, procs: usize) -> Self {
+        assert!(procs >= 1, "need at least one process");
+        Self {
+            cm: CostModel::new(model, hw),
+            procs,
+            mem_pressure: false,
+            active: HashMap::new(),
+        }
+    }
+
+    /// Gate admission and decode on the modeled device-memory footprint
+    /// of the active KV (ROADMAP: decode-side memory pressure).
+    pub fn with_memory_pressure(mut self, on: bool) -> Self {
+        self.mem_pressure = on;
+        self
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cm
+    }
+
+    pub fn procs(&self) -> usize {
+        self.procs
+    }
+
+    /// Active KV rows plus every admitted request's remaining decode
+    /// reservation — the footprint admission control must defend.
+    fn reserved_rows(&self) -> usize {
+        self.active.values().map(|a| a.rows + a.reserved).sum()
+    }
+
+    /// KV rows actually resident right now (reservations excluded).
+    fn resident_rows(&self) -> usize {
+        self.active.values().map(|a| a.rows).sum()
+    }
+
+    /// Would `extra_rows` more KV rows fit alongside `base` rows?
+    fn fits(&self, base: usize, extra_rows: usize) -> bool {
+        let peak =
+            memory::decode_peak_bytes(&self.cm.model, base + extra_rows);
+        !memory::ooms(peak, self.cm.hw.mem_bytes)
+    }
+}
+
+impl ServingBackend for SimBackend {
+    fn workers(&self) -> usize {
+        self.procs
+    }
+
+    fn model(&self) -> &ModelConfig {
+        &self.cm.model
+    }
+
+    fn granularity(&self) -> usize {
+        1
+    }
+
+    fn needs_kv_payloads(&self) -> bool {
+        false
+    }
+
+    fn clock(&self) -> Box<dyn Clock> {
+        Box::new(VirtualClock::new())
+    }
+
+    /// Mirror of the real path's suffix planning at granularity 1. The
+    /// LUT policy degrades to even off the zero-offset regime for the
+    /// same reason as [`crate::coordinator::Cluster::plan_partition_suffix`].
+    fn plan_partition(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> Result<Partition> {
+        let p = self.procs.min(c).max(1);
+        let part = match policy {
+            PartitionPolicy::Even => Partition::even(c, p),
+            PartitionPolicy::Ratios(r) => {
+                let k = r.len().min(p).max(1);
+                Partition::from_ratios(c, &r[..k], 1)?
+            }
+            PartitionPolicy::Lut(lut) if start == 0 => {
+                let ratios = lut.predict_ratios(c)?;
+                let k = ratios.len().min(p).max(1);
+                Partition::from_ratios(c, &ratios[..k], 1)?
+            }
+            PartitionPolicy::Lut(_) => Partition::even(c, p),
+        };
+        Ok(part.with_start(start))
+    }
+
+    fn prefill(
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, _want_wire: bool,
+    ) -> Result<PrefillOutcome> {
+        assert!(!req.tokens.is_empty(), "empty prompt {}", req.id);
+        let reuse = reused.as_ref().map_or(0, |r| r.tokens);
+        let suffix = req.tokens.len() - reuse;
+        let part = self.plan_partition(suffix, reuse, policy)?;
+        let mut net = quiet_network(&self.cm, part.sizes().len());
+        let sim = kvr_timeline_offset(&self.cm, &mut net, part.sizes(), reuse)?;
+        self.active.insert(
+            req.id,
+            ActiveKv {
+                rows: req.tokens.len() + 1,
+                reserved: req.max_new_tokens.saturating_sub(1),
+            },
+        );
+        Ok(PrefillOutcome {
+            owner: part.sizes().len() - 1,
+            first_token: 0,
+            ttft: load_s + sim.ttft,
+            reused_tokens: reuse,
+            wire: None,
+        })
+    }
+
+    fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<DecodeOutcome> {
+        let pasts: Vec<usize> = steps.iter().map(|s| s.past_tokens).collect();
+        let dt = self.cm.decode_batch_step_time(&pasts);
+        for s in steps {
+            if let Some(a) = self.active.get_mut(&s.req_id) {
+                a.rows = s.past_tokens + 1;
+                a.reserved = a.reserved.saturating_sub(1);
+            }
+        }
+        Ok(DecodeOutcome {
+            tokens: vec![0; steps.len()],
+            step_s: dt,
+            groups: vec![steps.len()],
+        })
+    }
+
+    fn release(&mut self, _owner: usize, req_id: u64) -> Result<()> {
+        self.active.remove(&req_id);
+        Ok(())
+    }
+
+    fn kv_bytes_active(&self) -> f64 {
+        let rows: usize = self.active.values().map(|a| a.rows).sum();
+        rows as f64 * self.cm.model.kv_bytes_per_token() as f64
+    }
+
+    fn admit_capacity(&self, prompt_tokens: usize, max_new_tokens: usize) -> bool {
+        !self.mem_pressure
+            || self.fits(
+                self.reserved_rows(),
+                prompt_tokens + max_new_tokens.max(1),
+            )
+    }
+
+    fn decode_capacity(&self, want: usize) -> usize {
+        if !self.mem_pressure {
+            return want;
+        }
+        // Checked against the *resident* rows, not the reservation: a
+        // decode step converts one reserved row per rider into a
+        // resident row, so for admitted requests the reserved footprint
+        // is invariant and a device packed to the admission bound still
+        // runs the full batch. The clamp binds only when a reservation
+        // was overridden (an oversized request admitted on an idle
+        // backend) — and never below 1, so an active set always drains.
+        (1..=want)
+            .rev()
+            .find(|&b| self.fits(self.resident_rows(), b))
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_by_name, model_by_name};
+
+    fn backend(procs: usize) -> SimBackend {
+        SimBackend::new(
+            model_by_name("llama7b").unwrap(),
+            hardware_by_name("a100-300gbps").unwrap(),
+            procs,
+        )
+    }
+
+    fn req(id: u64, tokens: usize, max_new: usize) -> GenRequest {
+        GenRequest {
+            id,
+            tokens: (0..tokens as i32).collect(),
+            max_new_tokens: max_new,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn prefill_matches_raw_timeline() {
+        let mut b = backend(4);
+        let cm = b.cost_model().clone();
+        let out = b
+            .prefill(&req(0, 4096, 4), None, 0.0, &PartitionPolicy::Even, false)
+            .unwrap();
+        let part = Partition::even(4096, 4);
+        let mut net = quiet_network(&cm, 4);
+        let want = kvr_timeline_offset(&cm, &mut net, part.sizes(), 0)
+            .unwrap()
+            .ttft;
+        assert_eq!(out.ttft, want);
+        assert_eq!(out.first_token, 0);
+        assert_eq!(out.reused_tokens, 0);
+        assert!(out.wire.is_none());
+    }
+
+    #[test]
+    fn reused_prefill_prices_suffix_plus_loads() {
+        let mut b = backend(4);
+        let cm = b.cost_model().clone();
+        let reused = ReusedPrefix { tokens: 2048, wire: Vec::new() };
+        let out = b
+            .prefill(&req(0, 4096, 4), Some(reused), 0.25, &PartitionPolicy::Even, false)
+            .unwrap();
+        let part = Partition::even(2048, 4);
+        let mut net = quiet_network(&cm, 4);
+        let suffix = kvr_timeline_offset(&cm, &mut net, part.sizes(), 2048)
+            .unwrap()
+            .ttft;
+        assert_eq!(out.ttft, 0.25 + suffix);
+        assert_eq!(out.reused_tokens, 2048);
+    }
+
+    #[test]
+    fn decode_batch_prices_the_shared_weight_stream() {
+        let mut b = backend(2);
+        let cm = b.cost_model().clone();
+        b.prefill(&req(0, 1024, 8), None, 0.0, &PartitionPolicy::Even, false)
+            .unwrap();
+        b.prefill(&req(1, 2048, 8), None, 0.0, &PartitionPolicy::Even, false)
+            .unwrap();
+        let steps = [
+            DecodeStep { owner: 1, req_id: 0, last_token: 0, past_tokens: 1025 },
+            DecodeStep { owner: 1, req_id: 1, last_token: 0, past_tokens: 2049 },
+        ];
+        let out = b.decode_batch(&steps).unwrap();
+        assert_eq!(out.tokens, vec![0, 0]);
+        assert_eq!(out.groups, vec![2]);
+        assert_eq!(out.step_s, cm.decode_batch_step_time(&[1025, 2049]));
+    }
+
+    #[test]
+    fn kv_footprint_tracks_prefill_decode_release() {
+        let mut b = backend(2);
+        let per_row = b.model().kv_bytes_per_token() as f64;
+        assert_eq!(b.kv_bytes_active(), 0.0);
+        b.prefill(&req(7, 1000, 4), None, 0.0, &PartitionPolicy::Even, false)
+            .unwrap();
+        assert_eq!(b.kv_bytes_active(), 1001.0 * per_row);
+        let steps = [DecodeStep {
+            owner: 1,
+            req_id: 7,
+            last_token: 0,
+            past_tokens: 1001,
+        }];
+        b.decode_batch(&steps).unwrap();
+        assert_eq!(b.kv_bytes_active(), 1002.0 * per_row);
+        b.release(1, 7).unwrap();
+        assert_eq!(b.kv_bytes_active(), 0.0);
+    }
+
+    #[test]
+    fn memory_pressure_gates_admission_but_never_stalls_decode() {
+        // Device sized to hold exactly one request's reservation: the
+        // second admission must be refused while the first is active,
+        // and decode capacity must clamp yet stay >= 1.
+        let m = model_by_name("llama7b").unwrap();
+        let mut hw = hardware_by_name("a100-300gbps").unwrap();
+        let one = memory::decode_peak_bytes(&m, 2048 + 8);
+        hw.mem_bytes = one * 1.06;
+        let mut b =
+            SimBackend::new(m, hw, 2).with_memory_pressure(true);
+        assert!(b.admit_capacity(2048, 8), "empty backend must accept");
+        b.prefill(&req(0, 2048, 8), None, 0.0, &PartitionPolicy::Even, false)
+            .unwrap();
+        assert!(!b.admit_capacity(2048, 8), "second request must not fit");
+        assert!(b.decode_capacity(8) >= 1);
+        b.release(1, 0).unwrap();
+        assert!(b.admit_capacity(2048, 8), "release frees the reservation");
+    }
+
+    #[test]
+    fn decode_capacity_ignores_already_reserved_growth() {
+        // Regression: a device packed exactly to the admission bound must
+        // still decode the full batch — each step converts one reserved
+        // row per rider into a resident row, so the reserved footprint
+        // never grows. (The old check re-counted the step's rows on top
+        // of the reservation and spuriously serialized decode to 1.)
+        let m = model_by_name("llama7b").unwrap();
+        let mut hw = hardware_by_name("a100-300gbps").unwrap();
+        // Four requests reserve 4 * (1024 + 8) rows; ~1% slack keeps the
+        // fourth admission clear of float round-off at the bound.
+        hw.mem_bytes = memory::decode_peak_bytes(&m, 4 * 1032) / 0.94;
+        let mut b = SimBackend::new(m, hw, 2).with_memory_pressure(true);
+        for id in 0..4u64 {
+            assert!(b.admit_capacity(1024, 8), "request {id} must admit");
+            b.prefill(&req(id, 1024, 8), None, 0.0, &PartitionPolicy::Even, false)
+                .unwrap();
+        }
+        assert!(!b.admit_capacity(1024, 8), "a fifth reservation is over");
+        assert_eq!(
+            b.decode_capacity(4),
+            4,
+            "reserved decode growth must not be re-counted"
+        );
+    }
+
+    #[test]
+    fn without_memory_pressure_capacity_is_unbounded() {
+        let m = model_by_name("llama7b").unwrap();
+        let mut hw = hardware_by_name("a100-300gbps").unwrap();
+        hw.mem_bytes = 1.0; // absurd device; pressure is off, so fine
+        let mut b = SimBackend::new(m, hw, 2);
+        assert!(b.admit_capacity(100_000, 1000));
+        b.prefill(&req(0, 2048, 8), None, 0.0, &PartitionPolicy::Even, false)
+            .unwrap();
+        assert_eq!(b.decode_capacity(8), 8);
+    }
+
+    #[test]
+    fn plan_partition_matches_even_and_clamps_procs() {
+        let b = backend(4);
+        let part = b.plan_partition(10, 0, &PartitionPolicy::Even).unwrap();
+        assert_eq!(part.sizes(), Partition::even(10, 4).sizes());
+        // Fewer tokens than processes: clamp to one chunk per token.
+        let part = b.plan_partition(2, 0, &PartitionPolicy::Even).unwrap();
+        assert_eq!(part.sizes(), &[1, 1]);
+        let part = b
+            .plan_partition(100, 50, &PartitionPolicy::Ratios(vec![0.7, 0.3]))
+            .unwrap();
+        assert_eq!(part.start(), 50);
+        assert_eq!(part.context(), 100);
+    }
+}

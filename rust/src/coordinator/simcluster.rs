@@ -1,80 +1,63 @@
-//! Simulated serving cluster: the [`crate::sim`] discrete-event prefill
-//! timelines wrapped in the serving API, so end-to-end workloads (and
-//! the prefix cache) run on the modeled 8×A100 fabric without PJRT
-//! artifacts.
+//! Compatibility shim: the pre-unification `SimCluster` serving API as a
+//! thin wrapper over the one serving engine —
+//! [`Scheduler`](crate::coordinator::Scheduler) driving a
+//! [`SimBackend`](crate::coordinator::SimBackend) on a virtual clock
+//! (DESIGN.md §5).
 //!
-//! Virtual-time model (DESIGN.md §4), mirroring the real
-//! [`super::Scheduler`]: one event-driven timeline that prefills and
-//! decode steps contend for.
-//!
-//! * prefills are serialized and exclusive — the runahead chain occupies
-//!   every process (Fig. 3b), so an admission advances the clock by the
-//!   request's prefix loads plus its suffix prefill TTFT;
-//! * decode runs as *batched step events* on the same clock: each event
-//!   advances up to `decode_batch` active requests one token, priced by
-//!   [`CostModel::decode_batch_step_time`] (weights streamed once per
-//!   step, per-request KV on top), and rotates the active set so every
-//!   request shares the batch fairly;
-//! * admission happens at step boundaries: an arrived request preempts
-//!   the next decode event (continuous batching at step granularity),
-//!   so queueing and decode-tail latency emerge from the event order and
-//!   `wall_s` covers the full timeline including the decode tail;
-//! * with a prefix cache, admission runs the hybrid planner, leases the
-//!   reused blocks across the prefill, and admits the finished prompt.
-//!
-//! Responses carry timing only (`tokens` are zero placeholders — the
-//! modeled cluster computes costs, not logits).
-
-use std::collections::VecDeque;
+//! Semantics are unchanged from the event-driven timeline of DESIGN.md
+//! §4: prefills are serialized and exclusive, decode runs as batched
+//! step events that arrived requests preempt, the active set rotates
+//! round-robin, `wall_s` covers the decode tail, and an attached prefix
+//! cache is consulted (and leased) at admission. Responses carry timing
+//! only (`tokens` are zero placeholders — the modeled cluster computes
+//! costs, not logits). New code should use `Scheduler` +
+//! `SimBackend` directly; this wrapper exists so existing call sites
+//! and the differential goldens keep one stable entry point.
 
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use crate::coordinator::simbackend::SimBackend;
+use crate::coordinator::tokenizer::ByteTokenizer;
 use crate::error::Result;
-use crate::partition::Partition;
 use crate::prefixcache::{CacheStats, PrefixCache, PrefixCacheConfig};
 use crate::sim::cost::CostModel;
-use crate::sim::{kvr_timeline_offset, quiet_network};
 
 /// Default cap on requests advanced per batched decode event.
 pub const DEFAULT_DECODE_BATCH: usize = 8;
 
-/// One request in the decode phase of the virtual timeline.
-struct ActiveSim {
-    id: u64,
-    arrival: f64,
-    prompt_tokens: usize,
-    max_new_tokens: usize,
-    /// Tokens generated so far (the prefill's first token included) —
-    /// all of them already sit in the KV cache when the next step runs.
-    produced: usize,
-    ttft: f64,
-    tpot: Vec<f64>,
-    queue_wait: f64,
+/// Serving simulator over the modeled fabric (compatibility wrapper).
+pub struct SimCluster {
+    backend: SimBackend,
+    sched: Scheduler,
 }
 
-/// Serving simulator over the modeled fabric.
-pub struct SimCluster {
-    cm: CostModel,
-    procs: usize,
-    cache: Option<PrefixCache>,
-    decode_batch: usize,
+/// The scheduler configuration reproducing the legacy `SimCluster`
+/// semantics: unbounded admission (queueing emerges from the timeline,
+/// not an `max_active` cap) and the default decode batch.
+fn legacy_config() -> SchedulerConfig {
+    SchedulerConfig {
+        max_active: usize::MAX,
+        decode_batch: DEFAULT_DECODE_BATCH,
+        eos_token: ByteTokenizer::EOS,
+        ..SchedulerConfig::default()
+    }
 }
 
 impl SimCluster {
     pub fn new(model: ModelConfig, hw: HardwareConfig, procs: usize) -> Self {
-        assert!(procs >= 1, "need at least one process");
         Self {
-            cm: CostModel::new(model, hw),
-            procs,
-            cache: None,
-            decode_batch: DEFAULT_DECODE_BATCH,
+            backend: SimBackend::new(model, hw, procs),
+            sched: Scheduler::new(legacy_config()),
         }
     }
 
-    /// Attach a prefix cache with the given knobs.
+    /// Attach a prefix cache with the given knobs (plans are priced with
+    /// this backend's own cost model).
     pub fn with_prefix_cache(mut self, cfg: PrefixCacheConfig) -> Self {
-        self.cache = Some(PrefixCache::new(cfg));
+        let cm = self.backend.cost_model().clone();
+        self.sched.attach_prefix_cache(PrefixCache::new(cfg), cm);
         self
     }
 
@@ -82,44 +65,16 @@ impl SimCluster {
     /// (1 = per-request decode, the pre-batching model).
     pub fn with_decode_batch(mut self, decode_batch: usize) -> Self {
         assert!(decode_batch >= 1, "decode batch must be at least 1");
-        self.decode_batch = decode_batch;
+        self.sched.config_mut().decode_batch = decode_batch;
         self
     }
 
     pub fn cost_model(&self) -> &CostModel {
-        &self.cm
+        self.backend.cost_model()
     }
 
     pub fn prefix_stats(&self) -> Option<&CacheStats> {
-        self.cache.as_ref().map(|pc| pc.stats())
-    }
-
-    /// Retire every active request that hit its token budget at virtual
-    /// time `clock`, recording metrics and building its response.
-    fn retire_finished(
-        active: &mut Vec<ActiveSim>, clock: f64, metrics: &mut ServeMetrics,
-        done: &mut Vec<GenResponse>,
-    ) {
-        let mut i = 0;
-        while i < active.len() {
-            if active[i].produced < active[i].max_new_tokens.max(1) {
-                i += 1;
-                continue;
-            }
-            let a = active.swap_remove(i);
-            // E2E is wall time on the shared timeline: it includes decode
-            // stalls where an interleaved prefill held the chain, which
-            // per-step TPOT entries deliberately do not.
-            let e2e = clock - a.arrival;
-            metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
-            done.push(GenResponse {
-                id: a.id,
-                tokens: vec![0; a.produced],
-                ttft: a.ttft,
-                tpot: a.tpot,
-                e2e,
-            });
-        }
+        self.sched.prefix_cache_stats()
     }
 
     /// Serve a batch of requests in virtual time; returns per-request
@@ -127,97 +82,7 @@ impl SimCluster {
     pub fn serve(
         &mut self, requests: &[GenRequest],
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
-        let mut order: Vec<&GenRequest> = requests.iter().collect();
-        order.sort_by(|a, b| {
-            a.arrival.partial_cmp(&b.arrival).expect("finite arrivals")
-        });
-        let mut pending: VecDeque<&GenRequest> = order.into();
-        let mut active: Vec<ActiveSim> = Vec::new();
-        let mut metrics = ServeMetrics::default();
-        let mut done = Vec::with_capacity(pending.len());
-        let mut clock = 0.0f64;
-
-        while !pending.is_empty() || !active.is_empty() {
-            // Admission event: the head-of-line request takes the chain as
-            // soon as it has arrived (preempting further decode events); an
-            // otherwise-idle timeline jumps forward to the next arrival.
-            let admit = pending
-                .front()
-                .is_some_and(|req| req.arrival <= clock || active.is_empty());
-            if admit {
-                let req = pending.pop_front().unwrap();
-                assert!(!req.tokens.is_empty(), "empty prompt {}", req.id);
-                clock = clock.max(req.arrival);
-                let queue_wait = clock - req.arrival;
-
-                // Consult the cache, lease the reused blocks.
-                let (load_s, reuse, lease) = match self.cache.as_mut() {
-                    None => (0.0, 0, None),
-                    Some(pc) => {
-                        let plan =
-                            pc.plan_prefill(&self.cm, &req.tokens, self.procs)?;
-                        let lease = pc.lease(&plan)?;
-                        metrics.record_prefix(&plan);
-                        (plan.load_s, plan.reuse_tokens, Some(lease))
-                    }
-                };
-
-                // Suffix-only runahead prefill after the reused rows.
-                let suffix = req.tokens.len() - reuse;
-                let p = self.procs.min(suffix).max(1);
-                let part = Partition::even(suffix, p).with_start(reuse);
-                let mut net = quiet_network(&self.cm, p);
-                let sim_run =
-                    kvr_timeline_offset(&self.cm, &mut net, part.sizes(), reuse);
-                // Release before propagating any sim error — a leaked lease
-                // would pin its blocks for the cache's lifetime.
-                if let Some(pc) = self.cache.as_mut() {
-                    if let Some(lease) = lease {
-                        pc.release(lease);
-                    }
-                }
-                let ttft = load_s + sim_run?.ttft;
-                if let Some(pc) = self.cache.as_mut() {
-                    pc.admit(&req.tokens);
-                }
-                clock += ttft;
-                active.push(ActiveSim {
-                    id: req.id,
-                    arrival: req.arrival,
-                    prompt_tokens: req.tokens.len(),
-                    max_new_tokens: req.max_new_tokens,
-                    produced: 1,
-                    ttft,
-                    tpot: Vec::new(),
-                    queue_wait,
-                });
-                Self::retire_finished(&mut active, clock, &mut metrics, &mut done);
-                continue;
-            }
-
-            // Decode event: one batched step over the first `decode_batch`
-            // active requests, then rotate so a deep active set shares the
-            // batch round-robin.
-            let b = active.len().min(self.decode_batch);
-            let pasts: Vec<usize> = active[..b]
-                .iter()
-                // Past covers the prompt AND every token generated so far
-                // (they were appended to the cache by earlier steps).
-                .map(|a| a.prompt_tokens + a.produced)
-                .collect();
-            let dt = self.cm.decode_batch_step_time(&pasts);
-            clock += dt;
-            metrics.record_decode_step(b);
-            for a in &mut active[..b] {
-                a.tpot.push(dt);
-                a.produced += 1;
-            }
-            active.rotate_left(b);
-            Self::retire_finished(&mut active, clock, &mut metrics, &mut done);
-        }
-        metrics.wall_s = clock;
-        done.sort_by_key(|r| r.id);
-        Ok((done, metrics))
+        self.sched.serve(&mut self.backend, requests.to_vec())
     }
 }
 
@@ -389,7 +254,7 @@ mod tests {
         // prompt + (i+1) generated tokens, so each TPOT entry must price
         // a strictly deeper past than the last — and the first entry must
         // already include the prefill's token.
-        let cm = sim(1).cm.clone();
+        let cm = sim(1).cost_model().clone();
         let reqs = vec![GenRequest {
             id: 0,
             tokens: (0..1024).collect(),

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use kvr::config::{hardware_by_name, model_by_name};
 use kvr::coordinator::{
     ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
-    SchedulerConfig, SimCluster,
+    SchedulerConfig, SimBackend,
 };
 use kvr::engines::{Evaluator, Method};
 use kvr::error::Result;
@@ -41,7 +41,8 @@ USAGE:
   kvr serve [--artifacts artifacts] [--workers 2] [--requests 8]
             [--prompt-len 128] [--max-new 8] [--rate 2.0] [--seed 0]
             [--sim] [--model llama7b] [--hw a100-300gbps]
-            [--decode-batch 8] [--shared-prefix 0.5] [--prefix-cache]
+            [--decode-batch 8] [--max-active N] [--shared-prefix 0.5]
+            [--prefix-cache] [--mem-pressure]
             [--block-tokens N] [--hot-tokens N] [--cold-tokens N]
             [--cold-bw BYTES_PER_S] [--cold-latency S]
   kvr calibrate [--artifacts artifacts]
@@ -50,7 +51,9 @@ Prefix cache: `--prefix-cache` reuses cached prompt-prefix KV across
 requests (hybrid compute-or-load per block). `--sim` serves on the
 modeled A100 cluster instead of the PJRT tiny model. `--decode-batch`
 caps how many requests one batched decode step advances (1 = per-request
-decode).
+decode); `--max-active` caps concurrent decode-phase requests (sim
+default: unbounded). `--mem-pressure` (sim) gates admission and decode
+on the modeled device-memory footprint of the active KV.
 ";
 
 fn main() {
@@ -66,7 +69,8 @@ fn main() {
 }
 
 fn dispatch(raw: &[String]) -> Result<()> {
-    let args = Args::parse(&raw[1..], &["quiet", "sim", "prefix-cache"])?;
+    let args =
+        Args::parse(&raw[1..], &["quiet", "sim", "prefix-cache", "mem-pressure"])?;
     match raw[0].as_str() {
         "sim" => cmd_sim(&args),
         "search" => cmd_search(&args),
@@ -227,13 +231,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let requests = shared_prefix_requests(
             &mut rng, n_requests, prompt_len, frac, rate, max_new, 1,
         );
-        let mut cluster =
-            SimCluster::new(model, hw, workers).with_decode_batch(decode_batch);
+        // The unified serving engine over the modeled backend: same
+        // Scheduler event loop as the real path, on a virtual clock.
+        let mut backend = SimBackend::new(model, hw, workers)
+            .with_memory_pressure(args.flag("mem-pressure"));
+        let mut sched = Scheduler::new(SchedulerConfig {
+            max_active: args.usize_or("max-active", usize::MAX)?.max(1),
+            decode_batch,
+            ..Default::default()
+        });
         if args.flag("prefix-cache") {
-            cluster =
-                cluster.with_prefix_cache(prefix_cache_config(args, 512)?);
+            let cm = backend.cost_model().clone();
+            sched = sched.with_prefix_cache(
+                PrefixCache::new(prefix_cache_config(args, 512)?),
+                cm,
+            );
         }
-        let (responses, metrics) = cluster.serve(&requests)?;
+        let (responses, metrics) = sched.serve(&mut backend, requests)?;
         for r in &responses {
             println!("req {:>3}: ttft {}  e2e {}", r.id, fmt_time(r.ttft),
                      fmt_time(r.e2e));
@@ -250,6 +264,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut sched = Scheduler::new(SchedulerConfig {
         decode_batch,
+        max_active: args.usize_or("max-active", 4)?.max(1),
         ..Default::default()
     });
     if args.flag("prefix-cache") {

@@ -79,6 +79,18 @@ pub fn ooms(peak_bytes: f64, mem_bytes: f64) -> bool {
     peak_bytes > mem_bytes * HEADROOM
 }
 
+/// Decode-phase footprint: `kv_rows` total active KV rows (summed over
+/// every in-flight request) resident alongside the weights. Batched
+/// decode grows each active cache one row per step, and the paper's
+/// extension phase keeps the whole cache on the cache-owning process,
+/// so the aggregate is charged to one device — the admission-control
+/// bound behind [`crate::coordinator::ServingBackend::admit_capacity`].
+pub fn decode_peak_bytes(model: &ModelConfig, kv_rows: usize) -> f64 {
+    model.weight_bytes() as f64
+        + kv_rows as f64 * model.kv_bytes_per_token() as f64
+        + BASE_BYTES
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +149,24 @@ mod tests {
         assert!(
             kvr_peak_bytes_max_offset(&m, &[4096, 4096], 8192)
                 > kvr_peak_bytes_max(&m, &[4096, 4096])
+        );
+    }
+
+    #[test]
+    fn decode_footprint_scales_with_active_rows_and_ooms() {
+        // Llama-7B on an 80 GB device: a handful of 4k-context requests
+        // decode comfortably, but the aggregate KV of ~120 such requests
+        // (~0.5 MB/token * 4096 * 120 ≈ 250 GB) cannot fit.
+        let m = model_by_name("llama7b").unwrap();
+        let few = decode_peak_bytes(&m, 4 * 4096);
+        let many = decode_peak_bytes(&m, 120 * 4096);
+        assert!(many > few);
+        assert!(!ooms(few, A100));
+        assert!(ooms(many, A100));
+        // Zero active rows cost exactly weights + allocator base.
+        assert_eq!(
+            decode_peak_bytes(&m, 0),
+            m.weight_bytes() as f64 + BASE_BYTES
         );
     }
 

@@ -17,9 +17,11 @@
 //! the paper's figures and the tests can assert causality invariants.
 //!
 //! These timelines cover one prefill. The *serving-level* event loop —
-//! admissions interleaved with batched decode steps on one virtual clock
-//! — lives in [`crate::coordinator::SimCluster`], priced by
-//! [`cost::CostModel::decode_batch_step_time`] for the extension phase.
+//! admissions interleaved with batched decode steps on one clock — is
+//! [`crate::coordinator::Scheduler`] driving
+//! [`crate::coordinator::SimBackend`] (virtual time, priced by
+//! [`cost::CostModel::decode_batch_step_time`] for the extension phase)
+//! or the real [`crate::coordinator::Cluster`] (wall time).
 
 pub mod cost;
 pub mod memory;

@@ -1,0 +1,379 @@
+//! Differential goldens for the unified serving engine (DESIGN.md §5).
+//!
+//! `reference_serve` below is a line-faithful port of the pre-unification
+//! `SimCluster::serve` discrete-event loop (PR 2's timeline semantics),
+//! kept here as the executable golden: for any workload, serving through
+//! the one `Scheduler` event loop — directly over a `SimBackend`, or via
+//! the `SimCluster` compatibility shim — must reproduce its metrics
+//! (wall clock, throughput, latencies, hit rate, decode occupancy)
+//! exactly. A refactor that drifts the event order, the cache
+//! bookkeeping, or the pricing breaks these assertions.
+
+use std::collections::VecDeque;
+
+use kvr::config::{hardware_by_name, model_by_name, HardwareConfig, ModelConfig};
+use kvr::coordinator::{
+    ByteTokenizer, GenRequest, GenResponse, Scheduler, SchedulerConfig,
+    ServeMetrics, ServingBackend, SimBackend, SimCluster,
+};
+use kvr::partition::Partition;
+use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
+use kvr::sim::cost::CostModel;
+use kvr::sim::{kvr_timeline_offset, quiet_network};
+
+struct ActiveSim {
+    id: u64,
+    arrival: f64,
+    prompt_tokens: usize,
+    max_new_tokens: usize,
+    produced: usize,
+    ttft: f64,
+    tpot: Vec<f64>,
+    queue_wait: f64,
+}
+
+fn retire_finished(
+    active: &mut Vec<ActiveSim>, clock: f64, metrics: &mut ServeMetrics,
+    done: &mut Vec<GenResponse>,
+) {
+    let mut i = 0;
+    while i < active.len() {
+        if active[i].produced < active[i].max_new_tokens.max(1) {
+            i += 1;
+            continue;
+        }
+        let a = active.swap_remove(i);
+        let e2e = clock - a.arrival;
+        metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
+        done.push(GenResponse {
+            id: a.id,
+            tokens: vec![0; a.produced],
+            ttft: a.ttft,
+            tpot: a.tpot,
+            e2e,
+        });
+    }
+}
+
+/// The pre-unification `SimCluster::serve`, verbatim in behavior.
+fn reference_serve(
+    cm: &CostModel, procs: usize, mut cache: Option<PrefixCache>,
+    decode_batch: usize, requests: &[GenRequest],
+) -> (Vec<GenResponse>, ServeMetrics) {
+    let mut order: Vec<&GenRequest> = requests.iter().collect();
+    order.sort_by(|a, b| {
+        a.arrival.partial_cmp(&b.arrival).expect("finite arrivals")
+    });
+    let mut pending: VecDeque<&GenRequest> = order.into();
+    let mut active: Vec<ActiveSim> = Vec::new();
+    let mut metrics = ServeMetrics::default();
+    let mut done = Vec::with_capacity(pending.len());
+    let mut clock = 0.0f64;
+
+    while !pending.is_empty() || !active.is_empty() {
+        let admit = pending
+            .front()
+            .is_some_and(|req| req.arrival <= clock || active.is_empty());
+        if admit {
+            let req = pending.pop_front().unwrap();
+            clock = clock.max(req.arrival);
+            let queue_wait = clock - req.arrival;
+
+            let (load_s, reuse, lease) = match cache.as_mut() {
+                None => (0.0, 0, None),
+                Some(pc) => {
+                    let plan =
+                        pc.plan_prefill(cm, &req.tokens, procs).unwrap();
+                    let lease = pc.lease(&plan).unwrap();
+                    metrics.record_prefix(&plan);
+                    (plan.load_s, plan.reuse_tokens, Some(lease))
+                }
+            };
+
+            let suffix = req.tokens.len() - reuse;
+            let p = procs.min(suffix).max(1);
+            let part = Partition::even(suffix, p).with_start(reuse);
+            let mut net = quiet_network(cm, p);
+            let sim_run =
+                kvr_timeline_offset(cm, &mut net, part.sizes(), reuse);
+            if let Some(pc) = cache.as_mut() {
+                if let Some(lease) = lease {
+                    pc.release(lease);
+                }
+            }
+            let ttft = load_s + sim_run.unwrap().ttft;
+            if let Some(pc) = cache.as_mut() {
+                pc.admit(&req.tokens);
+            }
+            clock += ttft;
+            active.push(ActiveSim {
+                id: req.id,
+                arrival: req.arrival,
+                prompt_tokens: req.tokens.len(),
+                max_new_tokens: req.max_new_tokens,
+                produced: 1,
+                ttft,
+                tpot: Vec::new(),
+                queue_wait,
+            });
+            retire_finished(&mut active, clock, &mut metrics, &mut done);
+            continue;
+        }
+
+        let b = active.len().min(decode_batch);
+        let pasts: Vec<usize> = active[..b]
+            .iter()
+            .map(|a| a.prompt_tokens + a.produced)
+            .collect();
+        let dt = cm.decode_batch_step_time(&pasts);
+        clock += dt;
+        metrics.record_decode_step(b);
+        for a in &mut active[..b] {
+            a.tpot.push(dt);
+            a.produced += 1;
+        }
+        active.rotate_left(b);
+        retire_finished(&mut active, clock, &mut metrics, &mut done);
+    }
+    metrics.wall_s = clock;
+    done.sort_by_key(|r| r.id);
+    (done, metrics)
+}
+
+fn parts() -> (ModelConfig, HardwareConfig) {
+    (
+        model_by_name("llama7b").unwrap(),
+        hardware_by_name("a100-300gbps").unwrap(),
+    )
+}
+
+fn cache_cfg() -> PrefixCacheConfig {
+    PrefixCacheConfig {
+        block_tokens: 512,
+        hot_capacity_tokens: 64 * 512,
+        cold_capacity_tokens: 512 * 512,
+        cold_load_bw: 300e9,
+        cold_load_latency: 1e-4,
+    }
+}
+
+/// `n` prompts sharing a `shared`-token prefix, staggered arrivals.
+fn workload(n: u64, shared: usize, tail: usize, max_new: usize) -> Vec<GenRequest> {
+    (0..n)
+        .map(|id| {
+            let mut tokens: Vec<i32> = (0..shared as i32).collect();
+            tokens.extend((0..tail as i32).map(|i| i * 31 + 1 + id as i32));
+            GenRequest {
+                id,
+                tokens,
+                max_new_tokens: max_new,
+                arrival: id as f64 * 0.05,
+            }
+        })
+        .collect()
+}
+
+fn sim_scheduler(decode_batch: usize) -> Scheduler {
+    Scheduler::new(SchedulerConfig {
+        max_active: usize::MAX,
+        decode_batch,
+        eos_token: ByteTokenizer::EOS,
+        ..SchedulerConfig::default()
+    })
+}
+
+fn assert_float_eq(a: f64, b: f64, what: &str) {
+    assert!(
+        (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1.0),
+        "{what}: {a} vs {b}"
+    );
+}
+
+fn assert_metrics_match(got: &ServeMetrics, want: &ServeMetrics) {
+    assert_float_eq(got.wall_s, want.wall_s, "wall_s");
+    assert_float_eq(got.throughput(), want.throughput(), "throughput");
+    assert_eq!(got.requests, want.requests);
+    assert_eq!(got.tokens_out, want.tokens_out);
+    assert_eq!(got.ttfts.len(), want.ttfts.len());
+    for (i, (a, b)) in got.ttfts.iter().zip(&want.ttfts).enumerate() {
+        assert_float_eq(*a, *b, &format!("ttft[{i}]"));
+    }
+    for (i, (a, b)) in got.e2es.iter().zip(&want.e2es).enumerate() {
+        assert_float_eq(*a, *b, &format!("e2e[{i}]"));
+    }
+    for (i, (a, b)) in got.queue_waits.iter().zip(&want.queue_waits).enumerate()
+    {
+        assert_float_eq(*a, *b, &format!("queue[{i}]"));
+    }
+    // Prefix-cache effectiveness.
+    assert_eq!(got.prefix_lookups, want.prefix_lookups);
+    assert_eq!(got.prefix_hits, want.prefix_hits);
+    assert_eq!(got.reused_tokens, want.reused_tokens);
+    assert_eq!(got.loaded_blocks, want.loaded_blocks);
+    assert_eq!(got.recomputed_blocks, want.recomputed_blocks);
+    // Decode occupancy.
+    assert_eq!(got.decode_steps, want.decode_steps);
+    assert_eq!(got.decode_batch_sum, want.decode_batch_sum);
+    assert_eq!(got.max_decode_batch, want.max_decode_batch);
+    assert_eq!(got.solo_steps, want.solo_steps);
+    assert_eq!(got.batched_steps, want.batched_steps);
+}
+
+fn assert_responses_match(got: &[GenResponse], want: &[GenResponse]) {
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.tokens, w.tokens);
+        assert_float_eq(g.ttft, w.ttft, "resp ttft");
+        assert_float_eq(g.e2e, w.e2e, "resp e2e");
+        assert_eq!(g.tpot.len(), w.tpot.len());
+        for (a, b) in g.tpot.iter().zip(&w.tpot) {
+            assert_float_eq(*a, *b, "resp tpot");
+        }
+    }
+}
+
+#[test]
+fn unified_engine_matches_pre_refactor_goldens_without_cache() {
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    for decode_batch in [1usize, 4, 8] {
+        let reqs = workload(8, 2048, 512, 24);
+        let (want_resp, want) =
+            reference_serve(&cm, 4, None, decode_batch, &reqs);
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let (got_resp, got) =
+            sim_scheduler(decode_batch).serve(&mut backend, reqs).unwrap();
+        assert_metrics_match(&got, &want);
+        assert_responses_match(&got_resp, &want_resp);
+    }
+}
+
+#[test]
+fn unified_engine_matches_pre_refactor_goldens_with_cache() {
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let reqs = workload(8, 4096, 1024, 8);
+    let (want_resp, want) = reference_serve(
+        &cm, 4, Some(PrefixCache::new(cache_cfg())), 8, &reqs,
+    );
+    assert!(want.prefix_hits > 0, "golden workload must exercise the cache");
+    let mut backend = SimBackend::new(model, hw, 4);
+    let mut sched = sim_scheduler(8)
+        .with_prefix_cache(PrefixCache::new(cache_cfg()), cm.clone());
+    let (got_resp, got) = sched.serve(&mut backend, reqs).unwrap();
+    assert_metrics_match(&got, &want);
+    assert_responses_match(&got_resp, &want_resp);
+    // The store-level stats agree with the golden run's too.
+    let stats = sched.prefix_cache_stats().unwrap();
+    assert_eq!(stats.hits, want.prefix_hits);
+}
+
+#[test]
+fn simcluster_shim_routes_through_the_same_loop() {
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let reqs = workload(6, 2048, 512, 16);
+    let (want_resp, want) = reference_serve(
+        &cm, 4, Some(PrefixCache::new(cache_cfg())), 4, &reqs,
+    );
+    let mut shim = SimCluster::new(model, hw, 4)
+        .with_prefix_cache(cache_cfg())
+        .with_decode_batch(4);
+    let (got_resp, got) = shim.serve(&reqs).unwrap();
+    assert_metrics_match(&got, &want);
+    assert_responses_match(&got_resp, &want_resp);
+}
+
+#[test]
+fn dyn_serving_backend_is_usable() {
+    // The trait must stay object-safe: erase the concrete backend and
+    // serve through `&mut dyn ServingBackend`.
+    let (model, hw) = parts();
+    let mut boxed: Box<dyn ServingBackend> =
+        Box::new(SimBackend::new(model.clone(), hw.clone(), 4));
+    assert_eq!(boxed.workers(), 4);
+    assert_eq!(boxed.granularity(), 1);
+    assert!(!boxed.needs_kv_payloads());
+    assert_eq!(boxed.kv_bytes_active(), 0.0);
+    let reqs = workload(4, 1024, 256, 6);
+    let (resp, metrics) =
+        sim_scheduler(4).serve(boxed.as_mut(), reqs.clone()).unwrap();
+    assert_eq!(resp.len(), 4);
+    assert!(metrics.wall_s > 0.0);
+    // Identical to serving the sized type.
+    let mut sized = SimBackend::new(model, hw, 4);
+    let (resp2, metrics2) = sim_scheduler(4).serve(&mut sized, reqs).unwrap();
+    assert_metrics_match(&metrics, &metrics2);
+    assert_responses_match(&resp, &resp2);
+}
+
+#[test]
+fn out_of_order_arrivals_do_not_stall_the_line() {
+    // Regression for the real/sim admission divergence: requests are
+    // admitted in ARRIVAL order on every backend. Submit the
+    // late-arriving request first; the earlier arrival must be served
+    // immediately rather than queueing behind the submission-order
+    // head-of-line (which would inflate its E2E by the whole gap).
+    let (model, hw) = parts();
+    let mut reqs = workload(2, 2048, 512, 4);
+    reqs[0].arrival = 50.0; // submitted first, arrives much later
+    reqs[1].arrival = 0.0; // submitted second, arrives first
+    let mut backend = SimBackend::new(model, hw, 4);
+    let (resp, metrics) = sim_scheduler(8).serve(&mut backend, reqs).unwrap();
+    let early = &resp[1]; // id 1, arrival 0.0
+    let late = &resp[0]; // id 0, arrival 50.0
+    assert!(
+        early.e2e < 10.0,
+        "early arrival stalled behind a later head-of-line: e2e {}",
+        early.e2e
+    );
+    assert!(
+        late.e2e < 10.0,
+        "late arrival waits for its own arrival, not the queue: e2e {}",
+        late.e2e
+    );
+    // Neither request queued: each found an idle chain on arrival.
+    assert!(metrics.queue_waits.iter().all(|&q| q < 1.0));
+    assert!(metrics.wall_s >= 50.0, "timeline covers the late arrival");
+}
+
+#[test]
+fn memory_pressure_serializes_admissions_end_to_end() {
+    // Decode-side memory pressure through the full loop: on a device
+    // sized for one request's KV reservation, simultaneous arrivals
+    // serve one at a time (no batched decode ever forms), while the
+    // same workload without pressure decodes as a batch.
+    let (model, hw) = parts();
+    let mut small = hw.clone();
+    // Each request reserves prompt + decode budget = 1032 KV rows at
+    // admission. Size the device so its usable capacity (95% headroom,
+    // see sim::memory) lands midway between two and three reservations.
+    small.mem_bytes =
+        kvr::sim::memory::decode_peak_bytes(&model, 2 * 1032 + 516) / 0.95;
+    let reqs: Vec<GenRequest> = (0..4u64)
+        .map(|id| GenRequest {
+            id,
+            tokens: (0..1024).map(|i| i + id as i32).collect(),
+            max_new_tokens: 8,
+            arrival: 0.0,
+        })
+        .collect();
+
+    let mut pressured = SimBackend::new(model.clone(), small.clone(), 4)
+        .with_memory_pressure(true);
+    let (resp_p, m_p) =
+        sim_scheduler(8).serve(&mut pressured, reqs.clone()).unwrap();
+    assert_eq!(resp_p.len(), 4, "pressure must defer, never drop");
+    assert!(
+        m_p.max_decode_batch <= 2,
+        "capacity of two reservations cannot batch wider: {}",
+        m_p.max_decode_batch
+    );
+    assert!(m_p.queue_waits.iter().filter(|&&q| q > 0.0).count() >= 2);
+
+    let mut free = SimBackend::new(model, small, 4);
+    let (_, m_f) = sim_scheduler(8).serve(&mut free, reqs).unwrap();
+    assert_eq!(m_f.max_decode_batch, 4, "pressure off admits everyone");
+    assert!(m_p.wall_s >= m_f.wall_s - 1e-12);
+}
