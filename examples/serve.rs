@@ -13,9 +13,11 @@
 //!
 //! `--prefix-cache` turns on cross-request prefix-KV reuse;
 //! `--decode-batch` caps how many requests one batched decode step
-//! advances (1 = per-request decode). In sim mode the same workload is
-//! served cache-off then cache-on so the TTFT win and hit rate print
-//! side by side:
+//! advances (1 = per-request decode); `--prefill-chunk N` splits each
+//! prefill into N-token chunk events interleaved with decode events
+//! (0 = whole prompt in one chunk), bounding the decode stall a long
+//! prompt causes. In sim mode the same workload is served cache-off
+//! then cache-on so the TTFT win and hit rate print side by side:
 //!
 //! ```bash
 //! cargo run --release --example serve -- --sim --prefix-cache \
@@ -76,6 +78,7 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
     let max_new = args.usize_or("max-new", 8)?;
     let seed = args.u64_or("seed", 42)?;
     let decode_batch = args.usize_or("decode-batch", 8)?.max(1);
+    let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
     let with_cache = args.flag("prefix-cache");
 
     let mut rng = Rng::new(seed);
@@ -83,7 +86,8 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
     println!(
         "simulated cluster: {} on {} with {procs} processes\n\
          workload: {n} requests x {prompt_len} prompt tokens, {:.0}% shared \
-         prefix, Poisson rate {rate}/s, decode batch {decode_batch}\n",
+         prefix, Poisson rate {rate}/s, decode batch {decode_batch}, \
+         prefill chunk {prefill_chunk}\n",
         model.name, hw.name, frac * 100.0
     );
 
@@ -93,6 +97,7 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
         Scheduler::new(SchedulerConfig {
             max_active: usize::MAX,
             decode_batch,
+            prefill_chunk,
             ..Default::default()
         })
     };
@@ -186,6 +191,7 @@ fn serve_real(args: &Args) -> kvr::Result<()> {
         policy: PartitionPolicy::Even,
         max_active: 3,
         decode_batch: args.usize_or("decode-batch", 8)?.max(1),
+        prefill_chunk: args.usize_or("prefill-chunk", 0)?,
         ..Default::default()
     });
     if args.flag("prefix-cache") {

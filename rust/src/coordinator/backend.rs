@@ -19,10 +19,13 @@
 //! code is identical — the paper's dual-purposing idea applied to the
 //! serving layer itself.
 //!
-//! Lease-safety invariant (DESIGN.md §5): any error path out of
-//! [`ServingBackend::prefill`] must end with the scheduler releasing the
-//! admission's [`crate::prefixcache::Lease`] before the error
-//! propagates; a leaked lease pins its blocks for the cache's lifetime.
+//! Lease-safety invariant (DESIGN.md §5/§6): the admission's
+//! [`crate::prefixcache::Lease`] spans the whole (possibly chunked)
+//! prefill job; any error path out of [`ServingBackend::prefill`] or a
+//! partially-run [`PrefillJob`] must end with the scheduler calling
+//! [`ServingBackend::prefill_abort`] and releasing the lease before
+//! the error propagates — a leaked lease pins its blocks for the
+//! cache's lifetime.
 
 use std::time::Instant;
 
@@ -120,6 +123,163 @@ pub struct PrefillOutcome {
     pub wire: Option<Vec<u8>>,
 }
 
+/// A resumable chunked prefill (DESIGN.md §6): the scheduler opens one
+/// with [`ServingBackend::prefill_begin`] and drives it chunk by chunk
+/// with [`ServingBackend::prefill_chunk`], interleaving batched decode
+/// events between chunks so a long prompt stalls in-flight decodes by
+/// at most one chunk time (Sarathi-style chunked prefill).
+///
+/// The job owns everything the backend needs to resume: the request,
+/// the cache-provided reused prefix (chunk 0's seed), the granularity-
+/// aligned chunk plan, and — on payload backends — the accumulated KV
+/// wire carried from chunk to chunk. Progress fields are only mutated
+/// through [`PrefillJob::advance`], so `done_tokens`, `chunks_done`,
+/// and `elapsed` can never drift apart.
+pub struct PrefillJob {
+    /// The request being prefilled.
+    pub req: GenRequest,
+    /// Partition policy each chunk's chain run plans with.
+    pub policy: PartitionPolicy,
+    /// Ship the final accumulated prompt KV back with the last chunk
+    /// (for prefix-cache admission).
+    pub want_wire: bool,
+    /// Prefix rows the prefix cache contributed (constant over the job).
+    pub reused_tokens: usize,
+    /// Cache-provided prefix seeding the first chunk; taken by the
+    /// backend when that chunk runs.
+    pub(crate) reused: Option<ReusedPrefix>,
+    /// Modeled prefix-load seconds still to charge (zero after the
+    /// first chunk; real backends measure loads instead).
+    pub(crate) load_s: f64,
+    /// Suffix chunk sizes, in chain order.
+    chunk_sizes: Vec<usize>,
+    /// Chunks completed so far.
+    completed: usize,
+    /// Prompt rows materialized so far (reused + completed chunks).
+    done_tokens: usize,
+    /// Chain-occupancy seconds accumulated over completed chunks — the
+    /// job's TTFT once done (inter-chunk decode events excluded).
+    elapsed: f64,
+    /// Accumulated prompt KV carried between chunks: payload backends
+    /// seed the next chunk's chain head with it; timing-only backends
+    /// never set it (the row count lives in `done_tokens`).
+    pub(crate) carry: Option<ReusedPrefix>,
+    /// Worker holding the partial accumulated cache (real path) —
+    /// released before the next chunk re-seeds the chain, or by
+    /// [`ServingBackend::prefill_abort`] on error paths.
+    pub(crate) carry_owner: Option<usize>,
+}
+
+impl PrefillJob {
+    /// Plan a job over the prompt's uncached suffix: chunks of
+    /// `chunk_tokens` rounded down to `granularity` (0 = the whole
+    /// suffix in one chunk), the last chunk taking the remainder.
+    pub fn new(
+        req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+        granularity: usize,
+    ) -> Self {
+        let reused_tokens = reused.as_ref().map_or(0, |r| r.tokens);
+        let suffix = req.tokens.len().saturating_sub(reused_tokens);
+        let g = granularity.max(1);
+        let chunk = if chunk_tokens == 0 {
+            suffix.max(1)
+        } else {
+            ((chunk_tokens / g) * g).max(g)
+        };
+        let mut chunk_sizes = Vec::with_capacity(suffix.div_ceil(chunk));
+        let mut left = suffix;
+        while left > chunk {
+            chunk_sizes.push(chunk);
+            left -= chunk;
+        }
+        chunk_sizes.push(left);
+        Self {
+            req,
+            policy,
+            want_wire,
+            reused_tokens,
+            reused,
+            load_s,
+            chunk_sizes,
+            completed: 0,
+            done_tokens: reused_tokens,
+            elapsed: 0.0,
+            carry: None,
+            carry_owner: None,
+        }
+    }
+
+    /// One whole-prompt chunk (the unchunked surface the default trait
+    /// impls provide).
+    pub fn single(
+        req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: PartitionPolicy, want_wire: bool,
+    ) -> Self {
+        Self::new(req, reused, load_s, policy, want_wire, 0, 1)
+    }
+
+    pub fn chunks_total(&self) -> usize {
+        self.chunk_sizes.len()
+    }
+
+    pub fn chunks_done(&self) -> usize {
+        self.completed
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completed == self.chunk_sizes.len()
+    }
+
+    /// Prompt rows materialized so far (reused + completed chunks).
+    pub fn done_tokens(&self) -> usize {
+        self.done_tokens
+    }
+
+    /// Chain-occupancy seconds accumulated so far.
+    pub fn elapsed(&self) -> f64 {
+        self.elapsed
+    }
+
+    /// The next chunk as `(start_row, rows)`; `None` once finished.
+    pub fn next_chunk(&self) -> Option<(usize, usize)> {
+        (!self.is_done())
+            .then(|| (self.done_tokens, self.chunk_sizes[self.completed]))
+    }
+
+    /// Take the cache-provided seed for the first chunk.
+    pub(crate) fn take_reused(&mut self) -> Option<ReusedPrefix> {
+        self.reused.take()
+    }
+
+    /// Prefix-load seconds still to charge (zero after the first take).
+    pub(crate) fn take_load_s(&mut self) -> f64 {
+        std::mem::replace(&mut self.load_s, 0.0)
+    }
+
+    /// Mark the next chunk complete: `rows` more prompt rows landed in
+    /// `chunk_s` seconds of chain occupancy.
+    pub(crate) fn advance(&mut self, rows: usize, chunk_s: f64) {
+        debug_assert!(!self.is_done(), "advance past the last chunk");
+        debug_assert_eq!(rows, self.chunk_sizes[self.completed]);
+        self.completed += 1;
+        self.done_tokens += rows;
+        self.elapsed += chunk_s;
+    }
+}
+
+/// Outcome of one [`ServingBackend::prefill_chunk`] event.
+#[derive(Clone, Debug)]
+pub struct ChunkOutcome {
+    /// Seconds the chunk occupied the chain — measured (real) or
+    /// modeled (sim; the first chunk includes the prefix-load time).
+    /// Charged to the clock; the decode stall one chunk causes is
+    /// bounded by it.
+    pub chunk_s: f64,
+    /// The finished prefill, present on the job's last chunk only.
+    pub done: Option<PrefillOutcome>,
+}
+
 /// One request's next decode step, as the scheduler dispatches it.
 #[derive(Clone, Copy, Debug)]
 pub struct DecodeStep {
@@ -187,6 +347,50 @@ pub trait ServingBackend {
         policy: &PartitionPolicy, want_wire: bool,
     ) -> Result<PrefillOutcome>;
 
+    /// Open a resumable chunked prefill (DESIGN.md §6) over the
+    /// prompt's uncached suffix, split into `chunk_tokens`-sized,
+    /// granularity-aligned chunks (0 = the whole suffix in one chunk).
+    /// Takes the request by value — the job owns it for its lifetime,
+    /// so admission hands the prompt over without a copy. The default
+    /// ignores `chunk_tokens` and plans a single whole-prompt chunk,
+    /// so backends without chunk support keep working unchanged
+    /// through [`Self::prefill`]. Implementations must reject a
+    /// request the job could never finish (empty prompt, reuse
+    /// covering the whole prompt, prompt over the backend's context
+    /// limit) here, before any chain work runs.
+    fn prefill_begin(
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+    ) -> Result<PrefillJob> {
+        let _ = chunk_tokens;
+        Ok(PrefillJob::single(req, reused, load_s, policy.clone(), want_wire))
+    }
+
+    /// Run the job's next chunk on the chain, accumulating the partial
+    /// KV. Returns the chunk's chain occupancy and, on the last chunk,
+    /// the finished [`PrefillOutcome`] (with `ttft` equal to the sum of
+    /// every chunk's occupancy plus the prefix-load time). The
+    /// scheduler interleaves decode events between chunks and must
+    /// route every error path out of a partially-run job through
+    /// [`Self::prefill_abort`].
+    fn prefill_chunk(&mut self, job: &mut PrefillJob) -> Result<ChunkOutcome> {
+        let reused = job.take_reused();
+        let load_s = job.take_load_s();
+        let out =
+            self.prefill(&job.req, reused, load_s, &job.policy, job.want_wire)?;
+        let rows = job.req.tokens.len().saturating_sub(job.done_tokens());
+        job.advance(rows, out.ttft);
+        Ok(ChunkOutcome { chunk_s: out.ttft, done: Some(out) })
+    }
+
+    /// Drop a partially-run job's backend-side state (the partial KV of
+    /// its completed chunks), best effort — the scheduler calls this on
+    /// every error path out of a job so no per-request state outlives
+    /// it. Backends without per-request chunk state need not override.
+    fn prefill_abort(&mut self, job: PrefillJob) {
+        let _ = job;
+    }
+
     /// Advance each step's request by one token in a single event.
     fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<DecodeOutcome>;
 
@@ -218,6 +422,60 @@ pub trait ServingBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn job(len: usize, reuse: usize, chunk: usize, g: usize) -> PrefillJob {
+        let req = GenRequest {
+            id: 1,
+            tokens: vec![0; len],
+            max_new_tokens: 4,
+            arrival: 0.0,
+        };
+        let reused = (reuse > 0).then(|| ReusedPrefix {
+            tokens: reuse,
+            wire: Vec::new(),
+        });
+        PrefillJob::new(req, reused, 0.5, PartitionPolicy::Even, false, chunk, g)
+    }
+
+    #[test]
+    fn job_chunk_plan_covers_the_suffix() {
+        // 100 tokens in 32-token chunks: three full + the remainder.
+        let j = job(100, 0, 32, 1);
+        assert_eq!(j.chunks_total(), 4);
+        assert_eq!(j.next_chunk(), Some((0, 32)));
+        // Reuse shifts the start and shrinks the plan.
+        let j = job(100, 40, 32, 1);
+        assert_eq!(j.chunks_total(), 2);
+        assert_eq!(j.next_chunk(), Some((40, 32)));
+        assert_eq!(j.reused_tokens, 40);
+        // 0 = the whole suffix in one chunk.
+        let j = job(100, 40, 0, 1);
+        assert_eq!(j.chunks_total(), 1);
+        assert_eq!(j.next_chunk(), Some((40, 60)));
+        // Chunk size rounds down to the granularity, never below it.
+        let j = job(4 * 48, 0, 100, 48);
+        assert_eq!(j.next_chunk(), Some((0, 96)));
+        let j = job(4 * 48, 0, 7, 48);
+        assert_eq!(j.next_chunk(), Some((0, 48)));
+    }
+
+    #[test]
+    fn job_advance_tracks_rows_chunks_and_elapsed() {
+        let mut j = job(100, 40, 32, 1);
+        assert_eq!(j.take_load_s(), 0.5);
+        assert_eq!(j.take_load_s(), 0.0, "load charges once");
+        assert!(j.take_reused().is_some());
+        j.advance(32, 0.25);
+        assert_eq!(j.chunks_done(), 1);
+        assert_eq!(j.done_tokens(), 72);
+        assert!(!j.is_done());
+        assert_eq!(j.next_chunk(), Some((72, 28)));
+        j.advance(28, 0.5);
+        assert!(j.is_done());
+        assert_eq!(j.next_chunk(), None);
+        assert_eq!(j.done_tokens(), 100);
+        assert!((j.elapsed() - 0.75).abs() < 1e-15);
+    }
 
     #[test]
     fn virtual_clock_jumps_and_advances() {

@@ -25,7 +25,8 @@ use std::time::Instant;
 
 use crate::config::ModelConfig;
 use crate::coordinator::backend::{
-    Clock, DecodeOutcome, DecodeStep, PrefillOutcome, ServingBackend, WallClock,
+    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, PrefillJob, PrefillOutcome,
+    ServingBackend, WallClock,
 };
 use crate::coordinator::kvpool::KvPool;
 use crate::coordinator::request::GenRequest;
@@ -49,6 +50,28 @@ struct CacheMsg {
     req_id: u64,
     tokens: usize,
     wire: Vec<u8>,
+}
+
+/// Rows of contiguous-slab headroom the leader-side admission bound
+/// charges on top of `prompt + max_new`: workers allocate
+/// `cache.tokens + 32` and grow in `+32` steps ([`decode_one`]), so a
+/// request's cache extent can exceed its row count by up to two pads.
+const POOL_ADMIT_PAD: usize = 64;
+
+/// Leader-side admission bound for the real path (ROADMAP: real-path
+/// decode backpressure): would a request's worst-case contiguous cache
+/// extent — prompt plus its full decode budget plus the worker-side
+/// slab padding — fit in a worker's [`KvPool`] arena alongside
+/// `busiest_rows` already held there? Conservative on purpose: the new
+/// cache lands on whichever worker ends the chunk's chain, so the
+/// busiest worker is assumed, and fragmentation is ignored (the pool
+/// coalesces on release).
+pub fn pool_admits(
+    pool_tokens: usize, busiest_rows: usize, prompt_tokens: usize,
+    max_new_tokens: usize,
+) -> bool {
+    busiest_rows + prompt_tokens + max_new_tokens + POOL_ADMIT_PAD
+        <= pool_tokens
 }
 
 /// Group decode steps `(owner, req_id, token)` by owner worker,
@@ -352,11 +375,18 @@ pub struct Cluster {
     /// Stray replies not yet claimed (chain prefill answers arrive in any
     /// worker order).
     pending: Vec<WorkerReply>,
-    /// Leader-side KV rows per request served through the
-    /// [`ServingBackend`] trait (prompt + tokens generated so far) — the
-    /// `kv_bytes_active` backpressure signal. Requests driven through
-    /// the inherent API directly are not tracked.
-    active_rows: HashMap<u64, usize>,
+    /// Leader-side `(owner, rows, reserved)` per request served through
+    /// the [`ServingBackend`] trait — rows = prompt + tokens generated
+    /// so far (the `kv_bytes_active` signal), reserved = decode rows
+    /// still to come (admission control must defend them, like the
+    /// sim's reservation, or co-resident requests grow past the worker
+    /// arena mid-decode). Requests driven through the inherent API
+    /// directly are not tracked.
+    active_rows: HashMap<u64, (usize, usize, usize)>,
+    /// Per-worker [`KvPool`] arena capacity (token rows), mirrored
+    /// leader-side so admission can throttle before a worker's
+    /// allocator fails.
+    pool_tokens: usize,
 }
 
 impl Cluster {
@@ -406,6 +436,7 @@ impl Cluster {
             manifest,
             pending: Vec::new(),
             active_rows: HashMap::new(),
+            pool_tokens,
         };
         // Wait for every engine to come up (PJRT client + weights upload).
         let mut started = 0;
@@ -742,21 +773,135 @@ impl ServingBackend for Cluster {
         self.plan_partition_suffix(c, start, policy)
     }
 
+    /// The unchunked surface IS a single-chunk job: one copy of the
+    /// chain drive and active-rows bookkeeping, shared with the chunked
+    /// path (so the trait's two prefill entry points can never drift).
     fn prefill(
         &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, _load_s: f64,
         policy: &PartitionPolicy, want_wire: bool,
     ) -> Result<PrefillOutcome> {
+        let mut job =
+            self.prefill_begin(req.clone(), reused, 0.0, policy, want_wire, 0)?;
+        let out = self.prefill_chunk(&mut job)?;
+        Ok(out.done.expect("single-chunk job finishes in one chunk"))
+    }
+
+    /// Chunked prefill (DESIGN.md §6): chunk k runs the worker chain
+    /// over its slice of the prompt with the chain head seeded by the
+    /// accumulated KV of chunks `< k` (carried leader-side as wire
+    /// bytes, exactly the prefix-reuse seeding path), so every chunk is
+    /// a plain suffix runahead and the partial cache stays contiguous.
+    /// The previous chunk's worker-held cache is released before the
+    /// next chunk re-seeds the chain — no slab leaks across chunks.
+    fn prefill_begin(
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, _load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+    ) -> Result<PrefillJob> {
+        // Reject a request the job could never finish BEFORE any chain
+        // pass runs — chunked validation would otherwise burn real
+        // worker work on every chunk up to the failing one.
+        if req.tokens.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "empty prompt {}",
+                req.id
+            )));
+        }
+        if req.tokens.len() > self.manifest.max_context() {
+            return Err(Error::Coordinator(format!(
+                "prompt {} exceeds compiled max context {}",
+                req.tokens.len(),
+                self.manifest.max_context()
+            )));
+        }
+        let reuse = reused.as_ref().map_or(0, |r| r.tokens);
+        if reuse >= req.tokens.len() {
+            return Err(Error::Coordinator(format!(
+                "reused prefix {reuse} must leave a suffix of prompt {}",
+                req.tokens.len()
+            )));
+        }
+        Ok(PrefillJob::new(
+            req,
+            reused,
+            0.0,
+            policy.clone(),
+            want_wire,
+            chunk_tokens,
+            self.manifest.granularity(),
+        ))
+    }
+
+    fn prefill_chunk(&mut self, job: &mut PrefillJob) -> Result<ChunkOutcome> {
+        let (start, rows) = job.next_chunk().ok_or_else(|| {
+            Error::Coordinator(format!(
+                "prefill chunk on finished job {}",
+                job.req.id
+            ))
+        })?;
+        let last = job.chunks_done() + 1 == job.chunks_total();
+        let t0 = Instant::now();
+        if let Some(owner) = job.carry_owner.take() {
+            Cluster::release(self, owner, job.req.id)?;
+        }
+        let seed = job.carry.take().or_else(|| job.take_reused());
         let pre = self.parallel_prefill_reused(
-            req.id, &req.tokens, reused, policy, want_wire,
+            job.req.id,
+            &job.req.tokens[..start + rows],
+            seed,
+            &job.policy,
+            // Intermediate chunks always carry the accumulated wire to
+            // seed the next chunk's chain head.
+            !last || job.want_wire,
         )?;
-        self.active_rows.insert(req.id, req.tokens.len() + 1);
-        Ok(PrefillOutcome {
-            owner: pre.owner,
-            first_token: argmax(&pre.logits) as i32,
-            ttft: pre.ttft,
-            reused_tokens: pre.reused_tokens,
-            wire: pre.wire,
-        })
+        let chunk_s = t0.elapsed().as_secs_f64();
+        job.advance(rows, chunk_s);
+        if last {
+            self.active_rows.insert(
+                job.req.id,
+                (
+                    pre.owner,
+                    job.req.tokens.len() + 1,
+                    job.req.max_new_tokens.saturating_sub(1),
+                ),
+            );
+            Ok(ChunkOutcome {
+                chunk_s,
+                done: Some(PrefillOutcome {
+                    owner: pre.owner,
+                    first_token: argmax(&pre.logits) as i32,
+                    ttft: job.elapsed(),
+                    reused_tokens: job.reused_tokens,
+                    wire: pre.wire,
+                }),
+            })
+        } else {
+            // Record the worker-held partial cache BEFORE any error
+            // check: if the wire is missing, `prefill_abort` must still
+            // find (and release) the slab this chunk just built.
+            job.carry_owner = Some(pre.owner);
+            // Reservation counts from job completion; no admission can
+            // interleave while the job holds the chain.
+            self.active_rows
+                .insert(job.req.id, (pre.owner, start + rows, 0));
+            let wire = pre.wire.ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "intermediate chunk of {} returned no wire",
+                    job.req.id
+                ))
+            })?;
+            job.carry = Some(ReusedPrefix { tokens: start + rows, wire });
+            Ok(ChunkOutcome { chunk_s, done: None })
+        }
+    }
+
+    fn prefill_abort(&mut self, job: PrefillJob) {
+        // Best effort: free the partial accumulated cache of the
+        // completed chunks (the failing chunk's own state died with the
+        // error) so a failed job leaks no worker slab.
+        if let Some(owner) = job.carry_owner {
+            let _ = Cluster::release(self, owner, job.req.id);
+        }
+        self.active_rows.remove(&job.req.id);
     }
 
     fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<DecodeOutcome> {
@@ -768,7 +913,11 @@ impl ServingBackend for Cluster {
         let logits = Cluster::decode_batch(self, &triples)?;
         let step_s = t0.elapsed().as_secs_f64();
         for s in steps {
-            self.active_rows.insert(s.req_id, s.past_tokens + 1);
+            // Each step converts one reserved row into a resident row.
+            let e = self.active_rows.entry(s.req_id).or_insert((s.owner, 0, 0));
+            e.0 = s.owner;
+            e.1 = s.past_tokens + 1;
+            e.2 = e.2.saturating_sub(1);
         }
         Ok(DecodeOutcome {
             tokens: logits.iter().map(|lg| argmax(lg) as i32).collect(),
@@ -794,8 +943,29 @@ impl ServingBackend for Cluster {
     }
 
     fn kv_bytes_active(&self) -> f64 {
-        self.active_rows.values().sum::<usize>() as f64
+        self.active_rows
+            .values()
+            .map(|&(_, rows, _)| rows)
+            .sum::<usize>() as f64
             * self.manifest.model.kv_bytes_per_token() as f64
+    }
+
+    /// Real-path decode backpressure (ROADMAP): bound admissions by the
+    /// worker-side [`KvPool`] arena capacity instead of growing slabs
+    /// unboundedly, mirroring the sim's device-memory gate. Like the
+    /// sim's reservation, each admitted request is charged its
+    /// worst-case committed extent — resident rows plus the decode
+    /// budget still to come plus the worker slab pad — so co-resident
+    /// requests can never grow past the arena mid-decode.
+    fn admit_capacity(&self, prompt_tokens: usize, max_new_tokens: usize) -> bool {
+        let mut per_worker = vec![0usize; self.cmd_txs.len()];
+        for &(owner, rows, reserved) in self.active_rows.values() {
+            if let Some(w) = per_worker.get_mut(owner) {
+                *w += rows + reserved + 32;
+            }
+        }
+        let busiest = per_worker.into_iter().max().unwrap_or(0);
+        pool_admits(self.pool_tokens, busiest, prompt_tokens, max_new_tokens)
     }
 }
 
@@ -807,5 +977,36 @@ impl Drop for Cluster {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_admission_bound_throttles_before_the_arena_fills() {
+        // Manifest default arena: max_context * 8 rows per worker.
+        let pool = 2048 * 8;
+        // Empty worker: a normal request fits.
+        assert!(pool_admits(pool, 0, 2048, 64));
+        // A busiest worker near capacity refuses the same request...
+        assert!(!pool_admits(pool, pool - 2048, 2048, 64));
+        // ...down to exactly the worst-case extent plus slab padding.
+        let need = 2048 + 64 + POOL_ADMIT_PAD;
+        assert!(pool_admits(pool, pool - need, 2048, 64));
+        assert!(!pool_admits(pool, pool - need + 1, 2048, 64));
+        // A single request larger than the whole arena never admits,
+        // whatever the current load.
+        assert!(!pool_admits(pool, 0, pool, 1));
+    }
+
+    #[test]
+    fn decode_step_grouping_preserves_order_within_owner() {
+        let steps = [(1usize, 10u64, 5i32), (0, 11, 6), (1, 12, 7), (0, 13, 8)];
+        let groups = group_by_owner(&steps);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], (1, vec![(10, 5), (12, 7)]));
+        assert_eq!(groups[1], (0, vec![(11, 6), (13, 8)]));
     }
 }

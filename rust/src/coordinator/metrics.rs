@@ -35,6 +35,20 @@ pub struct ServeMetrics {
     pub solo_steps: usize,
     /// Decode steps that advanced two or more requests together.
     pub batched_steps: usize,
+    /// Prefill chunk events executed (an unchunked prefill is one).
+    pub prefill_chunks: usize,
+    /// Prefills that split into two or more chunk events.
+    pub chunked_prefills: usize,
+    /// Requests admitted through the idle-backend escape hatch whose KV
+    /// reservation exceeded `admit_capacity` — the run degrades instead
+    /// of deadlocking (modeled backends clamp the reservation to what
+    /// fits and force decode progress; the real path grows worker slabs
+    /// until its pool errors), so surface it.
+    pub oversized_admissions: usize,
+    /// Longest span the chain was held by prefill events while at least
+    /// one decode-eligible request waited (s) — the head-of-line stall
+    /// chunked prefill bounds to roughly one chunk time.
+    pub max_decode_stall_s: f64,
 }
 
 impl ServeMetrics {
@@ -72,6 +86,18 @@ impl ServeMetrics {
         } else {
             self.batched_steps += 1;
         }
+    }
+
+    /// Record one prefill chunk event (an unchunked prefill counts as
+    /// one chunk).
+    pub fn record_prefill_chunk(&mut self) {
+        self.prefill_chunks += 1;
+    }
+
+    /// Track the longest decode stall observed: `stall_s` is the
+    /// chain-hold time accumulated since the active set last advanced.
+    pub fn note_decode_stall(&mut self, stall_s: f64) {
+        self.max_decode_stall_s = self.max_decode_stall_s.max(stall_s);
     }
 
     /// Mean decode batch occupancy (0 when no decode step ran).
@@ -155,6 +181,24 @@ impl ServeMetrics {
                 self.max_decode_batch,
                 self.solo_steps,
                 self.batched_steps,
+            ));
+        }
+        // Only when chunking actually split something — an unchunked
+        // run's report stays exactly as it was before chunked prefill.
+        if self.chunked_prefills > 0 {
+            out.push_str(&format!(
+                "prefill {} chunk events ({} prefills chunked)   \
+                 max decode stall {}\n",
+                self.prefill_chunks,
+                self.chunked_prefills,
+                fmt_time(self.max_decode_stall_s),
+            ));
+        }
+        if self.oversized_admissions > 0 {
+            out.push_str(&format!(
+                "WARN  {} oversized solo admission(s): decode budget \
+                 exceeds backend capacity, serving degraded\n",
+                self.oversized_admissions,
             ));
         }
         if self.prefix_lookups > 0 {
@@ -247,6 +291,39 @@ mod tests {
         assert!(report.contains("mean batch 2.67"), "{report}");
         assert!(report.contains("max batch 4"), "{report}");
         assert!(report.contains("1 solo / 2 batched"), "{report}");
+    }
+
+    #[test]
+    fn prefill_chunk_and_stall_counters_aggregate_and_report() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.0);
+        m.wall_s = 1.0;
+        for _ in 0..5 {
+            m.record_prefill_chunk();
+        }
+        m.chunked_prefills = 1;
+        // The max tracks the largest accumulated stall, not the last.
+        m.note_decode_stall(0.125);
+        m.note_decode_stall(0.5);
+        m.note_decode_stall(0.25);
+        assert_eq!(m.prefill_chunks, 5);
+        assert_eq!(m.max_decode_stall_s, 0.5);
+        let report = m.report();
+        assert!(report.contains("5 chunk events"), "{report}");
+        assert!(report.contains("1 prefills chunked"), "{report}");
+        assert!(report.contains("max decode stall 500.000ms"), "{report}");
+        assert!(!report.contains("oversized"), "{report}");
+    }
+
+    #[test]
+    fn oversized_admissions_surface_in_the_report() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.0);
+        m.wall_s = 1.0;
+        assert!(!m.report().contains("WARN"));
+        m.oversized_admissions = 2;
+        let report = m.report();
+        assert!(report.contains("WARN  2 oversized solo admission"), "{report}");
     }
 
     #[test]

@@ -33,8 +33,8 @@ pub mod simcluster;
 pub mod tokenizer;
 
 pub use backend::{
-    Clock, DecodeOutcome, DecodeStep, PrefillOutcome, ServingBackend,
-    VirtualClock, WallClock,
+    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, PrefillJob,
+    PrefillOutcome, ServingBackend, VirtualClock, WallClock,
 };
 pub use cluster::{Cluster, PartitionPolicy, ReusedPrefix};
 pub use kvpool::KvPool;

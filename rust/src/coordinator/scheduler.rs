@@ -13,6 +13,11 @@
 //!   prefill, and admits the finished prompt's KV back for future
 //!   sharers. Decline rules (payload-backed backends only apply a plan
 //!   they can actually seed the chain with) live here, once;
+//! * **chunked prefill** — a prefill runs as a resumable
+//!   [`PrefillJob`] of `prefill_chunk`-sized chunk events (DESIGN.md
+//!   §6) with one batched decode event between chunks, so a long
+//!   prompt stalls in-flight decodes by at most one chunk time instead
+//!   of the whole prompt (0 = unchunked, one whole-prompt chunk);
 //! * **decode-batch rotation** — between admissions the active set
 //!   advances in `decode_batch`-capped events, rotating so deep sets
 //!   share the batch round-robin (continuous batching at step
@@ -26,19 +31,24 @@
 //! modeled [`SimBackend`](crate::coordinator::SimBackend) on a virtual
 //! one.
 //!
-//! Lease-safety invariant: every path out of an admission — success or
-//! error — releases the admission's [`Lease`] before returning; a
-//! leaked lease would pin its blocks for the cache's lifetime.
+//! Lease-safety invariant: the admission's [`Lease`] spans the whole
+//! chunked prefill job, and every path out of it — last-chunk success
+//! or an error from any chunk — releases the lease before returning
+//! (error paths also drop the backend's partial KV via
+//! `prefill_abort`); a leaked lease would pin its blocks for the
+//! cache's lifetime.
 
 use std::collections::VecDeque;
 
 use crate::config::ModelConfig;
-use crate::coordinator::backend::{DecodeStep, ServingBackend};
+use crate::coordinator::backend::{
+    Clock, DecodeStep, PrefillJob, ServingBackend,
+};
 use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::tokenizer::ByteTokenizer;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::prefixcache::{Lease, PrefixCache};
 use crate::runtime::KvCache;
 use crate::sim::cost::CostModel;
@@ -52,6 +62,13 @@ pub struct SchedulerConfig {
     /// Max requests advanced per batched decode event (1 = per-request
     /// decode; larger rounds amortize the per-step dispatch).
     pub decode_batch: usize,
+    /// Max prompt-suffix tokens one prefill chunk event computes
+    /// (rounded down to the backend granularity). 0 = the whole prompt
+    /// in one chunk; any value >= the prompt length behaves
+    /// identically. Smaller chunks bound the decode stall a long
+    /// prompt causes to one chunk time (DESIGN.md §6) at some TTFT
+    /// cost.
+    pub prefill_chunk: usize,
     /// Stop decoding a request when it emits this token.
     pub eos_token: i32,
 }
@@ -62,6 +79,7 @@ impl Default for SchedulerConfig {
             policy: PartitionPolicy::Even,
             max_active: 4,
             decode_batch: 8,
+            prefill_chunk: 0,
             eos_token: ByteTokenizer::EOS,
         }
     }
@@ -73,6 +91,16 @@ struct Active {
     produced: Vec<i32>,
     ttft: f64,
     tpot: Vec<f64>,
+    queue_wait: f64,
+}
+
+/// A chunked prefill in flight on the chain (DESIGN.md §6): the
+/// backend's resumable job plus the admission state the scheduler must
+/// settle when it completes — or release on any error path out of it
+/// (the lease-safety invariant spans the whole job, not one chunk).
+struct Inflight {
+    job: PrefillJob,
+    lease: Option<Lease>,
     queue_wait: f64,
 }
 
@@ -107,6 +135,63 @@ fn retire_finished<B: ServingBackend + ?Sized>(
         });
     }
     Ok(())
+}
+
+/// One batched decode event over the head of the active set (which must
+/// be non-empty): dispatch up to `decode_batch` steps clamped by the
+/// backend's KV-memory headroom, charge the clock, record occupancy,
+/// rotate so deep sets share the batch round-robin, retire finishers.
+/// Runs both between admissions and between the chunks of an in-flight
+/// prefill.
+fn decode_event<B: ServingBackend + ?Sized>(
+    backend: &mut B, clock: &mut dyn Clock, decode_batch: usize, eos: i32,
+    active: &mut Vec<Active>, metrics: &mut ServeMetrics,
+    done: &mut Vec<GenResponse>,
+) -> Result<()> {
+    debug_assert!(!active.is_empty(), "decode event with nothing active");
+    let want = active.len().min(decode_batch);
+    let b = backend.decode_capacity(want).clamp(1, want);
+    let steps: Vec<DecodeStep> = active[..b]
+        .iter()
+        .map(|a| DecodeStep {
+            owner: a.owner,
+            req_id: a.req.id,
+            last_token: *a.produced.last().unwrap(),
+            // Past covers the prompt AND every token generated so far
+            // (they were appended by earlier steps).
+            past_tokens: a.req.tokens.len() + a.produced.len(),
+        })
+        .collect();
+    let out = backend.decode_batch(&steps)?;
+    clock.advance(out.step_s);
+    // Occupancy counts what actually batched: the real path groups by
+    // owner worker, so one event may split into several co-executing
+    // groups.
+    for &group in &out.groups {
+        metrics.record_decode_step(group);
+    }
+    for (a, &tok) in active[..b].iter_mut().zip(&out.tokens) {
+        a.tpot.push(out.step_s);
+        a.produced.push(tok);
+    }
+    active.rotate_left(b);
+    retire_finished(backend, eos, clock.now(), active, metrics, done)
+}
+
+/// Settle a failed in-flight prefill job: drop the backend's partial
+/// KV and unpin the admission's lease. Every error path out of a
+/// partially-run job must come through here before propagating —
+/// `Lease` has no `Drop`, so silently dropping one pins its blocks for
+/// the cache's lifetime.
+fn settle_failed_job<B: ServingBackend + ?Sized>(
+    backend: &mut B, cache: &mut Option<(PrefixCache, CostModel)>, fl: Inflight,
+) {
+    backend.prefill_abort(fl.job);
+    if let Some((pc, _)) = cache.as_mut() {
+        if let Some(lease) = fl.lease {
+            pc.release(lease);
+        }
+    }
 }
 
 /// The unified serving engine over any [`ServingBackend`].
@@ -147,6 +232,13 @@ impl Scheduler {
     /// Prefix-cache statistics (None when no cache is attached).
     pub fn prefix_cache_stats(&self) -> Option<&crate::prefixcache::CacheStats> {
         self.cache.as_ref().map(|(pc, _)| pc.stats())
+    }
+
+    /// Detach and return the prefix cache (tests inspect store state —
+    /// e.g. that no lease stayed pinned after a failed serve — and
+    /// deployments can migrate a warm store to a new scheduler).
+    pub fn take_prefix_cache(&mut self) -> Option<PrefixCache> {
+        self.cache.take().map(|(pc, _)| pc)
     }
 
     /// Admission-time cache consult: plan, lease, and (on payload-backed
@@ -215,21 +307,114 @@ impl Scheduler {
         let policy = self.cfg.policy.clone();
         let max_active = self.cfg.max_active.max(1);
         let decode_batch = self.cfg.decode_batch.max(1);
+        let prefill_chunk = self.cfg.prefill_chunk;
         let eos = self.cfg.eos_token;
         let mut clock = backend.clock();
 
+        // A non-finite arrival would poison the arrival sort and every
+        // queue-wait below it: reject the workload up front instead of
+        // panicking mid-serve.
+        if let Some(bad) = requests.iter().find(|r| !r.arrival.is_finite()) {
+            return Err(Error::Coordinator(format!(
+                "request {} has a non-finite arrival ({})",
+                bad.id, bad.arrival
+            )));
+        }
         // Admission order is arrival order on every backend (a stable
         // sort keeps submission order among simultaneous arrivals).
         let mut requests = requests;
-        requests.sort_by(|a, b| {
-            a.arrival.partial_cmp(&b.arrival).expect("finite arrivals")
-        });
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let mut pending: VecDeque<GenRequest> = requests.into();
         let mut active: Vec<Active> = Vec::new();
         let mut done: Vec<GenResponse> = Vec::with_capacity(pending.len());
         let mut metrics = ServeMetrics::default();
+        let mut inflight: Option<Inflight> = None;
+        // Chain-hold seconds accumulated since the active set last
+        // advanced — the decode stall chunked prefill bounds.
+        let mut stall_s = 0.0f64;
 
-        while !pending.is_empty() || !active.is_empty() {
+        while inflight.is_some() || !pending.is_empty() || !active.is_empty() {
+            // Chunk event: an in-flight prefill owns the chain, one
+            // chunk at a time; a decode event runs between chunks, so
+            // active requests stall for at most one chunk per step
+            // instead of the whole prompt.
+            if let Some(mut fl) = inflight.take() {
+                let chunk = backend.prefill_chunk(&mut fl.job);
+                let out = match chunk {
+                    Ok(out) => out,
+                    Err(e) => {
+                        // Never leak the lease or the partial KV: a
+                        // pinned block would be unevictable for the
+                        // cache's lifetime, a worker slab for the
+                        // backend's.
+                        settle_failed_job(backend, &mut self.cache, fl);
+                        return Err(e);
+                    }
+                };
+                clock.advance(out.chunk_s);
+                metrics.record_prefill_chunk();
+                if !active.is_empty() {
+                    stall_s += out.chunk_s;
+                    metrics.note_decode_stall(stall_s);
+                }
+                if let Some(fin) = out.done {
+                    if fl.job.chunks_total() > 1 {
+                        metrics.chunked_prefills += 1;
+                    }
+                    let req = fl.job.req;
+                    if let Some((pc, _)) = self.cache.as_mut() {
+                        if let Some(lease) = fl.lease {
+                            pc.release(lease);
+                        }
+                        // Admit the finished prompt's KV for future
+                        // sharers: wire payloads when the backend
+                        // shipped them, block timings otherwise.
+                        if !payloads {
+                            pc.admit(&req.tokens);
+                        } else if let Some(wire) = &fin.wire {
+                            if let Ok(kv) = KvCache::from_wire(
+                                model.layers, model.kv_heads, model.head_dim,
+                                req.tokens.len(), wire,
+                            ) {
+                                pc.admit_from_cache(&req.tokens, &kv);
+                            }
+                        }
+                    }
+                    active.push(Active {
+                        owner: fin.owner,
+                        produced: vec![fin.first_token],
+                        ttft: fin.ttft,
+                        tpot: Vec::new(),
+                        queue_wait: fl.queue_wait,
+                        req,
+                    });
+                    retire_finished(
+                        backend, eos, clock.now(), &mut active, &mut metrics,
+                        &mut done,
+                    )?;
+                    if active.is_empty() {
+                        stall_s = 0.0;
+                    }
+                } else {
+                    // Between chunks: let the active set advance one
+                    // step (this is the whole point of chunking). A
+                    // decode failure here is still an error path out of
+                    // the partially-run job — settle it, don't drop it.
+                    if !active.is_empty() {
+                        if let Err(e) = decode_event(
+                            backend, clock.as_mut(), decode_batch, eos,
+                            &mut active, &mut metrics, &mut done,
+                        ) {
+                            settle_failed_job(backend, &mut self.cache, fl);
+                            return Err(e);
+                        }
+                        stall_s = 0.0;
+                    }
+                    inflight = Some(fl);
+                }
+                continue;
+            }
+
             // Admission event: the head-of-line request takes the chain
             // as soon as it has arrived (preempting further decode
             // events) and there is room — both scheduler room
@@ -247,13 +432,27 @@ impl Scheduler {
                 let req = pending.pop_front().unwrap();
                 clock.wait_until(req.arrival);
                 let queue_wait = (clock.now() - req.arrival).max(0.0);
+                if active.is_empty()
+                    && !backend
+                        .admit_capacity(req.tokens.len(), req.max_new_tokens)
+                {
+                    // The idle-backend escape hatch admitted a request
+                    // whose reservation can never fit: the run degrades
+                    // (modeled backends clamp the reservation and force
+                    // decode progress; the real path may error when its
+                    // pool fills) — surface it rather than serving
+                    // silently over budget.
+                    metrics.oversized_admissions += 1;
+                }
                 let (reused, load_s, lease, want_wire) = self.plan_reuse(
                     workers, &model, granularity, payloads, &req, &mut metrics,
                 )?;
-                let out = match backend
-                    .prefill(&req, reused, load_s, &policy, want_wire)
-                {
-                    Ok(out) => out,
+                // The job owns the request from here; it comes back in
+                // the completed outcome's `Active` entry.
+                let job = match backend.prefill_begin(
+                    req, reused, load_s, &policy, want_wire, prefill_chunk,
+                ) {
+                    Ok(job) => job,
                     Err(e) => {
                         // Never leak the lease: a pinned block would be
                         // unevictable for the cache's lifetime.
@@ -265,73 +464,17 @@ impl Scheduler {
                         return Err(e);
                     }
                 };
-                if let Some((pc, _)) = self.cache.as_mut() {
-                    if let Some(lease) = lease {
-                        pc.release(lease);
-                    }
-                    // Admit the finished prompt's KV for future sharers:
-                    // wire payloads when the backend shipped them,
-                    // block timings otherwise.
-                    if !payloads {
-                        pc.admit(&req.tokens);
-                    } else if let Some(wire) = &out.wire {
-                        if let Ok(kv) = KvCache::from_wire(
-                            model.layers, model.kv_heads, model.head_dim,
-                            req.tokens.len(), wire,
-                        ) {
-                            pc.admit_from_cache(&req.tokens, &kv);
-                        }
-                    }
-                }
-                clock.advance(out.ttft);
-                active.push(Active {
-                    owner: out.owner,
-                    produced: vec![out.first_token],
-                    ttft: out.ttft,
-                    tpot: Vec::new(),
-                    queue_wait,
-                    req,
-                });
-                retire_finished(
-                    backend, eos, clock.now(), &mut active, &mut metrics,
-                    &mut done,
-                )?;
+                inflight = Some(Inflight { job, lease, queue_wait });
                 continue;
             }
 
-            // Decode event: one batched step over the first
-            // `decode_batch` active requests (clamped by the backend's
-            // KV-memory headroom), then rotate so a deep active set
-            // shares the batch round-robin.
-            let want = active.len().min(decode_batch);
-            let b = backend.decode_capacity(want).clamp(1, want);
-            let steps: Vec<DecodeStep> = active[..b]
-                .iter()
-                .map(|a| DecodeStep {
-                    owner: a.owner,
-                    req_id: a.req.id,
-                    last_token: *a.produced.last().unwrap(),
-                    // Past covers the prompt AND every token generated so
-                    // far (they were appended by earlier steps).
-                    past_tokens: a.req.tokens.len() + a.produced.len(),
-                })
-                .collect();
-            let out = backend.decode_batch(&steps)?;
-            clock.advance(out.step_s);
-            // Occupancy counts what actually batched: the real path
-            // groups by owner worker, so one event may split into
-            // several co-executing groups.
-            for &group in &out.groups {
-                metrics.record_decode_step(group);
-            }
-            for (a, &tok) in active[..b].iter_mut().zip(&out.tokens) {
-                a.tpot.push(out.step_s);
-                a.produced.push(tok);
-            }
-            active.rotate_left(b);
-            retire_finished(
-                backend, eos, clock.now(), &mut active, &mut metrics, &mut done,
+            // Decode event: one batched step over the head of the
+            // active set, rotating round-robin.
+            decode_event(
+                backend, clock.as_mut(), decode_batch, eos, &mut active,
+                &mut metrics, &mut done,
             )?;
+            stall_s = 0.0;
         }
         metrics.wall_s = clock.now();
         done.sort_by_key(|r| r.id);

@@ -23,12 +23,12 @@ use std::collections::HashMap;
 
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::coordinator::backend::{
-    Clock, DecodeOutcome, DecodeStep, PrefillOutcome, ServingBackend,
-    VirtualClock,
+    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, PrefillJob, PrefillOutcome,
+    ServingBackend, VirtualClock,
 };
 use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
 use crate::coordinator::request::GenRequest;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::partition::Partition;
 use crate::sim::cost::CostModel;
 use crate::sim::{kvr_timeline_offset, memory, quiet_network};
@@ -94,6 +94,33 @@ impl SimBackend {
             memory::decode_peak_bytes(&self.cm.model, base + extra_rows);
         !memory::ooms(peak, self.cm.hw.mem_bytes)
     }
+
+    /// Decode-budget rows to reserve for a newly admitted request of
+    /// `rows` resident rows, clamped so the aggregate reservation can
+    /// never exceed the device: an oversized request admitted through
+    /// the scheduler's idle-backend escape hatch reserves what actually
+    /// fits (the scheduler counts such admissions in
+    /// `ServeMetrics::oversized_admissions`) instead of poisoning the
+    /// admission bound with an impossible target.
+    fn clamped_reservation(&self, rows: usize, max_new_tokens: usize) -> usize {
+        let want = max_new_tokens.saturating_sub(1);
+        let base = self.reserved_rows() + rows;
+        if !self.mem_pressure || self.fits(base, want) {
+            return want;
+        }
+        // Largest reservation that still fits (`fits` is monotone in
+        // the row count, so bisect).
+        let (mut lo, mut hi) = (0usize, want);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.fits(base, mid) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
 }
 
 impl ServingBackend for SimBackend {
@@ -140,30 +167,95 @@ impl ServingBackend for SimBackend {
         Ok(part.with_start(start))
     }
 
+    /// The unchunked surface IS a single-chunk job: one copy of the
+    /// pricing and active-KV bookkeeping, shared with the chunked path
+    /// (so the trait's two prefill entry points can never drift).
     fn prefill(
         &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
-        policy: &PartitionPolicy, _want_wire: bool,
+        policy: &PartitionPolicy, want_wire: bool,
     ) -> Result<PrefillOutcome> {
-        assert!(!req.tokens.is_empty(), "empty prompt {}", req.id);
+        let mut job =
+            self.prefill_begin(req.clone(), reused, load_s, policy, want_wire, 0)?;
+        let out = self.prefill_chunk(&mut job)?;
+        Ok(out.done.expect("single-chunk job finishes in one chunk"))
+    }
+
+    /// Chunked prefill (DESIGN.md §6): each chunk is priced as its own
+    /// runahead chain pass over the suffix rows it computes, at the
+    /// causal context offset of everything materialized before it —
+    /// FLOP, traffic, and memory accounting stay exact per chunk. A
+    /// single-chunk job reproduces the pre-chunking pricing to the bit.
+    fn prefill_begin(
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+    ) -> Result<PrefillJob> {
+        if req.tokens.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "empty prompt {}",
+                req.id
+            )));
+        }
         let reuse = reused.as_ref().map_or(0, |r| r.tokens);
-        let suffix = req.tokens.len() - reuse;
-        let part = self.plan_partition(suffix, reuse, policy)?;
+        if reuse >= req.tokens.len() {
+            return Err(Error::Coordinator(format!(
+                "reused prefix {reuse} must leave a suffix of prompt {}",
+                req.tokens.len()
+            )));
+        }
+        Ok(PrefillJob::new(
+            req,
+            reused,
+            load_s,
+            policy.clone(),
+            want_wire,
+            chunk_tokens,
+            1,
+        ))
+    }
+
+    fn prefill_chunk(&mut self, job: &mut PrefillJob) -> Result<ChunkOutcome> {
+        let (start, rows) = job.next_chunk().ok_or_else(|| {
+            Error::Coordinator(format!(
+                "prefill chunk on finished job {}",
+                job.req.id
+            ))
+        })?;
+        let part = self.plan_partition(rows, start, &job.policy)?;
         let mut net = quiet_network(&self.cm, part.sizes().len());
-        let sim = kvr_timeline_offset(&self.cm, &mut net, part.sizes(), reuse)?;
-        self.active.insert(
-            req.id,
-            ActiveKv {
-                rows: req.tokens.len() + 1,
-                reserved: req.max_new_tokens.saturating_sub(1),
-            },
-        );
-        Ok(PrefillOutcome {
-            owner: part.sizes().len() - 1,
-            first_token: 0,
-            ttft: load_s + sim.ttft,
-            reused_tokens: reuse,
-            wire: None,
-        })
+        let sim = kvr_timeline_offset(&self.cm, &mut net, part.sizes(), start)?;
+        let chunk_s = job.take_load_s() + sim.ttft;
+        job.advance(rows, chunk_s);
+        if job.is_done() {
+            // Drop the mid-job partial entry first so the reservation
+            // clamp does not double-count this request's own rows.
+            self.active.remove(&job.req.id);
+            let rows = job.req.tokens.len() + 1;
+            let reserved =
+                self.clamped_reservation(rows, job.req.max_new_tokens);
+            self.active.insert(job.req.id, ActiveKv { rows, reserved });
+            Ok(ChunkOutcome {
+                chunk_s,
+                done: Some(PrefillOutcome {
+                    owner: part.sizes().len() - 1,
+                    first_token: 0,
+                    ttft: job.elapsed(),
+                    reused_tokens: job.reused_tokens,
+                    wire: None,
+                }),
+            })
+        } else {
+            // The partial KV is resident between chunks: keep the
+            // decode-backpressure signal honest mid-job.
+            self.active.insert(
+                job.req.id,
+                ActiveKv { rows: job.done_tokens(), reserved: 0 },
+            );
+            Ok(ChunkOutcome { chunk_s, done: None })
+        }
+    }
+
+    fn prefill_abort(&mut self, job: PrefillJob) {
+        self.active.remove(&job.req.id);
     }
 
     fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<DecodeOutcome> {
@@ -238,6 +330,63 @@ mod tests {
             max_new_tokens: max_new,
             arrival: 0.0,
         }
+    }
+
+    #[test]
+    fn empty_prompt_is_an_error_not_a_panic() {
+        let mut b = backend(2);
+        let req = GenRequest {
+            id: 9,
+            tokens: Vec::new(),
+            max_new_tokens: 4,
+            arrival: 0.0,
+        };
+        let err = b
+            .prefill(&req, None, 0.0, &PartitionPolicy::Even, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("empty prompt 9"), "{err}");
+        let err = b
+            .prefill_begin(req, None, 0.0, &PartitionPolicy::Even, false, 128)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("empty prompt 9"), "{err}");
+    }
+
+    #[test]
+    fn full_prompt_reuse_is_an_error_not_a_panic() {
+        // A reused prefix covering the whole prompt can never produce a
+        // suffix chunk: reject at job open, mirroring the real path's
+        // pre-chunking error.
+        let mut b = backend(2);
+        let r = req(3, 1024, 4);
+        let reused = ReusedPrefix { tokens: 1024, wire: Vec::new() };
+        let err = b
+            .prefill_begin(r, Some(reused), 0.0, &PartitionPolicy::Even, false, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must leave a suffix"), "{err}");
+    }
+
+    #[test]
+    fn unchunked_prefill_is_the_single_chunk_job() {
+        // The delegation invariant behind the golden equivalence: the
+        // trait's two prefill entry points share one implementation.
+        let mut a = backend(4);
+        let mut b = backend(4);
+        let req = req(3, 4096, 8);
+        let direct = a
+            .prefill(&req, None, 0.125, &PartitionPolicy::Even, false)
+            .unwrap();
+        let mut job = b
+            .prefill_begin(req, None, 0.125, &PartitionPolicy::Even, false, 0)
+            .unwrap();
+        assert_eq!(job.chunks_total(), 1);
+        let out = b.prefill_chunk(&mut job).unwrap();
+        let fin = out.done.expect("single chunk finishes the job");
+        assert_eq!(direct.ttft, fin.ttft);
+        assert_eq!(direct.owner, fin.owner);
+        assert_eq!(a.kv_bytes_active(), b.kv_bytes_active());
     }
 
     #[test]

@@ -42,7 +42,7 @@ USAGE:
             [--prompt-len 128] [--max-new 8] [--rate 2.0] [--seed 0]
             [--sim] [--model llama7b] [--hw a100-300gbps]
             [--decode-batch 8] [--max-active N] [--shared-prefix 0.5]
-            [--prefix-cache] [--mem-pressure]
+            [--prefill-chunk N] [--prefix-cache] [--mem-pressure]
             [--block-tokens N] [--hot-tokens N] [--cold-tokens N]
             [--cold-bw BYTES_PER_S] [--cold-latency S]
   kvr calibrate [--artifacts artifacts]
@@ -52,8 +52,11 @@ requests (hybrid compute-or-load per block). `--sim` serves on the
 modeled A100 cluster instead of the PJRT tiny model. `--decode-batch`
 caps how many requests one batched decode step advances (1 = per-request
 decode); `--max-active` caps concurrent decode-phase requests (sim
-default: unbounded). `--mem-pressure` (sim) gates admission and decode
-on the modeled device-memory footprint of the active KV.
+default: unbounded). `--prefill-chunk` splits each prefill into
+N-token chunk events interleaved with decode (0 = whole prompt in one
+chunk), bounding the decode stall a long prompt causes.
+`--mem-pressure` (sim) gates admission and decode on the modeled
+device-memory footprint of the active KV.
 ";
 
 fn main() {
@@ -222,6 +225,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 0)?;
     let frac = args.f64_or("shared-prefix", 0.5)?;
     let decode_batch = args.usize_or("decode-batch", 8)?.max(1);
+    let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
     let mut rng = Rng::new(seed);
 
     if args.flag("sim") {
@@ -238,6 +242,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let mut sched = Scheduler::new(SchedulerConfig {
             max_active: args.usize_or("max-active", usize::MAX)?.max(1),
             decode_batch,
+            prefill_chunk,
             ..Default::default()
         });
         if args.flag("prefix-cache") {
@@ -265,6 +270,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut sched = Scheduler::new(SchedulerConfig {
         decode_batch,
         max_active: args.usize_or("max-active", 4)?.max(1),
+        prefill_chunk,
         ..Default::default()
     });
     if args.flag("prefix-cache") {

@@ -13,8 +13,10 @@ use std::collections::VecDeque;
 
 use kvr::config::{hardware_by_name, model_by_name, HardwareConfig, ModelConfig};
 use kvr::coordinator::{
-    ByteTokenizer, GenRequest, GenResponse, Scheduler, SchedulerConfig,
-    ServeMetrics, ServingBackend, SimBackend, SimCluster,
+    ByteTokenizer, ChunkOutcome, Clock, DecodeOutcome, DecodeStep, GenRequest,
+    GenResponse, PartitionPolicy, PrefillJob, PrefillOutcome, ReusedPrefix,
+    Scheduler, SchedulerConfig, ServeMetrics, ServingBackend, SimBackend,
+    SimCluster,
 };
 use kvr::partition::Partition;
 use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
@@ -376,4 +378,506 @@ fn memory_pressure_serializes_admissions_end_to_end() {
     let (_, m_f) = sim_scheduler(8).serve(&mut free, reqs).unwrap();
     assert_eq!(m_f.max_decode_batch, 4, "pressure off admits everyone");
     assert!(m_p.wall_s >= m_f.wall_s - 1e-12);
+}
+
+// ---------------------------------------------------------------------
+// Chunked, preemptible prefill (DESIGN.md §6).
+
+fn chunk_scheduler(decode_batch: usize, prefill_chunk: usize) -> Scheduler {
+    Scheduler::new(SchedulerConfig {
+        max_active: usize::MAX,
+        decode_batch,
+        prefill_chunk,
+        ..SchedulerConfig::default()
+    })
+}
+
+#[test]
+fn chunk_ge_prompt_reproduces_pr3_goldens_exactly() {
+    // A chunked run whose chunk covers the whole prompt must be the
+    // unchunked run, bit for bit, across the no-cache × cache × batch
+    // golden sweeps — chunking degrades to PR 3 semantics at the limit.
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    for decode_batch in [1usize, 4, 8] {
+        let reqs = workload(8, 2048, 512, 24);
+        let prompt_len = reqs[0].tokens.len();
+        let (want_resp, want) =
+            reference_serve(&cm, 4, None, decode_batch, &reqs);
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let (got_resp, got) = chunk_scheduler(decode_batch, prompt_len)
+            .serve(&mut backend, reqs)
+            .unwrap();
+        assert_metrics_match(&got, &want);
+        assert_responses_match(&got_resp, &want_resp);
+        // Every prefill ran as exactly one chunk event.
+        assert_eq!(got.prefill_chunks, 8);
+        assert_eq!(got.chunked_prefills, 0);
+    }
+    // With the prefix cache attached (reuse shrinks the suffix, so the
+    // one chunk covers it a fortiori).
+    let reqs = workload(8, 4096, 1024, 8);
+    let prompt_len = reqs[0].tokens.len();
+    let (want_resp, want) =
+        reference_serve(&cm, 4, Some(PrefixCache::new(cache_cfg())), 8, &reqs);
+    assert!(want.prefix_hits > 0);
+    let mut backend = SimBackend::new(model, hw, 4);
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: usize::MAX,
+        decode_batch: 8,
+        prefill_chunk: prompt_len,
+        ..SchedulerConfig::default()
+    })
+    .with_prefix_cache(PrefixCache::new(cache_cfg()), cm.clone());
+    let (got_resp, got) = sched.serve(&mut backend, reqs).unwrap();
+    assert_metrics_match(&got, &want);
+    assert_responses_match(&got_resp, &want_resp);
+}
+
+#[test]
+fn chunked_ttft_is_the_sum_of_its_chunk_times() {
+    // One request, chunked 4 ways on the virtual clock: its TTFT must
+    // be exactly the sum of the per-chunk chain passes, each priced at
+    // its causal context offset.
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let reqs = vec![GenRequest {
+        id: 0,
+        tokens: (0..4096).collect(),
+        max_new_tokens: 4,
+        arrival: 0.0,
+    }];
+    let mut backend = SimBackend::new(model, hw, 4);
+    let (resp, m) = chunk_scheduler(8, 1024)
+        .serve(&mut backend, reqs)
+        .unwrap();
+    let mut want = 0.0;
+    for i in 0..4usize {
+        let part = Partition::even(1024, 4);
+        let mut net = quiet_network(&cm, 4);
+        want += kvr_timeline_offset(&cm, &mut net, part.sizes(), i * 1024)
+            .unwrap()
+            .ttft;
+    }
+    assert_float_eq(resp[0].ttft, want, "chunked ttft");
+    assert_float_eq(m.ttfts[0], want, "chunked ttft metric");
+    assert_eq!(m.prefill_chunks, 4);
+    assert_eq!(m.chunked_prefills, 1);
+    assert!(m.wall_s >= want, "timeline covers every chunk");
+    // No other request was active: no decode stall to report.
+    assert_eq!(m.max_decode_stall_s, 0.0);
+}
+
+#[test]
+fn chunked_prefill_cuts_tpot_p95_and_bounds_the_stall() {
+    // The acceptance workload: short requests are mid-decode when one
+    // long prompt arrives. Unchunked, its prefill holds the chain for
+    // the whole prompt (every decode stalls behind it, and the shorts
+    // later ride the long request's heavy batches); chunked, decode
+    // events run between chunks — the stall is bounded by one chunk
+    // and TPOT p95 drops at the same workload.
+    let (model, hw) = parts();
+    let mk = || {
+        let mut reqs: Vec<GenRequest> = (0..6u64)
+            .map(|id| GenRequest {
+                id,
+                tokens: (0..512).map(|i| i * 17 + 1 + id as i32).collect(),
+                max_new_tokens: 24,
+                arrival: 0.0,
+            })
+            .collect();
+        reqs.push(GenRequest {
+            id: 99,
+            tokens: (0..32768).collect(),
+            max_new_tokens: 64,
+            arrival: 0.05,
+        });
+        reqs
+    };
+
+    let mut plain = SimBackend::new(model.clone(), hw.clone(), 4);
+    let (_, un) = chunk_scheduler(8, 0).serve(&mut plain, mk()).unwrap();
+    let mut chunked_backend = SimBackend::new(model, hw, 4);
+    let (_, ch) = chunk_scheduler(8, 1024)
+        .serve(&mut chunked_backend, mk())
+        .unwrap();
+
+    // Same tokens served either way.
+    assert_eq!(un.tokens_out, ch.tokens_out);
+    assert_eq!(un.requests, ch.requests);
+    assert_eq!(un.chunked_prefills, 0);
+    assert_eq!(ch.chunked_prefills, 1);
+    assert_eq!(ch.prefill_chunks, 6 + 32768 / 1024);
+
+    // Unchunked: the decode stall is the whole long prefill (seconds).
+    assert!(
+        un.max_decode_stall_s > 1.0,
+        "long prefill must stall decodes: {}",
+        un.max_decode_stall_s
+    );
+    // Chunked: bounded by ~one chunk event.
+    assert!(
+        ch.max_decode_stall_s < un.max_decode_stall_s / 4.0,
+        "chunking must bound the stall: {} !< {} / 4",
+        ch.max_decode_stall_s,
+        un.max_decode_stall_s
+    );
+    // And the headline: TPOT p95 drops at the same workload.
+    let p95_un = un.tpot_summary().unwrap().p95;
+    let p95_ch = ch.tpot_summary().unwrap().p95;
+    assert!(
+        p95_ch < p95_un,
+        "chunked TPOT p95 {p95_ch} !< unchunked {p95_un}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Serving-loop sharp edges.
+
+#[test]
+fn non_finite_arrivals_are_rejected_not_panicked() {
+    let (model, hw) = parts();
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let mut reqs = workload(3, 1024, 256, 4);
+        reqs[1].arrival = bad;
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let err = chunk_scheduler(8, 0)
+            .serve(&mut backend, reqs)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite arrival"), "{err}");
+        assert!(err.contains("request 1"), "{err}");
+    }
+}
+
+#[test]
+fn oversized_solo_admission_is_served_and_surfaced() {
+    // A request whose prompt + decode budget can never fit the device
+    // still enters through the idle-backend escape hatch (degrade, not
+    // deadlock) — but the run must count it, the backend must clamp its
+    // reservation, and the request must still finish end to end.
+    let model = model_by_name("llama7b").unwrap();
+    let mut hw = hardware_by_name("a100-300gbps").unwrap();
+    // Usable capacity ≈ 1500 KV rows; the request needs 2048 + 8.
+    hw.mem_bytes = kvr::sim::memory::decode_peak_bytes(&model, 1500) / 0.95;
+    let mut backend =
+        SimBackend::new(model, hw, 4).with_memory_pressure(true);
+    let reqs = vec![GenRequest {
+        id: 0,
+        tokens: (0..2048).collect(),
+        max_new_tokens: 8,
+        arrival: 0.0,
+    }];
+    let (resp, m) = chunk_scheduler(8, 0).serve(&mut backend, reqs).unwrap();
+    assert_eq!(resp.len(), 1);
+    assert_eq!(resp[0].tokens.len(), 8, "over-budget request still drains");
+    assert_eq!(m.oversized_admissions, 1);
+    assert!(m.report().contains("WARN  1 oversized solo admission"));
+    // The clamp means decode degrades to forced progress, one step at a
+    // time — never a stall.
+    assert_eq!(m.max_decode_batch, 1);
+}
+
+#[test]
+fn normal_admissions_never_count_as_oversized() {
+    let (model, hw) = parts();
+    let mut backend = SimBackend::new(model, hw, 4).with_memory_pressure(true);
+    let reqs = workload(4, 1024, 256, 8);
+    let (resp, m) = chunk_scheduler(8, 0).serve(&mut backend, reqs).unwrap();
+    assert_eq!(resp.len(), 4);
+    assert_eq!(m.oversized_admissions, 0);
+}
+
+// ---------------------------------------------------------------------
+// Lease safety across chunk boundaries.
+
+/// A `SimBackend` that fails `prefill_chunk` for one request once its
+/// first chunk has completed — the mid-job error path a partially-run
+/// prefill must survive without leaking its lease or partial KV.
+struct FailingChunks {
+    inner: SimBackend,
+    fail_req: u64,
+}
+
+impl ServingBackend for FailingChunks {
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+    fn model(&self) -> &ModelConfig {
+        self.inner.model()
+    }
+    fn granularity(&self) -> usize {
+        self.inner.granularity()
+    }
+    fn needs_kv_payloads(&self) -> bool {
+        self.inner.needs_kv_payloads()
+    }
+    fn clock(&self) -> Box<dyn Clock> {
+        self.inner.clock()
+    }
+    fn plan_partition(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> kvr::Result<Partition> {
+        self.inner.plan_partition(c, start, policy)
+    }
+    fn prefill(
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool,
+    ) -> kvr::Result<PrefillOutcome> {
+        self.inner.prefill(req, reused, load_s, policy, want_wire)
+    }
+    fn prefill_begin(
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+    ) -> kvr::Result<PrefillJob> {
+        self.inner
+            .prefill_begin(req, reused, load_s, policy, want_wire, chunk_tokens)
+    }
+    fn prefill_chunk(
+        &mut self, job: &mut PrefillJob,
+    ) -> kvr::Result<ChunkOutcome> {
+        if job.req.id == self.fail_req && job.chunks_done() == 1 {
+            return Err(kvr::Error::Coordinator(
+                "injected chunk failure".into(),
+            ));
+        }
+        self.inner.prefill_chunk(job)
+    }
+    fn prefill_abort(&mut self, job: PrefillJob) {
+        self.inner.prefill_abort(job);
+    }
+    fn decode_batch(
+        &mut self, steps: &[DecodeStep],
+    ) -> kvr::Result<DecodeOutcome> {
+        self.inner.decode_batch(steps)
+    }
+    fn release(&mut self, owner: usize, req_id: u64) -> kvr::Result<()> {
+        self.inner.release(owner, req_id)
+    }
+    fn kv_bytes_active(&self) -> f64 {
+        self.inner.kv_bytes_active()
+    }
+}
+
+#[test]
+fn failed_chunk_releases_the_lease_and_partial_kv() {
+    let (model, hw) = parts();
+    // Small store: 8 hot + 8 cold blocks of 512 tokens, so unpinned
+    // blocks are evictable under modest pressure.
+    let cfg = PrefixCacheConfig {
+        block_tokens: 512,
+        hot_capacity_tokens: 8 * 512,
+        cold_capacity_tokens: 8 * 512,
+        cold_load_bw: 300e9,
+        cold_load_latency: 1e-4,
+    };
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let mut backend = FailingChunks {
+        inner: SimBackend::new(model, hw, 4),
+        fail_req: 1,
+    };
+    let mut sched = chunk_scheduler(8, 256)
+        .with_prefix_cache(PrefixCache::new(cfg), cm);
+    let prompt: Vec<i32> = (0..4096).collect();
+
+    // Request 0 populates the cache.
+    let (resp, _) = sched
+        .serve(
+            &mut backend,
+            vec![GenRequest {
+                id: 0,
+                tokens: prompt.clone(),
+                max_new_tokens: 2,
+                arrival: 0.0,
+            }],
+        )
+        .unwrap();
+    assert_eq!(resp.len(), 1);
+
+    // Request 1 reuses the cached prefix (taking a lease across its
+    // chunked prefill) and dies on its second chunk.
+    let err = sched
+        .serve(
+            &mut backend,
+            vec![GenRequest {
+                id: 1,
+                tokens: prompt.clone(),
+                max_new_tokens: 2,
+                arrival: 0.0,
+            }],
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("injected chunk failure"), "{err}");
+
+    // The planner did match and lease (two lookups, one hit)...
+    let stats = sched.prefix_cache_stats().unwrap();
+    assert_eq!(stats.lookups, 2);
+    assert_eq!(stats.hits, 1);
+    // ...and the failed job released its partial KV on the backend...
+    assert_eq!(backend.kv_bytes_active(), 0.0, "partial KV must not leak");
+    // ...and its lease: under eviction pressure the previously leased
+    // blocks must be evictable. A leaked pin would keep them resident
+    // for the cache's lifetime.
+    let mut pc = sched.take_prefix_cache().unwrap();
+    for salt in 1..=4i32 {
+        let other: Vec<i32> =
+            (0..4096).map(|i| i * 31 + salt * 7919).collect();
+        pc.admit(&other);
+    }
+    assert!(
+        pc.lookup(&prompt).is_empty(),
+        "leased blocks stayed pinned after the failed chunk"
+    );
+}
+
+/// A `SimBackend` whose `decode_batch` fails whenever a multi-chunk
+/// prefill job is in flight — the between-chunks decode event is an
+/// error path out of the partially-run job too, and must settle the
+/// job (lease + partial KV) before propagating.
+struct FailingDecodeMidJob {
+    inner: SimBackend,
+    job_req: Option<u64>,
+}
+
+impl ServingBackend for FailingDecodeMidJob {
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+    fn model(&self) -> &ModelConfig {
+        self.inner.model()
+    }
+    fn granularity(&self) -> usize {
+        self.inner.granularity()
+    }
+    fn needs_kv_payloads(&self) -> bool {
+        self.inner.needs_kv_payloads()
+    }
+    fn clock(&self) -> Box<dyn Clock> {
+        self.inner.clock()
+    }
+    fn plan_partition(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> kvr::Result<Partition> {
+        self.inner.plan_partition(c, start, policy)
+    }
+    fn prefill(
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool,
+    ) -> kvr::Result<PrefillOutcome> {
+        self.inner.prefill(req, reused, load_s, policy, want_wire)
+    }
+    fn prefill_begin(
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+    ) -> kvr::Result<PrefillJob> {
+        let id = req.id;
+        let job = self
+            .inner
+            .prefill_begin(req, reused, load_s, policy, want_wire, chunk_tokens)?;
+        if job.chunks_total() > 1 {
+            self.job_req = Some(id);
+        }
+        Ok(job)
+    }
+    fn prefill_chunk(
+        &mut self, job: &mut PrefillJob,
+    ) -> kvr::Result<ChunkOutcome> {
+        let out = self.inner.prefill_chunk(job)?;
+        if out.done.is_some() {
+            self.job_req = None;
+        }
+        Ok(out)
+    }
+    fn prefill_abort(&mut self, job: PrefillJob) {
+        self.job_req = None;
+        self.inner.prefill_abort(job);
+    }
+    fn decode_batch(
+        &mut self, steps: &[DecodeStep],
+    ) -> kvr::Result<DecodeOutcome> {
+        if self.job_req.is_some() {
+            return Err(kvr::Error::Coordinator(
+                "injected decode failure mid-job".into(),
+            ));
+        }
+        self.inner.decode_batch(steps)
+    }
+    fn release(&mut self, owner: usize, req_id: u64) -> kvr::Result<()> {
+        self.inner.release(owner, req_id)
+    }
+    fn kv_bytes_active(&self) -> f64 {
+        self.inner.kv_bytes_active()
+    }
+}
+
+#[test]
+fn failed_between_chunk_decode_still_settles_the_job() {
+    // Regression: an error from the decode event interleaved *between*
+    // chunks used to drop the in-flight job — leaking its lease (no
+    // Drop impl unpins) and the backend's partial KV. The scheduler
+    // must settle the job on this error path exactly as it does for a
+    // failing chunk.
+    let (model, hw) = parts();
+    let cfg = PrefixCacheConfig {
+        block_tokens: 512,
+        hot_capacity_tokens: 8 * 512,
+        cold_capacity_tokens: 8 * 512,
+        cold_load_bw: 300e9,
+        cold_load_latency: 1e-4,
+    };
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let per_row = model.kv_bytes_per_token() as f64;
+    let mut backend = FailingDecodeMidJob {
+        inner: SimBackend::new(model, hw, 4),
+        job_req: None,
+    };
+    let mut sched = chunk_scheduler(8, 256)
+        .with_prefix_cache(PrefixCache::new(cfg), cm);
+    let prompt: Vec<i32> = (0..4096).collect();
+    // Req 0 seeds the cache and retires without decoding; req 1 is a
+    // decoder sitting in the active set; req 2 reuses req 0's prefix
+    // (leased) and chunks — the decode event after its first chunk is
+    // the injected failure.
+    let reqs = vec![
+        GenRequest {
+            id: 0,
+            tokens: prompt.clone(),
+            max_new_tokens: 1,
+            arrival: 0.0,
+        },
+        GenRequest {
+            id: 1,
+            tokens: (0..512).map(|i| i * 13 + 7).collect(),
+            max_new_tokens: 24,
+            arrival: 0.0,
+        },
+        GenRequest {
+            id: 2,
+            tokens: prompt.clone(),
+            max_new_tokens: 4,
+            arrival: 0.0,
+        },
+    ];
+    let err = sched.serve(&mut backend, reqs).unwrap_err().to_string();
+    assert!(err.contains("injected decode failure mid-job"), "{err}");
+
+    // Req 2's partial KV settled; only req 1's active KV remains
+    // (decode-phase requests are not torn down by an aborted serve).
+    assert_eq!(
+        backend.kv_bytes_active(),
+        513.0 * per_row,
+        "the failed job's partial KV must be settled"
+    );
+    // And the lease: the reused blocks must be evictable afterwards.
+    let mut pc = sched.take_prefix_cache().unwrap();
+    for salt in 1..=4i32 {
+        let other: Vec<i32> =
+            (0..4096).map(|i| i * 31 + salt * 7919).collect();
+        pc.admit(&other);
+    }
+    assert!(
+        pc.lookup(&prompt).is_empty(),
+        "leased blocks stayed pinned after the mid-job decode failure"
+    );
 }
