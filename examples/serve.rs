@@ -37,14 +37,7 @@ use kvr::util::rng::Rng;
 use kvr::util::stats::fmt_time;
 
 fn cache_config(args: &Args, block_default: usize) -> kvr::Result<PrefixCacheConfig> {
-    let base = PrefixCacheConfig::default();
-    Ok(PrefixCacheConfig {
-        block_tokens: args.usize_or("block-tokens", block_default)?,
-        hot_capacity_tokens: args.usize_or("hot-tokens", base.hot_capacity_tokens)?,
-        cold_capacity_tokens: args.usize_or("cold-tokens", base.cold_capacity_tokens)?,
-        cold_load_bw: args.f64_or("cold-bw", base.cold_load_bw)?,
-        cold_load_latency: args.f64_or("cold-latency", base.cold_load_latency)?,
-    })
+    PrefixCacheConfig::from_args(args, block_default)
 }
 
 /// Poisson arrivals over prompts sharing a `frac` common prefix.
@@ -222,7 +215,10 @@ fn serve_real(args: &Args) -> kvr::Result<()> {
 
 fn main() -> kvr::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["sim", "prefix-cache"])?;
+    let args = Args::parse(
+        &raw,
+        &["sim", "prefix-cache", "pipelined-loads", "serial-loads", "even-cuts"],
+    )?;
     if args.flag("sim") {
         serve_sim(&args)
     } else {

@@ -105,6 +105,37 @@ impl Clock for VirtualClock {
     }
 }
 
+/// Modeled prefix-load schedule for one admission (DESIGN.md §7): how
+/// long the reused blocks take to materialize on the chain head, and
+/// whether they stream *overlapped* with the runahead chain (the
+/// pipelined compute-or-load schedule) or block it up front. Real
+/// backends measure loads instead and ignore the modeled seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LoadPlan {
+    /// Total modeled seconds to materialize every loaded block.
+    pub total_s: f64,
+    /// Stream the loads while the chain runs; `false` reproduces the
+    /// serial `load + prefill` pricing bit for bit.
+    pub pipelined: bool,
+}
+
+impl LoadPlan {
+    /// No loads at all (cache miss / cache disabled).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Serial schedule: the chain waits `total_s` before its first hop.
+    pub fn serial(total_s: f64) -> Self {
+        Self { total_s, pipelined: false }
+    }
+
+    /// Pipelined schedule: `total_s` streams under the chain.
+    pub fn pipelined(total_s: f64) -> Self {
+        Self { total_s, pipelined: true }
+    }
+}
+
 /// Outcome of one backend prefill.
 #[derive(Clone, Debug)]
 pub struct PrefillOutcome {
@@ -148,9 +179,9 @@ pub struct PrefillJob {
     /// Cache-provided prefix seeding the first chunk; taken by the
     /// backend when that chunk runs.
     pub(crate) reused: Option<ReusedPrefix>,
-    /// Modeled prefix-load seconds still to charge (zero after the
+    /// Modeled prefix-load schedule still to charge (empty after the
     /// first chunk; real backends measure loads instead).
-    pub(crate) load_s: f64,
+    pub(crate) loads: LoadPlan,
     /// Suffix chunk sizes, in chain order.
     chunk_sizes: Vec<usize>,
     /// Chunks completed so far.
@@ -175,7 +206,7 @@ impl PrefillJob {
     /// `chunk_tokens` rounded down to `granularity` (0 = the whole
     /// suffix in one chunk), the last chunk taking the remainder.
     pub fn new(
-        req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        req: GenRequest, reused: Option<ReusedPrefix>, loads: LoadPlan,
         policy: PartitionPolicy, want_wire: bool, chunk_tokens: usize,
         granularity: usize,
     ) -> Self {
@@ -200,7 +231,7 @@ impl PrefillJob {
             want_wire,
             reused_tokens,
             reused,
-            load_s,
+            loads,
             chunk_sizes,
             completed: 0,
             done_tokens: reused_tokens,
@@ -213,10 +244,10 @@ impl PrefillJob {
     /// One whole-prompt chunk (the unchunked surface the default trait
     /// impls provide).
     pub fn single(
-        req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
+        req: GenRequest, reused: Option<ReusedPrefix>, loads: LoadPlan,
         policy: PartitionPolicy, want_wire: bool,
     ) -> Self {
-        Self::new(req, reused, load_s, policy, want_wire, 0, 1)
+        Self::new(req, reused, loads, policy, want_wire, 0, 1)
     }
 
     pub fn chunks_total(&self) -> usize {
@@ -252,9 +283,9 @@ impl PrefillJob {
         self.reused.take()
     }
 
-    /// Prefix-load seconds still to charge (zero after the first take).
-    pub(crate) fn take_load_s(&mut self) -> f64 {
-        std::mem::replace(&mut self.load_s, 0.0)
+    /// Prefix-load schedule still to charge (empty after the first take).
+    pub(crate) fn take_loads(&mut self) -> LoadPlan {
+        std::mem::take(&mut self.loads)
     }
 
     /// Mark the next chunk complete: `rows` more prompt rows landed in
@@ -338,13 +369,13 @@ pub trait ServingBackend {
     ) -> Result<Partition>;
 
     /// Run one runahead prefill. `reused` seeds the chain head (modeled
-    /// backends only honour `reused.tokens`); `load_s` is the modeled
-    /// time to materialize those rows (real backends measure instead);
-    /// `want_wire` ships the accumulated prompt KV back for prefix-cache
-    /// admission.
+    /// backends only honour `reused.tokens`); `loads` is the modeled
+    /// schedule to materialize those rows — serial or streamed under the
+    /// chain (real backends measure instead); `want_wire` ships the
+    /// accumulated prompt KV back for prefix-cache admission.
     fn prefill(
-        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
-        policy: &PartitionPolicy, want_wire: bool,
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
     ) -> Result<PrefillOutcome>;
 
     /// Open a resumable chunked prefill (DESIGN.md §6) over the
@@ -359,11 +390,12 @@ pub trait ServingBackend {
     /// covering the whole prompt, prompt over the backend's context
     /// limit) here, before any chain work runs.
     fn prefill_begin(
-        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
-        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
+        chunk_tokens: usize,
     ) -> Result<PrefillJob> {
         let _ = chunk_tokens;
-        Ok(PrefillJob::single(req, reused, load_s, policy.clone(), want_wire))
+        Ok(PrefillJob::single(req, reused, loads, policy.clone(), want_wire))
     }
 
     /// Run the job's next chunk on the chain, accumulating the partial
@@ -375,9 +407,9 @@ pub trait ServingBackend {
     /// [`Self::prefill_abort`].
     fn prefill_chunk(&mut self, job: &mut PrefillJob) -> Result<ChunkOutcome> {
         let reused = job.take_reused();
-        let load_s = job.take_load_s();
+        let loads = job.take_loads();
         let out =
-            self.prefill(&job.req, reused, load_s, &job.policy, job.want_wire)?;
+            self.prefill(&job.req, reused, loads, &job.policy, job.want_wire)?;
         let rows = job.req.tokens.len().saturating_sub(job.done_tokens());
         job.advance(rows, out.ttft);
         Ok(ChunkOutcome { chunk_s: out.ttft, done: Some(out) })
@@ -433,8 +465,17 @@ mod tests {
         let reused = (reuse > 0).then(|| ReusedPrefix {
             tokens: reuse,
             wire: Vec::new(),
+            blocks: Vec::new(),
         });
-        PrefillJob::new(req, reused, 0.5, PartitionPolicy::Even, false, chunk, g)
+        PrefillJob::new(
+            req,
+            reused,
+            LoadPlan::serial(0.5),
+            PartitionPolicy::Even,
+            false,
+            chunk,
+            g,
+        )
     }
 
     #[test]
@@ -462,8 +503,8 @@ mod tests {
     #[test]
     fn job_advance_tracks_rows_chunks_and_elapsed() {
         let mut j = job(100, 40, 32, 1);
-        assert_eq!(j.take_load_s(), 0.5);
-        assert_eq!(j.take_load_s(), 0.0, "load charges once");
+        assert_eq!(j.take_loads(), LoadPlan::serial(0.5));
+        assert_eq!(j.take_loads(), LoadPlan::none(), "load charges once");
         assert!(j.take_reused().is_some());
         j.advance(32, 0.25);
         assert_eq!(j.chunks_done(), 1);

@@ -25,8 +25,8 @@ use std::time::Instant;
 
 use crate::config::ModelConfig;
 use crate::coordinator::backend::{
-    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, PrefillJob, PrefillOutcome,
-    ServingBackend, WallClock,
+    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, LoadPlan, PrefillJob,
+    PrefillOutcome, ServingBackend, WallClock,
 };
 use crate::coordinator::kvpool::KvPool;
 use crate::coordinator::request::GenRequest;
@@ -52,11 +52,17 @@ struct CacheMsg {
     wire: Vec<u8>,
 }
 
+/// Slab rows one decode step may newly claim from a worker's arena:
+/// [`decode_one`] allocates and grows caches to `tokens +
+/// POOL_GROW_ROWS`, so each stepped rider can cost its worker up to one
+/// grow pad of fresh headroom.
+const POOL_GROW_ROWS: usize = 32;
+
 /// Rows of contiguous-slab headroom the leader-side admission bound
-/// charges on top of `prompt + max_new`: workers allocate
-/// `cache.tokens + 32` and grow in `+32` steps ([`decode_one`]), so a
-/// request's cache extent can exceed its row count by up to two pads.
-const POOL_ADMIT_PAD: usize = 64;
+/// charges on top of `prompt + max_new`: workers allocate and grow in
+/// `POOL_GROW_ROWS` steps ([`decode_one`]), so a request's cache extent
+/// can exceed its row count by up to two pads.
+const POOL_ADMIT_PAD: usize = 2 * POOL_GROW_ROWS;
 
 /// Leader-side admission bound for the real path (ROADMAP: real-path
 /// decode backpressure): would a request's worst-case contiguous cache
@@ -72,6 +78,28 @@ pub fn pool_admits(
 ) -> bool {
     busiest_rows + prompt_tokens + max_new_tokens + POOL_ADMIT_PAD
         <= pool_tokens
+}
+
+/// Decode-batch width the per-worker [`KvPool`] arenas can absorb in
+/// one event (ROADMAP: real-path decode headroom): each stepped rider
+/// may grow its worker's slab by up to `POOL_GROW_ROWS` fresh rows,
+/// so a worker contributes at most `headroom / POOL_GROW_ROWS` of its
+/// riders to the batch — a near-full worker sheds batch width *before*
+/// its allocator errors instead of failing the step. `per_worker` is
+/// `(committed_rows, riders)` per worker; the result is clamped to
+/// `[1, want]` (an active set must always drain — a truly exhausted
+/// arena still surfaces as a decode error rather than a stall).
+pub fn pool_decode_capacity(
+    pool_tokens: usize, per_worker: &[(usize, usize)], want: usize,
+) -> usize {
+    let safe: usize = per_worker
+        .iter()
+        .map(|&(committed, riders)| {
+            let headroom = pool_tokens.saturating_sub(committed);
+            riders.min(headroom / POOL_GROW_ROWS)
+        })
+        .sum();
+    safe.clamp(1, want.max(1))
 }
 
 /// Group decode steps `(owner, req_id, token)` by owner worker,
@@ -90,25 +118,66 @@ fn group_by_owner(steps: &[(usize, u64, i32)]) -> Vec<(usize, Vec<(u64, i32)>)> 
     groups
 }
 
-/// A cached prompt prefix (from [`crate::prefixcache::PrefixCache`]) that
-/// seeds the chain head instead of an empty cache: the workers then
-/// compute only the uncached suffix.
+/// One stored prefix block's KV payload, shipped to the chain head as
+/// its own background transfer (DESIGN.md §7): the leader streams seed
+/// blocks ahead of the chain dispatch and worker 0 deserializes each as
+/// it arrives, pipelined with the leader still feeding the channel —
+/// instead of one blocking, leader-side-reassembled prefix wire.
 #[derive(Clone, Debug)]
-pub struct ReusedPrefix {
-    /// Reused token rows (must be a multiple of the artifact granularity).
-    pub tokens: usize,
-    /// KV wire bytes of those rows ([`KvCache::to_wire`] layout).
+pub struct SeedBlock {
+    /// Token rows in this block.
+    pub rows: usize,
+    /// KV wire bytes of those rows ([`KvCache::block_wire`] layout).
     pub wire: Vec<u8>,
 }
 
+/// A cached prompt prefix (from [`crate::prefixcache::PrefixCache`]) that
+/// seeds the chain head instead of an empty cache: the workers then
+/// compute only the uncached suffix.
+#[derive(Clone, Debug, Default)]
+pub struct ReusedPrefix {
+    /// Reused token rows (must be a multiple of the artifact granularity).
+    pub tokens: usize,
+    /// KV wire bytes of those rows ([`KvCache::to_wire`] layout). Empty
+    /// when the prefix ships as `blocks` instead.
+    pub wire: Vec<u8>,
+    /// Block-granular payloads, in row order, summing to `tokens`. When
+    /// non-empty the cluster streams these to worker 0 as background
+    /// [`SeedBlock`] transfers interleaved with the chain dispatch
+    /// (`wire` stays empty); timing-only backends ignore them.
+    pub blocks: Vec<SeedBlock>,
+}
+
+/// How the chain head obtains its starting cache for one prefill pass.
+enum SeedSpec {
+    /// Fresh prompt: start from an empty cache.
+    Empty,
+    /// Inline wire bytes (chunk carry and single-wire reuse).
+    Inline { rows: usize, wire: Vec<u8> },
+    /// `rows` already streamed ahead as [`WorkerCmd::SeedBlock`]
+    /// transfers; take the staged cache.
+    Streamed { rows: usize },
+}
+
 enum WorkerCmd {
+    /// One background seed transfer for an upcoming prefill (worker 0
+    /// only). Fire-and-forget: errors are staged and surfaced by the
+    /// `Prefill` turn that consumes the seed.
+    SeedBlock {
+        req_id: u64,
+        /// Total rows the full seed will hold (pre-sizes the staging
+        /// cache so per-block appends never re-copy).
+        total_rows: usize,
+        rows: usize,
+        wire: Vec<u8>,
+    },
     Prefill {
         req_id: u64,
         tokens: Vec<i32>,
         first: bool,
         last: bool,
         /// Chain-head cache seed (first worker only).
-        seed: Option<ReusedPrefix>,
+        seed: SeedSpec,
         /// Ship the accumulated cache back with the reply (last worker
         /// only — the scheduler admits it into the prefix cache).
         want_wire: bool,
@@ -189,7 +258,8 @@ fn decode_one(
     let out = engine.decode_step(token, cache)?;
     cache.append_chunk(1, &out.k_chunk, &out.v_chunk)?;
     if cache.tokens > pool.get(*slab).map(|s| s.len).unwrap_or(0) {
-        let (new_slab, _moved) = pool.grow(*slab, cache.tokens + 32)?;
+        let (new_slab, _moved) =
+            pool.grow(*slab, cache.tokens + POOL_GROW_ROWS)?;
         *slab = new_slab.id;
     }
     Ok(out.logits)
@@ -221,11 +291,40 @@ fn worker_main(ctx: WorkerCtx) {
     let mut pool = KvPool::new(ctx.pool_tokens);
     // req_id -> (cache, pool slab id).
     let mut active: HashMap<u64, (KvCache, u64)> = HashMap::new();
+    // Seed caches being accumulated from streamed SeedBlock transfers
+    // (chain head only); a staged deserialization error is surfaced by
+    // the Prefill turn that consumes the entry.
+    let mut pending_seed: HashMap<u64, std::result::Result<KvCache, String>> =
+        HashMap::new();
 
     while let Ok(cmd) = ctx.cmd_rx.recv() {
         match cmd {
             WorkerCmd::Shutdown => break,
+            WorkerCmd::SeedBlock { req_id, total_rows, rows, wire } => {
+                // Background transfer: deserialize-and-append now, while
+                // the leader is still dispatching the rest of the chain.
+                // No reply — the consuming prefill reports any failure.
+                let m = &engine.manifest.model;
+                let entry = pending_seed.entry(req_id).or_insert_with(|| {
+                    Ok(KvCache::new(
+                        m.layers, m.kv_heads, m.head_dim, total_rows,
+                    ))
+                });
+                let failed = match entry {
+                    Ok(cache) => {
+                        cache.append_block_wire(rows, &wire).err()
+                    }
+                    // Already poisoned: keep the first error.
+                    Err(_) => None,
+                };
+                if let Some(e) = failed {
+                    *entry = Err(format!("seed block: {e}"));
+                }
+            }
             WorkerCmd::Release { req_id } => {
+                // A staged seed whose prefill never ran (leader-side
+                // dispatch error) is dropped with the release.
+                pending_seed.remove(&req_id);
                 let _ = match active.remove(&req_id) {
                     Some((_, slab)) => {
                         let _ = pool.release(slab);
@@ -265,20 +364,41 @@ fn worker_main(ctx: WorkerCtx) {
             }
             WorkerCmd::Prefill { req_id, tokens, first, last, seed, want_wire } => {
                 let t0 = Instant::now();
+                // Any staged seed is consumed (or discarded) by exactly
+                // this request's prefill turn — never left behind.
+                let staged = pending_seed.remove(&req_id);
                 let outcome = (|| -> Result<(Option<Vec<f32>>, usize, Option<Vec<u8>>)> {
                     // (1) Receive the accumulated cache from the
                     //     predecessor (the chain's point-to-point recv) —
                     //     or, at the chain head, start from the reused
-                    //     prefix the prefix cache provided.
+                    //     prefix the prefix cache provided (inline wire,
+                    //     or the cache staged by streamed SeedBlocks).
                     let cache = if first {
                         match &seed {
-                            None => engine.empty_cache(),
-                            Some(s) => {
+                            SeedSpec::Empty => engine.empty_cache(),
+                            SeedSpec::Inline { rows, wire } => {
                                 let m = &engine.manifest.model;
                                 KvCache::from_wire(
-                                    m.layers, m.kv_heads, m.head_dim,
-                                    s.tokens, &s.wire,
+                                    m.layers, m.kv_heads, m.head_dim, *rows,
+                                    wire,
                                 )?
+                            }
+                            SeedSpec::Streamed { rows } => {
+                                let got = staged.ok_or_else(|| {
+                                    Error::Coordinator(format!(
+                                        "no streamed seed staged for {req_id}"
+                                    ))
+                                })?;
+                                let cache =
+                                    got.map_err(Error::Coordinator)?;
+                                if cache.tokens != *rows {
+                                    return Err(Error::Coordinator(format!(
+                                        "streamed seed holds {} rows, \
+                                         prefill expected {rows}",
+                                        cache.tokens
+                                    )));
+                                }
+                                cache
                             }
                         }
                     } else {
@@ -305,7 +425,8 @@ fn worker_main(ctx: WorkerCtx) {
                     // (3) Forward the accumulated cache, or keep it (last).
                     if last {
                         let wire = want_wire.then(|| cache.to_wire());
-                        let slab = pool.alloc(cache.tokens + 32)?;
+                        let slab =
+                            pool.alloc(cache.tokens + POOL_GROW_ROWS)?;
                         let n = cache.tokens;
                         active.insert(req_id, (cache, slab.id));
                         Ok((Some(logits), n, wire))
@@ -470,12 +591,14 @@ impl Cluster {
     }
 
     /// Resolve the partition for the `c`-token suffix after `start`
-    /// reused rows. LUT rows are searched for zero-offset contexts whose
+    /// reused rows. Zero-offset LUT rows are searched for contexts whose
     /// per-chunk cost grows with causal depth; under reuse every chunk
     /// already attends over the reused rows and the per-token cost is
-    /// nearly uniform, so the LUT policy degrades to even rather than
-    /// applying ratios tuned for the wrong regime (offset-aware LUTs are
-    /// a ROADMAP item). Explicit `Ratios` are honoured as given.
+    /// nearly uniform, so off the zero-offset regime the LUT policy
+    /// serves its *offset entries* when it has them (the offset-aware
+    /// KVR-P extension, DESIGN.md §7) and degrades to even otherwise —
+    /// never ratios tuned for the wrong regime. Explicit `Ratios` are
+    /// honoured as given.
     pub fn plan_partition_suffix(
         &self, c: usize, start: usize, policy: &PartitionPolicy,
     ) -> Result<Partition> {
@@ -490,8 +613,17 @@ impl Cluster {
         let ratios = match policy {
             PartitionPolicy::Even => vec![1.0; p_max],
             PartitionPolicy::Ratios(r) => r.clone(),
-            PartitionPolicy::Lut(lut) if start == 0 => lut.predict_ratios(c)?,
-            PartitionPolicy::Lut(_) => vec![1.0; p_max],
+            // Regime preference lives in predict_ratios_at, shared with
+            // the sim path: zero-offset rows first at start == 0 (an
+            // offset-entry-only table still serves; one with neither
+            // kind of entry stays a config error), offset entries
+            // otherwise (missing ones degrade to even).
+            PartitionPolicy::Lut(lut) => match lut.predict_ratios_at(c, start)
+            {
+                Ok(r) => r,
+                Err(e) if start == 0 => return Err(e),
+                Err(_) => vec![1.0; p_max],
+            },
         };
         let k = ratios.len().min(p_max).max(1);
         Partition::from_ratios(c, &ratios[..k], g).map(|p| p.with_start(start))
@@ -514,10 +646,12 @@ impl Cluster {
     }
 
     /// Parallel prefill with an optional reused prompt prefix: the chain
-    /// head is seeded with `reused.wire` and the workers compute only the
-    /// remaining suffix (partitioned with a start offset so the causal
-    /// accounting stays correct). `want_wire` ships the full accumulated
-    /// cache back for prefix-cache admission.
+    /// head is seeded with the reused KV — streamed as per-block
+    /// background transfers when `reused.blocks` is populated (DESIGN.md
+    /// §7), or shipped as one inline `reused.wire` — and the workers
+    /// compute only the remaining suffix (partitioned with a start
+    /// offset so the causal accounting stays correct). `want_wire` ships
+    /// the full accumulated cache back for prefix-cache admission.
     pub fn parallel_prefill_reused(
         &mut self, req_id: u64, tokens: &[i32], reused: Option<ReusedPrefix>,
         policy: &PartitionPolicy, want_wire: bool,
@@ -548,8 +682,41 @@ impl Cluster {
         let sizes = partition.sizes().to_vec();
         let k = sizes.len();
         let t0 = Instant::now();
+        // Issue the reused prefix as background transfers ahead of the
+        // chain dispatch (DESIGN.md §7): block-granular payloads stream
+        // to worker 0, which deserializes each as it arrives — pipelined
+        // with the leader still feeding the channel — while an inline
+        // wire ships whole (chunk carry and legacy single-wire reuse).
+        let mut head_seed = SeedSpec::Empty;
+        if let Some(r) = reused {
+            if r.blocks.is_empty() {
+                head_seed = SeedSpec::Inline { rows: r.tokens, wire: r.wire };
+            } else {
+                let total: usize = r.blocks.iter().map(|b| b.rows).sum();
+                if total != r.tokens {
+                    return Err(Error::Coordinator(format!(
+                        "seed blocks hold {total} rows, reused prefix \
+                         declares {}",
+                        r.tokens
+                    )));
+                }
+                for b in r.blocks {
+                    self.cmd_txs[0]
+                        .send(WorkerCmd::SeedBlock {
+                            req_id,
+                            total_rows: total,
+                            rows: b.rows,
+                            wire: b.wire,
+                        })
+                        .map_err(|_| {
+                            Error::Coordinator("worker 0 gone".into())
+                        })?;
+                }
+                head_seed = SeedSpec::Streamed { rows: total };
+            }
+        }
+        let mut head_seed = Some(head_seed);
         let mut offset = start;
-        let mut seed = reused;
         for (i, &sz) in sizes.iter().enumerate() {
             self.cmd_txs[i]
                 .send(WorkerCmd::Prefill {
@@ -557,7 +724,7 @@ impl Cluster {
                     tokens: tokens[offset..offset + sz].to_vec(),
                     first: i == 0,
                     last: i == k - 1,
-                    seed: seed.take(),
+                    seed: head_seed.take().unwrap_or(SeedSpec::Empty),
                     want_wire: want_wire && i == k - 1,
                 })
                 .map_err(|_| Error::Coordinator(format!("worker {i} gone")))?;
@@ -777,11 +944,17 @@ impl ServingBackend for Cluster {
     /// chain drive and active-rows bookkeeping, shared with the chunked
     /// path (so the trait's two prefill entry points can never drift).
     fn prefill(
-        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, _load_s: f64,
-        policy: &PartitionPolicy, want_wire: bool,
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>,
+        _loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
     ) -> Result<PrefillOutcome> {
-        let mut job =
-            self.prefill_begin(req.clone(), reused, 0.0, policy, want_wire, 0)?;
+        let mut job = self.prefill_begin(
+            req.clone(),
+            reused,
+            LoadPlan::none(),
+            policy,
+            want_wire,
+            0,
+        )?;
         let out = self.prefill_chunk(&mut job)?;
         Ok(out.done.expect("single-chunk job finishes in one chunk"))
     }
@@ -794,8 +967,9 @@ impl ServingBackend for Cluster {
     /// The previous chunk's worker-held cache is released before the
     /// next chunk re-seeds the chain — no slab leaks across chunks.
     fn prefill_begin(
-        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, _load_s: f64,
-        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>,
+        _loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
+        chunk_tokens: usize,
     ) -> Result<PrefillJob> {
         // Reject a request the job could never finish BEFORE any chain
         // pass runs — chunked validation would otherwise burn real
@@ -823,7 +997,7 @@ impl ServingBackend for Cluster {
         Ok(PrefillJob::new(
             req,
             reused,
-            0.0,
+            LoadPlan::none(),
             policy.clone(),
             want_wire,
             chunk_tokens,
@@ -889,7 +1063,11 @@ impl ServingBackend for Cluster {
                     job.req.id
                 ))
             })?;
-            job.carry = Some(ReusedPrefix { tokens: start + rows, wire });
+            job.carry = Some(ReusedPrefix {
+                tokens: start + rows,
+                wire,
+                blocks: Vec::new(),
+            });
             Ok(ChunkOutcome { chunk_s, done: None })
         }
     }
@@ -961,11 +1139,38 @@ impl ServingBackend for Cluster {
         let mut per_worker = vec![0usize; self.cmd_txs.len()];
         for &(owner, rows, reserved) in self.active_rows.values() {
             if let Some(w) = per_worker.get_mut(owner) {
-                *w += rows + reserved + 32;
+                *w += rows + reserved + POOL_GROW_ROWS;
             }
         }
         let busiest = per_worker.into_iter().max().unwrap_or(0);
         pool_admits(self.pool_tokens, busiest, prompt_tokens, max_new_tokens)
+    }
+
+    /// Real-path decode headroom (ROADMAP follow-on to the admission
+    /// bound): clamp the batch width from per-worker [`KvPool`] arena
+    /// headroom, so a near-full worker sheds riders before its
+    /// allocator errors mid-step. Headroom counts *resident* slab rows
+    /// only, not reservations — a decode step converts reserved growth
+    /// into resident rows, so re-counting the reservation would
+    /// serialize a device correctly packed to the admission bound
+    /// (exactly the sim-side `decode_capacity` regression). The clamp
+    /// binds once resident rows approach the arena — an oversized
+    /// admission through the idle-backend escape hatch, or deep decode
+    /// tails the admission pad under-estimated. It bounds *damage*, not
+    /// certainty: the scheduler picks riders by rotation position, so a
+    /// full worker's rider can still land in a narrow batch and hit the
+    /// allocator error — the clamp shrinks how many grows each event
+    /// risks and lets retirements free rows between events (owner-aware
+    /// rider selection is the ROADMAP follow-on).
+    fn decode_capacity(&self, want: usize) -> usize {
+        let mut per_worker = vec![(0usize, 0usize); self.cmd_txs.len()];
+        for &(owner, rows, _) in self.active_rows.values() {
+            if let Some(w) = per_worker.get_mut(owner) {
+                w.0 += rows + POOL_GROW_ROWS;
+                w.1 += 1;
+            }
+        }
+        pool_decode_capacity(self.pool_tokens, &per_worker, want)
     }
 }
 
@@ -1008,5 +1213,50 @@ mod tests {
         assert_eq!(groups.len(), 2);
         assert_eq!(groups[0], (1, vec![(10, 5), (12, 7)]));
         assert_eq!(groups[1], (0, vec![(11, 6), (13, 8)]));
+    }
+
+    #[test]
+    fn decode_headroom_clamp_sheds_batch_width_before_the_arena_fills() {
+        let pool = 2048 * 8;
+        // Roomy workers pass the full batch through.
+        assert_eq!(
+            pool_decode_capacity(pool, &[(4096, 3), (2048, 2)], 5),
+            5
+        );
+        // A worker packed to the brim contributes none of its riders...
+        assert_eq!(
+            pool_decode_capacity(pool, &[(pool, 3), (2048, 2)], 5),
+            2,
+            "full worker must shed its riders from the batch"
+        );
+        // ...and headroom under one grow pad counts as none at all.
+        assert_eq!(
+            pool_decode_capacity(
+                pool,
+                &[(pool - POOL_GROW_ROWS + 1, 4)],
+                4
+            ),
+            1,
+            "sub-pad headroom cannot absorb any grow"
+        );
+        // Exactly one grow pad of headroom admits exactly one rider.
+        assert_eq!(
+            pool_decode_capacity(pool, &[(pool - POOL_GROW_ROWS, 4)], 4),
+            1
+        );
+        // Partial headroom sheds width proportionally.
+        assert_eq!(
+            pool_decode_capacity(
+                pool,
+                &[(pool - 2 * POOL_GROW_ROWS, 4), (0, 4)],
+                8
+            ),
+            6
+        );
+        // Never below one: the active set must drain even when every
+        // arena is exhausted (the allocator error is the backstop).
+        assert_eq!(pool_decode_capacity(pool, &[(pool, 4)], 4), 1);
+        // Never above `want`.
+        assert_eq!(pool_decode_capacity(pool, &[(0, 100)], 3), 3);
     }
 }

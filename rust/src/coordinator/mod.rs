@@ -33,10 +33,10 @@ pub mod simcluster;
 pub mod tokenizer;
 
 pub use backend::{
-    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, PrefillJob,
+    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, LoadPlan, PrefillJob,
     PrefillOutcome, ServingBackend, VirtualClock, WallClock,
 };
-pub use cluster::{Cluster, PartitionPolicy, ReusedPrefix};
+pub use cluster::{Cluster, PartitionPolicy, ReusedPrefix, SeedBlock};
 pub use kvpool::KvPool;
 pub use metrics::ServeMetrics;
 pub use request::{GenRequest, GenResponse};

@@ -42,7 +42,7 @@ use std::collections::VecDeque;
 
 use crate::config::ModelConfig;
 use crate::coordinator::backend::{
-    Clock, DecodeStep, PrefillJob, ServingBackend,
+    Clock, DecodeStep, LoadPlan, PrefillJob, ServingBackend,
 };
 use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
 use crate::coordinator::metrics::ServeMetrics;
@@ -242,28 +242,41 @@ impl Scheduler {
     }
 
     /// Admission-time cache consult: plan, lease, and (on payload-backed
-    /// backends) reassemble the reused prefix for one request. Returns
-    /// `(reused, load_s, lease, want_wire)`; metrics record what will
-    /// actually run (a declined plan is recorded as full recompute, not
-    /// as the aspirational cut). Takes the backend shape as primitives
-    /// (`workers`, `model`, granularity `g`, whether reuse `payloads`
-    /// are required) so the decline accounting is testable without PJRT
-    /// artifacts.
+    /// backends) collect the reused prefix's block payloads for one
+    /// request. Returns `(reused, loads, lease, want_wire)` — `loads` is
+    /// the modeled schedule (total seconds + serial/pipelined, DESIGN.md
+    /// §7) the backend must price the loads with; metrics record what
+    /// will actually run (a declined plan is recorded as full recompute,
+    /// not as the aspirational cut). Takes the backend shape as
+    /// primitives (`workers`, `model`, granularity `g`, whether reuse
+    /// `payloads` are required) so the decline accounting is testable
+    /// without PJRT artifacts.
     fn plan_reuse(
         &mut self, workers: usize, m: &ModelConfig, g: usize, payloads: bool,
         req: &GenRequest, metrics: &mut ServeMetrics,
-    ) -> Result<(Option<ReusedPrefix>, f64, Option<Lease>, bool)> {
+    ) -> Result<(Option<ReusedPrefix>, LoadPlan, Option<Lease>, bool)> {
         let Some((pc, cm)) = self.cache.as_mut() else {
-            return Ok((None, 0.0, None, false));
+            return Ok((None, LoadPlan::none(), None, false));
         };
         let plan = pc.plan_prefill(cm, &req.tokens, workers)?;
         let reused = if payloads {
-            pc.reused_cache(&plan, m.layers, m.kv_heads, m.head_dim)
-                // Reuse must land on an AOT chunk boundary; otherwise
-                // fall back to full recompute rather than failing the
-                // prefill.
-                .filter(|kv| kv.tokens % g == 0 && kv.tokens < req.tokens.len())
-                .map(|kv| ReusedPrefix { tokens: kv.tokens, wire: kv.to_wire() })
+            // Reuse must land on an AOT chunk boundary; otherwise fall
+            // back to full recompute rather than failing the prefill.
+            // Blocks ship as stored — the cluster streams them to the
+            // chain head as background transfers, so the leader never
+            // reassembles (and re-serializes) the whole prefix.
+            pc.reused_seed_blocks(&plan, m.layers, m.kv_heads, m.head_dim)
+                .filter(|blocks| {
+                    let t: usize = blocks.iter().map(|b| b.rows).sum();
+                    t == plan.reuse_tokens
+                        && t % g == 0
+                        && t < req.tokens.len()
+                })
+                .map(|blocks| ReusedPrefix {
+                    tokens: plan.reuse_tokens,
+                    wire: Vec::new(),
+                    blocks,
+                })
         } else {
             // Timing-only backends apply the planner's cut directly —
             // there is no payload to decline over.
@@ -271,6 +284,7 @@ impl Scheduler {
                 .then(|| ReusedPrefix {
                     tokens: plan.reuse_tokens,
                     wire: Vec::new(),
+                    blocks: Vec::new(),
                 })
         };
         let lease = if reused.is_some() {
@@ -283,7 +297,11 @@ impl Scheduler {
         } else {
             metrics.record_prefix(&plan.declined());
         }
-        let load_s = if reused.is_some() { plan.load_s } else { 0.0 };
+        let loads = if reused.is_some() {
+            LoadPlan { total_s: plan.load_s, pipelined: plan.pipelined }
+        } else {
+            LoadPlan::none()
+        };
         // Ship the prompt cache back only when it holds blocks the store
         // is missing — a fully cached prompt has nothing new to admit
         // and skips the full-KV wire copy on the reply path. Payload-less
@@ -292,7 +310,7 @@ impl Scheduler {
             let bt = pc.config().block_tokens;
             plan.matched_tokens < (req.tokens.len() / bt) * bt
         };
-        Ok((reused, load_s, lease, want_wire))
+        Ok((reused, loads, lease, want_wire))
     }
 
     /// Serve a batch of requests to completion on `backend`; returns
@@ -444,13 +462,13 @@ impl Scheduler {
                     // silently over budget.
                     metrics.oversized_admissions += 1;
                 }
-                let (reused, load_s, lease, want_wire) = self.plan_reuse(
+                let (reused, loads, lease, want_wire) = self.plan_reuse(
                     workers, &model, granularity, payloads, &req, &mut metrics,
                 )?;
                 // The job owns the request from here; it comes back in
                 // the completed outcome's `Active` entry.
                 let job = match backend.prefill_begin(
-                    req, reused, load_s, &policy, want_wire, prefill_chunk,
+                    req, reused, loads, &policy, want_wire, prefill_chunk,
                 ) {
                     Ok(job) => job,
                     Err(e) => {
@@ -495,6 +513,7 @@ mod tests {
             cold_capacity_tokens: 256 * 32,
             cold_load_bw: 300e9,
             cold_load_latency: 1e-5,
+            ..PrefixCacheConfig::default()
         });
         let cm = CostModel::new(
             model_by_name("tiny").unwrap(),
@@ -535,12 +554,12 @@ mod tests {
         }
 
         // Second sight: the planner matches, the serving layer declines.
-        let (reused, load_s, lease, _) = sched
+        let (reused, loads, lease, _) = sched
             .plan_reuse(2, &model, 32, true, &req(tokens.clone()), &mut metrics)
             .unwrap();
         assert!(reused.is_none(), "no payloads -> nothing to seed");
         assert!(lease.is_none(), "declined plans must not pin blocks");
-        assert_eq!(load_s, 0.0, "declined plans charge no load time");
+        assert_eq!(loads, LoadPlan::none(), "declined plans charge no loads");
 
         let stats = sched.prefix_cache_stats().unwrap();
         // Store saw the match and counted the planner's intended reuse...
@@ -613,13 +632,15 @@ mod tests {
         if let Some((pc, _)) = sched.cache.as_mut() {
             pc.admit(&tokens);
         }
-        let (reused, load_s, lease, want_wire) = sched
+        let (reused, loads, lease, want_wire) = sched
             .plan_reuse(2, &model, 1, false, &req(tokens.clone()), &mut metrics)
             .unwrap();
         let reused = reused.expect("timing-only reuse applies");
         assert!(reused.wire.is_empty(), "no payload travels on the sim path");
+        assert!(reused.blocks.is_empty(), "nor block payloads");
         assert!(reused.tokens > 0 && reused.tokens < tokens.len());
-        assert!(load_s >= 0.0);
+        assert!(loads.total_s >= 0.0);
+        assert!(loads.pipelined, "default config schedules loads pipelined");
         assert!(lease.is_some(), "applied plans pin their blocks");
         assert!(!want_wire, "payload-less backends never ship wire back");
         assert_eq!(metrics.reused_tokens, reused.tokens);

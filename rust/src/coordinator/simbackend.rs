@@ -3,12 +3,14 @@
 //! [`ServingBackend`] trait, so serving workloads run on the modeled
 //! 8×A100 fabric without PJRT artifacts.
 //!
-//! Per-event semantics (DESIGN.md §4/§5): a prefill occupies the whole
-//! chain and costs its prefix loads plus the suffix runahead TTFT
-//! ([`crate::sim::kvr_timeline_offset`]); a decode event advances its
-//! batch in one [`CostModel::decode_batch_step_time`] step (weights
-//! streamed once, per-request KV on top). Logits are never computed —
-//! tokens come back as 0 placeholders.
+//! Per-event semantics (DESIGN.md §4/§5/§7): a prefill occupies the
+//! whole chain for its prefix loads plus the suffix runahead TTFT
+//! ([`crate::sim::kvr_timeline_offset`]) — or, under a pipelined
+//! [`LoadPlan`], for the *makespan* of the load stream interleaved with
+//! the chain ([`crate::sim::kvr_timeline_streamed`]); a decode event
+//! advances its batch in one [`CostModel::decode_batch_step_time`] step
+//! (weights streamed once, per-request KV on top). Logits are never
+//! computed — tokens come back as 0 placeholders.
 //!
 //! With [`SimBackend::with_memory_pressure`], admission and decode are
 //! additionally gated on the aggregate active-KV footprint against the
@@ -23,15 +25,18 @@ use std::collections::HashMap;
 
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::coordinator::backend::{
-    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, PrefillJob, PrefillOutcome,
-    ServingBackend, VirtualClock,
+    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, LoadPlan, PrefillJob,
+    PrefillOutcome, ServingBackend, VirtualClock,
 };
 use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
 use crate::coordinator::request::GenRequest;
 use crate::error::{Error, Result};
 use crate::partition::Partition;
 use crate::sim::cost::CostModel;
-use crate::sim::{kvr_timeline_offset, memory, quiet_network};
+use crate::sim::{
+    kvr_timeline_offset, kvr_timeline_streamed, memory, quiet_network,
+    stream_layer_ready,
+};
 
 /// Serving backend over the modeled fabric.
 pub struct SimBackend {
@@ -144,9 +149,11 @@ impl ServingBackend for SimBackend {
         Box::new(VirtualClock::new())
     }
 
-    /// Mirror of the real path's suffix planning at granularity 1. The
-    /// LUT policy degrades to even off the zero-offset regime for the
-    /// same reason as [`crate::coordinator::Cluster::plan_partition_suffix`].
+    /// Mirror of the real path's suffix planning at granularity 1. Off
+    /// the zero-offset regime the LUT policy serves its *offset entries*
+    /// when it has them (the offset-aware KVR-P extension) and degrades
+    /// to even otherwise, for the same reason as
+    /// [`crate::coordinator::Cluster::plan_partition_suffix`].
     fn plan_partition(
         &self, c: usize, start: usize, policy: &PartitionPolicy,
     ) -> Result<Partition> {
@@ -157,12 +164,21 @@ impl ServingBackend for SimBackend {
                 let k = r.len().min(p).max(1);
                 Partition::from_ratios(c, &r[..k], 1)?
             }
-            PartitionPolicy::Lut(lut) if start == 0 => {
-                let ratios = lut.predict_ratios(c)?;
-                let k = ratios.len().min(p).max(1);
-                Partition::from_ratios(c, &ratios[..k], 1)?
-            }
-            PartitionPolicy::Lut(_) => Partition::even(c, p),
+            // Regime preference lives in predict_ratios_at, shared with
+            // the real path: zero-offset rows first at start == 0 (an
+            // offset-entry-only table still serves — a table with
+            // neither kind stays a config error), offset entries
+            // otherwise (missing ones degrade to even — ratios tuned
+            // for the wrong regime are never applied).
+            PartitionPolicy::Lut(lut) => match lut.predict_ratios_at(c, start)
+            {
+                Ok(ratios) => {
+                    let k = ratios.len().min(p).max(1);
+                    Partition::from_ratios(c, &ratios[..k], 1)?
+                }
+                Err(e) if start == 0 => return Err(e),
+                Err(_) => Partition::even(c, p),
+            },
         };
         Ok(part.with_start(start))
     }
@@ -171,11 +187,11 @@ impl ServingBackend for SimBackend {
     /// pricing and active-KV bookkeeping, shared with the chunked path
     /// (so the trait's two prefill entry points can never drift).
     fn prefill(
-        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
-        policy: &PartitionPolicy, want_wire: bool,
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
     ) -> Result<PrefillOutcome> {
         let mut job =
-            self.prefill_begin(req.clone(), reused, load_s, policy, want_wire, 0)?;
+            self.prefill_begin(req.clone(), reused, loads, policy, want_wire, 0)?;
         let out = self.prefill_chunk(&mut job)?;
         Ok(out.done.expect("single-chunk job finishes in one chunk"))
     }
@@ -186,8 +202,9 @@ impl ServingBackend for SimBackend {
     /// FLOP, traffic, and memory accounting stay exact per chunk. A
     /// single-chunk job reproduces the pre-chunking pricing to the bit.
     fn prefill_begin(
-        &mut self, req: GenRequest, reused: Option<ReusedPrefix>, load_s: f64,
-        policy: &PartitionPolicy, want_wire: bool, chunk_tokens: usize,
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
+        chunk_tokens: usize,
     ) -> Result<PrefillJob> {
         if req.tokens.is_empty() {
             return Err(Error::Coordinator(format!(
@@ -205,7 +222,7 @@ impl ServingBackend for SimBackend {
         Ok(PrefillJob::new(
             req,
             reused,
-            load_s,
+            loads,
             policy.clone(),
             want_wire,
             chunk_tokens,
@@ -222,8 +239,21 @@ impl ServingBackend for SimBackend {
         })?;
         let part = self.plan_partition(rows, start, &job.policy)?;
         let mut net = quiet_network(&self.cm, part.sizes().len());
-        let sim = kvr_timeline_offset(&self.cm, &mut net, part.sizes(), start)?;
-        let chunk_s = job.take_load_s() + sim.ttft;
+        let loads = job.take_loads();
+        // Pipelined loads (DESIGN.md §7): the first chunk's chain runs
+        // while the reused prefix streams onto its head, and the chunk
+        // occupies the chain for the overlapped makespan. The serial
+        // schedule — loads block up front — is the exact pre-overlap
+        // pricing, preserved bit for bit when pipelining is off.
+        let chunk_s = if loads.pipelined && loads.total_s > 0.0 && start > 0 {
+            let ready = stream_layer_ready(loads.total_s, self.cm.model.layers);
+            kvr_timeline_streamed(&self.cm, &mut net, part.sizes(), start, &ready)?
+                .ttft
+        } else {
+            loads.total_s
+                + kvr_timeline_offset(&self.cm, &mut net, part.sizes(), start)?
+                    .ttft
+        };
         job.advance(rows, chunk_s);
         if job.is_done() {
             // Drop the mid-job partial entry first so the reservation
@@ -342,12 +372,12 @@ mod tests {
             arrival: 0.0,
         };
         let err = b
-            .prefill(&req, None, 0.0, &PartitionPolicy::Even, false)
+            .prefill(&req, None, LoadPlan::none(), &PartitionPolicy::Even, false)
             .unwrap_err()
             .to_string();
         assert!(err.contains("empty prompt 9"), "{err}");
         let err = b
-            .prefill_begin(req, None, 0.0, &PartitionPolicy::Even, false, 128)
+            .prefill_begin(req, None, LoadPlan::none(), &PartitionPolicy::Even, false, 128)
             .unwrap_err()
             .to_string();
         assert!(err.contains("empty prompt 9"), "{err}");
@@ -360,9 +390,13 @@ mod tests {
         // pre-chunking error.
         let mut b = backend(2);
         let r = req(3, 1024, 4);
-        let reused = ReusedPrefix { tokens: 1024, wire: Vec::new() };
+        let reused = ReusedPrefix {
+            tokens: 1024,
+            wire: Vec::new(),
+            blocks: Vec::new(),
+        };
         let err = b
-            .prefill_begin(r, Some(reused), 0.0, &PartitionPolicy::Even, false, 0)
+            .prefill_begin(r, Some(reused), LoadPlan::none(), &PartitionPolicy::Even, false, 0)
             .unwrap_err()
             .to_string();
         assert!(err.contains("must leave a suffix"), "{err}");
@@ -376,10 +410,10 @@ mod tests {
         let mut b = backend(4);
         let req = req(3, 4096, 8);
         let direct = a
-            .prefill(&req, None, 0.125, &PartitionPolicy::Even, false)
+            .prefill(&req, None, LoadPlan::serial(0.125), &PartitionPolicy::Even, false)
             .unwrap();
         let mut job = b
-            .prefill_begin(req, None, 0.125, &PartitionPolicy::Even, false, 0)
+            .prefill_begin(req, None, LoadPlan::serial(0.125), &PartitionPolicy::Even, false, 0)
             .unwrap();
         assert_eq!(job.chunks_total(), 1);
         let out = b.prefill_chunk(&mut job).unwrap();
@@ -394,7 +428,7 @@ mod tests {
         let mut b = backend(4);
         let cm = b.cost_model().clone();
         let out = b
-            .prefill(&req(0, 4096, 4), None, 0.0, &PartitionPolicy::Even, false)
+            .prefill(&req(0, 4096, 4), None, LoadPlan::none(), &PartitionPolicy::Even, false)
             .unwrap();
         let part = Partition::even(4096, 4);
         let mut net = quiet_network(&cm, 4);
@@ -411,9 +445,19 @@ mod tests {
     fn reused_prefill_prices_suffix_plus_loads() {
         let mut b = backend(4);
         let cm = b.cost_model().clone();
-        let reused = ReusedPrefix { tokens: 2048, wire: Vec::new() };
+        let reused = ReusedPrefix {
+            tokens: 2048,
+            wire: Vec::new(),
+            blocks: Vec::new(),
+        };
         let out = b
-            .prefill(&req(0, 4096, 4), Some(reused), 0.25, &PartitionPolicy::Even, false)
+            .prefill(
+                &req(0, 4096, 4),
+                Some(reused),
+                LoadPlan::serial(0.25),
+                &PartitionPolicy::Even,
+                false,
+            )
             .unwrap();
         let part = Partition::even(2048, 4);
         let mut net = quiet_network(&cm, 4);
@@ -428,9 +472,9 @@ mod tests {
     fn decode_batch_prices_the_shared_weight_stream() {
         let mut b = backend(2);
         let cm = b.cost_model().clone();
-        b.prefill(&req(0, 1024, 8), None, 0.0, &PartitionPolicy::Even, false)
+        b.prefill(&req(0, 1024, 8), None, LoadPlan::none(), &PartitionPolicy::Even, false)
             .unwrap();
-        b.prefill(&req(1, 2048, 8), None, 0.0, &PartitionPolicy::Even, false)
+        b.prefill(&req(1, 2048, 8), None, LoadPlan::none(), &PartitionPolicy::Even, false)
             .unwrap();
         let steps = [
             DecodeStep { owner: 1, req_id: 0, last_token: 0, past_tokens: 1025 },
@@ -447,7 +491,7 @@ mod tests {
         let mut b = backend(2);
         let per_row = b.model().kv_bytes_per_token() as f64;
         assert_eq!(b.kv_bytes_active(), 0.0);
-        b.prefill(&req(7, 1000, 4), None, 0.0, &PartitionPolicy::Even, false)
+        b.prefill(&req(7, 1000, 4), None, LoadPlan::none(), &PartitionPolicy::Even, false)
             .unwrap();
         assert_eq!(b.kv_bytes_active(), 1001.0 * per_row);
         let steps = [DecodeStep {
@@ -474,7 +518,7 @@ mod tests {
         let mut b =
             SimBackend::new(m, hw, 2).with_memory_pressure(true);
         assert!(b.admit_capacity(2048, 8), "empty backend must accept");
-        b.prefill(&req(0, 2048, 8), None, 0.0, &PartitionPolicy::Even, false)
+        b.prefill(&req(0, 2048, 8), None, LoadPlan::none(), &PartitionPolicy::Even, false)
             .unwrap();
         assert!(!b.admit_capacity(2048, 8), "second request must not fit");
         assert!(b.decode_capacity(8) >= 1);
@@ -497,7 +541,7 @@ mod tests {
         let mut b = SimBackend::new(m, hw, 2).with_memory_pressure(true);
         for id in 0..4u64 {
             assert!(b.admit_capacity(1024, 8), "request {id} must admit");
-            b.prefill(&req(id, 1024, 8), None, 0.0, &PartitionPolicy::Even, false)
+            b.prefill(&req(id, 1024, 8), None, LoadPlan::none(), &PartitionPolicy::Even, false)
                 .unwrap();
         }
         assert!(!b.admit_capacity(1024, 8), "a fifth reservation is over");
@@ -515,9 +559,105 @@ mod tests {
         hw.mem_bytes = 1.0; // absurd device; pressure is off, so fine
         let mut b = SimBackend::new(m, hw, 2);
         assert!(b.admit_capacity(100_000, 1000));
-        b.prefill(&req(0, 2048, 8), None, 0.0, &PartitionPolicy::Even, false)
+        b.prefill(&req(0, 2048, 8), None, LoadPlan::none(), &PartitionPolicy::Even, false)
             .unwrap();
         assert_eq!(b.decode_capacity(8), 8);
+    }
+
+    #[test]
+    fn pipelined_prefill_prices_the_overlapped_makespan() {
+        // A pipelined LoadPlan must charge exactly the streamed-timeline
+        // makespan — bounded by the load-free chain from below and the
+        // serial schedule from above.
+        let mut b = backend(4);
+        let cm = b.cost_model().clone();
+        let reused = ReusedPrefix {
+            tokens: 2048,
+            wire: Vec::new(),
+            blocks: Vec::new(),
+        };
+        let load_s = 0.05;
+        let out = b
+            .prefill(
+                &req(0, 4096, 4),
+                Some(reused),
+                LoadPlan::pipelined(load_s),
+                &PartitionPolicy::Even,
+                false,
+            )
+            .unwrap();
+        let part = Partition::even(2048, 4);
+        let ready = stream_layer_ready(load_s, cm.model.layers);
+        let mut net = quiet_network(&cm, 4);
+        let want =
+            kvr_timeline_streamed(&cm, &mut net, part.sizes(), 2048, &ready)
+                .unwrap()
+                .ttft;
+        assert_eq!(out.ttft, want);
+        let mut net = quiet_network(&cm, 4);
+        let bare = kvr_timeline_offset(&cm, &mut net, part.sizes(), 2048)
+            .unwrap()
+            .ttft;
+        assert!(out.ttft >= bare);
+        assert!(out.ttft <= load_s + bare + 1e-12);
+        assert_eq!(out.reused_tokens, 2048);
+    }
+
+    #[test]
+    fn serial_load_plan_reproduces_the_pre_overlap_pricing() {
+        // The zero-overlap recovery the goldens rely on: a serial
+        // LoadPlan prices exactly load + suffix chain, bit for bit.
+        let mut a = backend(4);
+        let cm = a.cost_model().clone();
+        let reused = ReusedPrefix {
+            tokens: 2048,
+            wire: Vec::new(),
+            blocks: Vec::new(),
+        };
+        let out = a
+            .prefill(
+                &req(0, 4096, 4),
+                Some(reused),
+                LoadPlan::serial(0.25),
+                &PartitionPolicy::Even,
+                false,
+            )
+            .unwrap();
+        let part = Partition::even(2048, 4);
+        let mut net = quiet_network(&cm, 4);
+        let suffix = kvr_timeline_offset(&cm, &mut net, part.sizes(), 2048)
+            .unwrap()
+            .ttft;
+        assert_eq!(out.ttft, 0.25 + suffix);
+    }
+
+    #[test]
+    fn lut_policy_serves_offset_entries_for_suffix_chunks() {
+        use crate::partition::lut::PartitionLut;
+        let b = backend(4);
+        // A LUT without offset entries degrades to even off zero offset.
+        let mut lut = PartitionLut::new("llama7b", 4, "a100-300gbps");
+        lut.insert(4096, &Partition::from_ratios(4096, &[0.34, 0.26, 0.22, 0.18], 1).unwrap(), 0.2)
+            .unwrap();
+        let part = b
+            .plan_partition(2048, 2048, &PartitionPolicy::Lut(lut.clone()))
+            .unwrap();
+        assert_eq!(part.sizes(), Partition::even(2048, 4).sizes());
+        // With offset entries the prediction applies.
+        lut.insert_offset(
+            2048,
+            2048,
+            &Partition::from_ratios(2048, &[0.30, 0.26, 0.23, 0.21], 1).unwrap(),
+            0.1,
+        )
+        .unwrap();
+        let part = b
+            .plan_partition(2048, 2048, &PartitionPolicy::Lut(lut))
+            .unwrap();
+        assert_eq!(part.start(), 2048);
+        assert_eq!(part.context(), 2048);
+        let sizes = part.sizes();
+        assert!(sizes[0] > sizes[3], "offset ratios applied: {sizes:?}");
     }
 
     #[test]

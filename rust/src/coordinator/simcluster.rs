@@ -125,6 +125,7 @@ mod tests {
             cold_capacity_tokens: 512 * 512,
             cold_load_bw: 300e9,
             cold_load_latency: 1e-4,
+            ..PrefixCacheConfig::default()
         }
     }
 

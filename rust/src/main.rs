@@ -45,10 +45,15 @@ USAGE:
             [--prefill-chunk N] [--prefix-cache] [--mem-pressure]
             [--block-tokens N] [--hot-tokens N] [--cold-tokens N]
             [--cold-bw BYTES_PER_S] [--cold-latency S]
+            [--pipelined-loads | --serial-loads] [--even-cuts]
   kvr calibrate [--artifacts artifacts]
 
 Prefix cache: `--prefix-cache` reuses cached prompt-prefix KV across
-requests (hybrid compute-or-load per block). `--sim` serves on the
+requests (hybrid compute-or-load per block). Cold loads stream
+overlapped with the runahead chain by default (`--pipelined-loads`);
+`--serial-loads` restores the blocking load-then-prefill schedule, and
+`--even-cuts` disables the searched per-cut partitions (offset-aware
+KVR-P). `--sim` serves on the
 modeled A100 cluster instead of the PJRT tiny model. `--decode-batch`
 caps how many requests one batched decode step advances (1 = per-request
 decode); `--max-active` caps concurrent decode-phase requests (sim
@@ -73,7 +78,18 @@ fn main() {
 
 fn dispatch(raw: &[String]) -> Result<()> {
     let args =
-        Args::parse(&raw[1..], &["quiet", "sim", "prefix-cache", "mem-pressure"])?;
+        Args::parse(
+            &raw[1..],
+            &[
+                "quiet",
+                "sim",
+                "prefix-cache",
+                "mem-pressure",
+                "pipelined-loads",
+                "serial-loads",
+                "even-cuts",
+            ],
+        )?;
     match raw[0].as_str() {
         "sim" => cmd_sim(&args),
         "search" => cmd_search(&args),
@@ -183,16 +199,9 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn prefix_cache_config(args: &Args, block_default: usize) -> Result<PrefixCacheConfig> {
-    let base = PrefixCacheConfig::default();
-    Ok(PrefixCacheConfig {
-        block_tokens: args.usize_or("block-tokens", block_default)?,
-        hot_capacity_tokens: args
-            .usize_or("hot-tokens", base.hot_capacity_tokens)?,
-        cold_capacity_tokens: args
-            .usize_or("cold-tokens", base.cold_capacity_tokens)?,
-        cold_load_bw: args.f64_or("cold-bw", base.cold_load_bw)?,
-        cold_load_latency: args.f64_or("cold-latency", base.cold_load_latency)?,
-    })
+    // One shared resolver with the serve example (flag semantics live
+    // in the library, not per front-end).
+    PrefixCacheConfig::from_args(args, block_default)
 }
 
 /// Shared-prefix workload: `frac` of every prompt is a common system

@@ -6,6 +6,16 @@
 //! unseen context is linearly interpolated from the two nearest entries —
 //! the paper shows this lands within 1.1–1.3% of the searched optimum even
 //! at 4k-token table intervals.
+//!
+//! With prefix-KV reuse the chain runs over a *suffix* at a causal
+//! offset, where the zero-offset ratios are tuned for the wrong regime
+//! (every chunk already attends over the reused rows, flattening the
+//! per-token cost). [`PartitionLut`] therefore also holds *offset
+//! entries* keyed by `(context, start)`: the compute-or-load planner
+//! memoizes `hierarchical_grid_search` results per bucket through
+//! [`PartitionLut::insert_offset`] and serves per-request predictions
+//! from [`PartitionLut::predict_ratios_offset`] (bilinear over context
+//! and start), keeping planning O(lookup) after warmup.
 
 use super::Partition;
 use crate::error::{Error, Result};
@@ -20,6 +30,19 @@ pub struct LutEntry {
     pub ttft: f64,
 }
 
+/// One searched *offset* entry: a `context`-token suffix computed after
+/// `start` reused rows → per-process ratios.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OffsetLutEntry {
+    /// Computed-suffix length (tokens).
+    pub context: usize,
+    /// Reused rows ahead of the suffix (the causal offset).
+    pub start: usize,
+    pub ratios: Vec<f64>,
+    /// TTFT measured/simulated for the searched partition (bookkeeping).
+    pub ttft: f64,
+}
+
 /// Lookup table for one (model, process-count, fabric) triple.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PartitionLut {
@@ -27,6 +50,7 @@ pub struct PartitionLut {
     pub procs: usize,
     pub hw: String,
     entries: Vec<LutEntry>, // sorted by context
+    offset_entries: Vec<OffsetLutEntry>, // sorted by (context, start)
 }
 
 impl PartitionLut {
@@ -36,6 +60,7 @@ impl PartitionLut {
             procs,
             hw: hw.to_string(),
             entries: Vec::new(),
+            offset_entries: Vec::new(),
         }
     }
 
@@ -107,6 +132,146 @@ impl PartitionLut {
         Partition::from_ratios(context, &self.predict_ratios(context)?, granularity)
     }
 
+    /// Ratios for a `context`-token run at causal offset `start`,
+    /// preferring the entry kind searched for that regime: the
+    /// zero-offset table at `start == 0` (offset entries as fallback —
+    /// offset 0 is the shallow end of their grid), offset entries
+    /// otherwise. One place encodes this preference so the sim and real
+    /// partition planners can never drift. Errors when the table holds
+    /// nothing usable for the regime; off the zero-offset regime
+    /// callers treat that as "no offset entries" and fall back to even.
+    pub fn predict_ratios_at(
+        &self, context: usize, start: usize,
+    ) -> Result<Vec<f64>> {
+        if start == 0 {
+            match self.predict_ratios(context) {
+                Ok(r) => Ok(r),
+                Err(e) => self.predict_ratios_offset(context, 0).map_err(|_| e),
+            }
+        } else {
+            self.predict_ratios_offset(context, start)
+        }
+    }
+
+    /// Insert a searched suffix partition at causal offset `start`
+    /// (keeps offset entries sorted by `(context, start)`; same-key
+    /// inserts replace).
+    pub fn insert_offset(
+        &mut self, context: usize, start: usize, partition: &Partition,
+        ttft: f64,
+    ) -> Result<()> {
+        if partition.len() != self.procs {
+            return Err(Error::Partition(format!(
+                "partition arity {} != table procs {}",
+                partition.len(),
+                self.procs
+            )));
+        }
+        let entry = OffsetLutEntry {
+            context,
+            start,
+            ratios: partition.ratios(),
+            ttft,
+        };
+        match self
+            .offset_entries
+            .binary_search_by_key(&(context, start), |e| (e.context, e.start))
+        {
+            Ok(i) => self.offset_entries[i] = entry,
+            Err(i) => self.offset_entries.insert(i, entry),
+        }
+        Ok(())
+    }
+
+    pub fn offset_entries(&self) -> &[OffsetLutEntry] {
+        &self.offset_entries
+    }
+
+    /// The exact offset entry at `(context, start)`, if one was inserted.
+    pub fn offset_entry(
+        &self, context: usize, start: usize,
+    ) -> Option<&OffsetLutEntry> {
+        self.offset_entries
+            .binary_search_by_key(&(context, start), |e| (e.context, e.start))
+            .ok()
+            .map(|i| &self.offset_entries[i])
+    }
+
+    /// Linear interpolation over `start` within one context row (entries
+    /// must be the contiguous, start-sorted slice of a single context).
+    fn interp_over_start(row: &[OffsetLutEntry], start: usize) -> Vec<f64> {
+        debug_assert!(!row.is_empty());
+        let first = &row[0];
+        let last = &row[row.len() - 1];
+        if start <= first.start {
+            return first.ratios.clone();
+        }
+        if start >= last.start {
+            return last.ratios.clone();
+        }
+        // partition_point leaves lo.start < start <= hi.start, so an
+        // exact-match start falls out as t = 1 selecting hi's row.
+        let hi_idx = row.partition_point(|e| e.start < start);
+        let lo = &row[hi_idx - 1];
+        let hi = &row[hi_idx];
+        let t = (start - lo.start) as f64 / (hi.start - lo.start) as f64;
+        lo.ratios
+            .iter()
+            .zip(&hi.ratios)
+            .map(|(a, b)| a * (1.0 - t) + b * t)
+            .collect()
+    }
+
+    /// Interpolated ratios for a `context`-token suffix at causal offset
+    /// `start`: bilinear over the two nearest context rows and, within
+    /// each, the two nearest starts — clamped at the table edges, like
+    /// [`Self::predict_ratios`]. Errors when no offset entry exists.
+    pub fn predict_ratios_offset(
+        &self, context: usize, start: usize,
+    ) -> Result<Vec<f64>> {
+        if self.offset_entries.is_empty() {
+            return Err(Error::Partition("no offset entries".into()));
+        }
+        // Context rows are contiguous runs in the (context, start) order.
+        fn row_of(entries: &[OffsetLutEntry], ctx: usize) -> &[OffsetLutEntry] {
+            let lo = entries.partition_point(|e| e.context < ctx);
+            let hi = entries.partition_point(|e| e.context <= ctx);
+            &entries[lo..hi]
+        }
+        let lo_ctx_end =
+            self.offset_entries.partition_point(|e| e.context < context);
+        let below = self.offset_entries[..lo_ctx_end]
+            .last()
+            .map(|e| e.context);
+        let above = self.offset_entries[lo_ctx_end..]
+            .first()
+            .map(|e| e.context);
+        let entries = &self.offset_entries[..];
+        let mut ratios = match (below, above) {
+            (_, Some(c)) if c == context => {
+                Self::interp_over_start(row_of(entries, c), start)
+            }
+            (Some(c), None) | (None, Some(c)) => {
+                Self::interp_over_start(row_of(entries, c), start)
+            }
+            (Some(cl), Some(ch)) => {
+                let a = Self::interp_over_start(row_of(entries, cl), start);
+                let b = Self::interp_over_start(row_of(entries, ch), start);
+                let t = (context - cl) as f64 / (ch - cl) as f64;
+                a.iter()
+                    .zip(&b)
+                    .map(|(x, y)| x * (1.0 - t) + y * t)
+                    .collect()
+            }
+            (None, None) => unreachable!("non-empty offset entries"),
+        };
+        let total: f64 = ratios.iter().sum();
+        for r in ratios.iter_mut() {
+            *r /= total;
+        }
+        Ok(ratios)
+    }
+
     /// Serialize to JSON (stable entry order → diffable files).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -121,6 +286,22 @@ impl PartitionLut {
                         .map(|e| {
                             Json::obj(vec![
                                 ("context", e.context.into()),
+                                ("ratios", e.ratios.clone().into()),
+                                ("ttft", e.ttft.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "offset_entries",
+                Json::Array(
+                    self.offset_entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("context", e.context.into()),
+                                ("start", e.start.into()),
                                 ("ratios", e.ratios.clone().into()),
                                 ("ttft", e.ttft.into()),
                             ])
@@ -153,6 +334,26 @@ impl PartitionLut {
             });
         }
         lut.entries.sort_by_key(|e| e.context);
+        // Absent in pre-offset files: treat as no offset entries.
+        if let Some(offsets) = j.get("offset_entries") {
+            for e in offsets.as_array()? {
+                let ratios = e.req("ratios")?.as_f64_vec()?;
+                if ratios.len() != lut.procs {
+                    return Err(Error::Partition(format!(
+                        "offset entry arity {} != procs {}",
+                        ratios.len(),
+                        lut.procs
+                    )));
+                }
+                lut.offset_entries.push(OffsetLutEntry {
+                    context: e.req("context")?.as_usize()?,
+                    start: e.req("start")?.as_usize()?,
+                    ratios,
+                    ttft: e.req("ttft")?.as_f64()?,
+                });
+            }
+            lut.offset_entries.sort_by_key(|e| (e.context, e.start));
+        }
         Ok(lut)
     }
 
@@ -262,5 +463,144 @@ mod tests {
     fn empty_table_errors() {
         let lut = PartitionLut::new("m", 2, "hw");
         assert!(lut.predict_ratios(100).is_err());
+        assert!(lut.predict_ratios_offset(100, 50).is_err());
+    }
+
+    /// Offset rows shaped like the searched reality: at offset 0 the
+    /// front chunk is heavy; as the offset grows the per-token cost
+    /// flattens and the ratios drift toward even.
+    fn offset_lut() -> PartitionLut {
+        let mut lut = PartitionLut::new("llama7b", 4, "a100-300gbps");
+        let rows: [(usize, usize, [f64; 4]); 6] = [
+            (4096, 0, [0.34, 0.26, 0.22, 0.18]),
+            (4096, 4096, [0.30, 0.26, 0.23, 0.21]),
+            (4096, 8192, [0.28, 0.26, 0.24, 0.22]),
+            (8192, 0, [0.38, 0.26, 0.20, 0.16]),
+            (8192, 4096, [0.34, 0.26, 0.21, 0.19]),
+            (8192, 8192, [0.32, 0.26, 0.22, 0.20]),
+        ];
+        for (c, s, r) in rows {
+            let part = Partition::from_ratios(c, &r, 1).unwrap();
+            lut.insert_offset(c, s, &part, 0.1).unwrap();
+        }
+        lut
+    }
+
+    #[test]
+    fn offset_exact_keys_return_their_rows() {
+        let lut = offset_lut();
+        let r = lut.predict_ratios_offset(8192, 4096).unwrap();
+        assert!((r[0] - 0.34).abs() < 2e-3, "{r:?}");
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert_eq!(lut.offset_entry(4096, 8192).unwrap().start, 8192);
+        assert!(lut.offset_entry(4096, 1).is_none());
+    }
+
+    #[test]
+    fn offset_interpolation_is_monotone_across_contexts() {
+        // The sample rows make ratio[0] increase with context at every
+        // offset; the interpolated prediction must inherit that
+        // monotonicity (and stay between the bracketing rows).
+        let lut = offset_lut();
+        for &start in &[0usize, 2048, 4096, 8192] {
+            let mut prev = 0.0f64;
+            for ctx in (4096..=8192).step_by(512) {
+                let r = lut.predict_ratios_offset(ctx, start).unwrap();
+                assert_eq!(r.len(), 4);
+                assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                assert!(
+                    r[0] >= prev - 1e-12,
+                    "ratio[0] shrank at ctx {ctx} start {start}: {r:?}"
+                );
+                prev = r[0];
+            }
+            // Bounded by the bracketing rows at this offset.
+            let lo = lut.predict_ratios_offset(4096, start).unwrap();
+            let hi = lut.predict_ratios_offset(8192, start).unwrap();
+            let mid = lut.predict_ratios_offset(6144, start).unwrap();
+            assert!(mid[0] >= lo[0] - 1e-12 && mid[0] <= hi[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn offset_interpolation_flattens_with_the_offset() {
+        // Within one context, deeper offsets mean flatter ratios — and
+        // start-interpolated predictions sit between their neighbours.
+        let lut = offset_lut();
+        let r0 = lut.predict_ratios_offset(8192, 0).unwrap();
+        let r1 = lut.predict_ratios_offset(8192, 2048).unwrap();
+        let r2 = lut.predict_ratios_offset(8192, 4096).unwrap();
+        assert!(r0[0] > r1[0] && r1[0] > r2[0], "{r0:?} {r1:?} {r2:?}");
+        // Clamped outside the covered offset range.
+        let deep = lut.predict_ratios_offset(8192, 1 << 20).unwrap();
+        let edge = lut.predict_ratios_offset(8192, 8192).unwrap();
+        for (a, b) in deep.iter().zip(&edge) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn offset_insert_replaces_same_key_and_checks_arity() {
+        let mut lut = offset_lut();
+        let n = lut.offset_entries().len();
+        lut.insert_offset(8192, 4096, &Partition::even(8192, 4), 0.2)
+            .unwrap();
+        assert_eq!(lut.offset_entries().len(), n);
+        let r = lut.predict_ratios_offset(8192, 4096).unwrap();
+        assert!((r[0] - 0.25).abs() < 1e-9, "{r:?}");
+        assert!(lut
+            .insert_offset(1024, 0, &Partition::even(1024, 2), 0.1)
+            .is_err());
+    }
+
+    #[test]
+    fn predict_at_prefers_the_regimes_own_entries() {
+        // Zero offset serves the classic rows when present...
+        let mut both = sample_lut();
+        both.insert_offset(
+            8192,
+            0,
+            &Partition::even(8192, 4),
+            0.2,
+        )
+        .unwrap();
+        let r = both.predict_ratios_at(8192, 0).unwrap();
+        assert!((r[0] - 0.34).abs() < 2e-3, "zero-offset row wins: {r:?}");
+        // ...an offset-entry-only table (a saved planner memo) still
+        // serves zero-offset prompts from its shallow end...
+        let memo = offset_lut();
+        let r = memo.predict_ratios_at(8192, 0).unwrap();
+        assert!((r[0] - 0.38).abs() < 2e-3, "{r:?}");
+        // ...a table with neither kind of entry is still an error, and
+        // off the zero-offset regime missing offset entries error too
+        // (callers fall back to even).
+        assert!(PartitionLut::new("m", 4, "hw").predict_ratios_at(64, 0).is_err());
+        assert!(sample_lut().predict_ratios_at(8192, 4096).is_err());
+        let r = memo.predict_ratios_at(8192, 4096).unwrap();
+        assert!((r[0] - 0.34).abs() < 2e-3, "{r:?}");
+    }
+
+    #[test]
+    fn offset_entries_roundtrip_json_and_file_exactly() {
+        let lut = offset_lut();
+        let back =
+            PartitionLut::from_json(&Json::parse(&lut.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back, lut);
+        assert_eq!(back.offset_entries(), lut.offset_entries());
+
+        let dir = std::env::temp_dir().join("kvr_lut_offset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("offset_lut.json");
+        lut.save(&path).unwrap();
+        let loaded = PartitionLut::load(&path).unwrap();
+        assert_eq!(loaded, lut);
+
+        // Pre-offset files (no offset_entries key) still load.
+        let legacy = r#"{"model":"m","procs":2,"hw":"hw",
+            "entries":[{"context":64,"ratios":[0.6,0.4],"ttft":0.1}]}"#;
+        let old = PartitionLut::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert!(old.offset_entries().is_empty());
+        assert!(old.predict_ratios_offset(64, 0).is_err());
     }
 }

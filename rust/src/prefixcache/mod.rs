@@ -28,7 +28,9 @@ pub mod index;
 pub mod planner;
 pub mod store;
 
+use crate::coordinator::cluster::SeedBlock;
 use crate::error::Result;
+use crate::partition::lut::PartitionLut;
 use crate::runtime::KvCache;
 use crate::sim::cost::CostModel;
 
@@ -37,7 +39,8 @@ use planner::{BlockAction, PrefillPlan};
 use store::{BlockStore, Tier};
 
 /// Prefix-cache knobs (CLI: `--prefix-cache`, `--block-tokens`,
-/// `--hot-tokens`, `--cold-tokens`, `--cold-bw`).
+/// `--hot-tokens`, `--cold-tokens`, `--cold-bw`, `--serial-loads`,
+/// `--even-cuts`).
 #[derive(Clone, Debug)]
 pub struct PrefixCacheConfig {
     /// Tokens per block — the reuse granule. For the real cluster this
@@ -51,6 +54,21 @@ pub struct PrefixCacheConfig {
     pub cold_load_bw: f64,
     /// Per-load fixed latency of the cold tier (s).
     pub cold_load_latency: f64,
+    /// Price (and schedule) loads *overlapped* with the suffix chain —
+    /// Jin et al.'s pipelined "both" (DESIGN.md §7). `false` restores
+    /// the serial `load + prefill` pricing bit for bit.
+    pub pipelined_loads: bool,
+    /// Price each compute-or-load cut with a hierarchical-search-derived
+    /// partition at the cut's causal offset, memoized in the offset-aware
+    /// [`PartitionLut`]. `false` restores even-partition pricing. The
+    /// searched estimate models the *achievable* TTFT (KVR-P style); a
+    /// deployment serving under `PartitionPolicy::Even` executes a
+    /// different partition than the one priced, so near the
+    /// compute-vs-load crossover the cut can be mildly off for what
+    /// actually runs — pair with a `Lut` policy sharing
+    /// [`PrefixCache::partition_lut`]'s offset entries for coherent
+    /// pricing, or disable for strict even-policy coherence.
+    pub searched_cuts: bool,
 }
 
 impl Default for PrefixCacheConfig {
@@ -62,7 +80,42 @@ impl Default for PrefixCacheConfig {
             // A PCIe-gen4-x16-class staging tier.
             cold_load_bw: 10e9,
             cold_load_latency: 1e-3,
+            pipelined_loads: true,
+            searched_cuts: true,
         }
+    }
+}
+
+impl PrefixCacheConfig {
+    /// Resolve the cache knobs from parsed CLI args — the one place
+    /// `kvr serve` and the serve example share flag semantics
+    /// (`--block-tokens`, `--hot-tokens`, `--cold-tokens`, `--cold-bw`,
+    /// `--cold-latency`, `--serial-loads`/`--pipelined-loads` — which
+    /// are mutually exclusive — and `--even-cuts`).
+    pub fn from_args(
+        args: &crate::util::cli::Args, block_default: usize,
+    ) -> Result<Self> {
+        if args.flag("serial-loads") && args.flag("pipelined-loads") {
+            return Err(crate::error::Error::Cli(
+                "--serial-loads and --pipelined-loads are mutually exclusive"
+                    .into(),
+            ));
+        }
+        let base = Self::default();
+        Ok(Self {
+            block_tokens: args.usize_or("block-tokens", block_default)?,
+            hot_capacity_tokens: args
+                .usize_or("hot-tokens", base.hot_capacity_tokens)?,
+            cold_capacity_tokens: args
+                .usize_or("cold-tokens", base.cold_capacity_tokens)?,
+            cold_load_bw: args.f64_or("cold-bw", base.cold_load_bw)?,
+            cold_load_latency: args
+                .f64_or("cold-latency", base.cold_load_latency)?,
+            // Pipelined is the default; --serial-loads restores the
+            // blocking schedule (the pre-overlap goldens' case).
+            pipelined_loads: !args.flag("serial-loads"),
+            searched_cuts: !args.flag("even-cuts"),
+        })
     }
 }
 
@@ -116,6 +169,10 @@ pub struct PrefixCache {
     index: BlockIndex,
     store: BlockStore,
     stats: CacheStats,
+    /// Memoized searched-cut partitions (offset-aware KVR-P, DESIGN.md
+    /// §7): filled lazily by the planner, one search per (suffix,
+    /// offset) bucket, so steady-state planning stays O(lookup).
+    partition_lut: Option<PartitionLut>,
 }
 
 impl PrefixCache {
@@ -126,7 +183,20 @@ impl PrefixCache {
             cfg.hot_capacity_tokens,
             cfg.cold_capacity_tokens,
         );
-        Self { cfg, index, store, stats: CacheStats::default() }
+        Self {
+            cfg,
+            index,
+            store,
+            stats: CacheStats::default(),
+            partition_lut: None,
+        }
+    }
+
+    /// The memoized offset-aware partition LUT the planner has built so
+    /// far (None until the first searched-cut plan; deployments can
+    /// `save` it and ship it as a KVR-P artifact).
+    pub fn partition_lut(&self) -> Option<&PartitionLut> {
+        self.partition_lut.as_ref()
     }
 
     pub fn config(&self) -> &PrefixCacheConfig {
@@ -156,7 +226,28 @@ impl PrefixCache {
         &mut self, cm: &CostModel, tokens: &[i32], procs: usize,
     ) -> Result<PrefillPlan> {
         let matched = self.lookup(tokens);
-        let plan = planner::plan(cm, &self.cfg, tokens.len(), &matched, procs)?;
+        let lut = if self.cfg.searched_cuts {
+            // (Re)create the memo when the deployment shape changes —
+            // stale entries for another model/fabric/arity must never
+            // leak into predictions.
+            let stale = match self.partition_lut.as_ref() {
+                None => true,
+                Some(l) => {
+                    l.procs != procs
+                        || l.model != cm.model.name
+                        || l.hw != cm.hw.name
+                }
+            };
+            if stale {
+                self.partition_lut =
+                    Some(PartitionLut::new(&cm.model.name, procs, &cm.hw.name));
+            }
+            self.partition_lut.as_mut()
+        } else {
+            None
+        };
+        let plan =
+            planner::plan(cm, &self.cfg, tokens.len(), &matched, procs, lut)?;
         self.stats.lookups += 1;
         if !matched.is_empty() {
             self.stats.hits += 1;
@@ -236,6 +327,33 @@ impl PrefixCache {
         }
     }
 
+    /// Per-block wire payloads of the plan's loaded blocks, for the real
+    /// path's streamed chain-head seeding ([`SeedBlock`] background
+    /// transfers, DESIGN.md §7) — each block ships as stored, with no
+    /// leader-side reassembly into one contiguous cache and no re-wire
+    /// copy. `None` when any payload is missing or mis-sized (modeled
+    /// blocks, or admission raced an eviction) — callers then fall back
+    /// to full recompute, exactly like [`Self::reused_cache`].
+    pub fn reused_seed_blocks(
+        &self, plan: &PrefillPlan, layers: usize, kv_heads: usize,
+        head_dim: usize,
+    ) -> Option<Vec<SeedBlock>> {
+        if plan.reuse_tokens == 0 {
+            return None;
+        }
+        let bt = self.cfg.block_tokens;
+        let want_bytes = 2 * layers * kv_heads * bt * head_dim * 4;
+        let mut out = Vec::new();
+        for b in plan.loaded_blocks() {
+            let wire = self.store.payload(b.id)?;
+            if wire.len() != want_bytes {
+                return None;
+            }
+            out.push(SeedBlock { rows: bt, wire: wire.to_vec() });
+        }
+        Some(out)
+    }
+
     /// Reassemble the reused-prefix KV for the real execution path from
     /// the plan's loaded blocks. `None` when any payload is missing
     /// (modeled blocks, or admission raced an eviction) — callers then
@@ -279,6 +397,7 @@ mod tests {
             cold_capacity_tokens: cold_blocks * 512,
             cold_load_bw: 300e9,
             cold_load_latency: 1e-4,
+            ..PrefixCacheConfig::default()
         })
     }
 
@@ -398,6 +517,7 @@ mod tests {
             cold_capacity_tokens: 64,
             cold_load_bw: 300e9,
             cold_load_latency: 1e-6,
+            ..PrefixCacheConfig::default()
         });
         let tokens: Vec<i32> = (0..12).collect();
         let mut kv = KvCache::new(l, h, d, 12);
@@ -414,5 +534,54 @@ mod tests {
         // The reassembled rows equal the original front rows.
         let want = kv.block_wire(0, plan.reuse_tokens);
         assert_eq!(reused.to_wire(), want);
+
+        // The streamed-seeding surface serves the same plan as per-block
+        // payloads, each exactly as stored (no reassembly copy): the
+        // concatenation equals the reassembled prefix.
+        let blocks = pc.reused_seed_blocks(&plan, l, h, d).unwrap();
+        assert_eq!(
+            blocks.iter().map(|b| b.rows).sum::<usize>(),
+            plan.reuse_tokens
+        );
+        for (j, b) in blocks.iter().enumerate() {
+            assert_eq!(b.rows, 4);
+            assert_eq!(b.wire, kv.block_wire(j * 4, 4));
+        }
+    }
+
+    #[test]
+    fn seed_blocks_absent_without_payloads() {
+        // Modeled (payload-less) admissions can never back a streamed
+        // seed: the surface declines rather than shipping empty bytes.
+        let cm = cm();
+        let mut pc = cache(16, 64);
+        let a: Vec<i32> = (0..1024).collect();
+        pc.admit(&a);
+        let plan = pc.plan_prefill(&cm, &a, 2).unwrap();
+        assert!(plan.reuse_tokens > 0, "planner proposes reuse");
+        assert!(pc.reused_seed_blocks(&plan, 2, 2, 4).is_none());
+    }
+
+    #[test]
+    fn searched_cuts_memoize_into_the_cache_lut() {
+        let cm = cm();
+        let mut pc = cache(16, 64);
+        assert!(pc.partition_lut().is_none());
+        let a = prompt(4, 1);
+        pc.plan_prefill(&cm, &a, 4).unwrap();
+        let lut = pc.partition_lut().expect("searched cuts build the memo");
+        assert_eq!(lut.procs, 4);
+        assert_eq!(lut.model, cm.model.name);
+        let entries = lut.offset_entries().len();
+        assert!(entries > 0, "cold pricing must have searched its bucket");
+        // A replayed plan hits the memo instead of re-searching.
+        pc.plan_prefill(&cm, &a, 4).unwrap();
+        assert_eq!(
+            pc.partition_lut().unwrap().offset_entries().len(),
+            entries
+        );
+        // A different arity rebuilds rather than mis-applying.
+        pc.plan_prefill(&cm, &a, 2).unwrap();
+        assert_eq!(pc.partition_lut().unwrap().procs, 2);
     }
 }

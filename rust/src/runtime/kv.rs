@@ -234,6 +234,64 @@ impl KvCache {
         Ok(cache)
     }
 
+    /// Append `rows` token rows from one block payload produced by
+    /// [`Self::block_wire`] after the current valid rows — the unit of
+    /// the chain head's *streamed* seeding (DESIGN.md §7): the worker
+    /// accumulates arriving seed blocks one by one instead of waiting on
+    /// a single reassembled prefix wire. Each `(l, h)` stripe copies
+    /// straight from the wire bytes into place — no intermediate
+    /// [`KvCache`], this path exists to *remove* seeding copies.
+    pub fn append_block_wire(&mut self, rows: usize, wire: &[u8]) -> Result<()> {
+        let d = self.head_dim;
+        let n = self.layers * self.kv_heads * rows * d;
+        if wire.len() != 2 * n * 4 {
+            return Err(Error::Runtime(format!(
+                "block wire {} bytes, expected {}",
+                wire.len(),
+                2 * n * 4
+            )));
+        }
+        if self.tokens + rows > self.capacity {
+            self.grow(self.tokens + rows);
+        }
+        let (layers, heads) = (self.layers, self.kv_heads);
+        let (cap, tokens) = (self.capacity, self.tokens);
+        let stripe = rows * d;
+        for (half, buf) in [&mut self.k, &mut self.v].into_iter().enumerate() {
+            for l in 0..layers {
+                for h in 0..heads {
+                    // Wire layout (block_wire): K stripes for every
+                    // (l, h), then V stripes, each `rows * d` floats.
+                    let src = (half * n + (l * heads + h) * stripe) * 4;
+                    let dst = ((l * heads + h) * cap + tokens) * d;
+                    let out = &mut buf[dst..dst + stripe];
+                    #[cfg(target_endian = "little")]
+                    {
+                        // SAFETY: bounds checked above (`src + stripe*4
+                        // <= 2n*4`, `dst + stripe` inside the grown
+                        // buffer); distinct allocations; LE wire layout
+                        // matches in-memory f32, as in `from_wire`.
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                wire.as_ptr().add(src),
+                                out.as_mut_ptr() as *mut u8,
+                                stripe * 4,
+                            );
+                        }
+                    }
+                    #[cfg(not(target_endian = "little"))]
+                    for (i, c) in
+                        wire[src..src + stripe * 4].chunks_exact(4).enumerate()
+                    {
+                        out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    }
+                }
+            }
+        }
+        self.tokens += rows;
+        Ok(())
+    }
+
     /// Reassemble a cache from consecutive block payloads produced by
     /// [`Self::block_wire`], each spanning `block_rows` rows: block j's
     /// rows land at `[j·block_rows, (j+1)·block_rows)`. The prefix cache
@@ -390,6 +448,31 @@ mod tests {
         assert_eq!(cache.block_wire(0, 12), cache.to_wire());
         // A mis-sized payload is rejected.
         assert!(KvCache::from_block_wires(l, h, d, 4, &[&b0[1..]]).is_err());
+    }
+
+    #[test]
+    fn streamed_block_appends_equal_bulk_reassembly() {
+        // The chain head's streamed seeding: appending block wires one
+        // by one must land exactly where from_block_wires puts them.
+        let (l, h, d) = (3, 2, 4);
+        let mut cache = KvCache::new(l, h, d, 12);
+        let k = chunk(l, h, 12, d, 31);
+        let v = chunk(l, h, 12, d, 32);
+        cache.append_chunk(12, &k, &v).unwrap();
+        let wires: Vec<Vec<u8>> =
+            (0..3).map(|j| cache.block_wire(j * 4, 4)).collect();
+        let mut streamed = KvCache::new(l, h, d, 0);
+        for w in &wires {
+            streamed.append_block_wire(4, w).unwrap();
+        }
+        let refs: Vec<&[u8]> = wires.iter().map(|w| w.as_slice()).collect();
+        let bulk = KvCache::from_block_wires(l, h, d, 4, &refs).unwrap();
+        assert_eq!(streamed.tokens, 12);
+        assert_eq!(streamed.to_wire(), bulk.to_wire());
+        assert_eq!(streamed.to_wire(), cache.to_wire());
+        // A mis-sized payload is rejected and leaves the rows untouched.
+        assert!(streamed.append_block_wire(4, &wires[0][1..]).is_err());
+        assert_eq!(streamed.tokens, 12);
     }
 
     #[test]

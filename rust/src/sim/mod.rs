@@ -12,6 +12,9 @@
 //!   `send` of the accumulated KV-cache down the chain `p_i → p_{i+1}`,
 //!   recv overlapped with the QKV projection and send overlapped with
 //!   attention (Sec. 4.3).
+//! * [`kvr_timeline_streamed`] — the same chain with a reused prefix
+//!   *streaming onto* process 0 while it runs (the prefix cache's
+//!   pipelined compute-or-load schedule, DESIGN.md §7).
 //!
 //! Both return full per-process/per-layer traces so the benches can print
 //! the paper's figures and the tests can assert causality invariants.
@@ -123,8 +126,44 @@ pub fn kvr_timeline(
 pub fn kvr_timeline_offset(
     cm: &CostModel, net: &mut Network, partition: &[usize], start: usize,
 ) -> Result<PrefillSim> {
+    kvr_timeline_streamed(cm, net, partition, start, &[])
+}
+
+/// Per-layer readiness times of a streamed reused prefix on the chain
+/// head (DESIGN.md §7): the load stream delivers the reused KV in the
+/// order the chain consumes it — layer by layer, blocks in row order
+/// within a layer — so layer `l`'s rows are resident once fraction
+/// `(l+1)/L` of the `total_s`-second stream has arrived.
+pub fn stream_layer_ready(total_s: f64, layers: usize) -> Vec<f64> {
+    (1..=layers)
+        .map(|l| total_s * l as f64 / layers as f64)
+        .collect()
+}
+
+/// [`kvr_timeline_offset`] with the reused prefix *streaming in* while
+/// the chain runs — the pipelined "compute AND load" of Jin et al.
+/// (DESIGN.md §7). `prefix_ready[l]` is when layer `l`'s reused KV is
+/// resident on process 0; its layer-`l` concat (and with it the chain
+/// forward and the attention over the reused rows) waits for
+/// `max(proj done, prefix_ready[l])`. A load therefore only stalls the
+/// chain when the stream runs behind the hop that needs it: at high
+/// load bandwidth the waits vanish under compute, at low bandwidth the
+/// last layers serialize on the stream and the schedule degrades toward
+/// `load + prefill`. An empty `prefix_ready` (or one the compute
+/// timeline always outruns) reproduces [`kvr_timeline_offset`] bit for
+/// bit.
+pub fn kvr_timeline_streamed(
+    cm: &CostModel, net: &mut Network, partition: &[usize], start: usize,
+    prefix_ready: &[f64],
+) -> Result<PrefillSim> {
     let p = net.procs();
     assert_eq!(partition.len(), p, "partition arity != process count");
+    assert!(
+        prefix_ready.is_empty() || prefix_ready.len() == cm.model.layers,
+        "prefix_ready arity {} != layers {}",
+        prefix_ready.len(),
+        cm.model.layers
+    );
     net.reset_stats();
     let kv_row_bytes = cm.model.kv_bytes_per_token_layer() as f64;
     let prefix: Vec<f64> = partition
@@ -148,8 +187,15 @@ pub fn kvr_timeline_offset(
             trace[i][l].proj_start = ready[i];
             let proj_done = ready[i] + cm.proj_time(ci);
             // Receive is asynchronous and overlapped with the projection
-            // (Sec. 4.3): the cache is required only at concat time.
-            let kv_ready = if i == 0 { proj_done } else { proj_done.max(arrive[i]) };
+            // (Sec. 4.3): the cache is required only at concat time. The
+            // chain head additionally waits for this layer's slice of the
+            // streamed reused prefix (no-op when nothing streams —
+            // `max(x, 0.0)` is the identity on these non-negative times).
+            let kv_ready = if i == 0 {
+                proj_done.max(prefix_ready.get(l).copied().unwrap_or(0.0))
+            } else {
+                proj_done.max(arrive[i])
+            };
             trace[i][l].kv_ready = kv_ready;
             // Forward the accumulated cache right after concat; the send
             // overlaps with the local attention compute (point-to-point,
@@ -311,6 +357,86 @@ mod tests {
         assert_eq!(a.ttft, b.ttft);
         assert_eq!(a.net_bytes, b.net_bytes);
         assert_eq!(a.peak_mem_bytes, b.peak_mem_bytes);
+    }
+
+    #[test]
+    fn empty_stream_is_bit_identical_to_offset_timeline() {
+        let cm = cm("a100-10gbps");
+        let part = [2048usize, 1024, 1024];
+        let mut n1 = quiet_network(&cm, 3);
+        let mut n2 = quiet_network(&cm, 3);
+        let a = kvr_timeline_offset(&cm, &mut n1, &part, 4096).unwrap();
+        let b =
+            kvr_timeline_streamed(&cm, &mut n2, &part, 4096, &[]).unwrap();
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.net_bytes, b.net_bytes);
+        for (ta, tb) in a.trace.iter().zip(&b.trace) {
+            for (la, lb) in ta.iter().zip(tb) {
+                assert_eq!(la.proj_start, lb.proj_start);
+                assert_eq!(la.kv_ready, lb.kv_ready);
+                assert_eq!(la.done, lb.done);
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_loads_bound_between_overlap_free_and_serial() {
+        // The pipelined makespan can never beat the load-free chain and
+        // never lose to the serial load-then-prefill schedule, at any
+        // stream duration.
+        let cm = cm("a100-300gbps");
+        let part = Partition::even(4096, 4).into_sizes();
+        let start = 4096;
+        let mut n = quiet_network(&cm, 4);
+        let base = kvr_timeline_offset(&cm, &mut n, &part, start).unwrap().ttft;
+        for load_s in [0.0, 1e-4, 1e-2, 0.1, 1.0, 10.0] {
+            let ready = stream_layer_ready(load_s, cm.model.layers);
+            let mut n = quiet_network(&cm, 4);
+            let piped = kvr_timeline_streamed(&cm, &mut n, &part, start, &ready)
+                .unwrap()
+                .ttft;
+            assert!(piped >= base - 1e-12, "load {load_s}: {piped} < {base}");
+            assert!(
+                piped <= load_s + base + 1e-12,
+                "load {load_s}: {piped} > serial {}",
+                load_s + base
+            );
+        }
+        // A stream far slower than compute pins TTFT near the stream end.
+        let ready = stream_layer_ready(50.0, cm.model.layers);
+        let mut n = quiet_network(&cm, 4);
+        let slow = kvr_timeline_streamed(&cm, &mut n, &part, start, &ready)
+            .unwrap()
+            .ttft;
+        assert!(slow >= 50.0, "{slow} must cover the stream tail");
+        assert!(slow < 50.0 + base, "{slow} must still overlap some compute");
+    }
+
+    #[test]
+    fn streamed_timeline_is_monotone_in_the_stream() {
+        let cm = cm("a100-10gbps");
+        let part = Partition::even(2048, 4).into_sizes();
+        let mut prev = 0.0f64;
+        for load_s in [0.0, 1e-3, 1e-2, 0.1, 1.0] {
+            let ready = stream_layer_ready(load_s, cm.model.layers);
+            let mut n = quiet_network(&cm, 4);
+            let t = kvr_timeline_streamed(&cm, &mut n, &part, 2048, &ready)
+                .unwrap()
+                .ttft;
+            assert!(t >= prev - 1e-12, "ttft shrank at load {load_s}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn stream_layer_ready_is_monotone_and_ends_at_total() {
+        let r = stream_layer_ready(0.32, 32);
+        assert_eq!(r.len(), 32);
+        assert!((r[31] - 0.32).abs() < 1e-15);
+        for w in r.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(stream_layer_ready(1.0, 0).is_empty());
     }
 
     #[test]

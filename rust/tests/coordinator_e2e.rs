@@ -150,6 +150,7 @@ fn reused_prefix_prefill_matches_full_prefill() {
     let reused = kvr::coordinator::ReusedPrefix {
         tokens: half,
         wire: head.block_wire(0, half),
+        blocks: Vec::new(),
     };
     let replay = cluster
         .parallel_prefill_reused(
@@ -162,6 +163,29 @@ fn reused_prefix_prefill_matches_full_prefill() {
         assert!((a - b).abs() < 2e-3, "logit[{i}]: reused {a} vs full {b}");
     }
     cluster.release(replay.owner, 21).unwrap();
+
+    // The same replay with the prefix shipped as streamed seed blocks
+    // (the background-transfer path, DESIGN.md §7) must agree too.
+    let streamed = kvr::coordinator::ReusedPrefix {
+        tokens: half,
+        wire: Vec::new(),
+        blocks: (0..half / 32)
+            .map(|j| kvr::coordinator::SeedBlock {
+                rows: 32,
+                wire: head.block_wire(j * 32, 32),
+            })
+            .collect(),
+    };
+    let replay2 = cluster
+        .parallel_prefill_reused(
+            22, &prompt, Some(streamed), &PartitionPolicy::Even, false,
+        )
+        .unwrap();
+    assert_eq!(replay2.reused_tokens, half);
+    for (i, (a, b)) in replay2.logits.iter().zip(&full.logits).enumerate() {
+        assert!((a - b).abs() < 2e-3, "logit[{i}]: streamed {a} vs full {b}");
+    }
+    cluster.release(replay2.owner, 22).unwrap();
 }
 
 #[test]
