@@ -16,7 +16,10 @@
 //! advances (1 = per-request decode); `--prefill-chunk N` splits each
 //! prefill into N-token chunk events interleaved with decode events
 //! (0 = whole prompt in one chunk), bounding the decode stall a long
-//! prompt causes. In sim mode the same workload is served cache-off
+//! prompt causes. `--trace-out FILE` records the serving-clock event
+//! trace as JSONL (inspect with `kvr trace`), and `--metrics-json FILE`
+//! dumps the full metrics (tail percentiles, per-phase attribution) as
+//! JSON. In sim mode the same workload is served cache-off
 //! then cache-on so the TTFT win and hit rate print side by side:
 //!
 //! ```bash
@@ -28,7 +31,7 @@
 use kvr::config::{hardware_by_name, model_by_name};
 use kvr::coordinator::{
     ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
-    SchedulerConfig, SimBackend,
+    SchedulerConfig, ServeMetrics, SimBackend,
 };
 use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::sim::cost::CostModel;
@@ -38,6 +41,21 @@ use kvr::util::stats::fmt_time;
 
 fn cache_config(args: &Args, block_default: usize) -> kvr::Result<PrefixCacheConfig> {
     PrefixCacheConfig::from_args(args, block_default)
+}
+
+/// Persist `--trace-out` / `--metrics-json` artifacts after a serve.
+fn write_outputs(
+    args: &Args, sched: &mut Scheduler, metrics: &ServeMetrics,
+) -> kvr::Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, sched.take_trace().to_jsonl())?;
+        println!("trace written to {path}");
+    }
+    if let Some(path) = args.get("metrics-json") {
+        std::fs::write(path, format!("{}\n", metrics.to_json()))?;
+        println!("metrics written to {path}");
+    }
+    Ok(())
 }
 
 /// Poisson arrivals over prompts sharing a `frac` common prefix.
@@ -95,16 +113,28 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
         })
     };
     let mut backend = SimBackend::new(model.clone(), hw.clone(), procs);
-    let (_, base) = sim_sched().serve(&mut backend, requests.clone())?;
+    let mut base_sched = sim_sched();
+    if !with_cache && args.get("trace-out").is_some() {
+        // Tracing (and the output files) follow the run of interest:
+        // the cache-on serve when --prefix-cache, else the base serve.
+        base_sched.enable_tracing();
+    }
+    let (_, base) = base_sched.serve(&mut backend, requests.clone())?;
     println!("== prefix cache OFF ==\n{}", base.report());
+    if !with_cache {
+        write_outputs(args, &mut base_sched, &base)?;
+    }
 
     if with_cache {
         let cfg = cache_config(args, 512)?;
         let mut backend = SimBackend::new(model, hw, procs);
         let cm = backend.cost_model().clone();
-        let (_, cached) = sim_sched()
-            .with_prefix_cache(PrefixCache::new(cfg.clone()), cm)
-            .serve(&mut backend, requests)?;
+        let mut sched =
+            sim_sched().with_prefix_cache(PrefixCache::new(cfg.clone()), cm);
+        if args.get("trace-out").is_some() {
+            sched.enable_tracing();
+        }
+        let (_, cached) = sched.serve(&mut backend, requests)?;
         println!(
             "== prefix cache ON (block {} tok, hot {} tok, cold {} tok @ \
              {:.0} GB/s) ==\n{}",
@@ -125,6 +155,7 @@ fn serve_sim(args: &Args) -> kvr::Result<()> {
             cached.prefix_hit_rate() * 100.0,
             cached.reused_tokens
         );
+        write_outputs(args, &mut sched, &cached)?;
     }
     Ok(())
 }
@@ -196,6 +227,9 @@ fn serve_real(args: &Args) -> kvr::Result<()> {
         );
         sched = sched.with_prefix_cache(PrefixCache::new(cfg), cm);
     }
+    if args.get("trace-out").is_some() {
+        sched.enable_tracing();
+    }
     let (responses, metrics) = sched.serve(&mut cluster, requests)?;
 
     for r in &responses {
@@ -210,6 +244,7 @@ fn serve_real(args: &Args) -> kvr::Result<()> {
         );
     }
     println!("\n== aggregate ==\n{}", metrics.report());
+    write_outputs(args, &mut sched, &metrics)?;
     Ok(())
 }
 

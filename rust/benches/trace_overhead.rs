@@ -1,0 +1,76 @@
+//! Tracing overhead: the same simulated serving workload with the
+//! tracer off and on — pins the cost of the serving-clock event trace
+//! (DESIGN.md §9). The disabled tracer is a strict no-op (the serve is
+//! bit-identical, see `tests/trace_serve.rs`); this bench measures the
+//! *enabled* tracer's price per serve and per event.
+//!
+//! ```bash
+//! cargo bench --bench trace_overhead
+//! # or: cargo run --release --bench trace_overhead -- --requests 64
+//! ```
+//!
+//! Expected shape: event emission is one enum construction + Vec push
+//! per serving event, so the overhead stays in the nanoseconds-per-event
+//! range — noise next to the scheduler's own bookkeeping.
+
+use kvr::config::{hardware_by_name, model_by_name};
+use kvr::coordinator::{GenRequest, Scheduler, SchedulerConfig, SimBackend};
+use kvr::util::stats::{fmt_time, Bench};
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo bench` appends a bare `--bench` to harness-false binaries;
+    // accept it as a flag so the documented invocation doesn't panic.
+    let args = kvr::util::cli::Args::parse(&raw, &["bench"]).unwrap();
+    let model = model_by_name(&args.str_or("model", "llama7b")).unwrap();
+    let hw = hardware_by_name(&args.str_or("hw", "a100-300gbps")).unwrap();
+    let n = args.usize_or("requests", 32).unwrap();
+    let prompt_len = args.usize_or("prompt-len", 4096).unwrap();
+    let max_new = args.usize_or("max-new", 32).unwrap();
+    let chunk = args.usize_or("prefill-chunk", 512).unwrap();
+
+    let requests: Vec<GenRequest> = (0..n as u64)
+        .map(|id| GenRequest {
+            id,
+            tokens: (0..prompt_len as i32)
+                .map(|i| i * 13 + 1 + id as i32)
+                .collect(),
+            max_new_tokens: max_new,
+            arrival: id as f64 * 0.02,
+        })
+        .collect();
+
+    let serve = |traced: bool| -> usize {
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let mut sched = Scheduler::new(SchedulerConfig {
+            max_active: usize::MAX,
+            decode_batch: 8,
+            prefill_chunk: chunk,
+            ..Default::default()
+        });
+        if traced {
+            sched.enable_tracing();
+        }
+        let (resp, _) = sched.serve(&mut backend, requests.clone()).unwrap();
+        assert_eq!(resp.len(), n);
+        sched.take_trace().events.len()
+    };
+
+    let events = serve(true);
+    println!(
+        "tracing overhead: {n} requests x {prompt_len} prompt tokens \
+         (chunk {chunk}) on the modeled cluster — {events} events per \
+         traced serve\n"
+    );
+    let bench = Bench::new(2, args.usize_or("iters", 10).unwrap());
+    let off = bench.report("serve (tracing off)", || serve(false));
+    let on = bench.report("serve (tracing on)", || serve(true));
+    let delta = (on.mean - off.mean).max(0.0);
+    println!(
+        "\nper-serve overhead {}  ({:+.2}% of the untraced serve, \
+         {:.1} ns/event)",
+        fmt_time(delta),
+        (on.mean / off.mean - 1.0) * 100.0,
+        delta / events.max(1) as f64 * 1e9
+    );
+}

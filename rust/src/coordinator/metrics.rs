@@ -1,9 +1,88 @@
-//! Serving metrics: TTFT / TPOT / throughput aggregation, plus
-//! prefix-cache effectiveness (hit rate, reused tokens, load/recompute
-//! block counts).
+//! Serving metrics: TTFT / TPOT / throughput aggregation with tail
+//! percentiles (exact from retained samples; bounded log-bucket
+//! histograms alongside for runs too large to retain), per-phase
+//! latency attribution (DESIGN.md §9), plus prefix-cache effectiveness
+//! (hit rate, reused tokens, load/recompute block counts).
 
 use crate::prefixcache::planner::PrefillPlan;
-use crate::util::stats::{fmt_time, Summary};
+use crate::util::json::Json;
+use crate::util::stats::{fmt_time, Histogram, Summary};
+
+/// Where one request's end-to-end latency went (DESIGN.md §9):
+/// `e2e = queue + plan + load + compute + decode + stall`.
+///
+/// `load` is the *serial-exposed* prefix-load charge only — pipelined
+/// loads stream under the chain, so their seconds attribute to
+/// `compute` (TTFT minus the serial charge). `stall` is the residual:
+/// time the finished request spent waiting on the shared timeline while
+/// other requests' prefill chunks or decode events held the chain.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub queue_s: f64,
+    pub plan_s: f64,
+    pub load_s: f64,
+    pub compute_s: f64,
+    pub decode_s: f64,
+    pub stall_s: f64,
+}
+
+impl PhaseBreakdown {
+    /// Attribute one retired request's latency to phases. `ttft` is the
+    /// prefill's chain occupancy, `load` the serial-exposed load charge
+    /// inside it, `tpot` the request's per-step decode seconds.
+    pub fn attribute(
+        e2e: f64, queue: f64, plan: f64, load: f64, ttft: f64, tpot: &[f64],
+    ) -> Self {
+        let load_s = load.clamp(0.0, ttft.max(0.0));
+        let compute_s = (ttft - load_s).max(0.0);
+        let decode_s: f64 = tpot.iter().sum();
+        // The residual can only be other requests holding the chain;
+        // clamp at 0 so float noise never reports a negative stall.
+        let stall_s = (e2e - queue - plan - ttft - decode_s).max(0.0);
+        Self { queue_s: queue, plan_s: plan, load_s, compute_s, decode_s, stall_s }
+    }
+
+    /// Sum of every phase (≈ e2e up to the stall clamp).
+    pub fn total(&self) -> f64 {
+        self.queue_s
+            + self.plan_s
+            + self.load_s
+            + self.compute_s
+            + self.decode_s
+            + self.stall_s
+    }
+
+    fn add(&mut self, other: &PhaseBreakdown) {
+        self.queue_s += other.queue_s;
+        self.plan_s += other.plan_s;
+        self.load_s += other.load_s;
+        self.compute_s += other.compute_s;
+        self.decode_s += other.decode_s;
+        self.stall_s += other.stall_s;
+    }
+
+    fn scaled(&self, k: f64) -> PhaseBreakdown {
+        PhaseBreakdown {
+            queue_s: self.queue_s * k,
+            plan_s: self.plan_s * k,
+            load_s: self.load_s * k,
+            compute_s: self.compute_s * k,
+            decode_s: self.decode_s * k,
+            stall_s: self.stall_s * k,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("queue_s", self.queue_s.into()),
+            ("plan_s", self.plan_s.into()),
+            ("load_s", self.load_s.into()),
+            ("compute_s", self.compute_s.into()),
+            ("decode_s", self.decode_s.into()),
+            ("stall_s", self.stall_s.into()),
+        ])
+    }
+}
 
 /// Aggregated over one serving run.
 #[derive(Clone, Debug, Default)]
@@ -49,6 +128,20 @@ pub struct ServeMetrics {
     /// one decode-eligible request waited (s) — the head-of-line stall
     /// chunked prefill bounds to roughly one chunk time.
     pub max_decode_stall_s: f64,
+    /// Σ per-phase latency over retired requests (DESIGN.md §9).
+    pub phase_totals: PhaseBreakdown,
+    /// Requests folded into `phase_totals`.
+    pub phase_requests: usize,
+    /// Bounded log-bucket TTFT histogram — the constant-memory tail
+    /// estimate for runs too large to retain every sample (the exact
+    /// vectors above stay the golden source of truth).
+    pub hist_ttft: Histogram,
+    /// Bounded TPOT histogram (one sample per decode step ridden).
+    pub hist_tpot: Histogram,
+    /// Bounded E2E histogram.
+    pub hist_e2e: Histogram,
+    /// Bounded queue-wait histogram.
+    pub hist_queue: Histogram,
 }
 
 impl ServeMetrics {
@@ -59,6 +152,26 @@ impl ServeMetrics {
         self.queue_waits.push(queue);
         self.tokens_out += 1 + tpot.len();
         self.requests += 1;
+        self.hist_ttft.record(ttft);
+        for &t in tpot {
+            self.hist_tpot.record(t);
+        }
+        self.hist_e2e.record(e2e);
+        self.hist_queue.record(queue);
+    }
+
+    /// Fold one retired request's per-phase attribution in.
+    pub fn record_phases(&mut self, phases: &PhaseBreakdown) {
+        self.phase_totals.add(phases);
+        self.phase_requests += 1;
+    }
+
+    /// Per-request mean phase breakdown (zeros before any retirement).
+    pub fn phase_means(&self) -> PhaseBreakdown {
+        if self.phase_requests == 0 {
+            return PhaseBreakdown::default();
+        }
+        self.phase_totals.scaled(1.0 / self.phase_requests as f64)
     }
 
     /// Record one admission-time prefix-cache plan.
@@ -153,25 +266,36 @@ impl ServeMetrics {
             self.requests, self.tokens_out, fmt_time(self.wall_s), self.throughput()
         ));
         out.push_str(&format!(
-            "TTFT  mean {} p50 {} p95 {} max {}\n",
+            "TTFT  mean {} p50 {} p95 {} p99 {} max {}\n",
             fmt_time(ttft.mean), fmt_time(ttft.p50), fmt_time(ttft.p95),
-            fmt_time(ttft.max)
+            fmt_time(ttft.p99), fmt_time(ttft.max)
         ));
         if let Some(tpot) = self.tpot_summary() {
             out.push_str(&format!(
-                "TPOT  mean {} p50 {} p95 {}\n",
-                fmt_time(tpot.mean), fmt_time(tpot.p50), fmt_time(tpot.p95)
+                "TPOT  mean {} p50 {} p95 {} p99 {}\n",
+                fmt_time(tpot.mean), fmt_time(tpot.p50), fmt_time(tpot.p95),
+                fmt_time(tpot.p99)
             ));
         }
         out.push_str(&format!(
-            "E2E   mean {} p95 {}\n",
-            fmt_time(e2e.mean), fmt_time(e2e.p95)
+            "E2E   mean {} p95 {} p99 {}\n",
+            fmt_time(e2e.mean), fmt_time(e2e.p95), fmt_time(e2e.p99)
         ));
         out.push_str(&format!(
-            "queue mean {} p50 {} p95 {} max {}\n",
+            "queue mean {} p50 {} p95 {} p99 {} max {}\n",
             fmt_time(queue.mean), fmt_time(queue.p50), fmt_time(queue.p95),
-            fmt_time(queue.max)
+            fmt_time(queue.p99), fmt_time(queue.max)
         ));
+        if self.phase_requests > 0 {
+            let p = self.phase_means();
+            out.push_str(&format!(
+                "phases (per-request mean)  queue {}  plan {}  load {}  \
+                 compute {}  decode {}  stall {}\n",
+                fmt_time(p.queue_s), fmt_time(p.plan_s), fmt_time(p.load_s),
+                fmt_time(p.compute_s), fmt_time(p.decode_s),
+                fmt_time(p.stall_s),
+            ));
+        }
         if self.decode_steps > 0 {
             out.push_str(&format!(
                 "decode  {} steps   mean batch {:.2}   max batch {}   \
@@ -214,6 +338,97 @@ impl ServeMetrics {
             ));
         }
         out
+    }
+
+    /// Machine-readable form (`kvr serve --metrics-json`): counters,
+    /// exact latency summaries with tail percentiles, the bounded-
+    /// histogram tail estimates, and the per-request phase means.
+    pub fn to_json(&self) -> Json {
+        fn summary_json(samples: &[f64]) -> Json {
+            if samples.is_empty() {
+                return Json::Null;
+            }
+            let s = Summary::of(samples);
+            Json::obj(vec![
+                ("n", s.n.into()),
+                ("mean", s.mean.into()),
+                ("min", s.min.into()),
+                ("max", s.max.into()),
+                ("p50", s.p50.into()),
+                ("p95", s.p95.into()),
+                ("p99", s.p99.into()),
+                ("p999", s.p999.into()),
+            ])
+        }
+        fn hist_json(h: &Histogram) -> Json {
+            if h.count() == 0 {
+                return Json::Null;
+            }
+            Json::obj(vec![
+                ("n", (h.count() as usize).into()),
+                ("mean", h.mean().into()),
+                ("p50", h.quantile(0.5).into()),
+                ("p99", h.quantile(0.99).into()),
+                ("p999", h.quantile(0.999).into()),
+                ("max", h.max().into()),
+            ])
+        }
+        Json::obj(vec![
+            ("requests", self.requests.into()),
+            ("tokens_out", self.tokens_out.into()),
+            ("wall_s", self.wall_s.into()),
+            ("throughput_tok_s", self.throughput().into()),
+            ("ttft", summary_json(&self.ttfts)),
+            ("tpot", summary_json(&self.tpots)),
+            ("e2e", summary_json(&self.e2es)),
+            ("queue", summary_json(&self.queue_waits)),
+            ("ttft_hist", hist_json(&self.hist_ttft)),
+            ("tpot_hist", hist_json(&self.hist_tpot)),
+            ("e2e_hist", hist_json(&self.hist_e2e)),
+            ("queue_hist", hist_json(&self.hist_queue)),
+            (
+                "phases_mean",
+                if self.phase_requests > 0 {
+                    self.phase_means().to_json()
+                } else {
+                    Json::Null
+                },
+            ),
+            ("phase_requests", self.phase_requests.into()),
+            (
+                "decode",
+                Json::obj(vec![
+                    ("steps", self.decode_steps.into()),
+                    ("mean_batch", self.mean_decode_batch().into()),
+                    ("max_batch", self.max_decode_batch.into()),
+                    ("solo_steps", self.solo_steps.into()),
+                    ("batched_steps", self.batched_steps.into()),
+                ]),
+            ),
+            (
+                "prefill",
+                Json::obj(vec![
+                    ("chunk_events", self.prefill_chunks.into()),
+                    ("chunked_prefills", self.chunked_prefills.into()),
+                    ("max_decode_stall_s", self.max_decode_stall_s.into()),
+                    (
+                        "oversized_admissions",
+                        self.oversized_admissions.into(),
+                    ),
+                ]),
+            ),
+            (
+                "prefix_cache",
+                Json::obj(vec![
+                    ("lookups", self.prefix_lookups.into()),
+                    ("hits", self.prefix_hits.into()),
+                    ("hit_rate", self.prefix_hit_rate().into()),
+                    ("reused_tokens", self.reused_tokens.into()),
+                    ("loaded_blocks", self.loaded_blocks.into()),
+                    ("recomputed_blocks", self.recomputed_blocks.into()),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -349,6 +564,115 @@ mod tests {
         assert_eq!(m.prefix_hit_rate(), 0.0);
         assert!(m.ttft_summary().is_none());
         assert!(m.tpot_summary().is_none());
+    }
+
+    #[test]
+    fn phase_attribution_sums_to_e2e() {
+        let p =
+            PhaseBreakdown::attribute(1.2, 0.1, 0.05, 0.2, 0.5, &[0.1, 0.2]);
+        assert_eq!(p.queue_s, 0.1);
+        assert_eq!(p.plan_s, 0.05);
+        assert_eq!(p.load_s, 0.2);
+        assert!((p.compute_s - 0.3).abs() < 1e-12, "{}", p.compute_s);
+        assert!((p.decode_s - 0.3).abs() < 1e-12);
+        // stall = 1.2 - 0.1 - 0.05 - 0.5 - 0.3 = 0.25 (the residual).
+        assert!((p.stall_s - 0.25).abs() < 1e-12, "{}", p.stall_s);
+        assert!((p.total() - 1.2).abs() < 1e-12);
+        // The load charge clamps to TTFT: an overlong serial load can
+        // never drive compute negative.
+        let p = PhaseBreakdown::attribute(1.0, 0.0, 0.0, 2.0, 0.5, &[]);
+        assert_eq!(p.load_s, 0.5);
+        assert_eq!(p.compute_s, 0.0);
+        // Float noise in e2e clamps stall at zero, never negative.
+        let p = PhaseBreakdown::attribute(0.4, 0.0, 0.0, 0.0, 0.5, &[]);
+        assert_eq!(p.stall_s, 0.0);
+    }
+
+    #[test]
+    fn phase_means_aggregate_and_report() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.0);
+        m.wall_s = 1.0;
+        assert!(!m.report().contains("phases"), "no attribution yet");
+        assert_eq!(m.phase_means(), PhaseBreakdown::default());
+        m.record_phases(&PhaseBreakdown {
+            queue_s: 0.2,
+            plan_s: 0.0,
+            load_s: 0.1,
+            compute_s: 0.4,
+            decode_s: 0.1,
+            stall_s: 0.0,
+        });
+        m.record_phases(&PhaseBreakdown {
+            queue_s: 0.4,
+            plan_s: 0.0,
+            load_s: 0.1,
+            compute_s: 0.4,
+            decode_s: 0.1,
+            stall_s: 0.2,
+        });
+        let mean = m.phase_means();
+        assert!((mean.queue_s - 0.3).abs() < 1e-12);
+        assert!((mean.stall_s - 0.1).abs() < 1e-12);
+        let report = m.report();
+        assert!(report.contains("phases (per-request mean)"), "{report}");
+        assert!(report.contains("queue 300.000ms"), "{report}");
+    }
+
+    #[test]
+    fn report_includes_tail_percentiles() {
+        let mut m = ServeMetrics::default();
+        for i in 1..=100 {
+            m.record_request(i as f64 / 100.0, &[0.01], 1.0, 0.0);
+        }
+        m.wall_s = 10.0;
+        let report = m.report();
+        let ttft = report.lines().find(|l| l.starts_with("TTFT")).unwrap();
+        assert!(ttft.contains("p99"), "{ttft}");
+        let queue = report.lines().find(|l| l.starts_with("queue")).unwrap();
+        assert!(queue.contains("p99"), "{queue}");
+        // The bounded histograms saw the same samples.
+        assert_eq!(m.hist_ttft.count(), 100);
+        assert_eq!(m.hist_tpot.count(), 100);
+        let exact = Summary::of(&m.ttfts).p99;
+        let est = m.hist_ttft.quantile(0.99);
+        assert!((est - exact).abs() / exact < 0.025, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_parser() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1, 0.2], 0.9, 0.05);
+        m.record_request(0.25, &[0.1], 0.5, 0.0);
+        m.record_phases(&PhaseBreakdown::attribute(
+            0.9, 0.05, 0.0, 0.0, 0.5, &[0.1, 0.2],
+        ));
+        m.record_decode_step(2);
+        m.wall_s = 2.0;
+        let j = m.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        // f64 Display is shortest-roundtrip, so the parsed tree is
+        // identical — the --metrics-json file loses nothing.
+        assert_eq!(back, j);
+        assert_eq!(back.get("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            back.get("ttft").unwrap().get("p999").unwrap().as_f64().unwrap(),
+            Summary::of(&m.ttfts).p999
+        );
+        assert_eq!(
+            back.get("phases_mean")
+                .unwrap()
+                .get("queue_s")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            0.05
+        );
+        assert!(back.get("tpot_hist").unwrap().get("p99").is_some());
+        // Empty sections serialize as null, not garbage.
+        let empty = ServeMetrics::default().to_json();
+        assert_eq!(empty.get("ttft").unwrap(), &Json::Null);
+        assert_eq!(empty.get("phases_mean").unwrap(), &Json::Null);
     }
 
     #[test]

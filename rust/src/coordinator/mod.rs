@@ -38,7 +38,7 @@ pub use backend::{
 };
 pub use cluster::{Cluster, PartitionPolicy, ReusedPrefix, SeedBlock};
 pub use kvpool::KvPool;
-pub use metrics::ServeMetrics;
+pub use metrics::{PhaseBreakdown, ServeMetrics};
 pub use request::{GenRequest, GenResponse};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use simbackend::SimBackend;

@@ -45,13 +45,14 @@ use crate::coordinator::backend::{
     Clock, DecodeStep, LoadPlan, PrefillJob, ServingBackend,
 };
 use crate::coordinator::cluster::{PartitionPolicy, ReusedPrefix};
-use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::metrics::{PhaseBreakdown, ServeMetrics};
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::tokenizer::ByteTokenizer;
 use crate::error::{Error, Result};
 use crate::prefixcache::{Lease, PrefixCache};
 use crate::runtime::KvCache;
 use crate::sim::cost::CostModel;
+use crate::trace::{EventKind, Trace, Tracer};
 
 /// Scheduler knobs.
 #[derive(Clone, Debug)]
@@ -92,6 +93,24 @@ struct Active {
     ttft: f64,
     tpot: Vec<f64>,
     queue_wait: f64,
+    /// Seconds the admission spent in the prefix-cache planner (0 on a
+    /// virtual clock — planning charges nothing to a modeled timeline).
+    plan_s: f64,
+    /// Serial-exposed prefix-load seconds (pipelined loads hide under
+    /// the chain and attribute to compute).
+    load_s: f64,
+}
+
+/// What the admission-time planner decided, surfaced as the admission's
+/// plan trace event (None when no cache is attached).
+struct PlanInfo {
+    matched_tokens: usize,
+    /// Effective reuse: 0 when the serving layer declined the cut.
+    reuse_tokens: usize,
+    est_ttft_s: f64,
+    applied: bool,
+    loaded_blocks: usize,
+    recomputed_blocks: usize,
 }
 
 /// A chunked prefill in flight on the chain (DESIGN.md §6): the
@@ -102,6 +121,11 @@ struct Inflight {
     job: PrefillJob,
     lease: Option<Lease>,
     queue_wait: f64,
+    /// Admission-time planner seconds, carried to retirement for the
+    /// per-phase latency attribution.
+    plan_s: f64,
+    /// Serial-exposed prefix-load seconds (see [`Active::load_s`]).
+    load_s: f64,
 }
 
 /// Retire every active request that finished by time `now`, releasing
@@ -109,6 +133,7 @@ struct Inflight {
 fn retire_finished<B: ServingBackend + ?Sized>(
     backend: &mut B, eos: i32, now: f64, active: &mut Vec<Active>,
     metrics: &mut ServeMetrics, done: &mut Vec<GenResponse>,
+    tracer: &mut Tracer,
 ) -> Result<()> {
     let mut i = 0;
     while i < active.len() {
@@ -120,12 +145,39 @@ fn retire_finished<B: ServingBackend + ?Sized>(
             continue;
         }
         let a = active.swap_remove(i);
-        backend.release(a.owner, a.req.id)?;
+        if let Err(e) = backend.release(a.owner, a.req.id) {
+            tracer.emit(
+                now,
+                0.0,
+                Some(a.req.id),
+                EventKind::Abort { reason: e.to_string() },
+            );
+            return Err(e);
+        }
         // E2E is time on the shared serving timeline: it includes
         // queueing and decode stalls where an interleaved prefill held
         // the chain, which per-step TPOT entries deliberately do not.
         let e2e = now - a.req.arrival;
+        let phases = PhaseBreakdown::attribute(
+            e2e, a.queue_wait, a.plan_s, a.load_s, a.ttft, &a.tpot,
+        );
         metrics.record_request(a.ttft, &a.tpot, e2e, a.queue_wait);
+        metrics.record_phases(&phases);
+        tracer.emit(
+            now,
+            0.0,
+            Some(a.req.id),
+            EventKind::Retire {
+                e2e_s: e2e,
+                tokens_out: a.produced.len(),
+                queue_s: phases.queue_s,
+                plan_s: phases.plan_s,
+                load_s: phases.load_s,
+                compute_s: phases.compute_s,
+                decode_s: phases.decode_s,
+                stall_s: phases.stall_s,
+            },
+        );
         done.push(GenResponse {
             id: a.req.id,
             tokens: a.produced,
@@ -146,7 +198,7 @@ fn retire_finished<B: ServingBackend + ?Sized>(
 fn decode_event<B: ServingBackend + ?Sized>(
     backend: &mut B, clock: &mut dyn Clock, decode_batch: usize, eos: i32,
     active: &mut Vec<Active>, metrics: &mut ServeMetrics,
-    done: &mut Vec<GenResponse>,
+    done: &mut Vec<GenResponse>, tracer: &mut Tracer,
 ) -> Result<()> {
     debug_assert!(!active.is_empty(), "decode event with nothing active");
     let want = active.len().min(decode_batch);
@@ -162,8 +214,28 @@ fn decode_event<B: ServingBackend + ?Sized>(
             past_tokens: a.req.tokens.len() + a.produced.len(),
         })
         .collect();
-    let out = backend.decode_batch(&steps)?;
+    let t0 = clock.now();
+    let out = match backend.decode_batch(&steps) {
+        Ok(out) => out,
+        Err(e) => {
+            tracer.emit(
+                t0,
+                0.0,
+                None,
+                EventKind::Abort { reason: e.to_string() },
+            );
+            return Err(e);
+        }
+    };
     clock.advance(out.step_s);
+    if tracer.is_on() {
+        tracer.emit(
+            t0,
+            out.step_s,
+            None,
+            EventKind::DecodeStep { batch: b, groups: out.groups.clone() },
+        );
+    }
     // Occupancy counts what actually batched: the real path groups by
     // owner worker, so one event may split into several co-executing
     // groups.
@@ -175,7 +247,7 @@ fn decode_event<B: ServingBackend + ?Sized>(
         a.produced.push(tok);
     }
     active.rotate_left(b);
-    retire_finished(backend, eos, clock.now(), active, metrics, done)
+    retire_finished(backend, eos, clock.now(), active, metrics, done, tracer)
 }
 
 /// Settle a failed in-flight prefill job: drop the backend's partial
@@ -199,11 +271,40 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     /// Prefix cache + the cost model pricing its compute-or-load plans.
     cache: Option<(PrefixCache, CostModel)>,
+    /// Serving-clock event recorder (DESIGN.md §9). Disabled by default
+    /// — a disabled tracer is a strict no-op, so an untraced serve is
+    /// bit-identical to the pre-tracing engine.
+    tracer: Tracer,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
-        Self { cfg, cache: None }
+        Self { cfg, cache: None, tracer: Tracer::disabled() }
+    }
+
+    /// Builder form of [`Self::enable_tracing`].
+    pub fn with_tracing(mut self) -> Self {
+        self.enable_tracing();
+        self
+    }
+
+    /// Record a serving-clock trace of every subsequent serve. Drain it
+    /// with [`Self::take_trace`] after each run — events from
+    /// back-to-back serves would otherwise interleave two restarted
+    /// clocks in one trace.
+    pub fn enable_tracing(&mut self) {
+        self.tracer = Tracer::enabled();
+    }
+
+    /// Whether serve runs record trace events.
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracer.is_on()
+    }
+
+    /// Drain the events recorded since the last take (empty when
+    /// tracing is off). The tracer keeps recording afterwards.
+    pub fn take_trace(&mut self) -> Trace {
+        self.tracer.take()
     }
 
     /// Attach a prefix cache; `cm` prices the hybrid plans (use the
@@ -243,20 +344,28 @@ impl Scheduler {
 
     /// Admission-time cache consult: plan, lease, and (on payload-backed
     /// backends) collect the reused prefix's block payloads for one
-    /// request. Returns `(reused, loads, lease, want_wire)` — `loads` is
-    /// the modeled schedule (total seconds + serial/pipelined, DESIGN.md
-    /// §7) the backend must price the loads with; metrics record what
-    /// will actually run (a declined plan is recorded as full recompute,
-    /// not as the aspirational cut). Takes the backend shape as
-    /// primitives (`workers`, `model`, granularity `g`, whether reuse
-    /// `payloads` are required) so the decline accounting is testable
-    /// without PJRT artifacts.
+    /// request. Returns `(reused, loads, lease, want_wire, info)` —
+    /// `loads` is the modeled schedule (total seconds +
+    /// serial/pipelined, DESIGN.md §7) the backend must price the loads
+    /// with; metrics record what will actually run (a declined plan is
+    /// recorded as full recompute, not as the aspirational cut); `info`
+    /// is the decision surfaced as the admission's plan trace event.
+    /// Takes the backend shape as primitives (`workers`, `model`,
+    /// granularity `g`, whether reuse `payloads` are required) so the
+    /// decline accounting is testable without PJRT artifacts.
+    #[allow(clippy::type_complexity)]
     fn plan_reuse(
         &mut self, workers: usize, m: &ModelConfig, g: usize, payloads: bool,
         req: &GenRequest, metrics: &mut ServeMetrics,
-    ) -> Result<(Option<ReusedPrefix>, LoadPlan, Option<Lease>, bool)> {
+    ) -> Result<(
+        Option<ReusedPrefix>,
+        LoadPlan,
+        Option<Lease>,
+        bool,
+        Option<PlanInfo>,
+    )> {
         let Some((pc, cm)) = self.cache.as_mut() else {
-            return Ok((None, LoadPlan::none(), None, false));
+            return Ok((None, LoadPlan::none(), None, false, None));
         };
         let plan = pc.plan_prefill(cm, &req.tokens, workers)?;
         let reused = if payloads {
@@ -297,6 +406,22 @@ impl Scheduler {
         } else {
             metrics.record_prefix(&plan.declined());
         }
+        // The plan event mirrors what metrics recorded: effective reuse
+        // (0 on decline), with declined loads re-counted as recomputes.
+        let applied = reused.is_some();
+        let loaded = if applied || plan.reuse_tokens == 0 {
+            plan.loaded_blocks().count()
+        } else {
+            0
+        };
+        let info = PlanInfo {
+            matched_tokens: plan.matched_tokens,
+            reuse_tokens: if applied { plan.reuse_tokens } else { 0 },
+            est_ttft_s: plan.est_ttft_s,
+            applied,
+            loaded_blocks: loaded,
+            recomputed_blocks: plan.blocks.len() - loaded,
+        };
         let loads = if reused.is_some() {
             LoadPlan { total_s: plan.load_s, pipelined: plan.pipelined }
         } else {
@@ -310,7 +435,7 @@ impl Scheduler {
             let bt = pc.config().block_tokens;
             plan.matched_tokens < (req.tokens.len() / bt) * bt
         };
-        Ok((reused, loads, lease, want_wire))
+        Ok((reused, loads, lease, want_wire, Some(info)))
     }
 
     /// Serve a batch of requests to completion on `backend`; returns
@@ -342,6 +467,21 @@ impl Scheduler {
         // sort keeps submission order among simultaneous arrivals).
         let mut requests = requests;
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        if self.tracer.is_on() {
+            for r in &requests {
+                // Enqueue timestamps are arrivals (clamped to the
+                // serving clock's origin), not engine-timeline events.
+                self.tracer.emit(
+                    r.arrival.max(0.0),
+                    0.0,
+                    Some(r.id),
+                    EventKind::Enqueued {
+                        prompt_tokens: r.tokens.len(),
+                        max_new_tokens: r.max_new_tokens,
+                    },
+                );
+            }
+        }
         let mut pending: VecDeque<GenRequest> = requests.into();
         let mut active: Vec<Active> = Vec::new();
         let mut done: Vec<GenResponse> = Vec::with_capacity(pending.len());
@@ -357,6 +497,17 @@ impl Scheduler {
             // active requests stall for at most one chunk per step
             // instead of the whole prompt.
             if let Some(mut fl) = inflight.take() {
+                let req_id = fl.job.req.id;
+                let t0 = clock.now();
+                // Chunk geometry must be read before the backend runs
+                // (and advances) the job.
+                let chunk_meta = if self.tracer.is_on() {
+                    fl.job.next_chunk().map(|(offset, rows)| {
+                        (fl.job.chunks_done(), fl.job.chunks_total(), offset, rows)
+                    })
+                } else {
+                    None
+                };
                 let chunk = backend.prefill_chunk(&mut fl.job);
                 let out = match chunk {
                     Ok(out) => out,
@@ -365,15 +516,35 @@ impl Scheduler {
                         // pinned block would be unevictable for the
                         // cache's lifetime, a worker slab for the
                         // backend's.
+                        self.tracer.emit(
+                            clock.now(),
+                            0.0,
+                            Some(req_id),
+                            EventKind::Abort { reason: e.to_string() },
+                        );
                         settle_failed_job(backend, &mut self.cache, fl);
                         return Err(e);
                     }
                 };
                 clock.advance(out.chunk_s);
+                if let Some((index, total, offset, rows)) = chunk_meta {
+                    self.tracer.emit(
+                        t0,
+                        out.chunk_s,
+                        Some(req_id),
+                        EventKind::PrefillChunk { index, total, offset, rows },
+                    );
+                }
                 metrics.record_prefill_chunk();
                 if !active.is_empty() {
                     stall_s += out.chunk_s;
                     metrics.note_decode_stall(stall_s);
+                    self.tracer.emit(
+                        t0,
+                        out.chunk_s,
+                        None,
+                        EventKind::DecodeStall { waiting: active.len() },
+                    );
                 }
                 if let Some(fin) = out.done {
                     if fl.job.chunks_total() > 1 {
@@ -398,17 +569,25 @@ impl Scheduler {
                             }
                         }
                     }
+                    self.tracer.emit(
+                        clock.now(),
+                        0.0,
+                        Some(req_id),
+                        EventKind::FirstToken { ttft_s: fin.ttft },
+                    );
                     active.push(Active {
                         owner: fin.owner,
                         produced: vec![fin.first_token],
                         ttft: fin.ttft,
                         tpot: Vec::new(),
                         queue_wait: fl.queue_wait,
+                        plan_s: fl.plan_s,
+                        load_s: fl.load_s,
                         req,
                     });
                     retire_finished(
                         backend, eos, clock.now(), &mut active, &mut metrics,
-                        &mut done,
+                        &mut done, &mut self.tracer,
                     )?;
                     if active.is_empty() {
                         stall_s = 0.0;
@@ -422,6 +601,7 @@ impl Scheduler {
                         if let Err(e) = decode_event(
                             backend, clock.as_mut(), decode_batch, eos,
                             &mut active, &mut metrics, &mut done,
+                            &mut self.tracer,
                         ) {
                             settle_failed_job(backend, &mut self.cache, fl);
                             return Err(e);
@@ -450,6 +630,12 @@ impl Scheduler {
                 let req = pending.pop_front().unwrap();
                 clock.wait_until(req.arrival);
                 let queue_wait = (clock.now() - req.arrival).max(0.0);
+                self.tracer.emit(
+                    clock.now(),
+                    0.0,
+                    Some(req.id),
+                    EventKind::Admitted { queue_s: queue_wait },
+                );
                 if active.is_empty()
                     && !backend
                         .admit_capacity(req.tokens.len(), req.max_new_tokens)
@@ -462,9 +648,72 @@ impl Scheduler {
                     // silently over budget.
                     metrics.oversized_admissions += 1;
                 }
-                let (reused, loads, lease, want_wire) = self.plan_reuse(
+                // Plan time is real seconds on a wall clock and zero on
+                // a virtual one (planning charges nothing to a modeled
+                // timeline) — exactly what the phase attribution wants.
+                let plan_t0 = clock.now();
+                let planned = self.plan_reuse(
                     workers, &model, granularity, payloads, &req, &mut metrics,
-                )?;
+                );
+                let (reused, loads, lease, want_wire, info) = match planned {
+                    Ok(p) => p,
+                    Err(e) => {
+                        self.tracer.emit(
+                            clock.now(),
+                            0.0,
+                            Some(req.id),
+                            EventKind::Abort { reason: e.to_string() },
+                        );
+                        return Err(e);
+                    }
+                };
+                let plan_s = (clock.now() - plan_t0).max(0.0);
+                if let Some(info) = &info {
+                    self.tracer.emit(
+                        plan_t0,
+                        plan_s,
+                        Some(req.id),
+                        EventKind::Plan {
+                            matched_tokens: info.matched_tokens,
+                            reuse_tokens: info.reuse_tokens,
+                            est_ttft_s: info.est_ttft_s,
+                            applied: info.applied,
+                            loaded_blocks: info.loaded_blocks,
+                            recomputed_blocks: info.recomputed_blocks,
+                        },
+                    );
+                }
+                if let Some(lease) = &lease {
+                    self.tracer.emit(
+                        clock.now(),
+                        0.0,
+                        Some(req.id),
+                        EventKind::Lease { blocks: lease.block_count() },
+                    );
+                }
+                if loads.total_s > 0.0 {
+                    // The reused prefix streaming onto the chain head —
+                    // the real path's SeedBlock background transfers,
+                    // the modeled path's load schedule.
+                    let (blocks, rows) = info
+                        .as_ref()
+                        .map_or((0, 0), |i| (i.loaded_blocks, i.reuse_tokens));
+                    self.tracer.emit(
+                        clock.now(),
+                        loads.total_s,
+                        Some(req.id),
+                        EventKind::ColdLoad {
+                            blocks,
+                            rows,
+                            pipelined: loads.pipelined,
+                        },
+                    );
+                }
+                // Only a serial load schedule exposes its seconds in
+                // TTFT; pipelined loads hide under the chain and
+                // attribute to compute.
+                let load_s = if loads.pipelined { 0.0 } else { loads.total_s };
+                let req_id = req.id;
                 // The job owns the request from here; it comes back in
                 // the completed outcome's `Active` entry.
                 let job = match backend.prefill_begin(
@@ -474,6 +723,12 @@ impl Scheduler {
                     Err(e) => {
                         // Never leak the lease: a pinned block would be
                         // unevictable for the cache's lifetime.
+                        self.tracer.emit(
+                            clock.now(),
+                            0.0,
+                            Some(req_id),
+                            EventKind::Abort { reason: e.to_string() },
+                        );
                         if let Some((pc, _)) = self.cache.as_mut() {
                             if let Some(lease) = lease {
                                 pc.release(lease);
@@ -482,7 +737,8 @@ impl Scheduler {
                         return Err(e);
                     }
                 };
-                inflight = Some(Inflight { job, lease, queue_wait });
+                inflight =
+                    Some(Inflight { job, lease, queue_wait, plan_s, load_s });
                 continue;
             }
 
@@ -490,7 +746,7 @@ impl Scheduler {
             // active set, rotating round-robin.
             decode_event(
                 backend, clock.as_mut(), decode_batch, eos, &mut active,
-                &mut metrics, &mut done,
+                &mut metrics, &mut done, &mut self.tracer,
             )?;
             stall_s = 0.0;
         }
@@ -543,23 +799,34 @@ mod tests {
         let mut metrics = ServeMetrics::default();
 
         // First sight: cold miss, nothing to reuse.
-        let (reused, _, lease, want_wire) = sched
+        let (reused, _, lease, want_wire, info) = sched
             .plan_reuse(2, &model, 32, true, &req(tokens.clone()), &mut metrics)
             .unwrap();
         assert!(reused.is_none() && lease.is_none());
         assert!(want_wire, "cold prompt should request the wire for admission");
+        let info = info.expect("cache attached -> plan info");
+        assert!(!info.applied);
+        assert_eq!(info.matched_tokens, 0);
         // Payload-less admission (what the modeled path stores).
         if let Some((pc, _)) = sched.cache.as_mut() {
             pc.admit(&tokens);
         }
 
         // Second sight: the planner matches, the serving layer declines.
-        let (reused, loads, lease, _) = sched
+        let (reused, loads, lease, _, info) = sched
             .plan_reuse(2, &model, 32, true, &req(tokens.clone()), &mut metrics)
             .unwrap();
         assert!(reused.is_none(), "no payloads -> nothing to seed");
         assert!(lease.is_none(), "declined plans must not pin blocks");
         assert_eq!(loads, LoadPlan::none(), "declined plans charge no loads");
+        // The plan event mirrors the decline: matched but nothing reused,
+        // every matched block re-counted as a recompute.
+        let info = info.expect("cache attached -> plan info");
+        assert!(!info.applied);
+        assert!(info.matched_tokens > 0);
+        assert_eq!(info.reuse_tokens, 0);
+        assert_eq!(info.loaded_blocks, 0);
+        assert!(info.recomputed_blocks > 0);
 
         let stats = sched.prefix_cache_stats().unwrap();
         // Store saw the match and counted the planner's intended reuse...
@@ -607,7 +874,7 @@ mod tests {
         }
         // Any reuse cut (a 32-token multiple) misses the 48-granularity
         // chunk boundary, so the plan must be declined despite payloads.
-        let (reused, _, lease, _) = sched
+        let (reused, _, lease, _, _) = sched
             .plan_reuse(2, &model, 48, true, &req(tokens), &mut metrics)
             .unwrap();
         assert!(reused.is_none());
@@ -632,10 +899,14 @@ mod tests {
         if let Some((pc, _)) = sched.cache.as_mut() {
             pc.admit(&tokens);
         }
-        let (reused, loads, lease, want_wire) = sched
+        let (reused, loads, lease, want_wire, info) = sched
             .plan_reuse(2, &model, 1, false, &req(tokens.clone()), &mut metrics)
             .unwrap();
         let reused = reused.expect("timing-only reuse applies");
+        let info = info.expect("cache attached -> plan info");
+        assert!(info.applied);
+        assert_eq!(info.reuse_tokens, reused.tokens);
+        assert!(info.est_ttft_s > 0.0);
         assert!(reused.wire.is_empty(), "no payload travels on the sim path");
         assert!(reused.blocks.is_empty(), "nor block payloads");
         assert!(reused.tokens > 0 && reused.tokens < tokens.len());

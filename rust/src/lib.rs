@@ -15,7 +15,7 @@
 //!   parallel-prefill strategies, [`partition`] context load-balancing,
 //!   [`prefixcache`] cross-request prefix-KV reuse with hybrid
 //!   compute-or-load prefill, [`sim`]/[`net`] the modeled A100 cluster,
-//!   [`runtime`] the PJRT bridge.
+//!   [`trace`] serving-clock event tracing, [`runtime`] the PJRT bridge.
 //! * **L2** — `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L1** — `python/compile/kernels/attention.py` (Pallas, interpret).
 
@@ -28,6 +28,7 @@ pub mod partition;
 pub mod prefixcache;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 pub use error::{Error, Result};

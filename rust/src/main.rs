@@ -9,6 +9,8 @@
 //! * `run`       — one-shot real generation through the PJRT cluster.
 //! * `serve`     — synthetic serving workload over the PJRT cluster with
 //!                 TTFT/TPOT/throughput report (the end-to-end driver).
+//! * `trace`     — summarize / validate / export a `--trace-out` JSONL
+//!                 serving trace (Chrome trace-event JSON for Perfetto).
 //! * `calibrate` — measure real per-bucket prefill latencies on this host.
 
 use std::path::PathBuf;
@@ -16,7 +18,7 @@ use std::path::PathBuf;
 use kvr::config::{hardware_by_name, model_by_name};
 use kvr::coordinator::{
     ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
-    SchedulerConfig, SimBackend,
+    SchedulerConfig, ServeMetrics, SimBackend,
 };
 use kvr::engines::{Evaluator, Method};
 use kvr::error::Result;
@@ -24,6 +26,7 @@ use kvr::partition::search::SearchConfig;
 use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::runtime::Engine;
 use kvr::sim::cost::CostModel;
+use kvr::trace::Trace;
 use kvr::util::cli::Args;
 use kvr::util::rng::Rng;
 use kvr::util::stats::fmt_time;
@@ -46,6 +49,8 @@ USAGE:
             [--block-tokens N] [--hot-tokens N] [--cold-tokens N]
             [--cold-bw BYTES_PER_S] [--cold-latency S]
             [--pipelined-loads | --serial-loads] [--even-cuts]
+            [--trace-out FILE] [--metrics-json FILE]
+  kvr trace <file.jsonl> [--validate] [--chrome out.json]
   kvr calibrate [--artifacts artifacts]
 
 Prefix cache: `--prefix-cache` reuses cached prompt-prefix KV across
@@ -62,6 +67,14 @@ N-token chunk events interleaved with decode (0 = whole prompt in one
 chunk), bounding the decode stall a long prompt causes.
 `--mem-pressure` (sim) gates admission and decode on the modeled
 device-memory footprint of the active KV.
+
+Telemetry: `--trace-out` records every serving-clock event (admission,
+plan, cold load, prefill chunks, decode steps/stalls, retire) as JSONL;
+`--metrics-json` dumps the full ServeMetrics (tail percentiles and
+per-phase latency attribution) as JSON. `kvr trace` summarizes a trace
+file, `--validate` audits its invariants (monotonic clock, well-formed
+lifecycles, chunk-sum TTFT), and `--chrome` exports Chrome trace-event
+JSON to open in Perfetto (ui.perfetto.dev).
 ";
 
 fn main() {
@@ -88,6 +101,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
                 "pipelined-loads",
                 "serial-loads",
                 "even-cuts",
+                "validate",
             ],
         )?;
     match raw[0].as_str() {
@@ -95,6 +109,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "search" => cmd_search(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "calibrate" => cmd_calibrate(&args),
         other => {
             print!("{USAGE}");
@@ -226,6 +241,22 @@ fn shared_prefix_requests(
         .collect()
 }
 
+/// Write `--trace-out` / `--metrics-json` artifacts after a serve (both
+/// serve substrates share this, so the file formats cannot drift).
+fn write_serve_outputs(
+    args: &Args, sched: &mut Scheduler, metrics: &ServeMetrics,
+) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, sched.take_trace().to_jsonl())?;
+        println!("trace written to {path}");
+    }
+    if let Some(path) = args.get("metrics-json") {
+        std::fs::write(path, format!("{}\n", metrics.to_json()))?;
+        println!("metrics written to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 2)?;
     let n_requests = args.usize_or("requests", 8)?;
@@ -261,12 +292,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 cm,
             );
         }
+        if args.get("trace-out").is_some() {
+            sched.enable_tracing();
+        }
         let (responses, metrics) = sched.serve(&mut backend, requests)?;
         for r in &responses {
             println!("req {:>3}: ttft {}  e2e {}", r.id, fmt_time(r.ttft),
                      fmt_time(r.e2e));
         }
         println!("\n{}", metrics.report());
+        write_serve_outputs(args, &mut sched, &metrics)?;
         return Ok(());
     }
 
@@ -290,12 +325,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sched = sched
             .with_prefix_cache(PrefixCache::new(prefix_cache_config(args, g)?), cm);
     }
+    if args.get("trace-out").is_some() {
+        sched.enable_tracing();
+    }
     let (responses, metrics) = sched.serve(&mut cluster, requests)?;
     for r in &responses {
         println!("req {:>3}: {} tokens  ttft {}  e2e {}", r.id,
                  r.tokens.len(), fmt_time(r.ttft), fmt_time(r.e2e));
     }
     println!("\n{}", metrics.report());
+    write_serve_outputs(args, &mut sched, &metrics)?;
+    Ok(())
+}
+
+/// `kvr trace <file.jsonl>` — summarize a recorded serving trace, with
+/// optional invariant audit (`--validate`) and Perfetto export
+/// (`--chrome out.json`).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args.positional.first().ok_or_else(|| {
+        kvr::Error::Cli("trace expects a file: kvr trace <file.jsonl>".into())
+    })?;
+    let trace = Trace::parse_jsonl(&std::fs::read_to_string(path)?)?;
+    print!("{}", trace.summarize());
+    if let Some(out) = args.get("chrome") {
+        std::fs::write(out, format!("{}\n", trace.to_chrome()))?;
+        println!("chrome trace written to {out} (open in ui.perfetto.dev)");
+    }
+    if args.flag("validate") {
+        let check = trace.validate()?;
+        println!(
+            "validate OK: {} events, {} requests ({} admitted, {} retired, \
+             {} aborted)",
+            check.events, check.requests, check.admitted, check.retired,
+            check.aborted
+        );
+    }
     Ok(())
 }
 

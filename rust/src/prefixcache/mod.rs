@@ -162,6 +162,14 @@ pub struct Lease {
     blocks: Vec<BlockId>,
 }
 
+impl Lease {
+    /// How many cache blocks this lease pins (telemetry surfaces it on
+    /// the admission's lease event).
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
 /// The prefix KV-cache: index + two-tier store + planner + stats.
 #[derive(Clone, Debug)]
 pub struct PrefixCache {

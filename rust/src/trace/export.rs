@@ -1,0 +1,150 @@
+//! Chrome trace-event export: render a [`Trace`] as the JSON object
+//! format Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing`
+//! load directly.
+//!
+//! Mapping: one track (`tid`) per request plus track 0 for engine-wide
+//! events (batched decode steps, stalls); span kinds become complete
+//! (`ph: "X"`) events with microsecond `ts`/`dur`, instants become
+//! thread-scoped `ph: "i"` marks, and thread-name metadata labels each
+//! track `req N`.
+
+use crate::trace::Trace;
+use crate::util::json::Json;
+
+/// Engine-wide events (no request id) render on this track.
+const ENGINE_TID: usize = 0;
+
+fn args_json(e: &crate::trace::TraceEvent) -> Json {
+    // The kind-specific fields only — `ev`/`t`/`dur`/`req` travel in the
+    // enclosing Chrome event.
+    let fields = match e.to_json() {
+        Json::Object(fields) => fields,
+        _ => unreachable!("event JSON is always an object"),
+    };
+    Json::Object(
+        fields
+            .into_iter()
+            .filter(|(k, _)| !matches!(k.as_str(), "ev" | "t" | "dur" | "req"))
+            .collect(),
+    )
+}
+
+impl Trace {
+    /// Render as Chrome trace-event JSON (the `{"traceEvents": [...]}`
+    /// object form). Timestamps convert from serving-clock seconds to
+    /// microseconds, the unit the format requires.
+    pub fn to_chrome(&self) -> Json {
+        let mut events: Vec<Json> = Vec::with_capacity(self.events.len() + 8);
+        let mut tids: Vec<usize> = Vec::new();
+        for e in &self.events {
+            let tid = e.req.map_or(ENGINE_TID, |r| r as usize + 1);
+            if !tids.contains(&tid) {
+                tids.push(tid);
+            }
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("name", e.kind.name().into()),
+                ("cat", "serve".into()),
+                ("ph", if e.kind.is_span() { "X" } else { "i" }.into()),
+                ("ts", (e.t * 1e6).into()),
+            ];
+            if e.kind.is_span() {
+                fields.push(("dur", (e.dur * 1e6).into()));
+            } else {
+                fields.push(("s", "t".into())); // thread-scoped instant
+            }
+            fields.push(("pid", 0usize.into()));
+            fields.push(("tid", tid.into()));
+            fields.push(("args", args_json(e)));
+            events.push(Json::obj(fields));
+        }
+        // Name the tracks so Perfetto shows "engine" / "req N" lanes.
+        tids.sort_unstable();
+        for tid in tids {
+            let name = if tid == ENGINE_TID {
+                "engine".to_string()
+            } else {
+                format!("req {}", tid - 1)
+            };
+            events.push(Json::obj(vec![
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", 0usize.into()),
+                ("tid", tid.into()),
+                ("args", Json::obj(vec![("name", name.as_str().into())])),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Array(events)),
+            ("displayTimeUnit", "ms".into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::trace::{EventKind, Trace, TraceEvent};
+    use crate::util::json::Json;
+
+    fn trace() -> Trace {
+        Trace {
+            events: vec![
+                TraceEvent {
+                    t: 0.5,
+                    dur: 0.25,
+                    req: Some(2),
+                    kind: EventKind::PrefillChunk {
+                        index: 0,
+                        total: 2,
+                        offset: 0,
+                        rows: 64,
+                    },
+                },
+                TraceEvent {
+                    t: 0.75,
+                    dur: 0.0,
+                    req: Some(2),
+                    kind: EventKind::FirstToken { ttft_s: 0.25 },
+                },
+                TraceEvent {
+                    t: 0.75,
+                    dur: 0.1,
+                    req: None,
+                    kind: EventKind::DecodeStep { batch: 3, groups: vec![3] },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_export_roundtrips_as_json_with_expected_shape() {
+        let j = trace().to_chrome();
+        // Must parse back as valid JSON.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_array().unwrap();
+        // 3 events + 2 thread-name metadata records (engine + req 2).
+        assert_eq!(events.len(), 5);
+        let chunk = &events[0];
+        assert_eq!(chunk.get("name").unwrap().as_str().unwrap(), "prefill_chunk");
+        assert_eq!(chunk.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(chunk.get("ts").unwrap().as_f64().unwrap(), 0.5e6);
+        assert_eq!(chunk.get("dur").unwrap().as_f64().unwrap(), 0.25e6);
+        assert_eq!(chunk.get("tid").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            chunk.get("args").unwrap().get("rows").unwrap().as_usize().unwrap(),
+            64
+        );
+        // Instants are thread-scoped "i" marks without a dur.
+        let first = &events[1];
+        assert_eq!(first.get("ph").unwrap().as_str().unwrap(), "i");
+        assert!(first.get("dur").is_none());
+        assert_eq!(first.get("s").unwrap().as_str().unwrap(), "t");
+        // Engine-wide decode lands on tid 0.
+        assert_eq!(events[2].get("tid").unwrap().as_usize().unwrap(), 0);
+        // Metadata names both tracks.
+        let names: Vec<&str> = events[3..]
+            .iter()
+            .map(|m| m.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["engine", "req 2"]);
+    }
+}

@@ -1,0 +1,535 @@
+//! Serving-clock event tracing for the unified engine (DESIGN.md §9).
+//!
+//! The [`crate::coordinator::Scheduler`] serving loop carries an
+//! optional [`Tracer`] that records one typed [`TraceEvent`] per
+//! serving event — request enqueue/admission, the prefix-cache plan and
+//! lease, the cold-load stream, every prefill chunk with its causal
+//! offset, batched decode steps, decode stalls, and retire/abort — all
+//! timestamped on the serving [`crate::coordinator::Clock`]. Because
+//! the events are emitted from the scheduler (the single policy owner),
+//! one tracer covers every substrate: the modeled
+//! [`crate::coordinator::SimBackend`] on a virtual clock and the real
+//! [`crate::coordinator::Cluster`] on a wall clock (whose `SeedBlock`
+//! background transfers surface as the admission's cold-load span).
+//!
+//! A disabled tracer is a strict no-op: `emit` returns before touching
+//! anything, no allocation happens, and the serving loop's clock/metric
+//! behavior is identical with tracing on or off — the PR 3/4/5 serving
+//! goldens stay bit-identical either way.
+//!
+//! The finished [`Trace`] exports as JSONL ([`Trace::to_jsonl`], one
+//! event per line) and as Chrome trace-event JSON
+//! ([`Trace::to_chrome`], openable in Perfetto / `chrome://tracing`),
+//! and self-checks through the invariant validator
+//! ([`Trace::validate`]) that doubles as a correctness oracle for the
+//! serving loop.
+
+pub mod export;
+pub mod validate;
+
+pub use validate::TraceCheck;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// What happened at one serving event. Fields mirror what the scheduler
+/// knows at the emission point; durations live on the enclosing
+/// [`TraceEvent`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A request entered the workload (t = its arrival time).
+    Enqueued { prompt_tokens: usize, max_new_tokens: usize },
+    /// The request took the chain (after `queue_s` waiting).
+    Admitted { queue_s: f64 },
+    /// The prefix-cache compute-or-load plan chosen at admission:
+    /// `reuse` tokens kept of `matched` found, the planner's estimated
+    /// TTFT, and whether the serving layer applied the plan (a
+    /// payload-backed backend declines cuts it cannot seed with).
+    Plan {
+        matched_tokens: usize,
+        reuse_tokens: usize,
+        est_ttft_s: f64,
+        applied: bool,
+        loaded_blocks: usize,
+        recomputed_blocks: usize,
+    },
+    /// `blocks` cache blocks pinned for the lifetime of the prefill.
+    Lease { blocks: usize },
+    /// The reused prefix streaming onto the chain head (dur = the
+    /// modeled load seconds; on the real path these are the `SeedBlock`
+    /// background transfers).
+    ColdLoad { blocks: usize, rows: usize, pipelined: bool },
+    /// One prefill chunk event: chunk `index` of `total`, computing
+    /// `rows` prompt rows starting at causal offset `offset` (dur = the
+    /// chunk's chain occupancy).
+    PrefillChunk { index: usize, total: usize, offset: usize, rows: usize },
+    /// A prefill chunk held the chain while `waiting` decode-eligible
+    /// requests stalled (dur = the chunk's occupancy).
+    DecodeStall { waiting: usize },
+    /// The request's prefill finished; `ttft_s` is its chain-occupancy
+    /// TTFT (the sum of its chunk durations).
+    FirstToken { ttft_s: f64 },
+    /// One batched decode event advancing `batch` requests (dur = the
+    /// step seconds every rider's TPOT is charged); `groups` are the
+    /// co-executing group sizes the backend reported.
+    DecodeStep { batch: usize, groups: Vec<usize> },
+    /// The request finished and released its KV, with its per-phase
+    /// latency attribution: `e2e = queue + plan + load + compute +
+    /// decode + stall` (compute = TTFT minus the serial load charge).
+    Retire {
+        e2e_s: f64,
+        tokens_out: usize,
+        queue_s: f64,
+        plan_s: f64,
+        load_s: f64,
+        compute_s: f64,
+        decode_s: f64,
+        stall_s: f64,
+    },
+    /// The request (or, with no `req`, the whole serve) failed.
+    Abort { reason: String },
+}
+
+impl EventKind {
+    /// Stable wire name (the JSONL `ev` field / Chrome event name).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Enqueued { .. } => "enqueued",
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Plan { .. } => "plan",
+            EventKind::Lease { .. } => "lease",
+            EventKind::ColdLoad { .. } => "cold_load",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::DecodeStall { .. } => "decode_stall",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::DecodeStep { .. } => "decode_step",
+            EventKind::Retire { .. } => "retire",
+            EventKind::Abort { .. } => "abort",
+        }
+    }
+
+    /// Span events carry a meaningful duration; the rest are instants.
+    pub fn is_span(&self) -> bool {
+        matches!(
+            self,
+            EventKind::ColdLoad { .. }
+                | EventKind::PrefillChunk { .. }
+                | EventKind::DecodeStall { .. }
+                | EventKind::DecodeStep { .. }
+                | EventKind::Plan { .. }
+        )
+    }
+}
+
+/// One serving event on the serving-clock timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Event start, seconds on the serving clock.
+    pub t: f64,
+    /// Span duration in seconds (0 for instants).
+    pub dur: f64,
+    /// Request the event belongs to (None for engine-wide events such
+    /// as batched decode steps).
+    pub req: Option<u64>,
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    /// Flat JSON object (`ev`/`t`/`dur`/`req` + kind-specific fields).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> = vec![
+            ("ev".into(), self.kind.name().into()),
+            ("t".into(), self.t.into()),
+            ("dur".into(), self.dur.into()),
+        ];
+        if let Some(r) = self.req {
+            fields.push(("req".into(), Json::Num(r as f64)));
+        }
+        for (k, v) in kind_fields(&self.kind) {
+            fields.push((k.to_string(), v));
+        }
+        Json::Object(fields)
+    }
+
+    /// Parse one event back from its [`Self::to_json`] form.
+    pub fn from_json(v: &Json) -> Result<TraceEvent> {
+        let t = v.req("t")?.as_f64()?;
+        let dur = v.req("dur")?.as_f64()?;
+        let req = match v.get("req") {
+            Some(r) => Some(r.as_i64()? as u64),
+            None => None,
+        };
+        let kind = kind_from_json(v.req("ev")?.as_str()?, v)?;
+        Ok(TraceEvent { t, dur, req, kind })
+    }
+}
+
+fn kind_fields(kind: &EventKind) -> Vec<(&'static str, Json)> {
+    match kind {
+        EventKind::Enqueued { prompt_tokens, max_new_tokens } => vec![
+            ("prompt_tokens", (*prompt_tokens).into()),
+            ("max_new", (*max_new_tokens).into()),
+        ],
+        EventKind::Admitted { queue_s } => vec![("queue_s", (*queue_s).into())],
+        EventKind::Plan {
+            matched_tokens,
+            reuse_tokens,
+            est_ttft_s,
+            applied,
+            loaded_blocks,
+            recomputed_blocks,
+        } => vec![
+            ("matched", (*matched_tokens).into()),
+            ("reuse", (*reuse_tokens).into()),
+            ("est_ttft_s", (*est_ttft_s).into()),
+            ("applied", (*applied).into()),
+            ("loaded", (*loaded_blocks).into()),
+            ("recomputed", (*recomputed_blocks).into()),
+        ],
+        EventKind::Lease { blocks } => vec![("blocks", (*blocks).into())],
+        EventKind::ColdLoad { blocks, rows, pipelined } => vec![
+            ("blocks", (*blocks).into()),
+            ("rows", (*rows).into()),
+            ("pipelined", (*pipelined).into()),
+        ],
+        EventKind::PrefillChunk { index, total, offset, rows } => vec![
+            ("index", (*index).into()),
+            ("total", (*total).into()),
+            ("offset", (*offset).into()),
+            ("rows", (*rows).into()),
+        ],
+        EventKind::DecodeStall { waiting } => {
+            vec![("waiting", (*waiting).into())]
+        }
+        EventKind::FirstToken { ttft_s } => vec![("ttft_s", (*ttft_s).into())],
+        EventKind::DecodeStep { batch, groups } => vec![
+            ("batch", (*batch).into()),
+            ("groups", groups.clone().into()),
+        ],
+        EventKind::Retire {
+            e2e_s,
+            tokens_out,
+            queue_s,
+            plan_s,
+            load_s,
+            compute_s,
+            decode_s,
+            stall_s,
+        } => vec![
+            ("e2e_s", (*e2e_s).into()),
+            ("tokens_out", (*tokens_out).into()),
+            ("queue_s", (*queue_s).into()),
+            ("plan_s", (*plan_s).into()),
+            ("load_s", (*load_s).into()),
+            ("compute_s", (*compute_s).into()),
+            ("decode_s", (*decode_s).into()),
+            ("stall_s", (*stall_s).into()),
+        ],
+        EventKind::Abort { reason } => {
+            vec![("reason", reason.as_str().into())]
+        }
+    }
+}
+
+fn kind_from_json(name: &str, v: &Json) -> Result<EventKind> {
+    Ok(match name {
+        "enqueued" => EventKind::Enqueued {
+            prompt_tokens: v.req("prompt_tokens")?.as_usize()?,
+            max_new_tokens: v.req("max_new")?.as_usize()?,
+        },
+        "admitted" => {
+            EventKind::Admitted { queue_s: v.req("queue_s")?.as_f64()? }
+        }
+        "plan" => EventKind::Plan {
+            matched_tokens: v.req("matched")?.as_usize()?,
+            reuse_tokens: v.req("reuse")?.as_usize()?,
+            est_ttft_s: v.req("est_ttft_s")?.as_f64()?,
+            applied: v.req("applied")?.as_bool()?,
+            loaded_blocks: v.req("loaded")?.as_usize()?,
+            recomputed_blocks: v.req("recomputed")?.as_usize()?,
+        },
+        "lease" => EventKind::Lease { blocks: v.req("blocks")?.as_usize()? },
+        "cold_load" => EventKind::ColdLoad {
+            blocks: v.req("blocks")?.as_usize()?,
+            rows: v.req("rows")?.as_usize()?,
+            pipelined: v.req("pipelined")?.as_bool()?,
+        },
+        "prefill_chunk" => EventKind::PrefillChunk {
+            index: v.req("index")?.as_usize()?,
+            total: v.req("total")?.as_usize()?,
+            offset: v.req("offset")?.as_usize()?,
+            rows: v.req("rows")?.as_usize()?,
+        },
+        "decode_stall" => {
+            EventKind::DecodeStall { waiting: v.req("waiting")?.as_usize()? }
+        }
+        "first_token" => {
+            EventKind::FirstToken { ttft_s: v.req("ttft_s")?.as_f64()? }
+        }
+        "decode_step" => EventKind::DecodeStep {
+            batch: v.req("batch")?.as_usize()?,
+            groups: v.req("groups")?.as_usize_vec()?,
+        },
+        "retire" => EventKind::Retire {
+            e2e_s: v.req("e2e_s")?.as_f64()?,
+            tokens_out: v.req("tokens_out")?.as_usize()?,
+            queue_s: v.req("queue_s")?.as_f64()?,
+            plan_s: v.req("plan_s")?.as_f64()?,
+            load_s: v.req("load_s")?.as_f64()?,
+            compute_s: v.req("compute_s")?.as_f64()?,
+            decode_s: v.req("decode_s")?.as_f64()?,
+            stall_s: v.req("stall_s")?.as_f64()?,
+        },
+        "abort" => EventKind::Abort {
+            reason: v.req("reason")?.as_str()?.to_string(),
+        },
+        other => {
+            return Err(Error::Json(format!("unknown trace event `{other}`")))
+        }
+    })
+}
+
+/// The serving loop's event recorder. Disabled (the default) it is a
+/// strict no-op — `emit` returns immediately, nothing allocates — so a
+/// traced and an untraced serve are bit-identical.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    on: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl Tracer {
+    /// The no-op tracer (what a fresh scheduler carries).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// A recording tracer.
+    pub fn enabled() -> Self {
+        Self { on: true, events: Vec::new() }
+    }
+
+    /// Whether events are being recorded. Guard any emission whose
+    /// argument construction is non-trivial (e.g. cloning a vec).
+    pub fn is_on(&self) -> bool {
+        self.on
+    }
+
+    /// Record one event (no-op when disabled).
+    pub fn emit(&mut self, t: f64, dur: f64, req: Option<u64>, kind: EventKind) {
+        if !self.on {
+            return;
+        }
+        self.events.push(TraceEvent { t, dur, req, kind });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Drain the recorded events into a [`Trace`], leaving the tracer
+    /// recording (or not) as before.
+    pub fn take(&mut self) -> Trace {
+        Trace { events: std::mem::take(&mut self.events) }
+    }
+}
+
+/// A finished serving trace: the recorded events in emission order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// One JSON object per line (the `--trace-out` file format).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a [`Self::to_jsonl`] file back (blank lines ignored).
+    pub fn parse_jsonl(text: &str) -> Result<Trace> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).map_err(|e| {
+                Error::Json(format!("trace line {}: {e}", i + 1))
+            })?;
+            events.push(TraceEvent::from_json(&v).map_err(|e| {
+                Error::Json(format!("trace line {}: {e}", i + 1))
+            })?);
+        }
+        Ok(Trace { events })
+    }
+
+    /// Events carrying the given request id, in emission order.
+    pub fn for_request(&self, req: u64) -> Vec<&TraceEvent> {
+        self.events.iter().filter(|e| e.req == Some(req)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                t: 0.0,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::Enqueued {
+                    prompt_tokens: 128,
+                    max_new_tokens: 8,
+                },
+            },
+            TraceEvent {
+                t: 0.5,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::Admitted { queue_s: 0.5 },
+            },
+            TraceEvent {
+                t: 0.5,
+                dur: 0.25,
+                req: Some(0),
+                kind: EventKind::PrefillChunk {
+                    index: 0,
+                    total: 1,
+                    offset: 0,
+                    rows: 128,
+                },
+            },
+            TraceEvent {
+                t: 0.75,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::FirstToken { ttft_s: 0.25 },
+            },
+            TraceEvent {
+                t: 0.75,
+                dur: 0.125,
+                req: None,
+                kind: EventKind::DecodeStep { batch: 1, groups: vec![1] },
+            },
+            TraceEvent {
+                t: 0.875,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::Retire {
+                    e2e_s: 0.875,
+                    tokens_out: 2,
+                    queue_s: 0.5,
+                    plan_s: 0.0,
+                    load_s: 0.0,
+                    compute_s: 0.25,
+                    decode_s: 0.125,
+                    stall_s: 0.0,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        t.emit(0.0, 0.0, None, EventKind::DecodeStall { waiting: 1 });
+        assert!(!t.is_on());
+        assert!(t.is_empty());
+        assert!(t.take().events.is_empty());
+    }
+
+    #[test]
+    fn enabled_tracer_records_and_drains() {
+        let mut t = Tracer::enabled();
+        t.emit(1.0, 0.5, Some(3), EventKind::DecodeStall { waiting: 2 });
+        assert_eq!(t.len(), 1);
+        let trace = t.take();
+        assert_eq!(trace.events.len(), 1);
+        assert!(t.is_empty(), "take drains");
+        assert!(t.is_on(), "take keeps the tracer recording");
+        assert_eq!(trace.for_request(3).len(), 1);
+        assert!(trace.for_request(4).is_empty());
+    }
+
+    #[test]
+    fn jsonl_roundtrips_every_event_kind() {
+        let mut events = sample_events();
+        // Cover the kinds the sample flow doesn't hit.
+        events.push(TraceEvent {
+            t: 1.0,
+            dur: 0.01,
+            req: Some(1),
+            kind: EventKind::Plan {
+                matched_tokens: 96,
+                reuse_tokens: 64,
+                est_ttft_s: 0.2,
+                applied: true,
+                loaded_blocks: 2,
+                recomputed_blocks: 1,
+            },
+        });
+        events.push(TraceEvent {
+            t: 1.0,
+            dur: 0.0,
+            req: Some(1),
+            kind: EventKind::Lease { blocks: 2 },
+        });
+        events.push(TraceEvent {
+            t: 1.0,
+            dur: 0.05,
+            req: Some(1),
+            kind: EventKind::ColdLoad { blocks: 2, rows: 64, pipelined: true },
+        });
+        events.push(TraceEvent {
+            t: 1.2,
+            dur: 0.25,
+            req: None,
+            kind: EventKind::DecodeStall { waiting: 3 },
+        });
+        events.push(TraceEvent {
+            t: 1.5,
+            dur: 0.0,
+            req: Some(1),
+            kind: EventKind::Abort { reason: "worker \"gone\"".into() },
+        });
+        let trace = Trace { events };
+        let text = trace.to_jsonl();
+        let back = Trace::parse_jsonl(&text).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines_with_line_numbers() {
+        let err = Trace::parse_jsonl("{\"ev\":\"retire\"}\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+        let err = Trace::parse_jsonl(
+            "{\"ev\":\"enqueued\",\"t\":0,\"dur\":0,\"prompt_tokens\":1,\
+             \"max_new\":1}\nnot json\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = Trace::parse_jsonl(
+            "{\"ev\":\"warp_drive\",\"t\":0,\"dur\":0}\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("warp_drive"), "{err}");
+    }
+
+    #[test]
+    fn blank_lines_are_ignored() {
+        let trace = Trace { events: sample_events() };
+        let text = format!("\n{}\n\n", trace.to_jsonl());
+        assert_eq!(Trace::parse_jsonl(&text).unwrap(), trace);
+    }
+}

@@ -1,0 +1,466 @@
+//! Trace invariant checking: a [`Trace`] is a claim about what the
+//! serving loop did, and this module audits the claim — which makes the
+//! validator double as a correctness oracle for the loop itself
+//! (`kvr trace --validate`, the randomized serving tests).
+//!
+//! Checked invariants:
+//!
+//! * every timestamp and duration is finite and non-negative;
+//! * engine-timeline events (everything but `enqueued`, whose `t` is
+//!   the request's arrival) have non-decreasing start times in emission
+//!   order — the serving clock never runs backwards;
+//! * per request, the lifecycle is well-formed: at most one
+//!   enqueue/admit/first-token/retire, chunk indices contiguous from 0
+//!   with a consistent total and non-decreasing causal offsets, and the
+//!   lifecycle stages in time order;
+//! * trace-derived TTFT — the sum of a request's prefill-chunk
+//!   durations — matches its `first_token` event;
+//! * on a clean serve (no abort events), every admitted request
+//!   retires; a retire always has a first token.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::trace::{EventKind, Trace};
+use crate::util::stats::{fmt_time, Summary};
+
+/// What a validated trace contained (the `--validate` report line).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceCheck {
+    pub events: usize,
+    pub requests: usize,
+    pub admitted: usize,
+    pub retired: usize,
+    pub aborted: usize,
+    pub chunk_events: usize,
+    pub decode_events: usize,
+    pub stall_events: usize,
+    /// Last event end on the serving clock (s).
+    pub span_s: f64,
+}
+
+#[derive(Default)]
+struct ReqState {
+    enqueued: Option<f64>,
+    admitted: Option<f64>,
+    chunks: Vec<(usize, usize, usize, f64, f64)>, // (index, total, offset, t, dur)
+    first_token: Option<(f64, f64)>,              // (t, ttft_s)
+    retired: Option<f64>,
+    aborted: bool,
+}
+
+fn fail(req: u64, msg: String) -> Error {
+    Error::Coordinator(format!("trace invariant (req {req}): {msg}"))
+}
+
+impl Trace {
+    /// Audit the invariants above; returns the trace census on success.
+    pub fn validate(&self) -> Result<TraceCheck> {
+        let mut check = TraceCheck { events: self.events.len(), ..Default::default() };
+        let mut last_engine_t = f64::NEG_INFINITY;
+        let mut last_enqueue_t = f64::NEG_INFINITY;
+        let mut reqs: BTreeMap<u64, ReqState> = BTreeMap::new();
+        let mut any_abort = false;
+
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.t.is_finite() || e.t < 0.0 || !e.dur.is_finite() || e.dur < 0.0
+            {
+                return Err(Error::Coordinator(format!(
+                    "trace invariant: event {i} ({}) has a bad time \
+                     (t={}, dur={})",
+                    e.kind.name(),
+                    e.t,
+                    e.dur
+                )));
+            }
+            if matches!(e.kind, EventKind::Enqueued { .. }) {
+                // Enqueue timestamps are arrivals, sorted by the
+                // scheduler's admission order.
+                if e.t < last_enqueue_t {
+                    return Err(Error::Coordinator(format!(
+                        "trace invariant: enqueue timestamps regress at \
+                         event {i} ({} < {last_enqueue_t})",
+                        e.t
+                    )));
+                }
+                last_enqueue_t = e.t;
+            } else {
+                if e.t < last_engine_t {
+                    return Err(Error::Coordinator(format!(
+                        "trace invariant: serving clock regresses at event \
+                         {i} ({}: {} < {last_engine_t})",
+                        e.kind.name(),
+                        e.t
+                    )));
+                }
+                last_engine_t = e.t;
+            }
+            check.span_s = check.span_s.max(e.t + e.dur);
+
+            match &e.kind {
+                EventKind::PrefillChunk { .. } => check.chunk_events += 1,
+                EventKind::DecodeStep { .. } => check.decode_events += 1,
+                EventKind::DecodeStall { .. } => check.stall_events += 1,
+                EventKind::Abort { .. } => {
+                    any_abort = true;
+                    check.aborted += 1;
+                }
+                _ => {}
+            }
+
+            let Some(id) = e.req else { continue };
+            let st = reqs.entry(id).or_default();
+            match &e.kind {
+                EventKind::Enqueued { .. } => {
+                    if st.enqueued.replace(e.t).is_some() {
+                        return Err(fail(id, "enqueued twice".into()));
+                    }
+                }
+                EventKind::Admitted { .. } => {
+                    if st.admitted.replace(e.t).is_some() {
+                        return Err(fail(id, "admitted twice".into()));
+                    }
+                    if let Some(enq) = st.enqueued {
+                        if e.t < enq {
+                            return Err(fail(
+                                id,
+                                format!("admitted at {} before arrival {enq}", e.t),
+                            ));
+                        }
+                    }
+                }
+                EventKind::PrefillChunk { index, total, offset, rows: _ } => {
+                    let adm = st.admitted.ok_or_else(|| {
+                        fail(id, "prefill chunk before admission".into())
+                    })?;
+                    if e.t < adm {
+                        return Err(fail(
+                            id,
+                            format!("chunk at {} before admission {adm}", e.t),
+                        ));
+                    }
+                    if *index != st.chunks.len() {
+                        return Err(fail(
+                            id,
+                            format!(
+                                "chunk index {index} out of order (expected {})",
+                                st.chunks.len()
+                            ),
+                        ));
+                    }
+                    if let Some(&(_, t0, off0, _, _)) = st.chunks.last() {
+                        if *total != t0 {
+                            return Err(fail(
+                                id,
+                                format!("chunk total changed {t0} -> {total}"),
+                            ));
+                        }
+                        if *offset < off0 {
+                            return Err(fail(
+                                id,
+                                format!("causal offset regresses {off0} -> {offset}"),
+                            ));
+                        }
+                    }
+                    st.chunks.push((*index, *total, *offset, e.t, e.dur));
+                }
+                EventKind::FirstToken { ttft_s } => {
+                    if st.first_token.replace((e.t, *ttft_s)).is_some() {
+                        return Err(fail(id, "two first tokens".into()));
+                    }
+                    if st.chunks.is_empty() {
+                        return Err(fail(id, "first token without a prefill".into()));
+                    }
+                }
+                EventKind::Retire { .. } => {
+                    if st.retired.replace(e.t).is_some() {
+                        return Err(fail(id, "retired twice".into()));
+                    }
+                    if st.first_token.is_none() {
+                        return Err(fail(id, "retired without a first token".into()));
+                    }
+                }
+                EventKind::Abort { .. } => st.aborted = true,
+                _ => {}
+            }
+        }
+
+        check.requests = reqs.len();
+        for (&id, st) in &reqs {
+            if st.admitted.is_some() {
+                check.admitted += 1;
+            }
+            if st.retired.is_some() {
+                check.retired += 1;
+            }
+            if let Some((ft_t, ttft)) = st.first_token {
+                let total = st.chunks[0].1;
+                if st.chunks.len() != total {
+                    return Err(fail(
+                        id,
+                        format!(
+                            "finished with {} of {total} chunk events",
+                            st.chunks.len()
+                        ),
+                    ));
+                }
+                let last = st.chunks.last().unwrap();
+                if ft_t + 1e-12 < last.3 {
+                    return Err(fail(
+                        id,
+                        format!("first token at {ft_t} before last chunk {}", last.3),
+                    ));
+                }
+                // Trace-derived TTFT: the chunk durations sum to the
+                // job's chain occupancy — exactly what the backend
+                // reported as TTFT (same values, same addition order).
+                let derived: f64 = st.chunks.iter().map(|c| c.4).sum();
+                let tol = 1e-9 * ttft.abs().max(1e-12);
+                if (derived - ttft).abs() > tol {
+                    return Err(fail(
+                        id,
+                        format!(
+                            "trace-derived TTFT {derived} != first-token TTFT {ttft}"
+                        ),
+                    ));
+                }
+            }
+            // A clean serve settles everything it admitted; after an
+            // abort the loop unwinds, so in-flight requests legitimately
+            // stop mid-lifecycle.
+            if !any_abort
+                && st.admitted.is_some()
+                && st.retired.is_none()
+                && !st.aborted
+            {
+                return Err(fail(id, "admitted but never retired".into()));
+            }
+        }
+        Ok(check)
+    }
+
+    /// The acceptance oracle: retire-ordered trace TTFTs must equal the
+    /// `ServeMetrics` TTFT samples *exactly* (both are copies of the
+    /// same backend-reported value, so bitwise equality is required).
+    pub fn check_ttfts(&self, expect: &[f64]) -> Result<()> {
+        let mut by_req: BTreeMap<u64, f64> = BTreeMap::new();
+        for e in &self.events {
+            if let EventKind::FirstToken { ttft_s } = e.kind {
+                if let Some(id) = e.req {
+                    by_req.insert(id, ttft_s);
+                }
+            }
+        }
+        let retire_order: Vec<u64> = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Retire { .. }))
+            .filter_map(|e| e.req)
+            .collect();
+        if retire_order.len() != expect.len() {
+            return Err(Error::Coordinator(format!(
+                "trace has {} retirements, metrics recorded {}",
+                retire_order.len(),
+                expect.len()
+            )));
+        }
+        for (i, id) in retire_order.iter().enumerate() {
+            let got = by_req.get(id).copied().ok_or_else(|| {
+                fail(*id, "retired without a first token".into())
+            })?;
+            if got != expect[i] {
+                return Err(fail(
+                    *id,
+                    format!("trace TTFT {got} != metrics TTFT {}", expect[i]),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Human summary for `kvr trace` (event census + TTFT tails).
+    pub fn summarize(&self) -> String {
+        let mut out = String::new();
+        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let mut ttfts = Vec::new();
+        let mut decode_s = 0.0;
+        let mut stall_s = 0.0;
+        let mut span = 0.0f64;
+        for e in &self.events {
+            *counts.entry(e.kind.name()).or_default() += 1;
+            span = span.max(e.t + e.dur);
+            match e.kind {
+                EventKind::FirstToken { ttft_s } => ttfts.push(ttft_s),
+                EventKind::DecodeStep { .. } => decode_s += e.dur,
+                EventKind::DecodeStall { .. } => stall_s += e.dur,
+                _ => {}
+            }
+        }
+        out.push_str(&format!(
+            "{} events over {}\n",
+            self.events.len(),
+            fmt_time(span)
+        ));
+        for (name, n) in &counts {
+            out.push_str(&format!("  {name:<14} {n}\n"));
+        }
+        if !ttfts.is_empty() {
+            let s = Summary::of(&ttfts);
+            out.push_str(&format!(
+                "TTFT (trace-derived)  mean {} p50 {} p95 {} p99 {} max {}\n",
+                fmt_time(s.mean),
+                fmt_time(s.p50),
+                fmt_time(s.p95),
+                fmt_time(s.p99),
+                fmt_time(s.max)
+            ));
+        }
+        out.push_str(&format!(
+            "decode busy {}   decode stalled {}\n",
+            fmt_time(decode_s),
+            fmt_time(stall_s)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEvent;
+
+    fn ev(t: f64, dur: f64, req: Option<u64>, kind: EventKind) -> TraceEvent {
+        TraceEvent { t, dur, req, kind }
+    }
+
+    fn clean_trace() -> Trace {
+        Trace {
+            events: vec![
+                ev(0.0, 0.0, Some(0), EventKind::Enqueued {
+                    prompt_tokens: 64,
+                    max_new_tokens: 2,
+                }),
+                ev(0.0, 0.0, Some(0), EventKind::Admitted { queue_s: 0.0 }),
+                ev(0.0, 0.5, Some(0), EventKind::PrefillChunk {
+                    index: 0,
+                    total: 2,
+                    offset: 0,
+                    rows: 32,
+                }),
+                ev(0.5, 0.25, Some(0), EventKind::PrefillChunk {
+                    index: 1,
+                    total: 2,
+                    offset: 32,
+                    rows: 32,
+                }),
+                ev(0.75, 0.0, Some(0), EventKind::FirstToken { ttft_s: 0.75 }),
+                ev(0.75, 0.1, None, EventKind::DecodeStep {
+                    batch: 1,
+                    groups: vec![1],
+                }),
+                ev(0.85, 0.0, Some(0), EventKind::Retire {
+                    e2e_s: 0.85,
+                    tokens_out: 2,
+                    queue_s: 0.0,
+                    plan_s: 0.0,
+                    load_s: 0.0,
+                    compute_s: 0.75,
+                    decode_s: 0.1,
+                    stall_s: 0.0,
+                }),
+            ],
+        }
+    }
+
+    #[test]
+    fn clean_trace_validates_with_census() {
+        let check = clean_trace().validate().unwrap();
+        assert_eq!(check.requests, 1);
+        assert_eq!(check.admitted, 1);
+        assert_eq!(check.retired, 1);
+        assert_eq!(check.aborted, 0);
+        assert_eq!(check.chunk_events, 2);
+        assert_eq!(check.decode_events, 1);
+        assert!((check.span_s - 0.85).abs() < 1e-12);
+        clean_trace().check_ttfts(&[0.75]).unwrap();
+        let s = clean_trace().summarize();
+        assert!(s.contains("prefill_chunk  2"), "{s}");
+        assert!(s.contains("TTFT"), "{s}");
+    }
+
+    #[test]
+    fn clock_regression_is_rejected() {
+        let mut t = clean_trace();
+        t.events[3].t = -0.1; // negative time
+        assert!(t.validate().is_err());
+        let mut t = clean_trace();
+        // Decode step jumps backwards past the chunk events.
+        t.events[5].t = 0.1;
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("regresses"), "{err}");
+    }
+
+    #[test]
+    fn missing_retire_fails_unless_aborted() {
+        let mut t = clean_trace();
+        t.events.pop(); // drop the retire
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("never retired"), "{err}");
+        // With an abort in the trace the serve unwound: incomplete
+        // lifecycles are expected.
+        t.events.push(ev(0.9, 0.0, None, EventKind::Abort {
+            reason: "decode failed".into(),
+        }));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn chunk_index_gap_and_total_drift_are_rejected() {
+        let mut t = clean_trace();
+        if let EventKind::PrefillChunk { index, .. } = &mut t.events[3].kind {
+            *index = 2;
+        }
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("out of order"), "{err}");
+        let mut t = clean_trace();
+        if let EventKind::PrefillChunk { total, .. } = &mut t.events[3].kind {
+            *total = 3;
+        }
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("total changed"), "{err}");
+        let mut t = clean_trace();
+        if let EventKind::PrefillChunk { offset, .. } = &mut t.events[3].kind {
+            *offset = 16;
+        }
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("offset regresses"), "{err}");
+    }
+
+    #[test]
+    fn ttft_mismatch_is_rejected() {
+        let mut t = clean_trace();
+        if let EventKind::FirstToken { ttft_s } = &mut t.events[4].kind {
+            *ttft_s = 0.8;
+        }
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("trace-derived TTFT"), "{err}");
+        // And the metrics oracle demands bitwise equality.
+        let err = clean_trace().check_ttfts(&[0.7500001]).unwrap_err();
+        assert!(err.to_string().contains("metrics TTFT"), "{err}");
+        let err = clean_trace().check_ttfts(&[]).unwrap_err();
+        assert!(err.to_string().contains("retirements"), "{err}");
+    }
+
+    #[test]
+    fn lifecycle_duplicates_are_rejected() {
+        let mut t = clean_trace();
+        t.events.insert(2, t.events[1].clone()); // second admission
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("admitted twice"), "{err}");
+        let mut t = clean_trace();
+        let retire = t.events.last().unwrap().clone();
+        t.events.push(retire);
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("retired twice"), "{err}");
+    }
+}

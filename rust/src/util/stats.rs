@@ -16,6 +16,7 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -36,6 +37,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 50.0),
             p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
+            p999: percentile_sorted(&sorted, 99.9),
         }
     }
 }
@@ -52,6 +54,150 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Smallest value the log-bucket [`Histogram`] resolves (1 ns); smaller
+/// positive samples land in bucket 0.
+const HIST_MIN: f64 = 1e-9;
+/// Geometric bucket growth: each bucket spans 2% of value, bounding the
+/// relative quantile error to ±1%.
+const HIST_GAMMA: f64 = 1.02;
+/// Bucket count covering `HIST_MIN * HIST_GAMMA^N` up to ~10^6 seconds.
+const HIST_BUCKETS: usize = 1744;
+
+/// Bounded log-bucket latency histogram: `record` is O(1) and the whole
+/// structure is ~14 KB regardless of sample count, so 10^5–10^6-request
+/// serving runs get p99/p99.9 tails without retaining every sample.
+///
+/// Buckets are geometric with ratio [`HIST_GAMMA`] starting at
+/// [`HIST_MIN`] seconds; a quantile is answered as the geometric
+/// midpoint of its bucket, clamped to the observed `[min, max]`, so the
+/// relative error is bounded by half a bucket (~1%) and a single-sample
+/// histogram reports that sample exactly. Non-finite samples are
+/// ignored; samples `<= 0` are counted in a dedicated zero bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Lazily allocated on first record (an empty histogram is ~40 B).
+    counts: Vec<u64>,
+    zeros: u64,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            counts: Vec::new(),
+            zeros: 0,
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(x: f64) -> usize {
+        let idx = ((x / HIST_MIN).ln() / HIST_GAMMA.ln()).floor();
+        (idx.max(0.0) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one sample (seconds). NaN/inf are dropped; `x <= 0` counts
+    /// in the zero bucket.
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        if x <= 0.0 {
+            self.zeros += 1;
+        } else {
+            self.counts[Self::bucket(x)] += 1;
+        }
+        self.total += 1;
+        self.sum += x.max(0.0);
+        self.min = self.min.min(x.max(0.0));
+        self.max = self.max.max(x.max(0.0));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum / self.total as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.max
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]` (0 when empty): the
+    /// geometric midpoint of the bucket holding the `ceil(q * n)`-th
+    /// sample, clamped to the observed range.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64)
+            .clamp(1, self.total);
+        if rank <= self.zeros {
+            return 0.0;
+        }
+        let mut cum = self.zeros;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let mid = HIST_MIN * HIST_GAMMA.powf(i as f64 + 0.5);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one (shard-and-merge telemetry).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.zeros += other.zeros;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Measurement loop: warmup iterations, then timed iterations; returns
@@ -140,6 +286,41 @@ mod tests {
     #[test]
     fn percentile_single_element() {
         assert_eq!(percentile_sorted(&[3.5], 99.0), 3.5);
+        // Every percentile of a one-sample set is that sample, including
+        // the extremes and out-of-range inputs (clamped).
+        assert_eq!(percentile_sorted(&[3.5], 0.0), 3.5);
+        assert_eq!(percentile_sorted(&[3.5], 100.0), 3.5);
+        assert_eq!(percentile_sorted(&[3.5], 99.9), 3.5);
+        assert_eq!(percentile_sorted(&[3.5], -5.0), 3.5);
+        assert_eq!(percentile_sorted(&[3.5], 250.0), 3.5);
+    }
+
+    #[test]
+    fn summary_single_sample_percentiles_collapse() {
+        let s = Summary::of(&[0.25]);
+        assert_eq!(s.n, 1);
+        assert_eq!((s.min, s.max), (0.25, 0.25));
+        assert_eq!((s.p50, s.p95), (0.25, 0.25));
+        assert_eq!((s.p99, s.p999), (0.25, 0.25));
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn summary_tail_percentiles_on_known_distribution() {
+        // 0..=1000 uniformly: linear interpolation puts p99 at 990 and
+        // p99.9 at 999 exactly.
+        let xs: Vec<f64> = (0..=1000).map(|x| x as f64).collect();
+        let s = Summary::of(&xs);
+        assert!((s.p99 - 990.0).abs() < 1e-9, "{}", s.p99);
+        assert!((s.p999 - 999.0).abs() < 1e-9, "{}", s.p999);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 1000.0);
+        // A heavy outlier moves p99.9 but barely p50.
+        let mut xs = vec![1.0; 999];
+        xs.push(1000.0);
+        let s = Summary::of(&xs);
+        assert_eq!(s.p50, 1.0);
+        assert!(s.p999 > 1.0, "{}", s.p999);
     }
 
     #[test]
@@ -157,6 +338,84 @@ mod tests {
         let samples = b.run(|| count += 1);
         assert_eq!(samples.len(), 5);
         assert_eq!(count, 7);
+    }
+
+    #[test]
+    fn histogram_empty_and_single_sample() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!((h.min(), h.max()), (0.0, 0.0));
+        // One sample: every quantile clamps to it exactly.
+        let mut h = Histogram::new();
+        h.record(0.125);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.0), 0.125);
+        assert_eq!(h.quantile(0.5), 0.125);
+        assert_eq!(h.quantile(0.999), 0.125);
+        assert_eq!(h.mean(), 0.125);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_error() {
+        // Uniform 1ms..1s: log-bucket quantiles must sit within ~2% of
+        // the exact percentile (one bucket of slack).
+        let mut h = Histogram::new();
+        let mut xs = Vec::new();
+        for i in 0..10_000 {
+            let x = 1e-3 + (i as f64 / 9_999.0) * (1.0 - 1e-3);
+            h.record(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &(q, pct) in &[(0.5, 50.0), (0.95, 95.0), (0.99, 99.0), (0.999, 99.9)]
+        {
+            let exact = percentile_sorted(&xs, pct);
+            let est = h.quantile(q);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.025, "q{q}: est {est} vs exact {exact} (rel {rel})");
+        }
+        assert!((h.mean() - xs.iter().sum::<f64>() / 1e4).abs() < 1e-12);
+        assert_eq!(h.min(), xs[0]);
+        assert_eq!(h.max(), xs[9_999]);
+    }
+
+    #[test]
+    fn histogram_zero_and_nonfinite_samples() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-1.0); // clamped into the zero bucket
+        h.record(f64::NAN); // dropped
+        h.record(f64::INFINITY); // dropped
+        h.record(2.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.1), 0.0);
+        assert_eq!(h.quantile(1.0), 2.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 2.0);
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 0..1000 {
+            let x = 1e-4 * (1.0 + i as f64);
+            if i % 2 == 0 { a.record(x) } else { b.record(x) };
+            all.record(x);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), all.count());
+        assert_eq!(merged.quantile(0.99), all.quantile(0.99));
+        assert_eq!(merged.min(), all.min());
+        assert_eq!(merged.max(), all.max());
+        // Merging into an empty histogram copies the other side.
+        let mut empty = Histogram::new();
+        empty.merge(&all);
+        assert_eq!(empty.quantile(0.5), all.quantile(0.5));
     }
 
     #[test]

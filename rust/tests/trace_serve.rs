@@ -1,0 +1,302 @@
+//! Serving-trace integration tests (DESIGN.md §9): the golden event
+//! sequence of a deterministic sim serve, randomized invariant audits
+//! over the no-cache and prefix-cache paths, the disabled-tracer
+//! strict-no-op guarantee, and the JSONL / Chrome export round trips.
+
+use kvr::config::{hardware_by_name, model_by_name, HardwareConfig, ModelConfig};
+use kvr::coordinator::{
+    ByteTokenizer, GenRequest, GenResponse, Scheduler, SchedulerConfig,
+    ServeMetrics, SimBackend,
+};
+use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
+use kvr::sim::cost::CostModel;
+use kvr::trace::{EventKind, Trace};
+use kvr::util::json::Json;
+use kvr::util::rng::Rng;
+
+fn parts() -> (ModelConfig, HardwareConfig) {
+    (
+        model_by_name("llama7b").unwrap(),
+        hardware_by_name("a100-300gbps").unwrap(),
+    )
+}
+
+fn sched(decode_batch: usize, prefill_chunk: usize) -> Scheduler {
+    Scheduler::new(SchedulerConfig {
+        max_active: usize::MAX,
+        decode_batch,
+        prefill_chunk,
+        eos_token: ByteTokenizer::EOS,
+        ..SchedulerConfig::default()
+    })
+}
+
+fn cache_cfg() -> PrefixCacheConfig {
+    PrefixCacheConfig {
+        block_tokens: 256,
+        hot_capacity_tokens: 64 * 256,
+        cold_capacity_tokens: 256 * 256,
+        cold_load_bw: 300e9,
+        cold_load_latency: 1e-4,
+        ..PrefixCacheConfig::default()
+    }
+}
+
+/// Poisson arrivals over prompts sharing a `frac` common prefix.
+fn poisson_workload(
+    rng: &mut Rng, n: usize, prompt_len: usize, frac: f64, rate: f64,
+    max_new: usize,
+) -> Vec<GenRequest> {
+    let shared = (prompt_len as f64 * frac) as usize;
+    let mut arrival = 0.0;
+    (0..n as u64)
+        .map(|id| {
+            arrival += rng.exp(rate);
+            let mut tokens: Vec<i32> = (0..shared as i32).collect();
+            tokens.extend(
+                (0..(prompt_len - shared) as i32).map(|i| i * 31 + 1 + id as i32),
+            );
+            GenRequest { id, tokens, max_new_tokens: max_new, arrival }
+        })
+        .collect()
+}
+
+#[test]
+fn golden_trace_of_a_deterministic_two_request_serve() {
+    // Two simultaneous 64-token prompts, chunked in two, two new tokens
+    // each, on the virtual clock: the serving loop's event order is
+    // fully determined, so the trace is an exact golden. Any change to
+    // admission/chunk/decode interleaving shows up here first.
+    let (model, hw) = parts();
+    let mut backend = SimBackend::new(model, hw, 4);
+    let reqs: Vec<GenRequest> = (0..2u64)
+        .map(|id| GenRequest {
+            id,
+            tokens: (0..64).map(|i| i + id as i32).collect(),
+            max_new_tokens: 2,
+            arrival: 0.0,
+        })
+        .collect();
+    let mut s = sched(8, 32).with_tracing();
+    let (resp, m) = s.serve(&mut backend, reqs).unwrap();
+    assert_eq!(resp.len(), 2);
+    let trace = s.take_trace();
+
+    let got: Vec<(&str, Option<u64>)> =
+        trace.events.iter().map(|e| (e.kind.name(), e.req)).collect();
+    let want: Vec<(&str, Option<u64>)> = vec![
+        ("enqueued", Some(0)),
+        ("enqueued", Some(1)),
+        ("admitted", Some(0)),
+        ("prefill_chunk", Some(0)),
+        ("prefill_chunk", Some(0)),
+        ("first_token", Some(0)),
+        ("admitted", Some(1)),
+        ("prefill_chunk", Some(1)),
+        ("decode_stall", None), // r1's chunk holds the chain over r0
+        ("decode_step", None),  // between-chunks decode advances r0
+        ("retire", Some(0)),
+        ("prefill_chunk", Some(1)),
+        ("first_token", Some(1)),
+        ("decode_step", None),
+        ("retire", Some(1)),
+    ];
+    assert_eq!(got, want);
+
+    // Chunk geometry: two 32-row chunks per request, causal offsets
+    // advancing.
+    let chunks: Vec<(u64, usize, usize, usize, usize)> = trace
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::PrefillChunk { index, total, offset, rows } => {
+                Some((e.req.unwrap(), *index, *total, *offset, *rows))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        chunks,
+        vec![
+            (0, 0, 2, 0, 32),
+            (0, 1, 2, 32, 32),
+            (1, 0, 2, 0, 32),
+            (1, 1, 2, 32, 32),
+        ]
+    );
+
+    // The invariant auditor agrees, and the trace-side TTFTs are the
+    // metrics TTFTs bit for bit (the acceptance oracle).
+    let check = trace.validate().unwrap();
+    assert_eq!(check.requests, 2);
+    assert_eq!(check.admitted, 2);
+    assert_eq!(check.retired, 2);
+    assert_eq!(check.aborted, 0);
+    assert_eq!(check.chunk_events, 4);
+    trace.check_ttfts(&m.ttfts).unwrap();
+
+    // Every retire's phase attribution sums back to its E2E.
+    for e in &trace.events {
+        if let EventKind::Retire {
+            e2e_s,
+            queue_s,
+            plan_s,
+            load_s,
+            compute_s,
+            decode_s,
+            stall_s,
+            ..
+        } = &e.kind
+        {
+            let total =
+                queue_s + plan_s + load_s + compute_s + decode_s + stall_s;
+            assert!(
+                (total - e2e_s).abs() <= 1e-9 * e2e_s.max(1.0),
+                "phases {total} != e2e {e2e_s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn randomized_serves_validate_and_match_metrics_ttfts() {
+    // The validator as a correctness oracle for the loop itself: across
+    // random Poisson workloads, chunk sizes, and both cache modes, the
+    // emitted trace must satisfy every invariant and reproduce the
+    // metrics TTFTs exactly.
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed);
+        let n = 4 + (seed as usize % 3) * 2;
+        let prompt_len = 1024 + 512 * (seed as usize % 2);
+        let chunk = [0usize, 256, 1024, 333][seed as usize % 4];
+        let reqs = poisson_workload(&mut rng, n, prompt_len, 0.5, 2.0, 6);
+
+        // No-cache path.
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let mut s = sched(4, chunk).with_tracing();
+        let (_, m) = s.serve(&mut backend, reqs.clone()).unwrap();
+        let trace = s.take_trace();
+        let check = trace.validate().unwrap();
+        assert_eq!(check.retired, n, "seed {seed}");
+        assert_eq!(check.aborted, 0);
+        trace.check_ttfts(&m.ttfts).unwrap();
+
+        // Prefix-cache path (hybrid compute-or-load planning, leases,
+        // pipelined cold loads).
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let mut s = sched(4, chunk)
+            .with_prefix_cache(PrefixCache::new(cache_cfg()), cm.clone())
+            .with_tracing();
+        let (_, m) = s.serve(&mut backend, reqs).unwrap();
+        let trace = s.take_trace();
+        trace.validate().unwrap();
+        trace.check_ttfts(&m.ttfts).unwrap();
+        // Every admission planned...
+        let plans = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Plan { .. }))
+            .count();
+        assert_eq!(plans, n, "seed {seed}: one plan event per admission");
+        // ...and applied reuse pins a lease.
+        if m.reused_tokens > 0 {
+            assert!(
+                trace
+                    .events
+                    .iter()
+                    .any(|e| matches!(e.kind, EventKind::Lease { .. })),
+                "seed {seed}: reuse without a lease event"
+            );
+        }
+    }
+}
+
+#[test]
+fn tracing_is_a_strict_noop_on_serving_behavior() {
+    // The PR 3/4/5 goldens must stay bit-identical with tracing on: the
+    // same workload served traced and untraced produces bitwise-equal
+    // responses and metrics.
+    let (model, hw) = parts();
+    let mut rng = Rng::new(7);
+    let reqs = poisson_workload(&mut rng, 6, 2048, 0.5, 2.0, 8);
+    let cm = CostModel::new(model.clone(), hw.clone());
+
+    let run = |traced: bool| -> (Vec<GenResponse>, ServeMetrics, Trace) {
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let mut s = sched(4, 256)
+            .with_prefix_cache(PrefixCache::new(cache_cfg()), cm.clone());
+        if traced {
+            s.enable_tracing();
+        }
+        let (resp, m) = s.serve(&mut backend, reqs.clone()).unwrap();
+        let trace = s.take_trace();
+        (resp, m, trace)
+    };
+    let (r_off, m_off, t_off) = run(false);
+    let (r_on, m_on, t_on) = run(true);
+
+    assert!(t_off.events.is_empty(), "disabled tracer records nothing");
+    assert!(!t_on.events.is_empty(), "enabled tracer records the serve");
+
+    // Bitwise equality — no tolerance.
+    assert_eq!(m_off.ttfts, m_on.ttfts);
+    assert_eq!(m_off.tpots, m_on.tpots);
+    assert_eq!(m_off.e2es, m_on.e2es);
+    assert_eq!(m_off.queue_waits, m_on.queue_waits);
+    assert_eq!(m_off.wall_s, m_on.wall_s);
+    assert_eq!(m_off.tokens_out, m_on.tokens_out);
+    assert_eq!(m_off.decode_steps, m_on.decode_steps);
+    assert_eq!(m_off.decode_batch_sum, m_on.decode_batch_sum);
+    assert_eq!(m_off.prefill_chunks, m_on.prefill_chunks);
+    assert_eq!(m_off.reused_tokens, m_on.reused_tokens);
+    assert_eq!(m_off.phase_requests, m_on.phase_requests);
+    assert_eq!(m_off.phase_totals, m_on.phase_totals);
+    assert_eq!(r_off.len(), r_on.len());
+    for (a, b) in r_off.iter().zip(&r_on) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.tpot, b.tpot);
+        assert_eq!(a.e2e, b.e2e);
+    }
+}
+
+#[test]
+fn serve_trace_roundtrips_jsonl_and_exports_chrome() {
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let mut rng = Rng::new(3);
+    let reqs = poisson_workload(&mut rng, 5, 1536, 0.6, 2.0, 5);
+    let mut backend = SimBackend::new(model, hw, 4);
+    let mut s = sched(4, 512)
+        .with_prefix_cache(PrefixCache::new(cache_cfg()), cm)
+        .with_tracing();
+    let (_, m) = s.serve(&mut backend, reqs).unwrap();
+    let trace = s.take_trace();
+    assert!(!trace.events.is_empty());
+
+    // JSONL survives a full round trip (the --trace-out file loses
+    // nothing), and the parsed-back trace still validates.
+    let text = trace.to_jsonl();
+    let back = Trace::parse_jsonl(&text).unwrap();
+    assert_eq!(back, trace);
+    back.validate().unwrap();
+    back.check_ttfts(&m.ttfts).unwrap();
+
+    // Chrome export parses as JSON with events + per-track metadata.
+    let chrome = trace.to_chrome();
+    let parsed = Json::parse(&chrome.to_string()).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_array().unwrap();
+    assert!(
+        events.len() > trace.events.len(),
+        "{} chrome records for {} trace events",
+        events.len(),
+        trace.events.len()
+    );
+
+    // The --metrics-json payload parses back identically too.
+    let j = m.to_json();
+    assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+}
