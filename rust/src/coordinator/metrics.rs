@@ -257,7 +257,9 @@ impl ServeMetrics {
         if self.requests == 0 {
             return "no requests completed".into();
         }
-        let ttft = self.ttft_summary().expect("requests > 0");
+        let Some(ttft) = self.ttft_summary() else {
+            return "no requests completed".into();
+        };
         let e2e = Summary::of(&self.e2es);
         let queue = Summary::of(&self.queue_waits);
         let mut out = String::new();

@@ -139,7 +139,7 @@ fn retire_finished<B: ServingBackend + ?Sized>(
     while i < active.len() {
         let a = &active[i];
         let finished = a.produced.len() >= a.req.max_new_tokens.max(1)
-            || *a.produced.last().unwrap() == eos;
+            || a.produced.last() == Some(&eos);
         if !finished {
             i += 1;
             continue;
@@ -203,17 +203,26 @@ fn decode_event<B: ServingBackend + ?Sized>(
     debug_assert!(!active.is_empty(), "decode event with nothing active");
     let want = active.len().min(decode_batch);
     let b = backend.decode_capacity(want).clamp(1, want);
-    let steps: Vec<DecodeStep> = active[..b]
-        .iter()
-        .map(|a| DecodeStep {
+    let mut steps: Vec<DecodeStep> = Vec::with_capacity(b);
+    for a in &active[..b] {
+        // Every active request produced its first token at prefill end;
+        // an empty history here is a scheduler bug, surfaced as an error
+        // so the serve unwinds through the settle path.
+        let Some(&last_token) = a.produced.last() else {
+            return Err(Error::Coordinator(format!(
+                "request {} is decode-active with no produced token",
+                a.req.id
+            )));
+        };
+        steps.push(DecodeStep {
             owner: a.owner,
             req_id: a.req.id,
-            last_token: *a.produced.last().unwrap(),
+            last_token,
             // Past covers the prompt AND every token generated so far
             // (they were appended by earlier steps).
             past_tokens: a.req.tokens.len() + a.produced.len(),
-        })
-        .collect();
+        });
+    }
     let t0 = clock.now();
     let out = match backend.decode_batch(&steps) {
         Ok(out) => out,
@@ -340,6 +349,24 @@ impl Scheduler {
     /// deployments can migrate a warm store to a new scheduler).
     pub fn take_prefix_cache(&mut self) -> Option<PrefixCache> {
         self.cache.take().map(|(pc, _)| pc)
+    }
+
+    /// Debug-build invariant: with the serve drained, every lease pin
+    /// has a matching unpin — a mismatch means a serve path dropped a
+    /// lease without settling it, leaving blocks unevictable forever.
+    /// Called at the end of every successful [`Self::serve`] (cargo
+    /// test runs debug builds, so every serving test self-checks);
+    /// release builds compile the body away.
+    pub fn assert_lease_quiescent(&self) {
+        #[cfg(debug_assertions)]
+        if let Some((pc, _)) = self.cache.as_ref() {
+            let (pins, unpins) = pc.lease_balance();
+            assert_eq!(
+                pins, unpins,
+                "prefix-cache lease leak: {pins} pins vs {unpins} unpins \
+                 at quiescence"
+            );
+        }
     }
 
     /// Admission-time cache consult: plan, lease, and (on payload-backed
@@ -627,7 +654,10 @@ impl Scheduler {
                             .admit_capacity(req.tokens.len(), req.max_new_tokens))
             });
             if admit {
-                let req = pending.pop_front().unwrap();
+                // `admit` proved the queue head exists; an empty queue
+                // here is unreachable, and re-checking the loop condition
+                // beats panicking mid-serve with leases outstanding.
+                let Some(req) = pending.pop_front() else { continue };
                 clock.wait_until(req.arrival);
                 let queue_wait = (clock.now() - req.arrival).max(0.0);
                 self.tracer.emit(
@@ -752,6 +782,7 @@ impl Scheduler {
         }
         metrics.wall_s = clock.now();
         done.sort_by_key(|r| r.id);
+        self.assert_lease_quiescent();
         Ok((done, metrics))
     }
 }

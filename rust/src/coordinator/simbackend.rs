@@ -193,7 +193,12 @@ impl ServingBackend for SimBackend {
         let mut job =
             self.prefill_begin(req.clone(), reused, loads, policy, want_wire, 0)?;
         let out = self.prefill_chunk(&mut job)?;
-        Ok(out.done.expect("single-chunk job finishes in one chunk"))
+        out.done.ok_or_else(|| {
+            Error::Coordinator(format!(
+                "single-chunk prefill job for request {} did not finish",
+                req.id
+            ))
+        })
     }
 
     /// Chunked prefill (DESIGN.md §6): each chunk is priced as its own

@@ -15,6 +15,7 @@ pub enum Error {
     Partition(String),
     Coordinator(String),
     Sim(String),
+    Lint(String),
     Io(std::io::Error),
     Xla(String),
 }
@@ -31,6 +32,7 @@ impl fmt::Display for Error {
             Error::Partition(m) => write!(f, "partition: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator: {m}"),
             Error::Sim(m) => write!(f, "simulation: {m}"),
+            Error::Lint(m) => write!(f, "lint: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Xla(m) => write!(f, "xla: {m}"),
         }

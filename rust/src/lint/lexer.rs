@@ -1,0 +1,660 @@
+//! A small Rust lexer for `kvr lint` (zero external dependencies).
+//!
+//! This is not a full parser: the rules in [`crate::lint::rules`] only
+//! need a token stream that is *safe* against the classic lexical
+//! traps — `unwrap(` inside a string or comment must not look like a
+//! method call. Handled here:
+//!
+//! * string literals (with escapes), byte strings, C strings;
+//! * raw strings `r"…"` / `r#"…"#` / `br##"…"##` (any hash depth) and
+//!   raw identifiers `r#fn`;
+//! * `'a` lifetimes vs `'a'` char literals (and escaped chars `'\''`);
+//! * line comments (incl. doc `///`, `//!`) and *nested* block
+//!   comments `/* /* */ */`;
+//! * multi-character operators (`::`, `->`, `=>`, `<<`, `>>`, `<=`,
+//!   `>=`, …) so a bare `<` token really is a comparison;
+//! * test scoping: [`mark_test_scopes`] flags every token inside a
+//!   `#[cfg(test)]`-gated item or a `mod tests { … }` block, so rules
+//!   can exempt test code.
+//!
+//! Comments are not emitted as tokens; they are collected separately so
+//! the suppression scanner (`// kvr: allow(rule, "why")`) can see them.
+
+/// Lexical class of a [`Token`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    CharLit,
+    StrLit,
+    NumLit,
+    Op,
+}
+
+/// One lexed token. `test` is filled in by [`mark_test_scopes`].
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+    /// True when the token sits inside test-gated code.
+    pub test: bool,
+}
+
+/// A comment, kept out of the token stream for the suppression scanner.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// Comment body, without the `//` / `/* */` delimiters.
+    pub text: String,
+    /// True when code precedes the comment on its line (a trailing
+    /// comment annotates its own line; a standalone one the next).
+    pub trailing: bool,
+}
+
+/// Lexer output: tokens plus the comments interleaved with them.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Multi-character operators, longest first (maximal munch).
+const OPS: [&str; 22] = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=",
+    "&&", "||", "..", "<<", ">>", "+=", "-=", "*=", "/=", "%=", "^=",
+];
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+    last_tok_line: usize,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    /// Advance one char, tracking line numbers.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied();
+        if let Some(c) = c {
+            self.i += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: usize) {
+        self.last_tok_line = line;
+        self.out.tokens.push(Token { kind, text, line, test: false });
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let trailing = self.last_tok_line == line;
+        self.bump();
+        self.bump(); // the two slashes
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(Comment { line, text, trailing });
+    }
+
+    fn block_comment(&mut self) {
+        let line = self.line;
+        let trailing = self.last_tok_line == line;
+        self.bump();
+        self.bump(); // the `/*`
+        let mut depth = 1usize;
+        let mut text = String::new();
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some('*'), Some('/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(c), _) => {
+                    text.push(c);
+                    self.bump();
+                }
+                (None, _) => break, // unterminated: tolerate
+            }
+        }
+        self.out.comments.push(Comment { line, text, trailing });
+    }
+
+    /// Scan a `"…"` body (opening quote at `self.i`); escapes skip the
+    /// next char, newlines are allowed.
+    fn string_body(&mut self) -> String {
+        let mut text = String::new();
+        self.bump(); // opening quote
+        while let Some(c) = self.bump() {
+            match c {
+                '"' => break,
+                '\\' => {
+                    if let Some(e) = self.bump() {
+                        text.push('\\');
+                        text.push(e);
+                    }
+                }
+                _ => text.push(c),
+            }
+        }
+        text
+    }
+
+    /// Scan a raw string starting at the hashes/quote (after the `r`
+    /// prefix): `#`*n `"` … `"` `#`*n.
+    fn raw_string_body(&mut self) -> String {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        let mut text = String::new();
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                // A quote closes only when followed by `hashes` hashes.
+                for k in 0..hashes {
+                    if self.peek(k) != Some('#') {
+                        text.push('"');
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            text.push(c);
+        }
+        text
+    }
+
+    /// At a `'`: disambiguate lifetime vs char literal.
+    fn lifetime_or_char(&mut self) {
+        let line = self.line;
+        if self.peek(1) == Some('\\') {
+            // Escaped char literal: `'\n'`, `'\''`, `'\u{1F600}'`.
+            self.bump(); // '
+            self.bump(); // backslash
+            let mut text = String::from("\\");
+            if let Some(e) = self.bump() {
+                text.push(e);
+            }
+            while let Some(c) = self.bump() {
+                if c == '\'' {
+                    break;
+                }
+                text.push(c);
+            }
+            self.push(TokKind::CharLit, text, line);
+        } else if self.peek(2) == Some('\'')
+            && self.peek(1).is_some_and(|c| c != '\'')
+        {
+            // Plain char literal `'a'` (note: `'a'` not `'a` lifetime).
+            self.bump();
+            let c = self.bump().unwrap_or('\0');
+            self.bump();
+            self.push(TokKind::CharLit, c.to_string(), line);
+        } else {
+            // Lifetime: `'a`, `'static`, `'_`.
+            self.bump();
+            let mut text = String::new();
+            while self.peek(0).is_some_and(is_ident_char) {
+                text.push(self.bump().unwrap_or('\0'));
+            }
+            self.push(TokKind::Lifetime, text, line);
+        }
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while self.peek(0).is_some_and(is_ident_char) {
+            let c = self.bump().unwrap_or('\0');
+            text.push(c);
+            // Exponent sign: `1e-3`, `2.5E+7`.
+            if (c == 'e' || c == 'E')
+                && !text.starts_with("0x")
+                && self.peek(0).is_some_and(|s| s == '+' || s == '-')
+                && self.peek(1).is_some_and(|d| d.is_ascii_digit())
+            {
+                text.push(self.bump().unwrap_or('\0'));
+            }
+        }
+        // Fractional part — but not `0..n` ranges or `1.max(2)` calls.
+        if self.peek(0) == Some('.')
+            && self.peek(1).is_some_and(|d| d.is_ascii_digit())
+        {
+            text.push(self.bump().unwrap_or('\0'));
+            while self.peek(0).is_some_and(is_ident_char) {
+                let c = self.bump().unwrap_or('\0');
+                text.push(c);
+                if (c == 'e' || c == 'E')
+                    && self.peek(0).is_some_and(|s| s == '+' || s == '-')
+                    && self.peek(1).is_some_and(|d| d.is_ascii_digit())
+                {
+                    text.push(self.bump().unwrap_or('\0'));
+                }
+            }
+        }
+        self.push(TokKind::NumLit, text, line);
+    }
+
+    /// An identifier — or a string-literal prefix (`r"`, `b"`, `br#"`,
+    /// `c"`, …) or raw identifier (`r#fn`).
+    fn ident_or_prefixed(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while self.peek(0).is_some_and(is_ident_char) {
+            text.push(self.bump().unwrap_or('\0'));
+        }
+        let raw_capable = matches!(text.as_str(), "r" | "br" | "cr");
+        let str_capable = matches!(text.as_str(), "b" | "c");
+        if raw_capable && self.peek(0) == Some('"') {
+            let body = self.raw_string_body();
+            self.push(TokKind::StrLit, body, line);
+        } else if raw_capable && self.peek(0) == Some('#') {
+            // `r#"…"#` raw string, or `r#ident` raw identifier.
+            let mut k = 0;
+            while self.peek(k) == Some('#') {
+                k += 1;
+            }
+            if self.peek(k) == Some('"') {
+                let body = self.raw_string_body();
+                self.push(TokKind::StrLit, body, line);
+            } else if text == "r" && self.peek(1).is_some_and(is_ident_start) {
+                self.bump(); // the hash
+                let mut name = String::new();
+                while self.peek(0).is_some_and(is_ident_char) {
+                    name.push(self.bump().unwrap_or('\0'));
+                }
+                self.push(TokKind::Ident, name, line);
+            } else {
+                self.push(TokKind::Ident, text, line);
+            }
+        } else if str_capable && self.peek(0) == Some('"') {
+            let body = self.string_body();
+            self.push(TokKind::StrLit, body, line);
+        } else if text == "b" && self.peek(0) == Some('\'') {
+            self.lifetime_or_char();
+        } else {
+            self.push(TokKind::Ident, text, line);
+        }
+    }
+
+    fn op(&mut self) {
+        let line = self.line;
+        for op in OPS {
+            let n = op.len();
+            if (0..n).all(|k| self.peek(k) == Some(op.as_bytes()[k] as char)) {
+                for _ in 0..n {
+                    self.bump();
+                }
+                self.push(TokKind::Op, op.to_string(), line);
+                return;
+            }
+        }
+        if let Some(c) = self.bump() {
+            self.push(TokKind::Op, c.to_string(), line);
+        }
+    }
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated strings
+/// or comments are tolerated (the lint must not panic on odd input).
+pub fn lex(src: &str) -> Lexed {
+    let mut lx = Lexer {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        last_tok_line: 0,
+        out: Lexed::default(),
+    };
+    while let Some(c) = lx.peek(0) {
+        if c == '/' && lx.peek(1) == Some('/') {
+            lx.line_comment();
+        } else if c == '/' && lx.peek(1) == Some('*') {
+            lx.block_comment();
+        } else if c == '"' {
+            let line = lx.line;
+            let body = lx.string_body();
+            lx.push(TokKind::StrLit, body, line);
+        } else if c == '\'' {
+            lx.lifetime_or_char();
+        } else if c.is_ascii_digit() {
+            lx.number();
+        } else if is_ident_start(c) {
+            lx.ident_or_prefixed();
+        } else if c.is_whitespace() {
+            lx.bump();
+        } else {
+            lx.op();
+        }
+    }
+    lx.out
+}
+
+fn is_op_at(tokens: &[Token], i: usize, s: &str) -> bool {
+    tokens
+        .get(i)
+        .is_some_and(|t| t.kind == TokKind::Op && t.text == s)
+}
+
+fn is_ident_at(tokens: &[Token], i: usize, s: &str) -> bool {
+    tokens
+        .get(i)
+        .is_some_and(|t| t.kind == TokKind::Ident && t.text == s)
+}
+
+/// Index of the delimiter matching the opener at `open` (e.g. `[`/`]`),
+/// or `None` when unbalanced.
+fn match_delim(tokens: &[Token], open: usize, o: &str, c: &str) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in tokens.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Op {
+            if t.text == o {
+                depth += 1;
+            } else if t.text == c {
+                if depth == 0 {
+                    return None; // stray closer: malformed input
+                }
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Index of the `}` matching the `{` at `open` (for rule code that
+/// needs to bound an item body).
+pub fn delim_span(tokens: &[Token], open: usize) -> Option<usize> {
+    match_delim(tokens, open, "{", "}")
+}
+
+/// Does an attribute body (the tokens between `#[` and `]`) gate the
+/// item on `test`? `cfg(test)`, `cfg(all(test, …))` count;
+/// `cfg(not(test))` does not.
+fn attr_gates_test(span: &[Token]) -> bool {
+    for (j, t) in span.iter().enumerate() {
+        if t.kind == TokKind::Ident && t.text == "test" {
+            let negated = j >= 2
+                && is_op_at(span, j - 1, "(")
+                && is_ident_at(span, j - 2, "not");
+            if !negated {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// End index (inclusive) of the item starting at `start`: skips leading
+/// attributes, then runs to the matching `}` of the item's first body
+/// brace, or to a top-level `;` for brace-less items (`use …;`,
+/// `struct T(u8);`). `[`/`(` groups are skipped so `[u8; 4]` semicolons
+/// don't terminate early.
+fn item_end(tokens: &[Token], start: usize) -> Option<usize> {
+    let mut k = start;
+    // Further attributes between the cfg gate and the item proper.
+    while is_op_at(tokens, k, "#") && is_op_at(tokens, k + 1, "[") {
+        k = match_delim(tokens, k + 1, "[", "]")? + 1;
+    }
+    while k < tokens.len() {
+        let t = &tokens[k];
+        if t.kind == TokKind::Op {
+            match t.text.as_str() {
+                "{" => return match_delim(tokens, k, "{", "}"),
+                ";" => return Some(k),
+                "(" => k = match_delim(tokens, k, "(", ")")?,
+                "[" => k = match_delim(tokens, k, "[", "]")?,
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Mark every token inside `#[cfg(test)]`-gated items and
+/// `mod tests { … }` blocks as test code (rules exempt those).
+pub fn mark_test_scopes(tokens: &mut [Token]) {
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if is_op_at(tokens, i, "#") && is_op_at(tokens, i + 1, "[") {
+            let Some(close) = match_delim(tokens, i + 1, "[", "]") else {
+                break;
+            };
+            if attr_gates_test(&tokens[i + 2..close]) {
+                let end = item_end(tokens, close + 1)
+                    .unwrap_or(tokens.len() - 1);
+                for t in &mut tokens[i..=end] {
+                    t.test = true;
+                }
+                i = end + 1;
+            } else {
+                i = close + 1;
+            }
+            continue;
+        }
+        if is_ident_at(tokens, i, "mod")
+            && is_ident_at(tokens, i + 1, "tests")
+            && is_op_at(tokens, i + 2, "{")
+        {
+            if let Some(close) = match_delim(tokens, i + 2, "{", "}") {
+                for t in &mut tokens[i..=close] {
+                    t.test = true;
+                }
+                i = close + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn raw_string_hides_unwrap() {
+        let src = r##"let s = r#"x.unwrap()"#; let t = r"y.unwrap()";"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"s".to_string()));
+        // …but a real call after the raw string still lexes.
+        let src2 = r##"let s = r#"quoted"#; s.unwrap();"##;
+        assert!(idents(src2).contains(&"unwrap".to_string()));
+    }
+
+    #[test]
+    fn double_slash_inside_string_is_not_a_comment() {
+        let src = "let url = \"https://example.com\"; x.unwrap();";
+        let ids = idents(src);
+        assert!(ids.contains(&"unwrap".to_string()), "{ids:?}");
+        let lx = lex(src);
+        assert!(lx.comments.is_empty(), "{:?}", lx.comments);
+        assert_eq!(
+            lx.tokens
+                .iter()
+                .find(|t| t.kind == TokKind::StrLit)
+                .map(|t| t.text.as_str()),
+            Some("https://example.com")
+        );
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        // The inner `/* */` must not end the outer comment.
+        let src = "/* outer /* inner */ still a comment x.unwrap() */ y";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["y".to_string()], "{ids:?}");
+        // After the whole comment closes, code lexes again.
+        let src2 = "/* /* */ */ x.unwrap()";
+        assert!(idents(src2).contains(&"unwrap".to_string()));
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'a' }";
+        let lx = lex(src);
+        let lifetimes: Vec<_> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifetimes, vec!["a".to_string(), "a".to_string()]);
+        let chars: Vec<_> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::CharLit)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(chars, vec!["a".to_string()]);
+        // Escaped quote char `'\''` and `'static`.
+        let lx2 = lex(r"let q: char = '\''; fn g<T: 'static>() {}");
+        assert!(lx2.tokens.iter().any(|t| t.kind == TokKind::CharLit));
+        assert!(lx2
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokKind::Lifetime && t.text == "static"));
+    }
+
+    #[test]
+    fn multichar_ops_are_single_tokens() {
+        let src = "a::b -> c => d <= e >= f << g >> h .. i ..= j";
+        let ops: Vec<_> = lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Op)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(
+            ops,
+            ["::", "->", "=>", "<=", ">=", "<<", ">>", "..", "..="]
+                .map(String::from)
+        );
+        // A lone `<` stays a `<`.
+        let lt: Vec<_> = lex("a < b")
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Op)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(lt, vec!["<".to_string()]);
+    }
+
+    #[test]
+    fn cfg_test_scoping_marks_the_next_item_only() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod checks { fn t() { y.unwrap(); } }\n\
+                   fn live2() { z.unwrap(); }";
+        let mut lx = lex(src);
+        mark_test_scopes(&mut lx.tokens);
+        let live: Vec<_> = lx
+            .tokens
+            .iter()
+            .filter(|t| !t.test && t.text == "unwrap")
+            .map(|t| t.line)
+            .collect();
+        assert_eq!(live, vec![1, 4], "{live:?}");
+        // `mod tests { … }` is test-scoped even without the attribute.
+        let mut lx2 = lex("mod tests { fn t() { y.unwrap(); } }");
+        mark_test_scopes(&mut lx2.tokens);
+        assert!(lx2
+            .tokens
+            .iter()
+            .all(|t| t.text != "unwrap" || t.test));
+        // `cfg(not(test))` gates *non*-test code: not exempt.
+        let mut lx3 = lex("#[cfg(not(test))]\nfn live() { x.unwrap(); }");
+        mark_test_scopes(&mut lx3.tokens);
+        assert!(lx3
+            .tokens
+            .iter()
+            .any(|t| t.text == "unwrap" && !t.test));
+    }
+
+    #[test]
+    fn cfg_test_gates_braceless_items_via_semicolon() {
+        let mut lx = lex("#[cfg(test)]\nuse crate::x;\nfn live() { a.unwrap(); }");
+        mark_test_scopes(&mut lx.tokens);
+        assert!(lx.tokens.iter().any(|t| t.text == "unwrap" && !t.test));
+        // The `[u8; 4]` semicolon must not end the item early.
+        let mut lx2 =
+            lex("#[cfg(test)]\nconst A: [u8; 4] = [0; 4];\nfn live() { b.unwrap(); }");
+        mark_test_scopes(&mut lx2.tokens);
+        let free: Vec<_> = lx2
+            .tokens
+            .iter()
+            .filter(|t| !t.test && t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect();
+        assert!(free.contains(&"unwrap".to_string()), "{free:?}");
+        assert!(!free.contains(&"A".to_string()), "{free:?}");
+    }
+
+    #[test]
+    fn trailing_vs_standalone_comments() {
+        let lx = lex("let a = 1; // trailing\n// standalone\nlet b = 2;");
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].trailing);
+        assert_eq!(lx.comments[0].text.trim(), "trailing");
+        assert!(!lx.comments[1].trailing);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges_or_method_calls() {
+        let toks = lex("for i in 0..n { let x = 1.5e-3; let y = 2.max(3); }").tokens;
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == TokKind::NumLit && t.text == "1.5e-3"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Op && t.text == ".."));
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && t.text == "max"));
+    }
+}

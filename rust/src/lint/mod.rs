@@ -1,0 +1,527 @@
+//! `kvr lint` — a zero-dependency invariant lint pass over the serving
+//! engine (DESIGN.md §10).
+//!
+//! The serving loop's load-bearing invariants (lease settlement on
+//! every error path, `total_cmp` float ordering, no wall-clock reads
+//! outside `Clock` impls, trace-validator coverage) used to exist only
+//! as reviewer lore. This module checks them mechanically: a small
+//! Rust lexer ([`lexer`]) feeds a rule catalog ([`rules`]), and the
+//! `kvr lint` subcommand gates CI.
+//!
+//! Escape hatches, both requiring a justification:
+//!
+//! * inline, for a single line (same line, or the line after a
+//!   standalone comment) — `kvr: allow(<rule>, "<why>")` in a `//`
+//!   comment;
+//! * the checked-in `lint-baseline.txt`, for grandfathered findings —
+//!   tab-separated `rule`, `path`, `excerpt` (the trimmed source line,
+//!   so entries survive unrelated edits), `justification`. An entry
+//!   covers every occurrence of that line text in the file.
+//!
+//! Doc comments are exempt from suppression parsing, so documentation
+//! may quote the syntax freely.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+pub use rules::{Violation, RULES};
+
+/// A lexed source file ready for rule evaluation.
+pub struct SourceFile {
+    /// Path relative to the lint root, `/`-separated.
+    pub path: String,
+    pub lines: Vec<String>,
+    pub tokens: Vec<lexer::Token>,
+    pub suppressions: Vec<Suppression>,
+}
+
+/// One parsed inline `allow`, resolved to the line it covers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Suppression {
+    pub rule: String,
+    pub justification: String,
+    /// Source line the suppression applies to.
+    pub line: usize,
+}
+
+const ALLOW_MARKER: &str = "kvr: allow(";
+
+/// Parse inline suppressions out of a file's comments. Malformed or
+/// unjustified suppressions fail the lint run (so every `allow` is
+/// forced to carry a reason). Doc comments are skipped.
+fn parse_suppressions(
+    path: &str, lexed: &lexer::Lexed,
+) -> Result<Vec<Suppression>> {
+    let mut out = Vec::new();
+    for c in &lexed.comments {
+        // `///`, `//!`, `/** */` doc comments may *quote* the syntax.
+        if c.text.starts_with('/') || c.text.starts_with('!') || c.text.starts_with('*') {
+            continue;
+        }
+        let Some(pos) = c.text.find(ALLOW_MARKER) else { continue };
+        let line = c.line;
+        let err = |why: String| {
+            Error::Lint(format!(
+                "{path}:{line}: bad suppression ({why}); expected \
+                 `kvr: allow(<rule>, \"<justification>\")`"
+            ))
+        };
+        let rest = &c.text[pos + ALLOW_MARKER.len()..];
+        let comma = rest
+            .find(',')
+            .ok_or_else(|| err("missing `,` after rule name".into()))?;
+        let rule = rest[..comma].trim().to_string();
+        if !RULES.contains(&rule.as_str()) {
+            return Err(err(format!("unknown rule `{rule}`")));
+        }
+        let tail = &rest[comma + 1..];
+        let q0 = tail
+            .find('"')
+            .ok_or_else(|| err("missing quoted justification".into()))?;
+        let q1 = tail[q0 + 1..]
+            .find('"')
+            .map(|k| q0 + 1 + k)
+            .ok_or_else(|| err("unterminated justification".into()))?;
+        let justification = tail[q0 + 1..q1].trim().to_string();
+        if justification.is_empty() {
+            return Err(err("empty justification".into()));
+        }
+        if !tail[q1 + 1..].trim_start().starts_with(')') {
+            return Err(err("missing closing `)`".into()));
+        }
+        // A trailing comment covers its own line; a standalone one the
+        // next line that has code on it.
+        let applies = if c.trailing {
+            line
+        } else {
+            lexed
+                .tokens
+                .iter()
+                .map(|t| t.line)
+                .find(|&l| l > line)
+                .unwrap_or(line + 1)
+        };
+        out.push(Suppression { rule, justification, line: applies });
+    }
+    Ok(out)
+}
+
+/// The grandfather list: findings that predate the rule and are
+/// accepted with a justification.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub path: String,
+    /// Trimmed source-line text (line-number-free fingerprint).
+    pub excerpt: String,
+    pub justification: String,
+}
+
+impl Baseline {
+    /// Parse `lint-baseline.txt`: one tab-separated entry per line
+    /// (`rule<TAB>path<TAB>excerpt<TAB>justification`), `#` comments
+    /// and blank lines ignored. Every entry must name a known rule and
+    /// carry a non-empty justification.
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let mut entries = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.splitn(4, '\t').collect();
+            let err = |why: &str| {
+                Error::Lint(format!("lint-baseline.txt:{}: {why}", i + 1))
+            };
+            if fields.len() != 4 {
+                return Err(err(
+                    "expected rule<TAB>path<TAB>excerpt<TAB>justification",
+                ));
+            }
+            let (rule, path, excerpt, justification) = (
+                fields[0].trim(),
+                fields[1].trim(),
+                fields[2].trim(),
+                fields[3].trim(),
+            );
+            if !RULES.contains(&rule) {
+                return Err(err("unknown rule"));
+            }
+            if path.is_empty() || excerpt.is_empty() {
+                return Err(err("empty path or excerpt"));
+            }
+            if justification.is_empty() {
+                return Err(err("every baseline entry needs a justification"));
+            }
+            entries.push(BaselineEntry {
+                rule: rule.into(),
+                path: path.into(),
+                excerpt: excerpt.into(),
+                justification: justification.into(),
+            });
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Is this finding grandfathered?
+    pub fn covers(&self, v: &Violation) -> bool {
+        self.entries.iter().any(|e| {
+            e.rule == v.rule && e.path == v.path && e.excerpt == v.excerpt
+        })
+    }
+
+    /// Serialize entries back to the file format.
+    pub fn render(entries: &[BaselineEntry]) -> String {
+        let mut out = String::from(
+            "# kvr lint baseline — grandfathered findings.\n\
+             # rule<TAB>path<TAB>excerpt<TAB>justification; every entry \
+             must say why it is safe.\n",
+        );
+        for e in entries {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\n",
+                e.rule, e.path, e.excerpt, e.justification
+            ));
+        }
+        out
+    }
+}
+
+/// Result of a lint pass (before baseline filtering).
+pub struct LintOutcome {
+    /// Files scanned.
+    pub files: usize,
+    /// Findings that were not inline-suppressed, sorted by
+    /// (path, line, rule).
+    pub violations: Vec<Violation>,
+    /// Findings silenced by a justified inline `allow`.
+    pub suppressed: usize,
+}
+
+impl LintOutcome {
+    /// Findings not covered by the baseline — the ones that fail CI.
+    pub fn fresh<'a>(&'a self, baseline: &Baseline) -> Vec<&'a Violation> {
+        self.violations.iter().filter(|v| !baseline.covers(v)).collect()
+    }
+
+    /// The lint report: one `path:line: rule: message` line per fresh
+    /// finding, then a summary census.
+    pub fn render(&self, baseline: &Baseline) -> String {
+        let fresh = self.fresh(baseline);
+        let mut out = String::new();
+        for v in &fresh {
+            out.push_str(&format!(
+                "{}:{}: {}: {}\n",
+                v.path, v.line, v.rule, v.message
+            ));
+        }
+        out.push_str(&format!(
+            "kvr lint: {} files, {} new violations ({} baselined, {} \
+             suppressed)\n",
+            self.files,
+            fresh.len(),
+            self.violations.len() - fresh.len(),
+            self.suppressed
+        ));
+        out
+    }
+
+    /// Baseline entries for the current findings (`--update-baseline`);
+    /// justifications start as a placeholder the human must edit.
+    pub fn baseline_entries(&self) -> Vec<BaselineEntry> {
+        self.violations
+            .iter()
+            .map(|v| BaselineEntry {
+                rule: v.rule.into(),
+                path: v.path.clone(),
+                excerpt: v.excerpt.clone(),
+                justification: "UNREVIEWED — replace with the reason this \
+                                is safe"
+                    .into(),
+            })
+            .collect()
+    }
+}
+
+/// Lint in-memory sources (`(relative path, contents)` pairs). The
+/// entry point for tests; [`lint_root`] feeds it from disk.
+pub fn lint_sources(sources: &[(String, String)]) -> Result<LintOutcome> {
+    let mut files = Vec::new();
+    for (path, src) in sources {
+        let mut lexed = lexer::lex(src);
+        lexer::mark_test_scopes(&mut lexed.tokens);
+        let suppressions = parse_suppressions(path, &lexed)?;
+        files.push(SourceFile {
+            path: path.clone(),
+            lines: src.lines().map(str::to_string).collect(),
+            tokens: lexed.tokens,
+            suppressions,
+        });
+    }
+    let mut all = rules::run_rules(&files);
+    let by_path: BTreeMap<&str, &SourceFile> =
+        files.iter().map(|f| (f.path.as_str(), f)).collect();
+    for v in &mut all {
+        if let Some(f) = by_path.get(v.path.as_str()) {
+            v.excerpt = f
+                .lines
+                .get(v.line.saturating_sub(1))
+                .map(|l| l.trim().to_string())
+                .unwrap_or_default();
+        }
+    }
+    let mut violations = Vec::new();
+    let mut suppressed = 0usize;
+    for v in all {
+        let allowed = by_path.get(v.path.as_str()).is_some_and(|f| {
+            f.suppressions
+                .iter()
+                .any(|s| s.rule == v.rule && s.line == v.line)
+        });
+        if allowed {
+            suppressed += 1;
+        } else {
+            violations.push(v);
+        }
+    }
+    Ok(LintOutcome { files: files.len(), violations, suppressed })
+}
+
+/// Recursively collect `.rs` files under `root` (sorted for
+/// deterministic reports) and lint them.
+pub fn lint_root(root: &Path) -> Result<LintOutcome> {
+    let mut sources = Vec::new();
+    collect_rs(root, root, &mut sources)?;
+    if sources.is_empty() {
+        return Err(Error::Lint(format!(
+            "no .rs files under {}",
+            root.display()
+        )));
+    }
+    sources.sort_by(|a, b| a.0.cmp(&b.0));
+    lint_sources(&sources)
+}
+
+fn collect_rs(
+    dir: &Path, root: &Path, out: &mut Vec<(String, String)>,
+) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| {
+            Error::Lint(format!("cannot read {}: {e}", dir.display()))
+        })?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, root, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, std::fs::read_to_string(&p)?));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs
+            .iter()
+            .map(|(p, s)| (p.to_string(), s.to_string()))
+            .collect()
+    }
+
+    /// One violation of every rule, pinned to an exact report. The
+    /// fixture is a miniature scheduler + validator pair so the
+    /// cross-file rules fire too.
+    #[test]
+    fn golden_report_over_fixture() {
+        let sched = "fn serve<B>(backend: &mut B) {\n\
+                     let x = backend.prefill(job)?;\n\
+                     tracer.emit(EventKind::Plan { dur });\n\
+                     vals.sort_by(|a, b| a < b);\n\
+                     let t0 = Instant::now();\n\
+                     let y = opt.unwrap();\n\
+                     }\n";
+        let val = "fn arm(k: &EventKind) {\n\
+                   match k { EventKind::Retire { .. } => {} _ => {} }\n\
+                   }\n";
+        let out = lint_sources(&src(&[
+            ("coordinator/scheduler.rs", sched),
+            ("trace/validate.rs", val),
+        ]))
+        .unwrap();
+        let report = out.render(&Baseline::default());
+        let expect = "\
+coordinator/scheduler.rs:2: lease-settlement: fallible `ServingBackend` call escapes `serve` via a naked `?` — route the error through the abort/settle helper so in-flight leases are released
+coordinator/scheduler.rs:3: trace-validator-exhaustive: `EventKind::Plan` is emitted by the scheduler but trace/validate.rs has no arm for it
+coordinator/scheduler.rs:4: total-cmp-floats: bare `<` comparison inside a `sort_by` comparator — use `total_cmp`/`cmp`
+coordinator/scheduler.rs:5: clock-discipline: wall-clock read outside the `Clock` impls in coordinator/backend.rs — serving time must come from `Clock::now`
+coordinator/scheduler.rs:6: no-panic-hot-path: `.unwrap()` on the serving hot path — return a `kvr::Error` so the lease settles
+kvr lint: 2 files, 5 new violations (0 baselined, 0 suppressed)\n";
+        assert_eq!(report, expect);
+    }
+
+    #[test]
+    fn suppression_round_trip() {
+        // Trailing allow covers its own line; standalone covers the
+        // next code line. Both must carry a justification.
+        let allow = "kvr: allow";
+        let body = format!(
+            "fn f() {{\n\
+             let a = x.unwrap(); // {allow}(no-panic-hot-path, \"seed data is validated\")\n\
+             // {allow}(no-panic-hot-path, \"guarded by is_some above\")\n\
+             let b = y.unwrap();\n\
+             let c = z.unwrap();\n\
+             }}\n"
+        );
+        let out = lint_sources(&src(&[("trace/mod.rs", &body)])).unwrap();
+        assert_eq!(out.suppressed, 2);
+        assert_eq!(out.violations.len(), 1);
+        assert_eq!(out.violations[0].line, 5);
+    }
+
+    #[test]
+    fn malformed_suppressions_fail_the_run() {
+        let allow = "kvr: allow";
+        // Unknown rule.
+        let bad_rule =
+            format!("// {allow}(no-such-rule, \"x\")\nlet a = 1;\n");
+        let err = lint_sources(&src(&[("a.rs", &bad_rule)])).unwrap_err();
+        assert!(err.to_string().contains("unknown rule"), "{err}");
+        // Missing justification.
+        let no_just = format!("// {allow}(clock-discipline, \"\")\nlet a = 1;\n");
+        let err = lint_sources(&src(&[("a.rs", &no_just)])).unwrap_err();
+        assert!(err.to_string().contains("empty justification"), "{err}");
+        // Doc comments may quote the syntax without parsing as one.
+        let doc = format!("/// {allow}(whatever, \"quoted\")\nfn f() {{}}\n");
+        assert!(lint_sources(&src(&[("a.rs", &doc)])).is_ok());
+    }
+
+    #[test]
+    fn baseline_round_trip() {
+        let body = "fn f() { let t = std::time::Instant::now(); }\n";
+        let out = lint_sources(&src(&[("util/x.rs", body)])).unwrap();
+        assert_eq!(out.violations.len(), 1);
+        // Render entries, swap in a real justification, reparse: the
+        // finding is covered and the report shows zero new.
+        let mut entries = out.baseline_entries();
+        for e in &mut entries {
+            e.justification = "bench timing, not serving state".into();
+        }
+        let text = Baseline::render(&entries);
+        let baseline = Baseline::parse(&text).unwrap();
+        assert!(out.fresh(&baseline).is_empty());
+        assert!(out.render(&baseline).contains("0 new violations"));
+        // The excerpt fingerprint is line-number-free: the same source
+        // shifted down still matches.
+        let shifted = format!("\n\n{body}");
+        let out2 = lint_sources(&src(&[("util/x.rs", &shifted)])).unwrap();
+        assert!(out2.fresh(&baseline).is_empty());
+    }
+
+    #[test]
+    fn baseline_parse_rejects_bad_entries() {
+        assert!(Baseline::parse("# comment only\n\n").unwrap().entries.is_empty());
+        let err = Baseline::parse("clock-discipline\tonly three\tfields\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("justification"), "{err}");
+        let err = Baseline::parse("nope\ta.rs\tx\twhy\n").unwrap_err();
+        assert!(err.to_string().contains("unknown rule"), "{err}");
+        let err =
+            Baseline::parse("clock-discipline\ta.rs\tx\t \n").unwrap_err();
+        assert!(err.to_string().contains("justification"), "{err}");
+    }
+
+    #[test]
+    fn validator_arm_closes_the_cross_file_gap() {
+        let sched =
+            "fn emit() { tracer.emit(EventKind::ColdLoad { dur }); }\n";
+        let val_missing = "fn arm(k: &EventKind) { match k { _ => {} } }\n";
+        let val_armed = "fn arm(k: &EventKind) {\n\
+                         match k { EventKind::ColdLoad { .. } => {} _ => {} }\n\
+                         }\n";
+        let gap = lint_sources(&src(&[
+            ("coordinator/scheduler.rs", sched),
+            ("trace/validate.rs", val_missing),
+        ]))
+        .unwrap();
+        assert_eq!(gap.violations.len(), 1);
+        assert_eq!(gap.violations[0].rule, "trace-validator-exhaustive");
+        let ok = lint_sources(&src(&[
+            ("coordinator/scheduler.rs", sched),
+            ("trace/validate.rs", val_armed),
+        ]))
+        .unwrap();
+        assert!(ok.violations.is_empty(), "{:?}", ok.violations);
+    }
+
+    #[test]
+    fn lease_settlement_only_flags_naked_question_marks() {
+        // Routed through a match (the settle-helper shape): clean.
+        let routed = "fn serve<B>(backend: &mut B) {\n\
+                      match backend.prefill_chunk(job) {\n\
+                      Ok(out) => use_it(out),\n\
+                      Err(e) => return self.settle_failed_job(e),\n\
+                      }\n\
+                      }\n";
+        let out = lint_sources(&src(&[(
+            "coordinator/scheduler.rs",
+            routed,
+        )]))
+        .unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        // Chained call with a trailing `?` is still naked.
+        let chained = "fn serve<B>(backend: &mut B) {\n\
+                       let x = backend.plan(job).and_apply(now)?;\n\
+                       }\n";
+        let out = lint_sources(&src(&[(
+            "coordinator/scheduler.rs",
+            chained,
+        )]))
+        .unwrap();
+        assert_eq!(out.violations.len(), 1);
+        assert_eq!(out.violations[0].rule, "lease-settlement");
+        // `backend` calls outside `fn serve` are not this rule's
+        // business (helpers return Result upward by design).
+        let helper = "fn helper<B>(backend: &mut B) {\n\
+                      let x = backend.plan(job)?;\n\
+                      }\n";
+        let out =
+            lint_sources(&src(&[("coordinator/scheduler.rs", helper)]))
+                .unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+    }
+
+    #[test]
+    fn test_code_is_exempt_everywhere() {
+        let body = "fn live() { let a = x.unwrap(); }\n\
+                    #[cfg(test)]\n\
+                    mod tests {\n\
+                    fn t() {\n\
+                    let b = y.unwrap();\n\
+                    let t0 = Instant::now();\n\
+                    v.sort_by(|a, b| a < b);\n\
+                    }\n\
+                    }\n";
+        let out = lint_sources(&src(&[("prefixcache/mod.rs", body)])).unwrap();
+        assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+        assert_eq!(out.violations[0].line, 1);
+    }
+}

@@ -1,0 +1,346 @@
+//! The `kvr lint` rule catalog (see DESIGN.md §10 for the incident each
+//! rule is derived from).
+//!
+//! Rules run over the token stream from [`crate::lint::lexer`]; test
+//! code (`#[cfg(test)]` items, `mod tests`) is exempt everywhere. Each
+//! rule owns a stable kebab-case id used by inline suppressions and the
+//! baseline file.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lint::lexer::{TokKind, Token};
+use crate::lint::SourceFile;
+
+/// Every rule id the engine knows (suppressions and baseline entries
+/// must name one of these).
+pub const RULES: [&str; 5] = [
+    "no-panic-hot-path",
+    "total-cmp-floats",
+    "clock-discipline",
+    "trace-validator-exhaustive",
+    "lease-settlement",
+];
+
+/// Modules where a panic tears down a serve mid-lease: the burned-down
+/// zone for `no-panic-hot-path`.
+const HOT_MODULES: [&str; 3] = ["coordinator/", "prefixcache/", "trace/"];
+
+/// The one file allowed to read the wall clock: the `Clock` impls.
+const CLOCK_MODULE: &str = "coordinator/backend.rs";
+
+/// One rule finding, attributed to a file line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+    /// Trimmed source-line text, the line-number-free fingerprint used
+    /// for baseline matching (filled in by the driver).
+    pub excerpt: String,
+}
+
+fn is_op(toks: &[Token], i: usize, s: &str) -> bool {
+    toks.get(i)
+        .is_some_and(|t| t.kind == TokKind::Op && t.text == s)
+}
+
+fn ident(toks: &[Token], i: usize) -> Option<&str> {
+    toks.get(i)
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.as_str())
+}
+
+/// Index of the `)` matching the `(` at `open`.
+fn close_paren(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Op {
+            match t.text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth = depth.checked_sub(1)?;
+                    if depth == 0 {
+                        return Some(k);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+fn push(
+    out: &mut Vec<Violation>, rule: &'static str, f: &SourceFile, line: usize,
+    message: String,
+) {
+    out.push(Violation {
+        rule,
+        path: f.path.clone(),
+        line,
+        message,
+        excerpt: String::new(),
+    });
+}
+
+/// `no-panic-hot-path`: no `unwrap`/`expect`/`panic!`/`todo!`/
+/// `unimplemented!` in non-test hot-module code — every failure must
+/// stay on the lease-settling `Err` path.
+fn no_panic_hot_path(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !HOT_MODULES.iter().any(|m| f.path.starts_with(m)) {
+        return;
+    }
+    let t = &f.tokens;
+    for i in 0..t.len() {
+        if t[i].test {
+            continue;
+        }
+        match ident(t, i) {
+            Some(name @ ("unwrap" | "expect"))
+                if is_op(t, i.wrapping_sub(1), ".") && is_op(t, i + 1, "(") =>
+            {
+                push(
+                    out,
+                    "no-panic-hot-path",
+                    f,
+                    t[i].line,
+                    format!(
+                        "`.{name}()` on the serving hot path — return a \
+                         `kvr::Error` so the lease settles"
+                    ),
+                );
+            }
+            Some(name @ ("panic" | "todo" | "unimplemented"))
+                if is_op(t, i + 1, "!") =>
+            {
+                push(
+                    out,
+                    "no-panic-hot-path",
+                    f,
+                    t[i].line,
+                    format!(
+                        "`{name}!` on the serving hot path — return a \
+                         `kvr::Error` so the lease settles"
+                    ),
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `total-cmp-floats`: float ordering goes through `total_cmp`; flag
+/// `partial_cmp` and bare `<`/`>` comparisons inside `sort_by`/
+/// `max_by`/`min_by` comparators (the NaN-arrival bug class).
+fn total_cmp_floats(f: &SourceFile, out: &mut Vec<Violation>) {
+    let t = &f.tokens;
+    for i in 0..t.len() {
+        if t[i].test {
+            continue;
+        }
+        match ident(t, i) {
+            Some("partial_cmp") if is_op(t, i + 1, "(") => {
+                push(
+                    out,
+                    "total-cmp-floats",
+                    f,
+                    t[i].line,
+                    "float ordering via `partial_cmp` — use \
+                     `f64::total_cmp` (total order, NaN-safe)"
+                        .into(),
+                );
+            }
+            Some(name @ ("sort_by" | "max_by" | "min_by"))
+                if is_op(t, i + 1, "(") =>
+            {
+                let Some(close) = close_paren(t, i + 1) else { continue };
+                for j in i + 2..close {
+                    let cmp = t[j].kind == TokKind::Op
+                        && matches!(
+                            t[j].text.as_str(),
+                            "<" | ">" | "<=" | ">="
+                        );
+                    // `::<` turbofish openers are not comparisons.
+                    if cmp && !is_op(t, j - 1, "::") {
+                        push(
+                            out,
+                            "total-cmp-floats",
+                            f,
+                            t[j].line,
+                            format!(
+                                "bare `{}` comparison inside a `{name}` \
+                                 comparator — use `total_cmp`/`cmp`",
+                                t[j].text
+                            ),
+                        );
+                        break; // one finding per comparator
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `clock-discipline`: no wall-clock reads (`Instant::now`,
+/// `SystemTime`, `std::time`) outside the `Clock` impls in
+/// `coordinator/backend.rs` — virtual-clock serves and the trace oracle
+/// depend on the engine never seeing real time.
+fn clock_discipline(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.path == CLOCK_MODULE {
+        return;
+    }
+    let t = &f.tokens;
+    let mut flagged: BTreeSet<usize> = BTreeSet::new();
+    for i in 0..t.len() {
+        if t[i].test {
+            continue;
+        }
+        let hit = (ident(t, i) == Some("Instant")
+            && is_op(t, i + 1, "::")
+            && ident(t, i + 2) == Some("now"))
+            || ident(t, i) == Some("SystemTime")
+            || (ident(t, i) == Some("std")
+                && is_op(t, i + 1, "::")
+                && ident(t, i + 2) == Some("time"));
+        if hit && flagged.insert(t[i].line) {
+            push(
+                out,
+                "clock-discipline",
+                f,
+                t[i].line,
+                format!(
+                    "wall-clock read outside the `Clock` impls in \
+                     {CLOCK_MODULE} — serving time must come from \
+                     `Clock::now`"
+                ),
+            );
+        }
+    }
+}
+
+/// Non-test `EventKind::Variant` references in a file, with the first
+/// line each variant appears on.
+fn event_kind_refs(f: &SourceFile) -> BTreeMap<String, usize> {
+    let t = &f.tokens;
+    let mut refs = BTreeMap::new();
+    for i in 0..t.len() {
+        if t[i].test {
+            continue;
+        }
+        if ident(t, i) == Some("EventKind") && is_op(t, i + 1, "::") {
+            if let Some(variant) = ident(t, i + 2) {
+                refs.entry(variant.to_string()).or_insert(t[i].line);
+            }
+        }
+    }
+    refs
+}
+
+/// `trace-validator-exhaustive`: every `EventKind` variant the
+/// scheduler emits must have a matching arm in `trace/validate.rs`,
+/// otherwise the trace oracle silently skips it.
+fn trace_validator_exhaustive(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let sched = files.iter().find(|f| f.path == "coordinator/scheduler.rs");
+    let val = files.iter().find(|f| f.path == "trace/validate.rs");
+    let (Some(sched), Some(val)) = (sched, val) else {
+        return; // partial tree: nothing to cross-check
+    };
+    let handled = event_kind_refs(val);
+    for (variant, line) in event_kind_refs(sched) {
+        if !handled.contains_key(&variant) {
+            push(
+                out,
+                "trace-validator-exhaustive",
+                sched,
+                line,
+                format!(
+                    "`EventKind::{variant}` is emitted by the scheduler \
+                     but trace/validate.rs has no arm for it"
+                ),
+            );
+        }
+    }
+}
+
+/// `lease-settlement`: inside `Scheduler::serve`, fallible
+/// `ServingBackend` calls must route errors through the shared
+/// abort/settle helper — a naked `backend.x(…)?` leaks the job's lease.
+fn lease_settlement(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let Some(f) = files.iter().find(|f| f.path == "coordinator/scheduler.rs")
+    else {
+        return;
+    };
+    let t = &f.tokens;
+    // Locate the body of `fn serve`.
+    let mut body = None;
+    for i in 0..t.len() {
+        if !t[i].test
+            && ident(t, i) == Some("fn")
+            && ident(t, i + 1) == Some("serve")
+        {
+            let open = (i + 2..t.len()).find(|&k| is_op(t, k, "{"));
+            if let Some(open) = open {
+                if let Some(close) = crate::lint::lexer::delim_span(t, open) {
+                    body = Some((open, close));
+                }
+            }
+            break;
+        }
+    }
+    let Some((open, close)) = body else { return };
+    let mut i = open;
+    while i < close {
+        if ident(t, i) == Some("backend") && is_op(t, i + 1, ".") {
+            let line = t[i].line;
+            // Walk the method chain: backend.a(…).b(…)…
+            let mut k = i + 1;
+            let mut saw_call = false;
+            while is_op(t, k, ".")
+                && ident(t, k + 1).is_some()
+                && is_op(t, k + 2, "(")
+            {
+                match close_paren(t, k + 2) {
+                    Some(end) => {
+                        saw_call = true;
+                        k = end + 1;
+                    }
+                    None => break,
+                }
+            }
+            if saw_call && is_op(t, k, "?") {
+                push(
+                    out,
+                    "lease-settlement",
+                    f,
+                    line,
+                    "fallible `ServingBackend` call escapes `serve` via a \
+                     naked `?` — route the error through the abort/settle \
+                     helper so in-flight leases are released"
+                        .into(),
+                );
+            }
+            i = k.max(i + 1);
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// Run the whole catalog over the lexed tree, sorted by (path, line,
+/// rule) for deterministic reports.
+pub fn run_rules(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        no_panic_hot_path(f, &mut out);
+        total_cmp_floats(f, &mut out);
+        clock_discipline(f, &mut out);
+    }
+    trace_validator_exhaustive(files, &mut out);
+    lease_settlement(files, &mut out);
+    out.sort_by(|a, b| {
+        (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule))
+    });
+    out
+}

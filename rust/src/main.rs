@@ -11,6 +11,8 @@
 //!                 TTFT/TPOT/throughput report (the end-to-end driver).
 //! * `trace`     — summarize / validate / export a `--trace-out` JSONL
 //!                 serving trace (Chrome trace-event JSON for Perfetto).
+//! * `lint`      — run the serving-engine invariant rules (DESIGN.md §10)
+//!                 over the source tree; non-baseline findings fail.
 //! * `calibrate` — measure real per-bucket prefill latencies on this host.
 
 use std::path::PathBuf;
@@ -51,6 +53,8 @@ USAGE:
             [--pipelined-loads | --serial-loads] [--even-cuts]
             [--trace-out FILE] [--metrics-json FILE]
   kvr trace <file.jsonl> [--validate] [--chrome out.json]
+  kvr lint  [--root rust/src] [--baseline lint-baseline.txt]
+            [--report FILE] [--update-baseline]
   kvr calibrate [--artifacts artifacts]
 
 Prefix cache: `--prefix-cache` reuses cached prompt-prefix KV across
@@ -73,8 +77,17 @@ plan, cold load, prefill chunks, decode steps/stalls, retire) as JSONL;
 `--metrics-json` dumps the full ServeMetrics (tail percentiles and
 per-phase latency attribution) as JSON. `kvr trace` summarizes a trace
 file, `--validate` audits its invariants (monotonic clock, well-formed
-lifecycles, chunk-sum TTFT), and `--chrome` exports Chrome trace-event
-JSON to open in Perfetto (ui.perfetto.dev).
+lifecycles, chunk-sum TTFT) and exits non-zero with a violation count
+when the audit fails, and `--chrome` exports Chrome trace-event JSON to
+open in Perfetto (ui.perfetto.dev).
+
+Lint: `kvr lint` runs the hand-rolled invariant rules over the serving
+engine source (no-panic-hot-path, total-cmp-floats, clock-discipline,
+trace-validator-exhaustive, lease-settlement; DESIGN.md \u{a7}10). Findings
+can be suppressed inline with a justified `kvr: allow` comment or
+grandfathered in `lint-baseline.txt`; anything else fails the run.
+`--update-baseline` rewrites the baseline from current findings with
+placeholder justifications for human review.
 ";
 
 fn main() {
@@ -102,6 +115,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
                 "serial-loads",
                 "even-cuts",
                 "validate",
+                "update-baseline",
             ],
         )?;
     match raw[0].as_str() {
@@ -110,6 +124,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "trace" => cmd_trace(&args),
+        "lint" => cmd_lint(&args),
         "calibrate" => cmd_calibrate(&args),
         other => {
             print!("{USAGE}");
@@ -352,13 +367,62 @@ fn cmd_trace(args: &Args) -> Result<()> {
         println!("chrome trace written to {out} (open in ui.perfetto.dev)");
     }
     if args.flag("validate") {
-        let check = trace.validate()?;
+        // Collect *every* invariant violation (not just the first) so
+        // the exit status carries a count the CI gate can surface.
+        let audit = trace.audit();
+        if !audit.violations.is_empty() {
+            for v in &audit.violations {
+                eprintln!("  {v}");
+            }
+            return Err(kvr::Error::Coordinator(format!(
+                "trace validation failed: {} violation(s)",
+                audit.violations.len()
+            )));
+        }
+        let check = audit.check;
         println!(
             "validate OK: {} events, {} requests ({} admitted, {} retired, \
              {} aborted)",
             check.events, check.requests, check.admitted, check.retired,
             check.aborted
         );
+    }
+    Ok(())
+}
+
+/// `kvr lint` — run the serving-engine invariant rules (DESIGN.md §10)
+/// over `--root` (default `rust/src`), filtering findings through the
+/// checked-in baseline and inline `kvr: allow` suppressions.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.str_or("root", "rust/src"));
+    let baseline_path = args.str_or("baseline", "lint-baseline.txt");
+    let outcome = kvr::lint::lint_root(&root)?;
+    if args.flag("update-baseline") {
+        let text = kvr::lint::Baseline::render(&outcome.baseline_entries());
+        std::fs::write(&baseline_path, text)?;
+        println!(
+            "{} entries written to {baseline_path} — replace each \
+             UNREVIEWED justification before committing",
+            outcome.violations.len()
+        );
+        return Ok(());
+    }
+    let baseline = if std::path::Path::new(&baseline_path).exists() {
+        kvr::lint::Baseline::parse(&std::fs::read_to_string(&baseline_path)?)?
+    } else {
+        kvr::lint::Baseline::default()
+    };
+    let report = outcome.render(&baseline);
+    print!("{report}");
+    if let Some(out) = args.get("report") {
+        std::fs::write(out, &report)?;
+        println!("report written to {out}");
+    }
+    let fresh = outcome.fresh(&baseline).len();
+    if fresh > 0 {
+        return Err(kvr::Error::Lint(format!(
+            "{fresh} violation(s) not covered by {baseline_path}"
+        )));
     }
     Ok(())
 }

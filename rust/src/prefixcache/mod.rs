@@ -181,6 +181,14 @@ pub struct PrefixCache {
     /// §7): filled lazily by the planner, one search per (suffix,
     /// offset) bucket, so steady-state planning stays O(lookup).
     partition_lut: Option<PartitionLut>,
+    /// Lease-balance telemetry (debug builds only): every successful
+    /// pin and every unpin issued through the lease API. At quiescence
+    /// — no lease outstanding — the two must be equal, or a serve
+    /// leaked pins (asserted by `Scheduler::assert_lease_quiescent`).
+    #[cfg(debug_assertions)]
+    lease_pins: u64,
+    #[cfg(debug_assertions)]
+    lease_unpins: u64,
 }
 
 impl PrefixCache {
@@ -197,6 +205,10 @@ impl PrefixCache {
             store,
             stats: CacheStats::default(),
             partition_lut: None,
+            #[cfg(debug_assertions)]
+            lease_pins: 0,
+            #[cfg(debug_assertions)]
+            lease_unpins: 0,
         }
     }
 
@@ -287,10 +299,18 @@ impl PrefixCache {
         let mut blocks = Vec::new();
         for b in plan.loaded_blocks() {
             if let Err(e) = self.store.pin(b.id) {
+                #[cfg(debug_assertions)]
+                {
+                    self.lease_unpins += blocks.len() as u64;
+                }
                 for id in blocks {
                     self.store.unpin(id);
                 }
                 return Err(e);
+            }
+            #[cfg(debug_assertions)]
+            {
+                self.lease_pins += 1;
             }
             blocks.push(b.id);
         }
@@ -299,9 +319,21 @@ impl PrefixCache {
 
     /// Release a lease (prefill done or aborted).
     pub fn release(&mut self, lease: Lease) {
+        #[cfg(debug_assertions)]
+        {
+            self.lease_unpins += lease.blocks.len() as u64;
+        }
         for id in lease.blocks {
             self.store.unpin(id);
         }
+    }
+
+    /// `(pins, unpins)` issued through the lease API so far. Debug
+    /// builds only — the counters exist to catch lease leaks in tests,
+    /// not to steer release-mode serving.
+    #[cfg(debug_assertions)]
+    pub fn lease_balance(&self) -> (u64, u64) {
+        (self.lease_pins, self.lease_unpins)
     }
 
     /// Index + admit every full block of a finished prompt (modeled runs

@@ -10,13 +10,22 @@
 //!   the request's arrival) have non-decreasing start times in emission
 //!   order — the serving clock never runs backwards;
 //! * per request, the lifecycle is well-formed: at most one
-//!   enqueue/admit/first-token/retire, chunk indices contiguous from 0
+//!   enqueue/admit/plan/first-token/retire, a lease only after a plan,
+//!   a cold load only under a lease, chunk indices contiguous from 0
 //!   with a consistent total and non-decreasing causal offsets, and the
 //!   lifecycle stages in time order;
 //! * trace-derived TTFT — the sum of a request's prefill-chunk
 //!   durations — matches its `first_token` event;
 //! * on a clean serve (no abort events), every admitted request
 //!   retires; a retire always has a first token.
+//!
+//! [`Trace::audit`] collects *every* violation (what `kvr trace
+//! --validate` reports, with a count in the exit status);
+//! [`Trace::validate`] is the fail-fast form returning the first
+//! violation as an error. Both matches over [`EventKind`] are written
+//! exhaustively on purpose: adding a trace event without deciding its
+//! audit rule is a compile error here and a `kvr lint`
+//! (trace-validator-exhaustive) finding.
 
 use std::collections::BTreeMap;
 
@@ -35,28 +44,48 @@ pub struct TraceCheck {
     pub chunk_events: usize,
     pub decode_events: usize,
     pub stall_events: usize,
+    pub plan_events: usize,
+    pub lease_events: usize,
+    pub cold_load_events: usize,
     /// Last event end on the serving clock (s).
     pub span_s: f64,
+}
+
+/// Everything [`Trace::audit`] found: the census plus every invariant
+/// violation (empty on a clean trace).
+#[derive(Clone, Debug, Default)]
+pub struct TraceAudit {
+    pub check: TraceCheck,
+    pub violations: Vec<String>,
 }
 
 #[derive(Default)]
 struct ReqState {
     enqueued: Option<f64>,
     admitted: Option<f64>,
+    planned: bool,
+    leased: bool,
     chunks: Vec<(usize, usize, usize, f64, f64)>, // (index, total, offset, t, dur)
     first_token: Option<(f64, f64)>,              // (t, ttft_s)
     retired: Option<f64>,
     aborted: bool,
 }
 
+fn viol(req: u64, msg: String) -> String {
+    format!("trace invariant (req {req}): {msg}")
+}
+
 fn fail(req: u64, msg: String) -> Error {
-    Error::Coordinator(format!("trace invariant (req {req}): {msg}"))
+    Error::Coordinator(viol(req, msg))
 }
 
 impl Trace {
-    /// Audit the invariants above; returns the trace census on success.
-    pub fn validate(&self) -> Result<TraceCheck> {
+    /// Audit the invariants above, collecting every violation instead
+    /// of stopping at the first; never fails, never panics — corrupt
+    /// traces come from outside and must not tear the auditor down.
+    pub fn audit(&self) -> TraceAudit {
         let mut check = TraceCheck { events: self.events.len(), ..Default::default() };
+        let mut violations: Vec<String> = Vec::new();
         let mut last_engine_t = f64::NEG_INFINITY;
         let mut last_enqueue_t = f64::NEG_INFINITY;
         let mut reqs: BTreeMap<u64, ReqState> = BTreeMap::new();
@@ -65,33 +94,33 @@ impl Trace {
         for (i, e) in self.events.iter().enumerate() {
             if !e.t.is_finite() || e.t < 0.0 || !e.dur.is_finite() || e.dur < 0.0
             {
-                return Err(Error::Coordinator(format!(
+                violations.push(format!(
                     "trace invariant: event {i} ({}) has a bad time \
                      (t={}, dur={})",
                     e.kind.name(),
                     e.t,
                     e.dur
-                )));
+                ));
             }
             if matches!(e.kind, EventKind::Enqueued { .. }) {
                 // Enqueue timestamps are arrivals, sorted by the
                 // scheduler's admission order.
                 if e.t < last_enqueue_t {
-                    return Err(Error::Coordinator(format!(
+                    violations.push(format!(
                         "trace invariant: enqueue timestamps regress at \
                          event {i} ({} < {last_enqueue_t})",
                         e.t
-                    )));
+                    ));
                 }
                 last_enqueue_t = e.t;
             } else {
                 if e.t < last_engine_t {
-                    return Err(Error::Coordinator(format!(
+                    violations.push(format!(
                         "trace invariant: serving clock regresses at event \
                          {i} ({}: {} < {last_engine_t})",
                         e.kind.name(),
                         e.t
-                    )));
+                    ));
                 }
                 last_engine_t = e.t;
             }
@@ -101,11 +130,17 @@ impl Trace {
                 EventKind::PrefillChunk { .. } => check.chunk_events += 1,
                 EventKind::DecodeStep { .. } => check.decode_events += 1,
                 EventKind::DecodeStall { .. } => check.stall_events += 1,
+                EventKind::Plan { .. } => check.plan_events += 1,
+                EventKind::Lease { .. } => check.lease_events += 1,
+                EventKind::ColdLoad { .. } => check.cold_load_events += 1,
                 EventKind::Abort { .. } => {
                     any_abort = true;
                     check.aborted += 1;
                 }
-                _ => {}
+                EventKind::Enqueued { .. }
+                | EventKind::Admitted { .. }
+                | EventKind::FirstToken { .. }
+                | EventKind::Retire { .. } => {}
             }
 
             let Some(id) = e.req else { continue };
@@ -113,34 +148,62 @@ impl Trace {
             match &e.kind {
                 EventKind::Enqueued { .. } => {
                     if st.enqueued.replace(e.t).is_some() {
-                        return Err(fail(id, "enqueued twice".into()));
+                        violations.push(viol(id, "enqueued twice".into()));
                     }
                 }
                 EventKind::Admitted { .. } => {
                     if st.admitted.replace(e.t).is_some() {
-                        return Err(fail(id, "admitted twice".into()));
+                        violations.push(viol(id, "admitted twice".into()));
                     }
                     if let Some(enq) = st.enqueued {
                         if e.t < enq {
-                            return Err(fail(
+                            violations.push(viol(
                                 id,
                                 format!("admitted at {} before arrival {enq}", e.t),
                             ));
                         }
                     }
                 }
+                EventKind::Plan { .. } => {
+                    // The compute-or-load plan is chosen at admission,
+                    // exactly once per request.
+                    if st.admitted.is_none() {
+                        violations.push(viol(id, "plan before admission".into()));
+                    }
+                    if st.planned {
+                        violations.push(viol(id, "planned twice".into()));
+                    }
+                    st.planned = true;
+                }
+                EventKind::Lease { .. } => {
+                    // Blocks are pinned for a planned prefill only.
+                    if !st.planned {
+                        violations.push(viol(id, "lease without a plan".into()));
+                    }
+                    st.leased = true;
+                }
+                EventKind::ColdLoad { .. } => {
+                    // Reused blocks stream onto the chain only while a
+                    // lease pins them against eviction.
+                    if !st.leased {
+                        violations
+                            .push(viol(id, "cold load without a lease".into()));
+                    }
+                }
                 EventKind::PrefillChunk { index, total, offset, rows: _ } => {
-                    let adm = st.admitted.ok_or_else(|| {
-                        fail(id, "prefill chunk before admission".into())
-                    })?;
-                    if e.t < adm {
-                        return Err(fail(
+                    match st.admitted {
+                        None => violations.push(viol(
+                            id,
+                            "prefill chunk before admission".into(),
+                        )),
+                        Some(adm) if e.t < adm => violations.push(viol(
                             id,
                             format!("chunk at {} before admission {adm}", e.t),
-                        ));
+                        )),
+                        Some(_) => {}
                     }
                     if *index != st.chunks.len() {
-                        return Err(fail(
+                        violations.push(viol(
                             id,
                             format!(
                                 "chunk index {index} out of order (expected {})",
@@ -150,13 +213,13 @@ impl Trace {
                     }
                     if let Some(&(_, t0, off0, _, _)) = st.chunks.last() {
                         if *total != t0 {
-                            return Err(fail(
+                            violations.push(viol(
                                 id,
                                 format!("chunk total changed {t0} -> {total}"),
                             ));
                         }
                         if *offset < off0 {
-                            return Err(fail(
+                            violations.push(viol(
                                 id,
                                 format!("causal offset regresses {off0} -> {offset}"),
                             ));
@@ -166,22 +229,26 @@ impl Trace {
                 }
                 EventKind::FirstToken { ttft_s } => {
                     if st.first_token.replace((e.t, *ttft_s)).is_some() {
-                        return Err(fail(id, "two first tokens".into()));
+                        violations.push(viol(id, "two first tokens".into()));
                     }
                     if st.chunks.is_empty() {
-                        return Err(fail(id, "first token without a prefill".into()));
+                        violations
+                            .push(viol(id, "first token without a prefill".into()));
                     }
                 }
                 EventKind::Retire { .. } => {
                     if st.retired.replace(e.t).is_some() {
-                        return Err(fail(id, "retired twice".into()));
+                        violations.push(viol(id, "retired twice".into()));
                     }
                     if st.first_token.is_none() {
-                        return Err(fail(id, "retired without a first token".into()));
+                        violations
+                            .push(viol(id, "retired without a first token".into()));
                     }
                 }
                 EventKind::Abort { .. } => st.aborted = true,
-                _ => {}
+                EventKind::DecodeStep { .. } | EventKind::DecodeStall { .. } => {
+                    // Engine-wide spans: nothing per-request to check.
+                }
             }
         }
 
@@ -194,35 +261,41 @@ impl Trace {
                 check.retired += 1;
             }
             if let Some((ft_t, ttft)) = st.first_token {
-                let total = st.chunks[0].1;
-                if st.chunks.len() != total {
-                    return Err(fail(
-                        id,
-                        format!(
-                            "finished with {} of {total} chunk events",
-                            st.chunks.len()
-                        ),
-                    ));
-                }
-                let last = st.chunks.last().unwrap();
-                if ft_t + 1e-12 < last.3 {
-                    return Err(fail(
-                        id,
-                        format!("first token at {ft_t} before last chunk {}", last.3),
-                    ));
-                }
-                // Trace-derived TTFT: the chunk durations sum to the
-                // job's chain occupancy — exactly what the backend
-                // reported as TTFT (same values, same addition order).
-                let derived: f64 = st.chunks.iter().map(|c| c.4).sum();
-                let tol = 1e-9 * ttft.abs().max(1e-12);
-                if (derived - ttft).abs() > tol {
-                    return Err(fail(
-                        id,
-                        format!(
-                            "trace-derived TTFT {derived} != first-token TTFT {ttft}"
-                        ),
-                    ));
+                // A first token with no chunks was already reported at
+                // the event ("first token without a prefill"), so the
+                // chunk-shape checks only run when chunks exist.
+                if let (Some(&first), Some(&last)) =
+                    (st.chunks.first(), st.chunks.last())
+                {
+                    let total = first.1;
+                    if st.chunks.len() != total {
+                        violations.push(viol(
+                            id,
+                            format!(
+                                "finished with {} of {total} chunk events",
+                                st.chunks.len()
+                            ),
+                        ));
+                    }
+                    if ft_t + 1e-12 < last.3 {
+                        violations.push(viol(
+                            id,
+                            format!("first token at {ft_t} before last chunk {}", last.3),
+                        ));
+                    }
+                    // Trace-derived TTFT: the chunk durations sum to the
+                    // job's chain occupancy — exactly what the backend
+                    // reported as TTFT (same values, same addition order).
+                    let derived: f64 = st.chunks.iter().map(|c| c.4).sum();
+                    let tol = 1e-9 * ttft.abs().max(1e-12);
+                    if (derived - ttft).abs() > tol {
+                        violations.push(viol(
+                            id,
+                            format!(
+                                "trace-derived TTFT {derived} != first-token TTFT {ttft}"
+                            ),
+                        ));
+                    }
                 }
             }
             // A clean serve settles everything it admitted; after an
@@ -233,10 +306,20 @@ impl Trace {
                 && st.retired.is_none()
                 && !st.aborted
             {
-                return Err(fail(id, "admitted but never retired".into()));
+                violations.push(viol(id, "admitted but never retired".into()));
             }
         }
-        Ok(check)
+        TraceAudit { check, violations }
+    }
+
+    /// Fail-fast audit: returns the trace census on success, the first
+    /// violation (in [`Trace::audit`]'s collection order) as an error.
+    pub fn validate(&self) -> Result<TraceCheck> {
+        let audit = self.audit();
+        match audit.violations.into_iter().next() {
+            None => Ok(audit.check),
+            Some(first) => Err(Error::Coordinator(first)),
+        }
     }
 
     /// The acceptance oracle: retire-ordered trace TTFTs must equal the
@@ -331,6 +414,17 @@ mod tests {
 
     fn ev(t: f64, dur: f64, req: Option<u64>, kind: EventKind) -> TraceEvent {
         TraceEvent { t, dur, req, kind }
+    }
+
+    fn plan_kind() -> EventKind {
+        EventKind::Plan {
+            matched_tokens: 64,
+            reuse_tokens: 32,
+            est_ttft_s: 0.6,
+            applied: true,
+            loaded_blocks: 1,
+            recomputed_blocks: 1,
+        }
     }
 
     fn clean_trace() -> Trace {
@@ -429,8 +523,9 @@ mod tests {
         let err = t.validate().unwrap_err().to_string();
         assert!(err.contains("total changed"), "{err}");
         let mut t = clean_trace();
-        if let EventKind::PrefillChunk { offset, .. } = &mut t.events[3].kind {
-            *offset = 16;
+        // First chunk claims offset 48, second goes back to 32.
+        if let EventKind::PrefillChunk { offset, .. } = &mut t.events[2].kind {
+            *offset = 48;
         }
         let err = t.validate().unwrap_err().to_string();
         assert!(err.contains("offset regresses"), "{err}");
@@ -462,5 +557,68 @@ mod tests {
         t.events.push(retire);
         let err = t.validate().unwrap_err().to_string();
         assert!(err.contains("retired twice"), "{err}");
+    }
+
+    #[test]
+    fn audit_collects_every_violation_in_order() {
+        let mut t = clean_trace();
+        t.events.insert(2, t.events[1].clone()); // second admission
+        if let EventKind::PrefillChunk { offset, .. } = &mut t.events[3].kind {
+            *offset = 48; // and the next chunk's offset 32 regresses
+        }
+        let audit = t.audit();
+        assert_eq!(audit.violations.len(), 2, "{:?}", audit.violations);
+        assert!(audit.violations[0].contains("admitted twice"));
+        assert!(audit.violations[1].contains("offset regresses"));
+        // validate() surfaces exactly the first collected violation.
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.ends_with(&audit.violations[0]), "{err}");
+        // And a clean trace audits clean.
+        assert!(clean_trace().audit().violations.is_empty());
+    }
+
+    #[test]
+    fn plan_lease_cold_load_lifecycle_arms() {
+        // Plan before admission.
+        let mut t = clean_trace();
+        t.events.insert(1, ev(0.0, 0.0, Some(0), plan_kind()));
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("plan before admission"), "{err}");
+        // Lease without a plan.
+        let mut t = clean_trace();
+        t.events
+            .insert(2, ev(0.0, 0.0, Some(0), EventKind::Lease { blocks: 2 }));
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("lease without a plan"), "{err}");
+        // Cold load without a lease.
+        let mut t = clean_trace();
+        t.events.insert(2, ev(0.0, 0.1, Some(0), EventKind::ColdLoad {
+            blocks: 1,
+            rows: 32,
+            pipelined: true,
+        }));
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("cold load without a lease"), "{err}");
+        // Planned twice.
+        let mut t = clean_trace();
+        t.events.insert(2, ev(0.0, 0.0, Some(0), plan_kind()));
+        t.events.insert(3, ev(0.0, 0.0, Some(0), plan_kind()));
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("planned twice"), "{err}");
+        // The full admission chain in emission order is clean, and the
+        // census counts each stage.
+        let mut t = clean_trace();
+        t.events.insert(2, ev(0.0, 0.0, Some(0), plan_kind()));
+        t.events
+            .insert(3, ev(0.0, 0.0, Some(0), EventKind::Lease { blocks: 2 }));
+        t.events.insert(4, ev(0.0, 0.1, Some(0), EventKind::ColdLoad {
+            blocks: 1,
+            rows: 32,
+            pipelined: true,
+        }));
+        let check = t.validate().unwrap();
+        assert_eq!(check.plan_events, 1);
+        assert_eq!(check.lease_events, 1);
+        assert_eq!(check.cold_load_events, 1);
     }
 }

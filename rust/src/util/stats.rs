@@ -27,7 +27,10 @@ impl Summary {
         let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
             / n as f64;
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp: a single NaN sample (a bug
+        // upstream, but one worth reporting) must not panic the
+        // metrics report that would surface it.
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Self {
             n,
             mean,
@@ -275,6 +278,17 @@ mod tests {
     }
 
     #[test]
+    fn summary_of_nan_sample_does_not_panic() {
+        // Regression: the old partial_cmp().unwrap() comparator panicked
+        // here, killing the report that would have exposed the bad
+        // sample. total_cmp sorts NaN above every number instead.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+    }
+
+    #[test]
     fn percentiles_interpolate() {
         let sorted: Vec<f64> = (0..=100).map(|x| x as f64).collect();
         assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
@@ -368,7 +382,7 @@ mod tests {
             h.record(x);
             xs.push(x);
         }
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         for &(q, pct) in &[(0.5, 50.0), (0.95, 95.0), (0.99, 99.0), (0.999, 99.9)]
         {
             let exact = percentile_sorted(&xs, pct);

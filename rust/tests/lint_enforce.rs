@@ -1,0 +1,177 @@
+//! The lint gate, turned on itself: the repo must lint clean against
+//! the checked-in baseline, the baseline must stay honest (no hot-path
+//! entries, every justification reviewed), and `kvr trace --validate`
+//! must fail loudly on a corrupted trace (the CI contract).
+
+use std::path::Path;
+use std::process::Command;
+
+use kvr::lint::{lint_root, Baseline};
+use kvr::trace::{EventKind, Trace, TraceEvent};
+
+const HOT_MODULES: [&str; 3] = ["coordinator/", "prefixcache/", "trace/"];
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn repo_baseline() -> Baseline {
+    let text = std::fs::read_to_string(repo_root().join("lint-baseline.txt"))
+        .expect("lint-baseline.txt at the repo root");
+    Baseline::parse(&text).expect("baseline parses")
+}
+
+#[test]
+fn repo_lints_clean_against_the_checked_in_baseline() {
+    let outcome = lint_root(&repo_root().join("rust/src")).unwrap();
+    let baseline = repo_baseline();
+    let fresh = outcome.fresh(&baseline);
+    assert!(
+        fresh.is_empty(),
+        "fresh lint violations — fix them or (justified) baseline them:\n{}",
+        outcome.render(&baseline)
+    );
+}
+
+#[test]
+fn baseline_has_no_hot_path_entries_and_every_entry_is_reviewed() {
+    let baseline = repo_baseline();
+    for e in &baseline.entries {
+        for prefix in HOT_MODULES {
+            assert!(
+                !e.path.starts_with(prefix),
+                "baseline entry in burned-down hot module: {} ({})",
+                e.path,
+                e.rule
+            );
+        }
+        assert!(
+            !e.justification.contains("UNREVIEWED"),
+            "unreviewed baseline entry: {}\t{}",
+            e.rule,
+            e.path
+        );
+    }
+}
+
+/// A well-formed single-request trace (mirrors the validator fixture).
+fn clean_trace() -> Trace {
+    Trace {
+        events: vec![
+            TraceEvent {
+                t: 0.0,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::Enqueued { prompt_tokens: 64, max_new_tokens: 2 },
+            },
+            TraceEvent {
+                t: 0.0,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::Admitted { queue_s: 0.0 },
+            },
+            TraceEvent {
+                t: 0.0,
+                dur: 0.5,
+                req: Some(0),
+                kind: EventKind::PrefillChunk {
+                    index: 0,
+                    total: 1,
+                    offset: 0,
+                    rows: 64,
+                },
+            },
+            TraceEvent {
+                t: 0.5,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::FirstToken { ttft_s: 0.5 },
+            },
+            TraceEvent {
+                t: 0.5,
+                dur: 0.0,
+                req: Some(0),
+                kind: EventKind::Retire {
+                    e2e_s: 0.5,
+                    tokens_out: 2,
+                    queue_s: 0.0,
+                    plan_s: 0.0,
+                    load_s: 0.0,
+                    compute_s: 0.5,
+                    decode_s: 0.0,
+                    stall_s: 0.0,
+                },
+            },
+        ],
+    }
+}
+
+/// Two independent corruptions: a duplicated admission and a dropped
+/// retire — audit must report both.
+fn corrupted_trace() -> Trace {
+    let mut t = clean_trace();
+    let admit = t.events[1].clone();
+    t.events.insert(2, admit);
+    t.events.pop();
+    t
+}
+
+#[test]
+fn audit_reports_every_corruption_in_a_jsonl_round_trip() {
+    let corrupted = corrupted_trace();
+    // Round-trip through JSONL: what the CLI reads is what we audit.
+    let back = Trace::parse_jsonl(&corrupted.to_jsonl()).unwrap();
+    let audit = back.audit();
+    assert!(audit.violations.len() >= 2, "{:?}", audit.violations);
+    assert!(
+        audit.violations.iter().any(|v| v.contains("admitted twice")),
+        "{:?}",
+        audit.violations
+    );
+    assert!(
+        audit.violations.iter().any(|v| v.contains("never retired")),
+        "{:?}",
+        audit.violations
+    );
+}
+
+#[test]
+fn trace_validate_cli_exits_non_zero_on_a_corrupted_trace() {
+    let dir = std::env::temp_dir();
+    let bad = dir.join(format!("kvr_corrupt_{}.jsonl", std::process::id()));
+    std::fs::write(&bad, corrupted_trace().to_jsonl()).unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_kvr"))
+        .args(["trace", bad.to_str().unwrap(), "--validate"])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&bad).ok();
+    assert!(
+        !out.status.success(),
+        "corrupted trace must fail validation: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("violation"), "stderr: {stderr}");
+    // Every violation is listed, not just the first.
+    assert!(stderr.contains("admitted twice"), "stderr: {stderr}");
+    assert!(stderr.contains("never retired"), "stderr: {stderr}");
+
+    // And the same binary accepts the clean form.
+    let good = dir.join(format!("kvr_clean_{}.jsonl", std::process::id()));
+    std::fs::write(&good, clean_trace().to_jsonl()).unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_kvr"))
+        .args(["trace", good.to_str().unwrap(), "--validate"])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&good).ok();
+    assert!(
+        out.status.success(),
+        "clean trace must validate: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("validate OK"),
+        "{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}

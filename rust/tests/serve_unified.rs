@@ -269,6 +269,7 @@ fn unified_engine_matches_pre_refactor_goldens_with_cache() {
     let mut sched = sim_scheduler(8)
         .with_prefix_cache(PrefixCache::new(cache_cfg()), cm.clone());
     let (got_resp, got) = sched.serve(&mut backend, reqs).unwrap();
+    sched.assert_lease_quiescent();
     assert_metrics_match(&got, &want);
     assert_responses_match(&got_resp, &want_resp);
     // The store-level stats agree with the golden run's too.
@@ -936,6 +937,8 @@ fn failed_between_chunk_decode_still_settles_the_job() {
     ];
     let err = sched.serve(&mut backend, reqs).unwrap_err().to_string();
     assert!(err.contains("injected decode failure mid-job"), "{err}");
+    // Even on the abort path every lease pin was matched by an unpin.
+    sched.assert_lease_quiescent();
 
     // Req 2's partial KV settled; only req 1's active KV remains
     // (decode-phase requests are not torn down by an aborted serve).

@@ -190,6 +190,7 @@ fn randomized_serves_validate_and_match_metrics_ttfts() {
             .with_prefix_cache(PrefixCache::new(cache_cfg()), cm.clone())
             .with_tracing();
         let (_, m) = s.serve(&mut backend, reqs).unwrap();
+        s.assert_lease_quiescent();
         let trace = s.take_trace();
         trace.validate().unwrap();
         trace.check_ttfts(&m.ttfts).unwrap();
