@@ -132,6 +132,16 @@ pub struct ServeMetrics {
     pub phase_totals: PhaseBreakdown,
     /// Requests folded into `phase_totals`.
     pub phase_requests: usize,
+    /// Fabric: serving nodes behind the router (0 = not a fabric run;
+    /// gates the fabric report line and JSON section).
+    pub fabric_nodes: usize,
+    /// Fabric: requests routed to each node (index = node id).
+    pub node_requests: Vec<usize>,
+    /// Fabric: prefix blocks streamed between nodes by the router.
+    pub peer_blocks: usize,
+    /// Fabric: requests routed to a node where at least one prefix
+    /// block was already resident at route time.
+    pub route_hits: usize,
     /// Bounded log-bucket TTFT histogram — the constant-memory tail
     /// estimate for runs too large to retain every sample (the exact
     /// vectors above stay the golden source of truth).
@@ -244,6 +254,73 @@ impl ServeMetrics {
         self.prefix_hits as f64 / self.prefix_lookups as f64
     }
 
+    /// Fraction of routed requests that landed on a node already
+    /// holding part of their prefix (0 outside fabric runs).
+    pub fn route_hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.route_hits as f64 / self.requests as f64
+    }
+
+    /// Max-over-mean per-node request imbalance: 1.0 is perfectly even,
+    /// N means one node took N× its fair share (0 outside fabric runs,
+    /// 1.0 for an empty fabric batch).
+    pub fn load_imbalance(&self) -> f64 {
+        if self.node_requests.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self.node_requests.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.node_requests.len() as f64;
+        let mut max = 0usize;
+        for &c in &self.node_requests {
+            max = max.max(c);
+        }
+        max as f64 / mean
+    }
+
+    /// Fold another run's metrics into this one — the fabric merges
+    /// per-node serve metrics this way. Sample vectors concatenate,
+    /// counters add, histograms merge; the wall clock and the maxima
+    /// take the max, because nodes run concurrently on the same
+    /// shared-origin serving clock (DESIGN.md §11). The fabric-level
+    /// fields (`fabric_nodes`, `node_requests`, `peer_blocks`,
+    /// `route_hits`) are set by the router after the merge, never
+    /// absorbed from per-node runs.
+    pub fn absorb(&mut self, other: &ServeMetrics) {
+        self.ttfts.extend_from_slice(&other.ttfts);
+        self.tpots.extend_from_slice(&other.tpots);
+        self.e2es.extend_from_slice(&other.e2es);
+        self.queue_waits.extend_from_slice(&other.queue_waits);
+        self.tokens_out += other.tokens_out;
+        self.requests += other.requests;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_hits += other.prefix_hits;
+        self.reused_tokens += other.reused_tokens;
+        self.loaded_blocks += other.loaded_blocks;
+        self.recomputed_blocks += other.recomputed_blocks;
+        self.decode_steps += other.decode_steps;
+        self.decode_batch_sum += other.decode_batch_sum;
+        self.max_decode_batch = self.max_decode_batch.max(other.max_decode_batch);
+        self.solo_steps += other.solo_steps;
+        self.batched_steps += other.batched_steps;
+        self.prefill_chunks += other.prefill_chunks;
+        self.chunked_prefills += other.chunked_prefills;
+        self.oversized_admissions += other.oversized_admissions;
+        self.max_decode_stall_s =
+            self.max_decode_stall_s.max(other.max_decode_stall_s);
+        self.phase_totals.add(&other.phase_totals);
+        self.phase_requests += other.phase_requests;
+        self.hist_ttft.merge(&other.hist_ttft);
+        self.hist_tpot.merge(&other.hist_tpot);
+        self.hist_e2e.merge(&other.hist_e2e);
+        self.hist_queue.merge(&other.hist_queue);
+    }
+
     /// Output tokens per second over the wall-clock window.
     pub fn throughput(&self) -> f64 {
         if self.wall_s <= 0.0 {
@@ -339,6 +416,17 @@ impl ServeMetrics {
                 self.recomputed_blocks,
             ));
         }
+        if self.fabric_nodes > 0 {
+            out.push_str(&format!(
+                "fabric  {} nodes   requests/node {:?}   imbalance {:.2}x   \
+                 route-hit {:.0}%   peer-blocks {}\n",
+                self.fabric_nodes,
+                self.node_requests,
+                self.load_imbalance(),
+                self.route_hit_rate() * 100.0,
+                self.peer_blocks,
+            ));
+        }
         out
     }
 
@@ -375,7 +463,7 @@ impl ServeMetrics {
                 ("max", h.max().into()),
             ])
         }
-        Json::obj(vec![
+        let mut fields: Vec<(&str, Json)> = vec![
             ("requests", self.requests.into()),
             ("tokens_out", self.tokens_out.into()),
             ("wall_s", self.wall_s.into()),
@@ -430,7 +518,23 @@ impl ServeMetrics {
                     ("recomputed_blocks", self.recomputed_blocks.into()),
                 ]),
             ),
-        ])
+        ];
+        // Fabric section only on fabric runs: single-node --metrics-json
+        // files stay byte-for-byte what they were before the router.
+        if self.fabric_nodes > 0 {
+            fields.push((
+                "fabric",
+                Json::obj(vec![
+                    ("nodes", self.fabric_nodes.into()),
+                    ("node_requests", self.node_requests.clone().into()),
+                    ("route_hits", self.route_hits.into()),
+                    ("route_hit_rate", self.route_hit_rate().into()),
+                    ("peer_blocks", self.peer_blocks.into()),
+                    ("load_imbalance", self.load_imbalance().into()),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -675,6 +779,76 @@ mod tests {
         let empty = ServeMetrics::default().to_json();
         assert_eq!(empty.get("ttft").unwrap(), &Json::Null);
         assert_eq!(empty.get("phases_mean").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn absorb_merges_samples_counters_and_maxima() {
+        let mut a = ServeMetrics::default();
+        a.record_request(0.5, &[0.1], 0.8, 0.0);
+        a.wall_s = 2.0;
+        a.record_decode_step(1);
+        a.note_decode_stall(0.2);
+        let mut b = ServeMetrics::default();
+        b.record_request(0.25, &[0.1, 0.1], 0.6, 0.1);
+        b.wall_s = 3.0;
+        b.record_decode_step(2);
+
+        let mut m = ServeMetrics::default();
+        m.absorb(&a);
+        m.absorb(&b);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.tokens_out, 5);
+        assert_eq!(m.wall_s, 3.0, "fabric wall clock is the max over nodes");
+        assert_eq!(m.ttfts, vec![0.5, 0.25]);
+        assert_eq!(m.tpots.len(), 3);
+        assert_eq!(m.decode_steps, 2);
+        assert_eq!(m.solo_steps, 1);
+        assert_eq!(m.batched_steps, 1);
+        assert_eq!(m.max_decode_batch, 2);
+        assert_eq!(m.max_decode_stall_s, 0.2);
+        assert_eq!(m.hist_ttft.count(), 2);
+        // Not a fabric run yet: no fabric report line or JSON section.
+        assert!(!m.report().contains("fabric"), "{}", m.report());
+        assert!(m.to_json().get("fabric").is_none());
+    }
+
+    #[test]
+    fn fabric_counters_report_and_roundtrip() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.0);
+        m.record_request(0.25, &[0.1], 0.6, 0.1);
+        m.wall_s = 2.0;
+        m.fabric_nodes = 2;
+        m.node_requests = vec![3, 1];
+        m.route_hits = 1;
+        m.peer_blocks = 4;
+        assert!((m.load_imbalance() - 1.5).abs() < 1e-12);
+        assert!((m.route_hit_rate() - 0.5).abs() < 1e-12);
+        let report = m.report();
+        assert!(report.contains("fabric  2 nodes"), "{report}");
+        assert!(report.contains("requests/node [3, 1]"), "{report}");
+        assert!(report.contains("imbalance 1.50x"), "{report}");
+        assert!(report.contains("route-hit 50%"), "{report}");
+        assert!(report.contains("peer-blocks 4"), "{report}");
+        let j = m.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j, "--metrics-json roundtrips the fabric section");
+        let f = back.get("fabric").unwrap();
+        assert_eq!(f.get("nodes").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            f.get("node_requests").unwrap().as_usize_vec().unwrap(),
+            vec![3, 1]
+        );
+        assert_eq!(f.get("peer_blocks").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(
+            f.get("load_imbalance").unwrap().as_f64().unwrap(),
+            m.load_imbalance()
+        );
+        // Degenerate imbalance cases.
+        assert_eq!(ServeMetrics::default().load_imbalance(), 0.0);
+        let mut empty_batch = ServeMetrics::default();
+        empty_batch.node_requests = vec![0, 0];
+        assert_eq!(empty_batch.load_imbalance(), 1.0);
     }
 
     #[test]

@@ -351,6 +351,18 @@ impl Scheduler {
         self.cache.take().map(|(pc, _)| pc)
     }
 
+    /// Borrow the attached prefix cache (None when detached) — the
+    /// fabric router's residency probes go through this.
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.cache.as_ref().map(|(pc, _)| pc)
+    }
+
+    /// Mutably borrow the attached prefix cache — the fabric router
+    /// admits peer-fetched prefix blocks and drains eviction logs here.
+    pub fn prefix_cache_mut(&mut self) -> Option<&mut PrefixCache> {
+        self.cache.as_mut().map(|(pc, _)| pc)
+    }
+
     /// Debug-build invariant: with the serve drained, every lease pin
     /// has a matching unpin — a mismatch means a serve path dropped a
     /// lease without settling it, leaving blocks unevictable forever.

@@ -1,0 +1,162 @@
+//! Global prefix index: block-chain hash → owning node.
+//!
+//! The router consults this map to land a request on the node already
+//! holding its longest reusable prefix (DESIGN.md §11). Entries are
+//! recorded when a request is routed (optimistically — the routed node
+//! admits the finished prompt after its serve) and **invalidated on
+//! node-local eviction** via [`GlobalIndex::invalidate`], so routing
+//! never chases an entry the owning store has dropped. The map is
+//! advisory either way: the router re-verifies residency against the
+//! owning node's cache before scheduling a peer fetch, so a stale entry
+//! costs a lookup, never a wrong transfer.
+
+use std::collections::HashMap;
+
+use crate::prefixcache::BlockId;
+
+/// Block-chain hash → owning node (one owner per block; the most
+/// recent recording wins, matching where the chain will next be
+/// admitted).
+#[derive(Clone, Debug, Default)]
+pub struct GlobalIndex {
+    owner: HashMap<BlockId, usize>,
+}
+
+impl GlobalIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.owner.is_empty()
+    }
+
+    /// Node currently recorded as owning `id`, if any.
+    pub fn owner_of(&self, id: BlockId) -> Option<usize> {
+        self.owner.get(&id).copied()
+    }
+
+    /// Record `node` as the owner of every block in `ids` (a routed
+    /// request's whole chain: the node admits it after the serve).
+    pub fn record(&mut self, node: usize, ids: &[BlockId]) {
+        for &id in ids {
+            self.owner.insert(id, node);
+        }
+    }
+
+    /// Drop `id` **iff** `node` is its recorded owner — an eviction at
+    /// a non-owning replica must not erase the owner's entry. Returns
+    /// whether the entry was removed.
+    pub fn invalidate(&mut self, node: usize, id: BlockId) -> bool {
+        match self.owner.get(&id) {
+            Some(&o) if o == node => {
+                self.owner.remove(&id);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Longest-prefix affinity walk: the owner of `ids[0]` is the
+    /// candidate, and the run extends while consecutive blocks agree on
+    /// that owner. Returns `(node, run_blocks)`; `None` when the first
+    /// block is unindexed (a cold chain has no affinity).
+    pub fn affinity(&self, ids: &[BlockId]) -> Option<(usize, usize)> {
+        let first = ids.first()?;
+        let node = self.owner_of(*first)?;
+        let run = ids
+            .iter()
+            .take_while(|id| self.owner_of(**id) == Some(node))
+            .count();
+        Some((node, run))
+    }
+
+    /// Consistent placement for an unindexed chain: a stateless hash of
+    /// the head block over `nodes`, so every router instance sends the
+    /// same cold prefix to the same node without coordination.
+    pub fn consistent_node(id: BlockId, nodes: usize) -> usize {
+        if nodes <= 1 {
+            return 0;
+        }
+        // Fold the 128-bit chain hash to 64 bits and remix (SplitMix64
+        // finalizer) so consecutive chain hashes spread evenly.
+        let mut z = (id >> 64) as u64 ^ id as u64;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z % nodes as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefixcache::chain_ids;
+
+    #[test]
+    fn record_and_affinity_walk() {
+        let tokens: Vec<i32> = (0..128).collect();
+        let ids = chain_ids(&tokens, 32); // 4 blocks
+        assert_eq!(ids.len(), 4);
+        let mut gi = GlobalIndex::new();
+        assert!(gi.affinity(&ids).is_none(), "cold chain has no affinity");
+
+        gi.record(2, &ids);
+        assert_eq!(gi.len(), 4);
+        assert_eq!(gi.affinity(&ids), Some((2, 4)));
+
+        // A different node takes over the tail: the leading run shrinks
+        // to the head still owned by node 2.
+        gi.record(0, &ids[2..]);
+        assert_eq!(gi.affinity(&ids), Some((2, 2)));
+        // The tail's own chain (as a fresh head) points at node 0.
+        assert_eq!(gi.owner_of(ids[3]), Some(0));
+    }
+
+    #[test]
+    fn invalidate_is_owner_guarded() {
+        let ids = chain_ids(&(0..64).collect::<Vec<i32>>(), 32);
+        let mut gi = GlobalIndex::new();
+        gi.record(1, &ids);
+        // An eviction at a non-owner is a no-op.
+        assert!(!gi.invalidate(0, ids[0]));
+        assert_eq!(gi.owner_of(ids[0]), Some(1));
+        // The owner's eviction removes the entry.
+        assert!(gi.invalidate(1, ids[0]));
+        assert_eq!(gi.owner_of(ids[0]), None);
+        assert!(!gi.invalidate(1, ids[0]), "second invalidate is a no-op");
+        // The chain now has no affinity (head gone) even though the
+        // second block is still indexed.
+        assert!(gi.affinity(&ids).is_none());
+        assert_eq!(gi.len(), 1);
+    }
+
+    #[test]
+    fn consistent_node_is_stable_and_in_range() {
+        let ids = chain_ids(&(0..4096).collect::<Vec<i32>>(), 32);
+        for &n in &[1usize, 2, 4, 8] {
+            for &id in &ids {
+                let a = GlobalIndex::consistent_node(id, n);
+                assert!(a < n);
+                assert_eq!(a, GlobalIndex::consistent_node(id, n));
+            }
+        }
+        // Over many distinct heads the placement spreads: no node takes
+        // everything at 4 nodes.
+        let mut counts = [0usize; 4];
+        for &id in &ids {
+            counts[GlobalIndex::consistent_node(id, 4)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "degenerate spread {counts:?}");
+    }
+
+    #[test]
+    fn zero_or_one_node_degenerates_to_node_zero() {
+        assert_eq!(GlobalIndex::consistent_node(12345, 0), 0);
+        assert_eq!(GlobalIndex::consistent_node(12345, 1), 0);
+    }
+}

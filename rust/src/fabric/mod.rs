@@ -1,0 +1,588 @@
+//! Multi-node serving fabric: affinity routing over per-node engines
+//! with cross-node prefix sharing (DESIGN.md §11).
+//!
+//! The paper parallelizes one prompt *inside* a cluster; this layer
+//! shards the engine itself. A [`RouterBackend`] owns N independent
+//! nodes — each a [`Scheduler`] over its own [`SimBackend`] and
+//! per-node prefix cache — and routes every request before any node
+//! serves:
+//!
+//! * **affinity** — longest-prefix walk over the [`GlobalIndex`]
+//!   (block-chain hash → owning node) with a load-aware tiebreak,
+//!   falling back to consistent hashing of the head block for cold
+//!   chains, so sharers of a prefix land where its KV already lives;
+//! * **random** / **rr** — index-blind baselines for the scaling bench.
+//!
+//! On a partial hit at the routed node, the missing prefix blocks
+//! stream from the owning peer over [`net::Network`](crate::net) p2p
+//! links and are admitted **cold**, so the node's compute-or-load
+//! planner prices them exactly like cold-tier loads (the link is built
+//! with the cache's `cold_load_bw`/`cold_load_latency`) and the
+//! pipelined-prefill machinery overlaps the fetch for free. Peer
+//! exchange runs under the affinity policy only — the index-blind
+//! baselines model routers that cannot orchestrate it.
+//!
+//! Clock semantics: every node serve starts a fresh
+//! [`VirtualClock`](crate::coordinator::VirtualClock) at the shared
+//! t = 0 origin. Routed nodes are independent after the (pre-serve)
+//! routing pass, so serving them sequentially is equivalent to running
+//! them concurrently on one unified clock; the fabric wall clock is the
+//! max over node wall clocks, and all traces merge onto the one
+//! timeline.
+
+pub mod index;
+
+pub use index::GlobalIndex;
+
+use crate::coordinator::{
+    GenRequest, GenResponse, Scheduler, ServeMetrics, ServingBackend,
+    SimBackend,
+};
+use crate::error::{Error, Result};
+use crate::net::Network;
+use crate::prefixcache::{chain_ids, BlockId, CacheStats};
+use crate::trace::{EventKind, Trace, Tracer};
+use crate::util::rng::Rng;
+
+/// Peer-link pricing when no node has a prefix cache attached (matches
+/// [`crate::prefixcache::PrefixCacheConfig`]'s defaults).
+const DEFAULT_PEER_BW: f64 = 10e9;
+const DEFAULT_PEER_LATENCY: f64 = 1e-3;
+
+/// Where a request lands (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Longest-prefix affinity over the global index, load-aware
+    /// tiebreak, consistent-hash fallback for cold chains.
+    Affinity,
+    /// Uniform random node (index-blind baseline).
+    Random,
+    /// Cycle through nodes in order (index-blind baseline).
+    RoundRobin,
+}
+
+impl RoutingPolicy {
+    /// Parse a `--routing` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "affinity" => Ok(Self::Affinity),
+            "random" => Ok(Self::Random),
+            "rr" | "round-robin" | "roundrobin" => Ok(Self::RoundRobin),
+            other => Err(Error::Cli(format!(
+                "--routing: `{other}` is not one of affinity|random|rr"
+            ))),
+        }
+    }
+
+    /// Stable wire name (trace events, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Affinity => "affinity",
+            Self::Random => "random",
+            Self::RoundRobin => "rr",
+        }
+    }
+}
+
+/// One serving node: an engine plus its modeled substrate.
+struct FabricNode {
+    sched: Scheduler,
+    backend: SimBackend,
+}
+
+/// What the router decided for one request, surfaced as its `route`
+/// trace event and folded into the fabric metrics.
+struct RouteDecision {
+    node: usize,
+    /// Prefix blocks already resident at the routed node (pre-fetch).
+    matched: usize,
+    /// Blocks streamed in from owning peers.
+    peer: usize,
+    /// Peer-fetch span on the serving clock (0 when nothing streamed).
+    dur: f64,
+}
+
+/// The multi-node front end: routes each request to one of N per-node
+/// engines, streams missing prefix blocks between nodes, and merges
+/// per-node responses, metrics, and traces onto one timeline.
+pub struct RouterBackend {
+    nodes: Vec<FabricNode>,
+    index: GlobalIndex,
+    policy: RoutingPolicy,
+    rng: Rng,
+    rr_next: usize,
+    tracer: Tracer,
+}
+
+impl RouterBackend {
+    pub fn new(policy: RoutingPolicy, seed: u64) -> Self {
+        Self {
+            nodes: Vec::new(),
+            index: GlobalIndex::new(),
+            policy,
+            rng: Rng::new(seed),
+            rr_next: 0,
+            tracer: Tracer::disabled(),
+        }
+    }
+
+    /// Add one serving node (engine + backend). Nodes are addressed by
+    /// insertion order.
+    pub fn add_node(&mut self, mut sched: Scheduler, backend: SimBackend) {
+        if self.tracer.is_on() {
+            sched.enable_tracing();
+        }
+        self.nodes.push(FabricNode { sched, backend });
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// The routing view of block ownership (tests assert the
+    /// eviction-invalidation contract through this).
+    pub fn global_index(&self) -> &GlobalIndex {
+        &self.index
+    }
+
+    /// Per-node cache statistics (None when node `i` has no cache or is
+    /// out of range).
+    pub fn node_prefix_stats(&self, i: usize) -> Option<&CacheStats> {
+        self.nodes.get(i).and_then(|n| n.sched.prefix_cache_stats())
+    }
+
+    /// Record route events and per-node serve traces; drain the merged
+    /// timeline with [`Self::take_trace`] after each serve.
+    pub fn enable_tracing(&mut self) {
+        self.tracer = Tracer::enabled();
+        for n in &mut self.nodes {
+            n.sched.enable_tracing();
+        }
+    }
+
+    /// Merged fabric trace: router `route` events plus every node's
+    /// events, stable-sorted onto the one shared-origin timeline (a
+    /// route event precedes same-instant node events).
+    pub fn take_trace(&mut self) -> Trace {
+        let mut events = self.tracer.take().events;
+        for n in &mut self.nodes {
+            events.extend(n.sched.take_trace().events);
+        }
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Trace { events }
+    }
+
+    /// Cache block size the router hashes chains with (the first
+    /// cache-bearing node's; 512 when no node has a cache — routing
+    /// still wants stable chain hashes for consistent placement).
+    fn block_tokens(&self) -> usize {
+        self.nodes
+            .iter()
+            .find_map(|n| n.sched.prefix_cache().map(|pc| pc.config().block_tokens))
+            .unwrap_or(512)
+    }
+
+    /// Peer links priced exactly like the planner's cold tier, so a
+    /// cross-node fetch and a local cold load cost the same seconds.
+    fn make_net(&self) -> Option<Network> {
+        if self.nodes.len() < 2 {
+            return None;
+        }
+        let (bw, latency) = self
+            .nodes
+            .iter()
+            .find_map(|n| {
+                n.sched.prefix_cache().map(|pc| {
+                    (pc.config().cold_load_bw, pc.config().cold_load_latency)
+                })
+            })
+            .unwrap_or((DEFAULT_PEER_BW, DEFAULT_PEER_LATENCY));
+        Some(Network::new(self.nodes.len(), bw, latency))
+    }
+
+    fn least_loaded(loads: &[usize]) -> usize {
+        let mut best = 0usize;
+        for (i, &l) in loads.iter().enumerate() {
+            if l < loads[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Affinity placement: the longest-prefix owner unless it is loaded
+    /// past twice the lightest node (plus this request), then the
+    /// lightest node; cold chains consistent-hash their head block.
+    fn affinity_node(
+        &self, ids: &[BlockId], loads: &[usize], req: &GenRequest,
+    ) -> usize {
+        let n = self.nodes.len();
+        let least = Self::least_loaded(loads);
+        let Some((cand, run)) = self.index.affinity(ids) else {
+            return match ids.first() {
+                Some(&head) => GlobalIndex::consistent_node(head, n),
+                None => least,
+            };
+        };
+        if run == 0 || cand >= n {
+            return least;
+        }
+        let cost = req.tokens.len() + req.max_new_tokens;
+        if loads[cand] > 2 * loads[least] + cost {
+            least
+        } else {
+            cand
+        }
+    }
+
+    /// Stream the missing prefix blocks of `req` from their owning
+    /// peers to `node`, admitting them cold. Returns `(blocks_fetched,
+    /// last_receive_time)`. Only the contiguous run extending the local
+    /// resident prefix is fetched — a chain with a hole past the hole
+    /// is useless to the planner's leading-run cut.
+    fn fetch_peer_blocks(
+        &mut self, node: usize, ids: &[BlockId], matched: usize,
+        req: &GenRequest, t0: f64, net: &mut Network,
+    ) -> Result<(usize, f64)> {
+        if self.nodes[node].sched.prefix_cache().is_none() {
+            return Ok((0, t0));
+        }
+        let bt = self.block_tokens();
+        let block_bytes = self.nodes[node].backend.model().kv_bytes_per_token()
+            as f64
+            * bt as f64;
+        // Walk past the local run: locally resident blocks extend the
+        // run for free; owner-verified peer blocks are fetch candidates;
+        // the first block that is neither ends the usable prefix.
+        let mut covered = matched;
+        let mut fetches: Vec<usize> = Vec::new();
+        for (i, &id) in ids.iter().enumerate().skip(matched) {
+            let local = self.nodes[node]
+                .sched
+                .prefix_cache()
+                .is_some_and(|pc| pc.has_block(id));
+            if local {
+                covered = i + 1;
+                continue;
+            }
+            let Some(p) = self.index.owner_of(id) else { break };
+            if p == node || p >= self.nodes.len() {
+                break;
+            }
+            // The index is advisory: re-verify residency at the owner
+            // (it may have evicted since, or the entry may be an
+            // optimistic record the owner never materialized).
+            let resident = self.nodes[p]
+                .sched
+                .prefix_cache()
+                .is_some_and(|pc| pc.has_block(id));
+            if !resident {
+                break;
+            }
+            fetches.push(p);
+            covered = i + 1;
+        }
+        if fetches.is_empty() {
+            return Ok((0, t0));
+        }
+        let mut done = t0;
+        for &p in &fetches {
+            let t = net.send(p, node, block_bytes, bt as f64, t0)?;
+            done = done.max(t);
+        }
+        let fetched = match self.nodes[node].sched.prefix_cache_mut() {
+            Some(pc) => pc.admit_fetched_prefix(&req.tokens, covered),
+            None => 0,
+        };
+        Ok((fetched, done))
+    }
+
+    /// Route one request: pick the node, probe its resident prefix,
+    /// stream peer blocks (affinity only), and record the chain in the
+    /// global index.
+    fn route(
+        &mut self, req: &GenRequest, loads: &[usize],
+        net: &mut Option<Network>,
+    ) -> Result<RouteDecision> {
+        let n = self.nodes.len();
+        let ids = chain_ids(&req.tokens, self.block_tokens());
+        let node = match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let k = self.rr_next % n;
+                self.rr_next = self.rr_next.wrapping_add(1);
+                k
+            }
+            RoutingPolicy::Random => self.rng.range(0, n),
+            RoutingPolicy::Affinity => self.affinity_node(&ids, loads, req),
+        };
+        let matched = self.nodes[node]
+            .sched
+            .prefix_cache()
+            .map_or(0, |pc| pc.resident_prefix_blocks(&req.tokens));
+        let t0 = req.arrival.max(0.0);
+        let mut peer = 0usize;
+        let mut done = t0;
+        if self.policy == RoutingPolicy::Affinity {
+            if let Some(net) = net.as_mut() {
+                (peer, done) =
+                    self.fetch_peer_blocks(node, &ids, matched, req, t0, net)?;
+            }
+            // Optimistic: the routed node admits this chain after its
+            // serve, so same-template requests later in the batch
+            // already co-locate. Eviction reconciliation (post-serve
+            // `take_dropped` → `invalidate`) keeps the map honest.
+            self.index.record(node, &ids);
+        }
+        Ok(RouteDecision { node, matched, peer, dur: (done - t0).max(0.0) })
+    }
+
+    /// Serve a batch across the fabric: route every request in arrival
+    /// order, serve each node's share on its own shared-origin virtual
+    /// clock, then merge responses (request order), metrics (fabric
+    /// wall clock = max over nodes), and eviction invalidations.
+    pub fn serve(
+        &mut self, requests: Vec<GenRequest>,
+    ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Err(Error::Coordinator(
+                "fabric serve with no nodes attached".into(),
+            ));
+        }
+        // Same contract as the per-node engine: reject a poisoned
+        // arrival before any routing state mutates.
+        if let Some(bad) = requests.iter().find(|r| !r.arrival.is_finite()) {
+            return Err(Error::Coordinator(format!(
+                "request {} has a non-finite arrival ({})",
+                bad.id, bad.arrival
+            )));
+        }
+        let mut requests = requests;
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+
+        let mut net = self.make_net();
+        let mut per_node: Vec<Vec<GenRequest>> =
+            (0..n).map(|_| Vec::new()).collect();
+        // Outstanding routed work per node (prompt + decode budget
+        // tokens), the load the affinity tiebreak balances against.
+        let mut loads = vec![0usize; n];
+        let mut route_hits = 0usize;
+        let mut peer_blocks = 0usize;
+        for req in requests {
+            let d = self.route(&req, &loads, &mut net)?;
+            loads[d.node] += req.tokens.len() + req.max_new_tokens;
+            if d.matched > 0 {
+                route_hits += 1;
+            }
+            peer_blocks += d.peer;
+            self.tracer.emit(
+                req.arrival.max(0.0),
+                d.dur,
+                Some(req.id),
+                EventKind::Route {
+                    node: d.node,
+                    policy: self.policy.name().to_string(),
+                    matched_blocks: d.matched,
+                    peer_blocks: d.peer,
+                },
+            );
+            per_node[d.node].push(req);
+        }
+
+        let counts: Vec<usize> = per_node.iter().map(Vec::len).collect();
+        let mut merged = ServeMetrics::default();
+        let mut responses: Vec<GenResponse> = Vec::new();
+        for (i, reqs) in per_node.into_iter().enumerate() {
+            let node = &mut self.nodes[i];
+            let (resp, m) = node.sched.serve(&mut node.backend, reqs)?;
+            merged.absorb(&m);
+            responses.extend(resp);
+            // Node-local evictions during the serve invalidate their
+            // global-index entries — routing never chases an entry the
+            // owning store has dropped.
+            if let Some(pc) = node.sched.prefix_cache_mut() {
+                for id in pc.take_dropped() {
+                    self.index.invalidate(i, id);
+                }
+            }
+        }
+        responses.sort_by_key(|r| r.id);
+        merged.fabric_nodes = n;
+        merged.node_requests = counts;
+        merged.route_hits = route_hits;
+        merged.peer_blocks = peer_blocks;
+        Ok((responses, merged))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{hardware_by_name, model_by_name};
+    use crate::coordinator::SchedulerConfig;
+    use crate::prefixcache::{PrefixCache, PrefixCacheConfig};
+
+    fn cache_cfg() -> PrefixCacheConfig {
+        PrefixCacheConfig {
+            block_tokens: 256,
+            hot_capacity_tokens: 64 * 256,
+            cold_capacity_tokens: 512 * 256,
+            cold_load_bw: 300e9,
+            cold_load_latency: 1e-4,
+            ..PrefixCacheConfig::default()
+        }
+    }
+
+    fn router(nodes: usize, policy: RoutingPolicy, cache: bool) -> RouterBackend {
+        let model = model_by_name("llama7b").unwrap();
+        let hw = hardware_by_name("a100-300gbps").unwrap();
+        let mut r = RouterBackend::new(policy, 7);
+        for _ in 0..nodes {
+            let backend = SimBackend::new(model.clone(), hw.clone(), 4);
+            let mut sched = Scheduler::new(SchedulerConfig {
+                max_active: usize::MAX,
+                decode_batch: 8,
+                ..SchedulerConfig::default()
+            });
+            if cache {
+                let cm = backend.cost_model().clone();
+                sched.attach_prefix_cache(PrefixCache::new(cache_cfg()), cm);
+            }
+            r.add_node(sched, backend);
+        }
+        r
+    }
+
+    fn reqs(n: u64, shared: usize, tail: usize) -> Vec<GenRequest> {
+        (0..n)
+            .map(|id| {
+                let mut tokens: Vec<i32> = (0..shared as i32).collect();
+                tokens.extend((0..tail as i32).map(|i| i * 31 + 1 + id as i32));
+                GenRequest {
+                    id,
+                    tokens,
+                    max_new_tokens: 4,
+                    arrival: id as f64 * 0.05,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn policy_parse_roundtrips_and_rejects_unknown() {
+        assert_eq!(RoutingPolicy::parse("affinity").unwrap(), RoutingPolicy::Affinity);
+        assert_eq!(RoutingPolicy::parse("random").unwrap(), RoutingPolicy::Random);
+        for rr in ["rr", "round-robin", "roundrobin"] {
+            assert_eq!(RoutingPolicy::parse(rr).unwrap(), RoutingPolicy::RoundRobin);
+        }
+        let err = RoutingPolicy::parse("nearest").unwrap_err().to_string();
+        assert!(err.contains("`nearest`"), "{err}");
+        assert_eq!(RoutingPolicy::Affinity.name(), "affinity");
+        assert_eq!(RoutingPolicy::RoundRobin.name(), "rr");
+    }
+
+    #[test]
+    fn empty_fabric_is_an_error_not_a_panic() {
+        let mut r = RouterBackend::new(RoutingPolicy::Affinity, 1);
+        let err = r.serve(reqs(1, 256, 64)).unwrap_err().to_string();
+        assert!(err.contains("no nodes"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_arrival_rejected_before_routing() {
+        let mut r = router(2, RoutingPolicy::Affinity, true);
+        let mut rs = reqs(2, 256, 64);
+        rs[1].arrival = f64::NAN;
+        let err = r.serve(rs).unwrap_err().to_string();
+        assert!(err.contains("non-finite arrival"), "{err}");
+        assert!(r.global_index().is_empty(), "no routing state on reject");
+    }
+
+    #[test]
+    fn round_robin_cycles_nodes_in_order() {
+        let mut r = router(3, RoutingPolicy::RoundRobin, false);
+        let (_, m) = r.serve(reqs(6, 512, 64)).unwrap();
+        assert_eq!(m.fabric_nodes, 3);
+        assert_eq!(m.node_requests, vec![2, 2, 2]);
+        // The counter persists across serves: the next batch continues
+        // the cycle rather than restarting at node 0.
+        let (_, m2) = r.serve(reqs(2, 512, 64)).unwrap();
+        assert_eq!(m2.node_requests, vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn random_routing_is_seed_deterministic() {
+        let mut a = router(4, RoutingPolicy::Random, false);
+        let mut b = router(4, RoutingPolicy::Random, false);
+        let (_, ma) = a.serve(reqs(16, 512, 64)).unwrap();
+        let (_, mb) = b.serve(reqs(16, 512, 64)).unwrap();
+        assert_eq!(ma.node_requests, mb.node_requests);
+        assert_eq!(ma.node_requests.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn affinity_co_locates_small_shares_and_balances_hot_ones() {
+        // Two sharers of a 1024-token template (4 blocks of 256): the
+        // optimistic route-time record pulls the second onto the first
+        // one's node (its load is under the divert threshold), and —
+        // arriving well after the first prompt retires — its planner
+        // hits the admitted prefix.
+        let mut r = router(4, RoutingPolicy::Affinity, true);
+        let mut rs = reqs(2, 1024, 256);
+        rs[1].arrival = 30.0;
+        let (_, m) = r.serve(rs).unwrap();
+        assert_eq!(m.fabric_nodes, 4);
+        assert_eq!(m.node_requests.iter().sum::<usize>(), 2);
+        assert_eq!(
+            m.node_requests.iter().filter(|&&c| c > 0).count(),
+            1,
+            "a small share must land on one node: {:?}",
+            m.node_requests
+        );
+        let node = m.node_requests.iter().position(|&c| c > 0).unwrap();
+        let stats = r.node_prefix_stats(node).unwrap();
+        assert_eq!(stats.lookups, 2);
+        assert!(stats.hits >= 1, "the late sharer must hit: {stats:?}");
+
+        // Eight sharers at once: the load-aware tiebreak refuses to pile
+        // everything on the owner — affinity yields to balance once the
+        // owner carries twice the lightest node plus the request.
+        let mut r2 = router(4, RoutingPolicy::Affinity, true);
+        let (_, m2) = r2.serve(reqs(8, 1024, 256)).unwrap();
+        assert_eq!(m2.node_requests.iter().sum::<usize>(), 8);
+        assert!(
+            m2.node_requests.iter().filter(|&&c| c > 0).count() >= 2,
+            "a hot template must spill past its owner: {:?}",
+            m2.node_requests
+        );
+        assert!(
+            m2.load_imbalance() <= 2.0 + 1e-9,
+            "tiebreak bounds the skew: {:?}",
+            m2.node_requests
+        );
+    }
+
+    #[test]
+    fn route_events_cover_every_request_and_merge_sorted() {
+        let mut r = router(2, RoutingPolicy::Affinity, true);
+        r.enable_tracing();
+        let rs = reqs(4, 512, 128);
+        let (_, _) = r.serve(rs).unwrap();
+        let trace = r.take_trace();
+        let routes: Vec<_> = trace
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Route { .. }))
+            .collect();
+        assert_eq!(routes.len(), 4);
+        for w in trace.events.windows(2) {
+            assert!(w[0].t <= w[1].t, "merged trace must be time-sorted");
+        }
+        // Every route event precedes its request's admission.
+        trace.validate().unwrap();
+    }
+}

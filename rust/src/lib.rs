@@ -14,9 +14,11 @@
 //! * **L3 (this crate)** — [`coordinator`] serving layer, [`engines`]
 //!   parallel-prefill strategies, [`partition`] context load-balancing,
 //!   [`prefixcache`] cross-request prefix-KV reuse with hybrid
-//!   compute-or-load prefill, [`sim`]/[`net`] the modeled A100 cluster,
-//!   [`trace`] serving-clock event tracing, [`runtime`] the PJRT bridge,
-//!   [`lint`] the invariant lint pass that keeps it all honest.
+//!   compute-or-load prefill, [`fabric`] the affinity-routed multi-node
+//!   serving fabric with cross-node prefix sharing, [`sim`]/[`net`] the
+//!   modeled A100 cluster, [`trace`] serving-clock event tracing,
+//!   [`runtime`] the PJRT bridge, [`lint`] the invariant lint pass that
+//!   keeps it all honest.
 //! * **L2** — `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L1** — `python/compile/kernels/attention.py` (Pallas, interpret).
 
@@ -24,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engines;
 pub mod error;
+pub mod fabric;
 pub mod lint;
 pub mod net;
 pub mod partition;

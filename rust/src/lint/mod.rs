@@ -370,7 +370,7 @@ mod tests {
         let report = out.render(&Baseline::default());
         let expect = "\
 coordinator/scheduler.rs:2: lease-settlement: fallible `ServingBackend` call escapes `serve` via a naked `?` — route the error through the abort/settle helper so in-flight leases are released
-coordinator/scheduler.rs:3: trace-validator-exhaustive: `EventKind::Plan` is emitted by the scheduler but trace/validate.rs has no arm for it
+coordinator/scheduler.rs:3: trace-validator-exhaustive: `EventKind::Plan` is emitted by coordinator/scheduler.rs but trace/validate.rs has no arm for it
 coordinator/scheduler.rs:4: total-cmp-floats: bare `<` comparison inside a `sort_by` comparator — use `total_cmp`/`cmp`
 coordinator/scheduler.rs:5: clock-discipline: wall-clock read outside the `Clock` impls in coordinator/backend.rs — serving time must come from `Clock::now`
 coordinator/scheduler.rs:6: no-panic-hot-path: `.unwrap()` on the serving hot path — return a `kvr::Error` so the lease settles
@@ -466,6 +466,33 @@ kvr lint: 2 files, 5 new violations (0 baselined, 0 suppressed)\n";
         assert_eq!(gap.violations[0].rule, "trace-validator-exhaustive");
         let ok = lint_sources(&src(&[
             ("coordinator/scheduler.rs", sched),
+            ("trace/validate.rs", val_armed),
+        ]))
+        .unwrap();
+        assert!(ok.violations.is_empty(), "{:?}", ok.violations);
+    }
+
+    #[test]
+    fn fabric_emitters_are_cross_checked_too() {
+        let fab = "fn emit() { tracer.emit(EventKind::Route { dur }); }\n";
+        let val_missing = "fn arm(k: &EventKind) { match k { _ => {} } }\n";
+        let gap = lint_sources(&src(&[
+            ("fabric/mod.rs", fab),
+            ("trace/validate.rs", val_missing),
+        ]))
+        .unwrap();
+        assert_eq!(gap.violations.len(), 1);
+        assert_eq!(gap.violations[0].rule, "trace-validator-exhaustive");
+        assert!(
+            gap.violations[0].message.contains("fabric/mod.rs"),
+            "{}",
+            gap.violations[0].message
+        );
+        let val_armed = "fn arm(k: &EventKind) {\n\
+                         match k { EventKind::Route { .. } => {} _ => {} }\n\
+                         }\n";
+        let ok = lint_sources(&src(&[
+            ("fabric/mod.rs", fab),
             ("trace/validate.rs", val_armed),
         ]))
         .unwrap();

@@ -23,7 +23,8 @@ pub const RULES: [&str; 5] = [
 
 /// Modules where a panic tears down a serve mid-lease: the burned-down
 /// zone for `no-panic-hot-path`.
-const HOT_MODULES: [&str; 3] = ["coordinator/", "prefixcache/", "trace/"];
+const HOT_MODULES: [&str; 4] =
+    ["coordinator/", "prefixcache/", "trace/", "fabric/"];
 
 /// The one file allowed to read the wall clock: the `Clock` impls.
 const CLOCK_MODULE: &str = "coordinator/backend.rs";
@@ -238,28 +239,34 @@ fn event_kind_refs(f: &SourceFile) -> BTreeMap<String, usize> {
     refs
 }
 
-/// `trace-validator-exhaustive`: every `EventKind` variant the
-/// scheduler emits must have a matching arm in `trace/validate.rs`,
-/// otherwise the trace oracle silently skips it.
+/// `trace-validator-exhaustive`: every `EventKind` variant an emitter
+/// (the scheduler, the fabric router) references must have a matching
+/// arm in `trace/validate.rs`, otherwise the trace oracle silently
+/// skips it.
 fn trace_validator_exhaustive(files: &[SourceFile], out: &mut Vec<Violation>) {
-    let sched = files.iter().find(|f| f.path == "coordinator/scheduler.rs");
-    let val = files.iter().find(|f| f.path == "trace/validate.rs");
-    let (Some(sched), Some(val)) = (sched, val) else {
+    let Some(val) = files.iter().find(|f| f.path == "trace/validate.rs")
+    else {
         return; // partial tree: nothing to cross-check
     };
     let handled = event_kind_refs(val);
-    for (variant, line) in event_kind_refs(sched) {
-        if !handled.contains_key(&variant) {
-            push(
-                out,
-                "trace-validator-exhaustive",
-                sched,
-                line,
-                format!(
-                    "`EventKind::{variant}` is emitted by the scheduler \
-                     but trace/validate.rs has no arm for it"
-                ),
-            );
+    let emitters = files.iter().filter(|f| {
+        f.path == "coordinator/scheduler.rs" || f.path.starts_with("fabric/")
+    });
+    for f in emitters {
+        for (variant, line) in event_kind_refs(f) {
+            if !handled.contains_key(&variant) {
+                push(
+                    out,
+                    "trace-validator-exhaustive",
+                    f,
+                    line,
+                    format!(
+                        "`EventKind::{variant}` is emitted by {} \
+                         but trace/validate.rs has no arm for it",
+                        f.path
+                    ),
+                );
+            }
         }
     }
 }

@@ -24,6 +24,7 @@ use kvr::coordinator::{
 };
 use kvr::engines::{Evaluator, Method};
 use kvr::error::Result;
+use kvr::fabric::{RouterBackend, RoutingPolicy};
 use kvr::partition::search::SearchConfig;
 use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::runtime::Engine;
@@ -51,6 +52,7 @@ USAGE:
             [--block-tokens N] [--hot-tokens N] [--cold-tokens N]
             [--cold-bw BYTES_PER_S] [--cold-latency S]
             [--pipelined-loads | --serial-loads] [--even-cuts]
+            [--nodes N] [--routing affinity|random|rr]
             [--trace-out FILE] [--metrics-json FILE]
   kvr trace <file.jsonl> [--validate] [--chrome out.json]
   kvr lint  [--root rust/src] [--baseline lint-baseline.txt]
@@ -71,6 +73,13 @@ N-token chunk events interleaved with decode (0 = whole prompt in one
 chunk), bounding the decode stall a long prompt causes.
 `--mem-pressure` (sim) gates admission and decode on the modeled
 device-memory footprint of the active KV.
+
+Fabric: `--nodes N` (sim only) serves through the multi-node fabric — N
+independent engines behind a router, each with its own prefix cache.
+`--routing` picks the placement policy: `affinity` (longest-prefix
+affinity over the global block index, with cross-node streaming of
+missing prefix blocks), or the index-blind `random` / `rr` baselines.
+`--nodes 1` reproduces the single-node serve bit for bit.
 
 Telemetry: `--trace-out` records every serving-clock event (admission,
 plan, cold load, prefill chunks, decode steps/stalls, retire) as JSONL;
@@ -256,13 +265,14 @@ fn shared_prefix_requests(
         .collect()
 }
 
-/// Write `--trace-out` / `--metrics-json` artifacts after a serve (both
-/// serve substrates share this, so the file formats cannot drift).
+/// Write `--trace-out` / `--metrics-json` artifacts after a serve (all
+/// serve substrates — real, sim, fabric — share this, so the file
+/// formats cannot drift).
 fn write_serve_outputs(
-    args: &Args, sched: &mut Scheduler, metrics: &ServeMetrics,
+    args: &Args, trace: Trace, metrics: &ServeMetrics,
 ) -> Result<()> {
     if let Some(path) = args.get("trace-out") {
-        std::fs::write(path, sched.take_trace().to_jsonl())?;
+        std::fs::write(path, trace.to_jsonl())?;
         println!("trace written to {path}");
     }
     if let Some(path) = args.get("metrics-json") {
@@ -290,6 +300,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let requests = shared_prefix_requests(
             &mut rng, n_requests, prompt_len, frac, rate, max_new, 1,
         );
+        let nodes = args.usize_or("nodes", 1)?.max(1);
+        if nodes > 1 || args.get("routing").is_some() {
+            // Multi-node fabric: N independent engines behind the
+            // affinity router, merged responses/metrics/trace.
+            let policy =
+                RoutingPolicy::parse(&args.str_or("routing", "affinity"))?;
+            let mut router = RouterBackend::new(policy, seed);
+            for _ in 0..nodes {
+                let backend =
+                    SimBackend::new(model.clone(), hw.clone(), workers)
+                        .with_memory_pressure(args.flag("mem-pressure"));
+                let mut sched = Scheduler::new(SchedulerConfig {
+                    max_active: args.usize_or("max-active", usize::MAX)?.max(1),
+                    decode_batch,
+                    prefill_chunk,
+                    ..Default::default()
+                });
+                if args.flag("prefix-cache") {
+                    let cm = backend.cost_model().clone();
+                    sched = sched.with_prefix_cache(
+                        PrefixCache::new(prefix_cache_config(args, 512)?),
+                        cm,
+                    );
+                }
+                router.add_node(sched, backend);
+            }
+            if args.get("trace-out").is_some() {
+                router.enable_tracing();
+            }
+            let (responses, metrics) = router.serve(requests)?;
+            for r in &responses {
+                println!("req {:>3}: ttft {}  e2e {}", r.id,
+                         fmt_time(r.ttft), fmt_time(r.e2e));
+            }
+            println!("\n{}", metrics.report());
+            write_serve_outputs(args, router.take_trace(), &metrics)?;
+            return Ok(());
+        }
         // The unified serving engine over the modeled backend: same
         // Scheduler event loop as the real path, on a virtual clock.
         let mut backend = SimBackend::new(model, hw, workers)
@@ -316,7 +364,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                      fmt_time(r.e2e));
         }
         println!("\n{}", metrics.report());
-        write_serve_outputs(args, &mut sched, &metrics)?;
+        write_serve_outputs(args, sched.take_trace(), &metrics)?;
         return Ok(());
     }
 
@@ -349,7 +397,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  r.tokens.len(), fmt_time(r.ttft), fmt_time(r.e2e));
     }
     println!("\n{}", metrics.report());
-    write_serve_outputs(args, &mut sched, &metrics)?;
+    write_serve_outputs(args, sched.take_trace(), &metrics)?;
     Ok(())
 }
 

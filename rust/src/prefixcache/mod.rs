@@ -28,13 +28,15 @@ pub mod index;
 pub mod planner;
 pub mod store;
 
+pub use index::{chain_ids, BlockId};
+
 use crate::coordinator::cluster::SeedBlock;
 use crate::error::Result;
 use crate::partition::lut::PartitionLut;
 use crate::runtime::KvCache;
 use crate::sim::cost::CostModel;
 
-use index::{BlockId, BlockIndex};
+use index::BlockIndex;
 use planner::{BlockAction, PrefillPlan};
 use store::{BlockStore, Tier};
 
@@ -181,6 +183,11 @@ pub struct PrefixCache {
     /// §7): filled lazily by the planner, one search per (suffix,
     /// offset) bucket, so steady-state planning stays O(lookup).
     partition_lut: Option<PartitionLut>,
+    /// Ids dropped from the store since the last [`Self::take_dropped`]
+    /// — the fabric's eviction hook: the router invalidates their
+    /// global-index entries after each serve, so routing never chases an
+    /// entry the owning store has dropped.
+    dropped_log: Vec<BlockId>,
     /// Lease-balance telemetry (debug builds only): every successful
     /// pin and every unpin issued through the lease API. At quiescence
     /// — no lease outstanding — the two must be equal, or a serve
@@ -205,6 +212,7 @@ impl PrefixCache {
             store,
             stats: CacheStats::default(),
             partition_lut: None,
+            dropped_log: Vec::new(),
             #[cfg(debug_assertions)]
             lease_pins: 0,
             #[cfg(debug_assertions)]
@@ -362,9 +370,63 @@ impl PrefixCache {
             let payload = kv.map(|c| c.block_wire(j * bt, bt));
             for dropped in self.store.admit(id, payload) {
                 self.index.remove(dropped);
+                self.dropped_log.push(dropped);
             }
             self.stats.admitted_blocks += 1;
         }
+    }
+
+    /// Fabric peer-fetch admission: index the first `blocks` full blocks
+    /// of `tokens` and admit any not yet resident directly into the
+    /// **cold** tier — the landing tier for KV streamed from a peer
+    /// node, so the planner prices their reuse exactly like local cold
+    /// loads (DESIGN.md §11). Returns how many blocks were admitted
+    /// (already-resident blocks are skipped, not refreshed — a fetch is
+    /// not a use).
+    pub fn admit_fetched_prefix(&mut self, tokens: &[i32], blocks: usize) -> usize {
+        let bt = self.cfg.block_tokens;
+        let take = blocks.min(tokens.len() / bt) * bt;
+        if take == 0 {
+            return 0;
+        }
+        let mut admitted = 0;
+        for id in self.index.insert(&tokens[..take]) {
+            if self.store.contains(id) {
+                continue;
+            }
+            for dropped in self.store.admit_cold(id, None) {
+                self.index.remove(dropped);
+                self.dropped_log.push(dropped);
+            }
+            self.stats.admitted_blocks += 1;
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// Leading run of `tokens`' block chain that is indexed AND
+    /// store-resident, without touching LRU clocks or stats — the fabric
+    /// router's probe (a routing probe must not perturb the node's
+    /// serve, or the `--nodes 1` golden would drift).
+    pub fn resident_prefix_blocks(&self, tokens: &[i32]) -> usize {
+        self.index
+            .longest_match(tokens)
+            .into_iter()
+            .take_while(|&id| self.store.contains(id))
+            .count()
+    }
+
+    /// Whether `id` is store-resident (either tier) — the router's
+    /// residency re-check before scheduling a peer fetch from this node.
+    pub fn has_block(&self, id: BlockId) -> bool {
+        self.store.contains(id)
+    }
+
+    /// Drain the ids dropped from the store since the last call. The
+    /// fabric router calls this after each node serve to invalidate the
+    /// dropped blocks' global-index entries.
+    pub fn take_dropped(&mut self) -> Vec<BlockId> {
+        std::mem::take(&mut self.dropped_log)
     }
 
     /// Per-block wire payloads of the plan's loaded blocks, for the real
@@ -546,6 +608,46 @@ mod tests {
         pc.admit(&(2000..2512).collect::<Vec<i32>>());
         // Capacity is 2 blocks total; at most 2 indexed.
         assert!(pc.index.len() <= 2);
+    }
+
+    #[test]
+    fn fetched_prefix_lands_cold_and_plans_like_a_local_cold_hit() {
+        let cm = cm();
+        let mut pc = cache(16, 64);
+        let a = prompt(4, 1);
+        // Stream the 4 shared blocks in as a fabric peer fetch.
+        assert_eq!(pc.admit_fetched_prefix(&a, 4), 4);
+        assert_eq!(pc.resident_prefix_blocks(&a), 4);
+        // Re-fetching is a no-op (resident blocks are skipped).
+        assert_eq!(pc.admit_fetched_prefix(&a, 4), 0);
+        // The planner treats them exactly like cold-resident blocks.
+        let plan = pc.plan_prefill(&cm, &a, 4).unwrap();
+        assert_eq!(plan.matched_tokens, 4 * 512);
+        assert!(plan.reuse_tokens > 0);
+        assert_eq!(pc.stats().loaded_hot_blocks, 0);
+        assert!(pc.stats().loaded_cold_blocks > 0 || pc.stats().recomputed_blocks > 0);
+        // Partial-block requests admit nothing.
+        assert_eq!(pc.admit_fetched_prefix(&a[..100], 1), 0);
+    }
+
+    #[test]
+    fn probe_is_non_mutating_and_take_dropped_drains_evictions() {
+        let mut pc = cache(1, 1); // 2 blocks total
+        let a: Vec<i32> = (0..512).collect();
+        pc.admit(&a);
+        let lookups_before = pc.stats().lookups;
+        assert_eq!(pc.resident_prefix_blocks(&a), 1);
+        let id = chain_ids(&a, 512)[0];
+        assert!(pc.has_block(id));
+        assert_eq!(pc.stats().lookups, lookups_before, "probe takes no stats");
+        assert!(pc.take_dropped().is_empty());
+        // Overflow the two-block capacity: the drop surfaces exactly once.
+        pc.admit(&(1000..1512).collect::<Vec<i32>>());
+        pc.admit(&(2000..2512).collect::<Vec<i32>>());
+        let dropped = pc.take_dropped();
+        assert_eq!(dropped.len(), 1);
+        assert!(!pc.has_block(dropped[0]));
+        assert!(pc.take_dropped().is_empty(), "drain leaves nothing behind");
     }
 
     #[test]

@@ -204,6 +204,36 @@ impl BlockStore {
         self.enforce_cold_capacity()
     }
 
+    /// Admit (or refresh) a block directly into the **cold** tier — the
+    /// landing tier for prefix blocks streamed from a fabric peer, so
+    /// the planner prices their reuse exactly like any other cold block.
+    /// Never touches the hot arena. Returns the ids dropped from the
+    /// cold tier to stay within capacity — the caller must un-index them.
+    pub fn admit_cold(
+        &mut self, id: BlockId, payload: Option<Vec<u8>>,
+    ) -> Vec<BlockId> {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.last_use = clock;
+            if payload.is_some() {
+                e.payload = payload;
+            }
+        } else {
+            self.entries.insert(
+                id,
+                Entry {
+                    tier: Tier::Cold,
+                    slab: None,
+                    payload,
+                    last_use: clock,
+                    pins: 0,
+                },
+            );
+        }
+        self.enforce_cold_capacity()
+    }
+
     fn enforce_cold_capacity(&mut self) -> Vec<BlockId> {
         let mut dropped = Vec::new();
         while self.cold_blocks() > self.cold_capacity_blocks {
@@ -303,6 +333,26 @@ mod tests {
         s.admit(1, None);
         assert_eq!(s.payload(1), Some(&[7u8, 7, 7, 7][..]));
         assert_eq!(s.payload(99), None);
+    }
+
+    #[test]
+    fn admit_cold_lands_cold_and_respects_capacity() {
+        // Hot: 2 blocks (untouched), cold: 2 blocks.
+        let mut s = BlockStore::new(B, 2 * B, 2 * B);
+        assert!(s.admit_cold(1, None).is_empty());
+        assert_eq!(s.tier(1), Some(Tier::Cold));
+        assert_eq!(s.hot_used_tokens(), 0, "cold admission never takes a slab");
+        // Refreshing an existing hot entry does not demote it.
+        s.admit(2, None);
+        assert_eq!(s.tier(2), Some(Tier::Hot));
+        s.admit_cold(2, Some(vec![9u8; 2]));
+        assert_eq!(s.tier(2), Some(Tier::Hot));
+        assert_eq!(s.payload(2), Some(&[9u8, 9][..]));
+        // Cold overflow drops the LRU cold block and reports it.
+        s.admit_cold(3, None);
+        let dropped = s.admit_cold(4, None);
+        assert_eq!(dropped, vec![1]);
+        assert!(!s.contains(1));
     }
 
     #[test]

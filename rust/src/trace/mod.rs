@@ -37,6 +37,17 @@ use crate::util::json::Json;
 /// [`TraceEvent`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum EventKind {
+    /// The fabric router placed the request on `node` under `policy`
+    /// (t = its arrival time, before the node's own `Enqueued`):
+    /// `matched_blocks` prefix blocks were already resident there and
+    /// `peer_blocks` streamed in from owning peers (dur = the peer-fetch
+    /// span, 0 when nothing streamed). Single-node serves never emit it.
+    Route {
+        node: usize,
+        policy: String,
+        matched_blocks: usize,
+        peer_blocks: usize,
+    },
     /// A request entered the workload (t = its arrival time).
     Enqueued { prompt_tokens: usize, max_new_tokens: usize },
     /// The request took the chain (after `queue_s` waiting).
@@ -94,6 +105,7 @@ impl EventKind {
     /// Stable wire name (the JSONL `ev` field / Chrome event name).
     pub fn name(&self) -> &'static str {
         match self {
+            EventKind::Route { .. } => "route",
             EventKind::Enqueued { .. } => "enqueued",
             EventKind::Admitted { .. } => "admitted",
             EventKind::Plan { .. } => "plan",
@@ -117,6 +129,7 @@ impl EventKind {
                 | EventKind::DecodeStall { .. }
                 | EventKind::DecodeStep { .. }
                 | EventKind::Plan { .. }
+                | EventKind::Route { .. }
         )
     }
 }
@@ -166,6 +179,12 @@ impl TraceEvent {
 
 fn kind_fields(kind: &EventKind) -> Vec<(&'static str, Json)> {
     match kind {
+        EventKind::Route { node, policy, matched_blocks, peer_blocks } => vec![
+            ("node", (*node).into()),
+            ("policy", policy.as_str().into()),
+            ("matched", (*matched_blocks).into()),
+            ("peer", (*peer_blocks).into()),
+        ],
         EventKind::Enqueued { prompt_tokens, max_new_tokens } => vec![
             ("prompt_tokens", (*prompt_tokens).into()),
             ("max_new", (*max_new_tokens).into()),
@@ -233,6 +252,12 @@ fn kind_fields(kind: &EventKind) -> Vec<(&'static str, Json)> {
 
 fn kind_from_json(name: &str, v: &Json) -> Result<EventKind> {
     Ok(match name {
+        "route" => EventKind::Route {
+            node: v.req("node")?.as_usize()?,
+            policy: v.req("policy")?.as_str()?.to_string(),
+            matched_blocks: v.req("matched")?.as_usize()?,
+            peer_blocks: v.req("peer")?.as_usize()?,
+        },
         "enqueued" => EventKind::Enqueued {
             prompt_tokens: v.req("prompt_tokens")?.as_usize()?,
             max_new_tokens: v.req("max_new")?.as_usize()?,
@@ -502,6 +527,17 @@ mod tests {
             dur: 0.0,
             req: Some(1),
             kind: EventKind::Abort { reason: "worker \"gone\"".into() },
+        });
+        events.push(TraceEvent {
+            t: 2.0,
+            dur: 0.003,
+            req: Some(2),
+            kind: EventKind::Route {
+                node: 3,
+                policy: "affinity".into(),
+                matched_blocks: 2,
+                peer_blocks: 1,
+            },
         });
         let trace = Trace { events };
         let text = trace.to_jsonl();

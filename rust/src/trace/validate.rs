@@ -10,7 +10,9 @@
 //!   the request's arrival) have non-decreasing start times in emission
 //!   order — the serving clock never runs backwards;
 //! * per request, the lifecycle is well-formed: at most one
-//!   enqueue/admit/plan/first-token/retire, a lease only after a plan,
+//!   route/enqueue/admit/plan/first-token/retire, a fabric route only
+//!   before admission (the router places a request, then its node
+//!   admits it), a lease only after a plan,
 //!   a cold load only under a lease, chunk indices contiguous from 0
 //!   with a consistent total and non-decreasing causal offsets, and the
 //!   lifecycle stages in time order;
@@ -47,6 +49,7 @@ pub struct TraceCheck {
     pub plan_events: usize,
     pub lease_events: usize,
     pub cold_load_events: usize,
+    pub route_events: usize,
     /// Last event end on the serving clock (s).
     pub span_s: f64,
 }
@@ -69,6 +72,7 @@ struct ReqState {
     first_token: Option<(f64, f64)>,              // (t, ttft_s)
     retired: Option<f64>,
     aborted: bool,
+    routed: bool,
 }
 
 fn viol(req: u64, msg: String) -> String {
@@ -133,6 +137,7 @@ impl Trace {
                 EventKind::Plan { .. } => check.plan_events += 1,
                 EventKind::Lease { .. } => check.lease_events += 1,
                 EventKind::ColdLoad { .. } => check.cold_load_events += 1,
+                EventKind::Route { .. } => check.route_events += 1,
                 EventKind::Abort { .. } => {
                     any_abort = true;
                     check.aborted += 1;
@@ -146,6 +151,17 @@ impl Trace {
             let Some(id) = e.req else { continue };
             let st = reqs.entry(id).or_default();
             match &e.kind {
+                EventKind::Route { .. } => {
+                    // The fabric router places a request exactly once,
+                    // before the chosen node admits it.
+                    if st.admitted.is_some() {
+                        violations.push(viol(id, "route after admission".into()));
+                    }
+                    if st.routed {
+                        violations.push(viol(id, "routed twice".into()));
+                    }
+                    st.routed = true;
+                }
                 EventKind::Enqueued { .. } => {
                     if st.enqueued.replace(e.t).is_some() {
                         violations.push(viol(id, "enqueued twice".into()));
@@ -575,6 +591,36 @@ mod tests {
         assert!(err.ends_with(&audit.violations[0]), "{err}");
         // And a clean trace audits clean.
         assert!(clean_trace().audit().violations.is_empty());
+    }
+
+    fn route_kind() -> EventKind {
+        EventKind::Route {
+            node: 1,
+            policy: "affinity".into(),
+            matched_blocks: 0,
+            peer_blocks: 0,
+        }
+    }
+
+    #[test]
+    fn route_lifecycle_arms() {
+        // A route before the lifecycle is clean and counted.
+        let mut t = clean_trace();
+        t.events.insert(0, ev(0.0, 0.0, Some(0), route_kind()));
+        let check = t.validate().unwrap();
+        assert_eq!(check.route_events, 1);
+        // Route after admission: the router never re-places a request a
+        // node already owns.
+        let mut t = clean_trace();
+        t.events.insert(2, ev(0.0, 0.0, Some(0), route_kind()));
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("route after admission"), "{err}");
+        // Routed twice.
+        let mut t = clean_trace();
+        t.events.insert(0, ev(0.0, 0.0, Some(0), route_kind()));
+        t.events.insert(1, ev(0.0, 0.0, Some(0), route_kind()));
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("routed twice"), "{err}");
     }
 
     #[test]

@@ -9,7 +9,8 @@ use std::process::Command;
 use kvr::lint::{lint_root, Baseline};
 use kvr::trace::{EventKind, Trace, TraceEvent};
 
-const HOT_MODULES: [&str; 3] = ["coordinator/", "prefixcache/", "trace/"];
+const HOT_MODULES: [&str; 4] =
+    ["coordinator/", "prefixcache/", "trace/", "fabric/"];
 
 fn repo_root() -> &'static Path {
     Path::new(env!("CARGO_MANIFEST_DIR"))
