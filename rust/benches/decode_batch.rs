@@ -13,10 +13,137 @@
 //! (sooner at long context). The second table serves one workload
 //! end-to-end at each batch cap: throughput climbs with occupancy.
 
-use kvr::config::{hardware_by_name, model_by_name};
-use kvr::coordinator::{GenRequest, Scheduler, SchedulerConfig, SimBackend};
+use std::collections::HashMap;
+
+use kvr::config::{hardware_by_name, model_by_name, ModelConfig};
+use kvr::coordinator::{
+    ChunkOutcome, Clock, DecodeOutcome, DecodeStep, GenRequest, LoadPlan,
+    PartitionPolicy, PrefillJob, PrefillOutcome, ReusedPrefix, Scheduler,
+    SchedulerConfig, ServingBackend, SimBackend,
+};
+use kvr::partition::Partition;
 use kvr::sim::cost::CostModel;
 use kvr::util::stats::fmt_time;
+
+/// Modeled per-worker KV pools over the sim backend: each finished
+/// prefill's cache is pinned to a worker (skewed — most requests land
+/// on worker 0), and each worker can advance only `headroom[w]` riders
+/// per decode event, like the real cluster's per-worker slab pools.
+///
+/// With `owner_aware` the scheduler sees the per-owner vector
+/// ([`ServingBackend::decode_capacity_by_owner`]) and swaps the full
+/// worker's riders for another owner's; without it the only safe
+/// aggregate clamp is the bottleneck owner's headroom — the old
+/// behavior, where the whole batch narrows to what the fullest worker
+/// allows.
+struct OwnerPools {
+    inner: SimBackend,
+    owners: HashMap<u64, usize>,
+    headroom: Vec<usize>,
+    owner_aware: bool,
+}
+
+impl OwnerPools {
+    fn new(inner: SimBackend, headroom: Vec<usize>, owner_aware: bool) -> Self {
+        Self { inner, owners: HashMap::new(), headroom, owner_aware }
+    }
+
+    /// Skewed placement: three of four requests pin to worker 0, the
+    /// rest round-robin over the remaining workers.
+    fn owner_of(&self, req_id: u64) -> usize {
+        let w = self.inner.workers();
+        if w < 2 || req_id % 4 < 3 {
+            0
+        } else {
+            1 + (req_id as usize / 4) % (w - 1)
+        }
+    }
+}
+
+impl ServingBackend for OwnerPools {
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+    fn model(&self) -> &ModelConfig {
+        self.inner.model()
+    }
+    fn granularity(&self) -> usize {
+        self.inner.granularity()
+    }
+    fn needs_kv_payloads(&self) -> bool {
+        self.inner.needs_kv_payloads()
+    }
+    fn clock(&self) -> Box<dyn Clock> {
+        self.inner.clock()
+    }
+    fn plan_partition(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> kvr::Result<Partition> {
+        self.inner.plan_partition(c, start, policy)
+    }
+    fn prefill(
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
+    ) -> kvr::Result<PrefillOutcome> {
+        let mut out =
+            self.inner.prefill(req, reused, loads, policy, want_wire)?;
+        out.owner = self.owner_of(req.id);
+        self.owners.insert(req.id, out.owner);
+        Ok(out)
+    }
+    fn prefill_begin(
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
+        chunk_tokens: usize,
+    ) -> kvr::Result<PrefillJob> {
+        self.inner
+            .prefill_begin(req, reused, loads, policy, want_wire, chunk_tokens)
+    }
+    fn prefill_chunk(
+        &mut self, job: &mut PrefillJob,
+    ) -> kvr::Result<ChunkOutcome> {
+        let mut out = self.inner.prefill_chunk(job)?;
+        if let Some(done) = out.done.as_mut() {
+            done.owner = self.owner_of(job.req.id);
+            self.owners.insert(job.req.id, done.owner);
+        }
+        Ok(out)
+    }
+    fn prefill_abort(&mut self, job: PrefillJob) {
+        self.owners.remove(&job.req.id);
+        self.inner.prefill_abort(job);
+    }
+    fn decode_batch(
+        &mut self, steps: &[DecodeStep],
+    ) -> kvr::Result<DecodeOutcome> {
+        self.inner.decode_batch(steps)
+    }
+    fn release(&mut self, owner: usize, req_id: u64) -> kvr::Result<()> {
+        self.owners.remove(&req_id);
+        self.inner.release(owner, req_id)
+    }
+    fn kv_bytes_active(&self) -> f64 {
+        self.inner.kv_bytes_active()
+    }
+    fn decode_capacity(&self, want: usize) -> usize {
+        if self.owner_aware {
+            return want;
+        }
+        // Owner-blind selection cannot tell whose riders it will pick,
+        // so the safe clamp is the tightest headroom among workers that
+        // currently hold caches.
+        self.owners
+            .values()
+            .map(|&w| self.headroom[w])
+            .min()
+            .unwrap_or(want)
+            .min(want)
+            .max(1)
+    }
+    fn decode_capacity_by_owner(&self) -> Option<Vec<usize>> {
+        self.owner_aware.then(|| self.headroom.clone())
+    }
+}
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -100,5 +227,52 @@ fn main() {
     println!(
         "\nper-token decode cost falls as the batch amortizes the weight \
          stream; the KV term caps the win at long context."
+    );
+
+    // Owner-aware rider selection under a skewed-owner workload: worker
+    // 0 holds most caches but has headroom for one rider per event; the
+    // other workers are roomy. Owner-blind selection must clamp the
+    // whole batch to the bottleneck; owner-aware selection swaps worker
+    // 0's surplus riders for other owners' and keeps the batch wide.
+    let skewed = args.usize_or("skewed-requests", 16).unwrap();
+    let reqs: Vec<GenRequest> = (0..skewed as u64)
+        .map(|id| GenRequest {
+            id,
+            tokens: (0..1024).map(|i| i * 11 + 3 + id as i32).collect(),
+            max_new_tokens: 48,
+            arrival: 0.0,
+        })
+        .collect();
+    let mut headroom = vec![8usize; procs];
+    headroom[0] = 1;
+    let mut width = [0.0f64; 2];
+    println!(
+        "\nskewed-owner decode occupancy ({skewed} requests, 3/4 on \
+         worker 0, headroom {headroom:?}, decode-batch 8):"
+    );
+    for (i, owner_aware) in [false, true].into_iter().enumerate() {
+        let inner = SimBackend::new(model.clone(), hw.clone(), procs);
+        let mut backend = OwnerPools::new(inner, headroom.clone(), owner_aware);
+        let mut sched = Scheduler::new(SchedulerConfig {
+            max_active: usize::MAX,
+            decode_batch: 8,
+            ..Default::default()
+        });
+        let (_, m) = sched.serve(&mut backend, reqs.clone()).unwrap();
+        width[i] = m.mean_decode_batch();
+        println!(
+            "  {:<12} mean batch {:>5.2}   max batch {:>2}   wall {}",
+            if owner_aware { "owner-aware" } else { "owner-blind" },
+            m.mean_decode_batch(),
+            m.max_decode_batch,
+            fmt_time(m.wall_s),
+        );
+    }
+    assert!(
+        width[1] > width[0],
+        "owner-aware selection must widen the skewed-owner batch \
+         ({} vs {})",
+        width[1],
+        width[0]
     );
 }

@@ -19,6 +19,10 @@
 
 use kvr::config::{hardware_by_name, model_by_name};
 use kvr::coordinator::{GenRequest, Scheduler, SchedulerConfig, SimBackend};
+use kvr::partition::lut::PartitionLut;
+use kvr::prefixcache::planner::precompute_offset_grid;
+use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
+use kvr::sim::cost::CostModel;
 use kvr::util::stats::fmt_time;
 
 /// Short decoders at t=0 plus one long prompt arriving mid-decode.
@@ -59,9 +63,9 @@ fn main() {
         model.name, hw.name
     );
     println!(
-        "{:>8} {:>8} {:>12} {:>12} {:>12} {:>10} {:>8}",
+        "{:>8} {:>8} {:>12} {:>12} {:>12} {:>10} {:>8} {:>10}",
         "prompt", "chunk", "long TTFT", "TPOT p95", "max stall", "wall",
-        "chunks"
+        "chunks", "carry B"
     );
     for &prompt in &prompts {
         for &chunk in &chunks {
@@ -81,7 +85,7 @@ fn main() {
             let label =
                 if chunk == 0 { "whole".to_string() } else { chunk.to_string() };
             println!(
-                "{:>8} {:>8} {:>12} {:>12} {:>12} {:>10} {:>8}",
+                "{:>8} {:>8} {:>12} {:>12} {:>12} {:>10} {:>8} {:>10}",
                 prompt,
                 label,
                 fmt_time(long_ttft),
@@ -89,6 +93,7 @@ fn main() {
                 fmt_time(m.max_decode_stall_s),
                 fmt_time(m.wall_s),
                 m.prefill_chunks,
+                m.carry_wire_bytes,
             );
         }
         println!();
@@ -97,6 +102,57 @@ fn main() {
         "smaller chunks bound the decode stall (and trim TPOT p95: short \
          requests finish between chunks instead of riding the long \
          request's heavy batches) at the cost of prefill TTFT — each \
-         chunk repays the chain fill and dispatch overheads."
+         chunk repays the chain fill and dispatch overheads. carry B is \
+         the seed wire shipped into prefill chains: 0 on the modeled \
+         backend; on the real cluster the retained-seed carry keeps it \
+         bounded by the prefix-cache seed instead of O(prefix) per chunk."
+    );
+
+    // Plan-once: admission planning cost with the offset LUT preloaded
+    // (`kvr search --lut-out` → `kvr serve --lut`) vs filled lazily by
+    // the first admissions that touch each (suffix, offset) bucket.
+    let cm = CostModel::new(model.clone(), hw.clone());
+    let cfg = PrefixCacheConfig {
+        block_tokens: 512,
+        ..PrefixCacheConfig::default()
+    };
+    let admissions = 32usize;
+    let ctx = 8192usize;
+    let shared: Vec<i32> = (0..4096).map(|i| (i % 251) as i32).collect();
+    let time_plans = |pc: &mut PrefixCache| -> (f64, usize) {
+        let t0 = std::time::Instant::now();
+        let mut lazy = 0usize;
+        for r in 0..admissions {
+            let mut tokens = shared.clone();
+            tokens.extend(
+                (0..(ctx - shared.len()) as i32).map(|i| i * 13 + r as i32 + 7),
+            );
+            lazy += pc.plan_prefill(&cm, &tokens, procs).unwrap().lazy_searches;
+        }
+        (t0.elapsed().as_secs_f64() / admissions as f64, lazy)
+    };
+    let mut lazy_pc = PrefixCache::new(cfg.clone());
+    lazy_pc.admit(&shared);
+    let (lazy_s, lazy_n) = time_plans(&mut lazy_pc);
+    let mut warm_pc = PrefixCache::new(cfg.clone());
+    let mut lut = PartitionLut::new(&cm.model.name, procs, &cm.hw.name);
+    let buckets = precompute_offset_grid(&cm, &cfg, &mut lut, ctx);
+    warm_pc.preload_partition_lut(lut);
+    warm_pc.admit(&shared);
+    let (warm_s, warm_n) = time_plans(&mut warm_pc);
+    println!(
+        "\nplanning time per admission (ctx {ctx}, {admissions} \
+         admissions, {}-token shared prefix):",
+        shared.len()
+    );
+    println!(
+        "  lazy memo     {:>12} per admission   ({lazy_n} lazy searches \
+         paid on the serving path)",
+        fmt_time(lazy_s)
+    );
+    println!(
+        "  preloaded LUT {:>12} per admission   ({warm_n} lazy searches; \
+         {buckets} buckets searched offline)",
+        fmt_time(warm_s)
     );
 }

@@ -191,13 +191,12 @@ pub struct PrefillJob {
     /// Chain-occupancy seconds accumulated over completed chunks — the
     /// job's TTFT once done (inter-chunk decode events excluded).
     elapsed: f64,
-    /// Accumulated prompt KV carried between chunks: payload backends
-    /// seed the next chunk's chain head with it; timing-only backends
-    /// never set it (the row count lives in `done_tokens`).
-    pub(crate) carry: Option<ReusedPrefix>,
-    /// Worker holding the partial accumulated cache (real path) —
-    /// released before the next chunk re-seeds the chain, or by
-    /// [`ServingBackend::prefill_abort`] on error paths.
+    /// Worker holding the retained partial cache between chunks (real
+    /// path): the backend parks the accumulated KV there as a chain
+    /// seed (`WorkerCmd::RetainAsSeed`) instead of shipping it back as
+    /// wire, and the next chunk's chain starts on that worker. Released
+    /// by [`ServingBackend::prefill_abort`] on error paths; the
+    /// retained row count is [`PrefillJob::done_tokens`].
     pub(crate) carry_owner: Option<usize>,
 }
 
@@ -236,7 +235,6 @@ impl PrefillJob {
             completed: 0,
             done_tokens: reused_tokens,
             elapsed: 0.0,
-            carry: None,
             carry_owner: None,
         }
     }
@@ -448,6 +446,24 @@ pub trait ServingBackend {
     /// it `>= 1` so an active set always drains.
     fn decode_capacity(&self, want: usize) -> usize {
         want
+    }
+
+    /// Per-owner decode headroom, indexed by worker: how many riders
+    /// each cache-owning worker can advance this event. `Some` lets the
+    /// scheduler swap a full worker's riders for another owner's
+    /// instead of narrowing the batch; `None` (the default) keeps the
+    /// aggregate [`Self::decode_capacity`] clamp as the only limit.
+    fn decode_capacity_by_owner(&self) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Total KV wire bytes this backend has shipped to seed prefill
+    /// chains (reused-prefix seeds; with zero-copy chunk carry the
+    /// between-chunk hand-off ships none). Monotone over the backend's
+    /// lifetime — the scheduler diffs it around a serve. Payload-less
+    /// backends report 0.
+    fn carry_wire_bytes(&self) -> u64 {
+        0
     }
 }
 

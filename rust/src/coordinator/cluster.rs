@@ -152,10 +152,12 @@ pub struct ReusedPrefix {
 enum SeedSpec {
     /// Fresh prompt: start from an empty cache.
     Empty,
-    /// Inline wire bytes (chunk carry and single-wire reuse).
+    /// Inline wire bytes (single-wire prefix reuse).
     Inline { rows: usize, wire: Vec<u8> },
-    /// `rows` already streamed ahead as [`WorkerCmd::SeedBlock`]
-    /// transfers; take the staged cache.
+    /// `rows` already staged on the worker — streamed ahead as
+    /// [`WorkerCmd::SeedBlock`] transfers, or parked in place by
+    /// [`WorkerCmd::RetainAsSeed`] (zero-copy chunk carry); take the
+    /// staged cache.
     Streamed { rows: usize },
 }
 
@@ -181,6 +183,16 @@ enum WorkerCmd {
         /// Ship the accumulated cache back with the reply (last worker
         /// only — the scheduler admits it into the prefix cache).
         want_wire: bool,
+    },
+    /// Park a request's resident cache as the staged chain seed for its
+    /// next prefill chunk (zero-copy chunk carry, DESIGN.md §12): the
+    /// cache moves from the active set to the pending-seed stage and
+    /// its slab is released — the KV never leaves the worker, no wire
+    /// round-trip. Fire-and-forget like `SeedBlock`: a missing cache is
+    /// surfaced by the consuming `Prefill` turn ("no streamed seed
+    /// staged").
+    RetainAsSeed {
+        req_id: u64,
     },
     Decode {
         req_id: u64,
@@ -321,22 +333,30 @@ fn worker_main(ctx: WorkerCtx) {
                     *entry = Err(format!("seed block: {e}"));
                 }
             }
+            WorkerCmd::RetainAsSeed { req_id } => {
+                // Zero-copy chunk carry: move the accumulated cache
+                // from the active set to the pending-seed stage for the
+                // next chunk's chain head — same worker, no wire. The
+                // slab is released; the staged cache owns its rows.
+                // No reply — a missing cache surfaces as "no streamed
+                // seed staged" on the consuming prefill turn.
+                if let Some((cache, slab)) = active.remove(&req_id) {
+                    let _ = pool.release(slab);
+                    pending_seed.insert(req_id, Ok(cache));
+                }
+            }
             WorkerCmd::Release { req_id } => {
-                // A staged seed whose prefill never ran (leader-side
-                // dispatch error) is dropped with the release.
+                // A staged seed (retained chunk carry, or streamed
+                // blocks whose prefill never ran) is dropped with the
+                // release. Idempotent: an unknown request is a no-op
+                // success, so abort paths can settle a retained seed
+                // that a mid-chunk failure may or may not have already
+                // consumed.
                 pending_seed.remove(&req_id);
-                let _ = match active.remove(&req_id) {
-                    Some((_, slab)) => {
-                        let _ = pool.release(slab);
-                        ctx.reply_tx.send(WorkerReply::Released { req_id })
-                    }
-                    // Unknown request (double release / wrong owner): a
-                    // real error, not a silent success.
-                    None => ctx.reply_tx.send(WorkerReply::Failed {
-                        req_id,
-                        msg: format!("no cache for request {req_id}"),
-                    }),
-                };
+                if let Some((_, slab)) = active.remove(&req_id) {
+                    let _ = pool.release(slab);
+                }
+                let _ = ctx.reply_tx.send(WorkerReply::Released { req_id });
             }
             WorkerCmd::Decode { req_id, token } => {
                 let reply = decode_one(&engine, &mut pool, &mut active, req_id, token);
@@ -509,6 +529,12 @@ pub struct Cluster {
     /// leader-side so admission can throttle before a worker's
     /// allocator fails.
     pool_tokens: usize,
+    /// Total KV wire bytes shipped to seed prefill chains (inline
+    /// reuse wire + streamed seed blocks). With zero-copy chunk carry
+    /// the between-chunk hand-off ships none, so this stays O(reuse),
+    /// not O(prefix x chunks) — surfaced as
+    /// [`ServingBackend::carry_wire_bytes`].
+    carry_wire: u64,
 }
 
 impl Cluster {
@@ -528,14 +554,24 @@ impl Cluster {
         let (reply_tx, reply_rx) = channel::<WorkerReply>();
         let mut cmd_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
-        let mut prev_rx: Option<Receiver<CacheMsg>> = None;
+        // The point-to-point cache links form a RING, not a line: the
+        // wrap link p-1 -> 0 lets a chunk's chain start on any worker
+        // (zero-copy chunk carry dispatches each chunk's chain from the
+        // worker retaining the previous chunk's cache, DESIGN.md §12).
+        // Head-0 chains never touch the wrap link, so the classic
+        // topology is a special case; p == 1 gets a harmless
+        // self-channel (a one-worker chain is first && last and uses
+        // neither end).
+        let (wrap_tx, wrap_rx) = channel::<CacheMsg>();
+        let mut wrap_tx = Some(wrap_tx);
+        let mut prev_rx: Option<Receiver<CacheMsg>> = Some(wrap_rx);
         for i in 0..p {
             let (cmd_tx, cmd_rx) = channel::<WorkerCmd>();
             let (next_tx, next_rx) = if i + 1 < p {
                 let (tx, rx) = channel::<CacheMsg>();
                 (Some(tx), Some(rx))
             } else {
-                (None, None)
+                (wrap_tx.take(), None)
             };
             let ctx = WorkerCtx {
                 index: i,
@@ -559,6 +595,7 @@ impl Cluster {
             pending: Vec::new(),
             active_rows: HashMap::new(),
             pool_tokens,
+            carry_wire: 0,
         };
         // Wait for every engine to come up (PJRT client + weights upload).
         let mut started = 0;
@@ -657,6 +694,30 @@ impl Cluster {
         &mut self, req_id: u64, tokens: &[i32], reused: Option<ReusedPrefix>,
         policy: &PartitionPolicy, want_wire: bool,
     ) -> Result<PrefillResult> {
+        self.parallel_prefill_from(
+            0, None, req_id, tokens, reused, policy, want_wire,
+        )
+    }
+
+    /// Parallel prefill whose chain starts on worker `head` and runs
+    /// around the ring: partition chunk `j` executes on worker
+    /// `(head + j) % p`, so the chain can begin wherever its seed
+    /// already lives. `retained_rows` seeds the chain head from a cache
+    /// parked there by [`WorkerCmd::RetainAsSeed`] (zero-copy chunk
+    /// carry — nothing ships); `reused` seeds it from KV payloads as
+    /// before. At most one of the two may be set.
+    #[allow(clippy::too_many_arguments)]
+    fn parallel_prefill_from(
+        &mut self, head: usize, retained_rows: Option<usize>, req_id: u64,
+        tokens: &[i32], reused: Option<ReusedPrefix>,
+        policy: &PartitionPolicy, want_wire: bool,
+    ) -> Result<PrefillResult> {
+        let p = self.workers();
+        debug_assert!(head < p, "chain head {head} out of range");
+        debug_assert!(
+            retained_rows.is_none() || reused.is_none(),
+            "a chain seeds from a retained cache OR shipped payloads"
+        );
         if tokens.len() > self.manifest.max_context() {
             return Err(Error::Coordinator(format!(
                 "prompt {} exceeds compiled max context {}",
@@ -664,7 +725,8 @@ impl Cluster {
                 self.manifest.max_context()
             )));
         }
-        let start = reused.as_ref().map_or(0, |r| r.tokens);
+        let start = retained_rows
+            .unwrap_or_else(|| reused.as_ref().map_or(0, |r| r.tokens));
         let g = self.manifest.granularity();
         if start % g != 0 {
             return Err(Error::Coordinator(format!(
@@ -686,12 +748,17 @@ impl Cluster {
         let t0 = Instant::now();
         // Issue the reused prefix as background transfers ahead of the
         // chain dispatch (DESIGN.md §7): block-granular payloads stream
-        // to worker 0, which deserializes each as it arrives — pipelined
-        // with the leader still feeding the channel — while an inline
-        // wire ships whole (chunk carry and legacy single-wire reuse).
-        let mut head_seed = SeedSpec::Empty;
+        // to the chain head, which deserializes each as it arrives —
+        // pipelined with the leader still feeding the channel — while
+        // an inline wire ships whole (legacy single-wire reuse). A
+        // retained seed is already staged on the head: nothing ships.
+        let mut head_seed = match retained_rows {
+            Some(rows) => SeedSpec::Streamed { rows },
+            None => SeedSpec::Empty,
+        };
         if let Some(r) = reused {
             if r.blocks.is_empty() {
+                self.carry_wire += r.wire.len() as u64;
                 head_seed = SeedSpec::Inline { rows: r.tokens, wire: r.wire };
             } else {
                 let total: usize = r.blocks.iter().map(|b| b.rows).sum();
@@ -703,7 +770,8 @@ impl Cluster {
                     )));
                 }
                 for b in r.blocks {
-                    self.cmd_txs[0]
+                    self.carry_wire += b.wire.len() as u64;
+                    self.cmd_txs[head]
                         .send(WorkerCmd::SeedBlock {
                             req_id,
                             total_rows: total,
@@ -711,7 +779,7 @@ impl Cluster {
                             wire: b.wire,
                         })
                         .map_err(|_| {
-                            Error::Coordinator("worker 0 gone".into())
+                            Error::Coordinator(format!("worker {head} gone"))
                         })?;
                 }
                 head_seed = SeedSpec::Streamed { rows: total };
@@ -720,7 +788,8 @@ impl Cluster {
         let mut head_seed = Some(head_seed);
         let mut offset = start;
         for (i, &sz) in sizes.iter().enumerate() {
-            self.cmd_txs[i]
+            let w = (head + i) % p;
+            self.cmd_txs[w]
                 .send(WorkerCmd::Prefill {
                     req_id,
                     tokens: tokens[offset..offset + sz].to_vec(),
@@ -729,7 +798,7 @@ impl Cluster {
                     seed: head_seed.take().unwrap_or(SeedSpec::Empty),
                     want_wire: want_wire && i == k - 1,
                 })
-                .map_err(|_| Error::Coordinator(format!("worker {i} gone")))?;
+                .map_err(|_| Error::Coordinator(format!("worker {w} gone")))?;
             offset += sz;
         }
         let mut logits: Option<Vec<f32>> = None;
@@ -747,7 +816,10 @@ impl Cluster {
                     compute_s,
                     ..
                 } if rid == req_id => {
-                    worker_compute[worker] = compute_s;
+                    // Replies carry the absolute worker index; index
+                    // the diagnostics by chain position so a wrapped
+                    // chain stays in bounds.
+                    worker_compute[(worker + p - head) % p] = compute_s;
                     if let Some(lg) = lg {
                         logits = Some(lg);
                         ttft = t0.elapsed().as_secs_f64();
@@ -770,7 +842,7 @@ impl Cluster {
                 Error::Coordinator("no logits from last worker".into())
             })?,
             ttft,
-            owner: k - 1,
+            owner: (head + k - 1) % p,
             partition: sizes,
             reused_tokens: start,
             worker_compute,
@@ -888,8 +960,11 @@ impl Cluster {
             .collect()
     }
 
-    /// Free a request's cache. Releasing an unknown request (double
-    /// release, wrong owner) is an error.
+    /// Free a request's cache — resident (active slab) or staged as a
+    /// retained/streamed seed. Idempotent: releasing a request the
+    /// worker no longer holds succeeds as a no-op, so settlement paths
+    /// can release a retained seed that a mid-chunk failure may or may
+    /// not have consumed (double release included).
     pub fn release(&mut self, owner: usize, req_id: u64) -> Result<()> {
         self.check_owner(owner)?;
         self.cmd_txs[owner]
@@ -966,13 +1041,14 @@ impl ServingBackend for Cluster {
         })
     }
 
-    /// Chunked prefill (DESIGN.md §6): chunk k runs the worker chain
-    /// over its slice of the prompt with the chain head seeded by the
-    /// accumulated KV of chunks `< k` (carried leader-side as wire
-    /// bytes, exactly the prefix-reuse seeding path), so every chunk is
-    /// a plain suffix runahead and the partial cache stays contiguous.
-    /// The previous chunk's worker-held cache is released before the
-    /// next chunk re-seeds the chain — no slab leaks across chunks.
+    /// Chunked prefill (DESIGN.md §6, §12): chunk k runs the worker
+    /// chain over its slice of the prompt with the chain head seeded by
+    /// the accumulated KV of chunks `< k` — retained *in place* on the
+    /// worker that owned the previous chunk ([`WorkerCmd::RetainAsSeed`],
+    /// zero-copy), with the next chunk's chain dispatched from that
+    /// worker around the ring. Every chunk is a plain suffix runahead,
+    /// the partial cache stays contiguous, and the between-chunk
+    /// hand-off ships zero wire bytes.
     fn prefill_begin(
         &mut self, req: GenRequest, reused: Option<ReusedPrefix>,
         _loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
@@ -1022,22 +1098,32 @@ impl ServingBackend for Cluster {
         let last = job.chunks_done() + 1 == job.chunks_total();
         // kvr: allow(clock-discipline, "times the real chunk execution; returned as the chunk's measured duration")
         let t0 = Instant::now();
-        if let Some(owner) = job.carry_owner.take() {
-            Cluster::release(self, owner, job.req.id)?;
-        }
-        let seed = job.carry.take().or_else(|| job.take_reused());
-        let pre = self.parallel_prefill_reused(
+        // Zero-copy chunk carry: chunks after the first start their
+        // chain on the worker retaining the accumulated cache — the
+        // seed never leaves the device. `carry_owner` stays pointed at
+        // that worker until the chunk succeeds, so an error out of the
+        // chain still routes `prefill_abort`'s release there (the
+        // staged seed may or may not have been consumed; release is
+        // idempotent either way).
+        let (head, retained, seed) = match job.carry_owner {
+            Some(owner) => (owner, Some(start), None),
+            None => (0, None, job.take_reused()),
+        };
+        let pre = self.parallel_prefill_from(
+            head,
+            retained,
             job.req.id,
             &job.req.tokens[..start + rows],
             seed,
             &job.policy,
-            // Intermediate chunks always carry the accumulated wire to
-            // seed the next chunk's chain head.
-            !last || job.want_wire,
+            // Only the final accumulated cache is ever shipped back —
+            // intermediate chunks retain theirs worker-side.
+            last && job.want_wire,
         )?;
         let chunk_s = t0.elapsed().as_secs_f64();
         job.advance(rows, chunk_s);
         if last {
+            job.carry_owner = None;
             self.active_rows.insert(
                 job.req.id,
                 (
@@ -1057,33 +1143,31 @@ impl ServingBackend for Cluster {
                 }),
             })
         } else {
-            // Record the worker-held partial cache BEFORE any error
-            // check: if the wire is missing, `prefill_abort` must still
-            // find (and release) the slab this chunk just built.
+            // Record the new owner BEFORE the retain command: if the
+            // send fails, `prefill_abort` must still find (and release)
+            // the resident cache this chunk just built.
             job.carry_owner = Some(pre.owner);
-            // Reservation counts from job completion; no admission can
-            // interleave while the job holds the chain.
             self.active_rows
                 .insert(job.req.id, (pre.owner, start + rows, 0));
-            let wire = pre.wire.ok_or_else(|| {
-                Error::Coordinator(format!(
-                    "intermediate chunk of {} returned no wire",
-                    job.req.id
-                ))
-            })?;
-            job.carry = Some(ReusedPrefix {
-                tokens: start + rows,
-                wire,
-                blocks: Vec::new(),
-            });
+            // Park the accumulated cache on its owner as the next
+            // chunk's staged seed. Fire-and-forget: same-queue command
+            // ordering guarantees it stages before the next chunk's
+            // Prefill turn on that worker consumes it.
+            self.cmd_txs[pre.owner]
+                .send(WorkerCmd::RetainAsSeed { req_id: job.req.id })
+                .map_err(|_| {
+                    Error::Coordinator(format!("worker {} gone", pre.owner))
+                })?;
             Ok(ChunkOutcome { chunk_s, done: None })
         }
     }
 
     fn prefill_abort(&mut self, job: PrefillJob) {
         // Best effort: free the partial accumulated cache of the
-        // completed chunks (the failing chunk's own state died with the
-        // error) so a failed job leaks no worker slab.
+        // completed chunks — resident on its owner, or staged there as
+        // a retained seed the failing chunk may have part-consumed
+        // (release covers both, idempotently) — so a failed job leaks
+        // no worker slab and no staged seed.
         if let Some(owner) = job.carry_owner {
             let _ = Cluster::release(self, owner, job.req.id);
         }
@@ -1165,12 +1249,10 @@ impl ServingBackend for Cluster {
     /// (exactly the sim-side `decode_capacity` regression). The clamp
     /// binds once resident rows approach the arena — an oversized
     /// admission through the idle-backend escape hatch, or deep decode
-    /// tails the admission pad under-estimated. It bounds *damage*, not
-    /// certainty: the scheduler picks riders by rotation position, so a
-    /// full worker's rider can still land in a narrow batch and hit the
-    /// allocator error — the clamp shrinks how many grows each event
-    /// risks and lets retirements free rows between events (owner-aware
-    /// rider selection is the ROADMAP follow-on).
+    /// tails the admission pad under-estimated. The aggregate clamp is
+    /// the coarse bound; [`Self::decode_capacity_by_owner`] refines it
+    /// so the scheduler swaps a full worker's riders out of the batch
+    /// instead of narrowing it.
     fn decode_capacity(&self, want: usize) -> usize {
         let mut per_worker = vec![(0usize, 0usize); self.cmd_txs.len()];
         for &(owner, rows, _) in self.active_rows.values() {
@@ -1180,6 +1262,32 @@ impl ServingBackend for Cluster {
             }
         }
         pool_decode_capacity(self.pool_tokens, &per_worker, want)
+    }
+
+    /// Owner-aware rider headroom (ROADMAP follow-on to the width
+    /// clamp): how many riders each worker's [`KvPool`] arena can grow
+    /// this event, from *resident* rows only (reservations convert to
+    /// resident rows as decode proceeds — same accounting as
+    /// [`Self::decode_capacity`]). The scheduler uses this to pick
+    /// *which* riders step, not just how many: a full worker's riders
+    /// are swapped for another owner's instead of the batch narrowing.
+    fn decode_capacity_by_owner(&self) -> Option<Vec<usize>> {
+        let mut committed = vec![0usize; self.cmd_txs.len()];
+        for &(owner, rows, _) in self.active_rows.values() {
+            if let Some(w) = committed.get_mut(owner) {
+                *w += rows + POOL_GROW_ROWS;
+            }
+        }
+        Some(
+            committed
+                .into_iter()
+                .map(|c| self.pool_tokens.saturating_sub(c) / POOL_GROW_ROWS)
+                .collect(),
+        )
+    }
+
+    fn carry_wire_bytes(&self) -> u64 {
+        self.carry_wire
     }
 }
 

@@ -128,6 +128,16 @@ pub struct ServeMetrics {
     /// one decode-eligible request waited (s) — the head-of-line stall
     /// chunked prefill bounds to roughly one chunk time.
     pub max_decode_stall_s: f64,
+    /// Seed wire bytes shipped into prefill chains over the run (real
+    /// path). With the retained-seed carry this covers only prefix-cache
+    /// seeds and inter-worker re-ships — never the accumulated partial
+    /// KV between chunks, which stays resident on its owner.
+    pub carry_wire_bytes: u64,
+    /// Partition searches run lazily at admission because the preloaded
+    /// LUT (or the memo built so far) had no entry for the (suffix,
+    /// causal-offset) bucket. Zero when `kvr serve --lut` fully covers
+    /// the workload — the plan-once goal.
+    pub lazy_partition_searches: usize,
     /// Σ per-phase latency over retired requests (DESIGN.md §9).
     pub phase_totals: PhaseBreakdown,
     /// Requests folded into `phase_totals`.
@@ -313,6 +323,8 @@ impl ServeMetrics {
         self.oversized_admissions += other.oversized_admissions;
         self.max_decode_stall_s =
             self.max_decode_stall_s.max(other.max_decode_stall_s);
+        self.carry_wire_bytes += other.carry_wire_bytes;
+        self.lazy_partition_searches += other.lazy_partition_searches;
         self.phase_totals.add(&other.phase_totals);
         self.phase_requests += other.phase_requests;
         self.hist_ttft.merge(&other.hist_ttft);
@@ -397,6 +409,13 @@ impl ServeMetrics {
                 fmt_time(self.max_decode_stall_s),
             ));
         }
+        // Real-path runs only: modeled backends ship no seed wire.
+        if self.carry_wire_bytes > 0 {
+            out.push_str(&format!(
+                "seed wire  {} bytes shipped into prefill chains\n",
+                self.carry_wire_bytes,
+            ));
+        }
         if self.oversized_admissions > 0 {
             out.push_str(&format!(
                 "WARN  {} oversized solo admission(s): decode budget \
@@ -414,6 +433,15 @@ impl ServeMetrics {
                 self.reused_tokens,
                 self.loaded_blocks,
                 self.recomputed_blocks,
+            ));
+        }
+        // Only when serving fell back to a lazy hierarchical search —
+        // a fully preloaded LUT keeps the report line out entirely.
+        if self.lazy_partition_searches > 0 {
+            out.push_str(&format!(
+                "plan  {} lazy partition search(es) at admission \
+                 (preload a LUT with `kvr search --lut-out`)\n",
+                self.lazy_partition_searches,
             ));
         }
         if self.fabric_nodes > 0 {
@@ -505,6 +533,10 @@ impl ServeMetrics {
                         "oversized_admissions",
                         self.oversized_admissions.into(),
                     ),
+                    (
+                        "carry_wire_bytes",
+                        (self.carry_wire_bytes as usize).into(),
+                    ),
                 ]),
             ),
             (
@@ -516,6 +548,10 @@ impl ServeMetrics {
                     ("reused_tokens", self.reused_tokens.into()),
                     ("loaded_blocks", self.loaded_blocks.into()),
                     ("recomputed_blocks", self.recomputed_blocks.into()),
+                    (
+                        "lazy_partition_searches",
+                        self.lazy_partition_searches.into(),
+                    ),
                 ]),
             ),
         ];
@@ -645,6 +681,48 @@ mod tests {
         m.oversized_admissions = 2;
         let report = m.report();
         assert!(report.contains("WARN  2 oversized solo admission"), "{report}");
+    }
+
+    #[test]
+    fn carry_and_lazy_search_counters_report_and_roundtrip() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.0);
+        m.wall_s = 1.0;
+        // Quiet run: neither line appears — pre-existing reports are
+        // byte-identical.
+        let report = m.report();
+        assert!(!report.contains("seed wire"), "{report}");
+        assert!(!report.contains("lazy partition"), "{report}");
+        m.carry_wire_bytes = 4096;
+        m.lazy_partition_searches = 3;
+        let report = m.report();
+        assert!(report.contains("seed wire  4096 bytes"), "{report}");
+        assert!(report.contains("3 lazy partition search(es)"), "{report}");
+        let j = m.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            back.get("prefill")
+                .unwrap()
+                .get("carry_wire_bytes")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            4096
+        );
+        assert_eq!(
+            back.get("prefix_cache")
+                .unwrap()
+                .get("lazy_partition_searches")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            3
+        );
+        let mut t = ServeMetrics::default();
+        t.absorb(&m);
+        t.absorb(&m);
+        assert_eq!(t.carry_wire_bytes, 8192);
+        assert_eq!(t.lazy_partition_searches, 6);
     }
 
     #[test]

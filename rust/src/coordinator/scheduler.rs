@@ -203,8 +203,42 @@ fn decode_event<B: ServingBackend + ?Sized>(
     debug_assert!(!active.is_empty(), "decode event with nothing active");
     let want = active.len().min(decode_batch);
     let b = backend.decode_capacity(want).clamp(1, want);
+    // Owner-aware rider selection (DESIGN.md §12): with per-owner
+    // headroom published, the event scans past a full worker's riders
+    // and fills the batch from other owners' instead of just
+    // narrowing. Without it (the default), the head slice rides —
+    // bit-identical to the pre-refactor rotation-only selection.
+    let selected: Vec<usize> = match backend.decode_capacity_by_owner() {
+        Some(mut headroom) => {
+            let mut sel = Vec::with_capacity(b);
+            for (i, a) in active.iter().enumerate() {
+                if sel.len() == b {
+                    break;
+                }
+                if let Some(h) = headroom.get_mut(a.owner) {
+                    if *h == 0 {
+                        // Full worker: swap in a deeper rider instead.
+                        continue;
+                    }
+                    *h -= 1;
+                }
+                sel.push(i);
+            }
+            if sel.is_empty() {
+                // The active set must always drain even with every
+                // arena exhausted — forced progress at the head, with
+                // the allocator error as the backstop (same rule as
+                // `decode_capacity`'s clamp-to-1).
+                sel.push(0);
+            }
+            sel
+        }
+        None => (0..b).collect(),
+    };
+    let b = selected.len();
     let mut steps: Vec<DecodeStep> = Vec::with_capacity(b);
-    for a in &active[..b] {
+    for &i in &selected {
+        let a = &active[i];
         // Every active request produced its first token at prefill end;
         // an empty history here is a scheduler bug, surfaced as an error
         // so the serve unwinds through the settle path.
@@ -251,11 +285,22 @@ fn decode_event<B: ServingBackend + ?Sized>(
     for &group in &out.groups {
         metrics.record_decode_step(group);
     }
-    for (a, &tok) in active[..b].iter_mut().zip(&out.tokens) {
+    for (&i, &tok) in selected.iter().zip(&out.tokens) {
+        let a = &mut active[i];
         a.tpot.push(out.step_s);
         a.produced.push(tok);
     }
-    active.rotate_left(b);
+    // Move exactly the riders that stepped to the back, preserving
+    // their order, so deep sets share the batch round-robin. When the
+    // head slice rode this IS `rotate_left(b)`; owner-aware selection
+    // rotates the swapped-in riders instead, leaving skipped (full-
+    // worker) requests at the front to retry next event.
+    let mut rode = Vec::with_capacity(b);
+    for &i in selected.iter().rev() {
+        rode.push(active.remove(i));
+    }
+    rode.reverse();
+    active.append(&mut rode);
     retire_finished(backend, eos, clock.now(), active, metrics, done, tracer)
 }
 
@@ -381,6 +426,34 @@ impl Scheduler {
         }
     }
 
+    /// Policy-coherent cut pricing (DESIGN.md §12): with searched cuts
+    /// enabled the planner prices each reuse cut under a
+    /// hierarchical-grid-searched partition memoized in the cache-owned
+    /// LUT — so the backend must *execute* under that same partition,
+    /// or the estimate and the charge disagree near the
+    /// compute-or-load crossover. Whenever the configured policy is
+    /// `Even` (the default), the cache searches its cuts, and the memo
+    /// LUT has offset entries to serve (offset interpolation clamps at
+    /// the edges, so a non-empty table always answers), auto-wire that
+    /// LUT into the admission's `Lut` policy. Explicit `Ratios`/`Lut`
+    /// configs are honoured as given; `--even-cuts` disables the whole
+    /// searched-cut machinery and with it this wiring.
+    fn effective_policy(&self, configured: &PartitionPolicy) -> PartitionPolicy {
+        if let (PartitionPolicy::Even, Some((pc, _))) =
+            (configured, self.cache.as_ref())
+        {
+            if pc.config().searched_cuts {
+                if let Some(lut) = pc
+                    .partition_lut()
+                    .filter(|lut| !lut.offset_entries().is_empty())
+                {
+                    return PartitionPolicy::Lut(lut.clone());
+                }
+            }
+        }
+        configured.clone()
+    }
+
     /// Admission-time cache consult: plan, lease, and (on payload-backed
     /// backends) collect the reused prefix's block payloads for one
     /// request. Returns `(reused, loads, lease, want_wire, info)` —
@@ -492,6 +565,15 @@ impl Scheduler {
         let prefill_chunk = self.cfg.prefill_chunk;
         let eos = self.cfg.eos_token;
         let mut clock = backend.clock();
+        // Raw-speed observability (DESIGN.md §12): both counters are
+        // monotone over the backend/cache lifetime, so diff them around
+        // the serve — the run's metrics report its own seed wire and
+        // lazy partition searches only.
+        let carry_wire0 = backend.carry_wire_bytes();
+        let lazy0 = self
+            .cache
+            .as_ref()
+            .map_or(0, |(pc, _)| pc.stats().lazy_partition_searches);
 
         // A non-finite arrival would poison the arrival sort and every
         // queue-wait below it: reject the workload up front instead of
@@ -756,10 +838,14 @@ impl Scheduler {
                 // attribute to compute.
                 let load_s = if loads.pipelined { 0.0 } else { loads.total_s };
                 let req_id = req.id;
+                // Price and execute under the same partition: the plan
+                // above may have memoized fresh searched cuts, so the
+                // effective policy is re-derived per admission.
+                let eff_policy = self.effective_policy(&policy);
                 // The job owns the request from here; it comes back in
                 // the completed outcome's `Active` entry.
                 let job = match backend.prefill_begin(
-                    req, reused, loads, &policy, want_wire, prefill_chunk,
+                    req, reused, loads, &eff_policy, want_wire, prefill_chunk,
                 ) {
                     Ok(job) => job,
                     Err(e) => {
@@ -793,6 +879,13 @@ impl Scheduler {
             stall_s = 0.0;
         }
         metrics.wall_s = clock.now();
+        metrics.carry_wire_bytes =
+            backend.carry_wire_bytes().saturating_sub(carry_wire0);
+        metrics.lazy_partition_searches = self
+            .cache
+            .as_ref()
+            .map_or(0, |(pc, _)| pc.stats().lazy_partition_searches)
+            .saturating_sub(lazy0);
         done.sort_by_key(|r| r.id);
         self.assert_lease_quiescent();
         Ok((done, metrics))

@@ -25,7 +25,9 @@ use kvr::coordinator::{
 use kvr::engines::{Evaluator, Method};
 use kvr::error::Result;
 use kvr::fabric::{RouterBackend, RoutingPolicy};
+use kvr::partition::lut::PartitionLut;
 use kvr::partition::search::SearchConfig;
+use kvr::prefixcache::planner::precompute_offset_grid;
 use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::runtime::Engine;
 use kvr::sim::cost::CostModel;
@@ -41,7 +43,7 @@ USAGE:
   kvr sim   [--model llama7b] [--hw a100-300gbps] [--ctx 4096,8192,16384]
             [--procs 4,8] [--methods tsp,kvr-e,kvr-s]
   kvr search [--model llama7b] [--hw a100-300gbps] [--ctx 16384] [--procs 4]
-            [--save lut.json]
+            [--save lut.json] [--lut-out offset-lut.json] [--block-tokens N]
   kvr run   [--artifacts artifacts] [--workers 2] [--prompt TEXT]
             [--max-new 32] [--policy even|searched]
   kvr serve [--artifacts artifacts] [--workers 2] [--requests 8]
@@ -52,6 +54,7 @@ USAGE:
             [--block-tokens N] [--hot-tokens N] [--cold-tokens N]
             [--cold-bw BYTES_PER_S] [--cold-latency S]
             [--pipelined-loads | --serial-loads] [--even-cuts]
+            [--lut offset-lut.json]
             [--nodes N] [--routing affinity|random|rr]
             [--trace-out FILE] [--metrics-json FILE]
   kvr trace <file.jsonl> [--validate] [--chrome out.json]
@@ -73,6 +76,14 @@ N-token chunk events interleaved with decode (0 = whole prompt in one
 chunk), bounding the decode stall a long prompt causes.
 `--mem-pressure` (sim) gates admission and decode on the modeled
 device-memory footprint of the active KV.
+
+Plan-once: `kvr search --lut-out FILE` precomputes the offset-aware
+partition LUT over the full (suffix, causal-offset) lattice up to
+`--ctx`, on the same memo quantum serving uses (pass the same
+`--block-tokens`). `kvr serve --lut FILE` (requires `--prefix-cache`)
+preloads it so admission planning never pays a lazy hierarchical grid
+search — the run's `lazy_partition_searches` counter stays 0 for
+prompts within the precomputed range.
 
 Fabric: `--nodes N` (sim only) serves through the multi-node fabric — N
 independent engines behind a router, each with its own prefix cache.
@@ -200,6 +211,21 @@ fn cmd_search(args: &Args) -> Result<()> {
         lut.save(&PathBuf::from(path))?;
         println!("lookup table ({} entries) saved to {path}", contexts.len());
     }
+    if let Some(path) = args.get("lut-out") {
+        // Plan-once precompute (DESIGN.md §12): fill every offset-LUT
+        // bucket a `kvr serve --lut` over prompts up to `--ctx` tokens
+        // can probe. The memo lattice is derived from the prefix-cache
+        // config, so pass the same `--block-tokens` the serve will use.
+        let cfg = PrefixCacheConfig::from_args(args, 512)?;
+        let mut lut = PartitionLut::new(&ev.cm.model.name, p, &ev.cm.hw.name);
+        let searched = precompute_offset_grid(&ev.cm, &cfg, &mut lut, c);
+        lut.save(&PathBuf::from(path))?;
+        println!(
+            "offset LUT ({searched} buckets searched, {} entries) saved \
+             to {path}",
+            lut.offset_entries().len()
+        );
+    }
     Ok(())
 }
 
@@ -241,6 +267,18 @@ fn prefix_cache_config(args: &Args, block_default: usize) -> Result<PrefixCacheC
     // One shared resolver with the serve example (flag semantics live
     // in the library, not per front-end).
     PrefixCacheConfig::from_args(args, block_default)
+}
+
+/// Build a serve's prefix cache, preloading a `--lut` offset table when
+/// given (`kvr search --lut-out` → `kvr serve --lut`, DESIGN.md §12).
+/// All three serve substrates — real, sim, fabric — construct their
+/// caches here so the preload semantics cannot drift.
+fn build_prefix_cache(args: &Args, block_default: usize) -> Result<PrefixCache> {
+    let mut pc = PrefixCache::new(prefix_cache_config(args, block_default)?);
+    if let Some(path) = args.get("lut") {
+        pc.preload_partition_lut(PartitionLut::load(&PathBuf::from(path))?);
+    }
+    Ok(pc)
 }
 
 /// Shared-prefix workload: `frac` of every prompt is a common system
@@ -291,6 +329,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let frac = args.f64_or("shared-prefix", 0.5)?;
     let decode_batch = args.usize_or("decode-batch", 8)?.max(1);
     let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
+    if args.get("lut").is_some() && !args.flag("prefix-cache") {
+        return Err(kvr::Error::Cli(
+            "--lut preloads the prefix cache's partition table: add \
+             --prefix-cache"
+                .into(),
+        ));
+    }
     let mut rng = Rng::new(seed);
 
     if args.flag("sim") {
@@ -319,10 +364,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 });
                 if args.flag("prefix-cache") {
                     let cm = backend.cost_model().clone();
-                    sched = sched.with_prefix_cache(
-                        PrefixCache::new(prefix_cache_config(args, 512)?),
-                        cm,
-                    );
+                    sched = sched
+                        .with_prefix_cache(build_prefix_cache(args, 512)?, cm);
                 }
                 router.add_node(sched, backend);
             }
@@ -350,10 +393,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         });
         if args.flag("prefix-cache") {
             let cm = backend.cost_model().clone();
-            sched = sched.with_prefix_cache(
-                PrefixCache::new(prefix_cache_config(args, 512)?),
-                cm,
-            );
+            sched =
+                sched.with_prefix_cache(build_prefix_cache(args, 512)?, cm);
         }
         if args.get("trace-out").is_some() {
             sched.enable_tracing();
@@ -385,8 +426,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cluster.manifest.model.clone(),
             hardware_by_name(&args.str_or("hw", "host-cpu"))?,
         );
-        sched = sched
-            .with_prefix_cache(PrefixCache::new(prefix_cache_config(args, g)?), cm);
+        sched = sched.with_prefix_cache(build_prefix_cache(args, g)?, cm);
     }
     if args.get("trace-out").is_some() {
         sched.enable_tracing();

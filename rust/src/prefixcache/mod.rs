@@ -63,13 +63,12 @@ pub struct PrefixCacheConfig {
     /// Price each compute-or-load cut with a hierarchical-search-derived
     /// partition at the cut's causal offset, memoized in the offset-aware
     /// [`PartitionLut`]. `false` restores even-partition pricing. The
-    /// searched estimate models the *achievable* TTFT (KVR-P style); a
-    /// deployment serving under `PartitionPolicy::Even` executes a
-    /// different partition than the one priced, so near the
-    /// compute-vs-load crossover the cut can be mildly off for what
-    /// actually runs — pair with a `Lut` policy sharing
-    /// [`PrefixCache::partition_lut`]'s offset entries for coherent
-    /// pricing, or disable for strict even-policy coherence.
+    /// searched estimate models the *achievable* TTFT (KVR-P style), and
+    /// the scheduler keeps estimate and charge coherent by auto-wiring
+    /// the memoized LUT into a default `Even` serving policy per
+    /// admission (DESIGN.md §12) — the backend then executes the same
+    /// partitions the cuts were priced with. Disable for strict
+    /// even-partition pricing and serving.
     pub searched_cuts: bool,
 }
 
@@ -144,6 +143,10 @@ pub struct CacheStats {
     pub recomputed_blocks: usize,
     /// Blocks admitted (including refreshes).
     pub admitted_blocks: usize,
+    /// Lazy `hierarchical_grid_search` runs the planner paid for fresh
+    /// offset-LUT buckets — 0 against a preloaded table
+    /// (`kvr serve --lut`, DESIGN.md §12).
+    pub lazy_partition_searches: usize,
 }
 
 impl CacheStats {
@@ -227,6 +230,18 @@ impl PrefixCache {
         self.partition_lut.as_ref()
     }
 
+    /// Preload a precomputed offset LUT (`kvr search --lut-out` →
+    /// `kvr serve --lut`, DESIGN.md §12) so admission planning never
+    /// pays a lazy `hierarchical_grid_search`. The table is installed
+    /// as-is; `plan_prefill`'s staleness rule still applies — a preload
+    /// whose `(model, procs, hw)` does not match the serving deployment
+    /// is discarded on first use exactly like a stale lazy memo, and
+    /// lazily searched entries then refill the fresh table. A matching
+    /// preload is extended in place by any buckets the grid missed.
+    pub fn preload_partition_lut(&mut self, lut: PartitionLut) {
+        self.partition_lut = Some(lut);
+    }
+
     pub fn config(&self) -> &PrefixCacheConfig {
         &self.cfg
     }
@@ -276,6 +291,7 @@ impl PrefixCache {
         };
         let plan =
             planner::plan(cm, &self.cfg, tokens.len(), &matched, procs, lut)?;
+        self.stats.lazy_partition_searches += plan.lazy_searches;
         self.stats.lookups += 1;
         if !matched.is_empty() {
             self.stats.hits += 1;
@@ -725,5 +741,30 @@ mod tests {
         // A different arity rebuilds rather than mis-applying.
         pc.plan_prefill(&cm, &a, 2).unwrap();
         assert_eq!(pc.partition_lut().unwrap().procs, 2);
+    }
+
+    #[test]
+    fn preloaded_lut_plans_with_zero_lazy_searches() {
+        let cm = cm();
+        let mut pc = cache(16, 64);
+        let mut lut = PartitionLut::new(&cm.model.name, 4, &cm.hw.name);
+        let n = planner::precompute_offset_grid(&cm, pc.config(), &mut lut, 4096);
+        assert!(n > 0);
+        pc.preload_partition_lut(lut);
+        let a = prompt(4, 1);
+        pc.admit(&a);
+        pc.plan_prefill(&cm, &prompt(4, 2), 4).unwrap();
+        pc.plan_prefill(&cm, &prompt(2, 3), 4).unwrap();
+        assert_eq!(
+            pc.stats().lazy_partition_searches, 0,
+            "plan-once contract: a preloaded grid leaves no lazy searches"
+        );
+
+        // A mismatched preload is discarded by the staleness rule and
+        // lazy searches resume into a fresh, matching table.
+        pc.preload_partition_lut(PartitionLut::new("other", 4, &cm.hw.name));
+        pc.plan_prefill(&cm, &prompt(4, 4), 4).unwrap();
+        assert!(pc.stats().lazy_partition_searches > 0);
+        assert_eq!(pc.partition_lut().unwrap().model, cm.model.name);
     }
 }

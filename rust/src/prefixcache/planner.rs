@@ -79,6 +79,10 @@ pub struct PrefillPlan {
     pub est_ttft_serial_s: f64,
     /// Modeled TTFT with the cache ignored (full recompute baseline).
     pub est_ttft_cold_s: f64,
+    /// `hierarchical_grid_search` runs this plan paid for on the
+    /// admission path (fresh LUT buckets) — 0 once the table is warm or
+    /// preloaded (`kvr serve --lut`).
+    pub lazy_searches: usize,
     pub blocks: Vec<PlannedBlock>,
 }
 
@@ -94,6 +98,7 @@ impl PrefillPlan {
             est_ttft_s,
             est_ttft_serial_s: est_ttft_s,
             est_ttft_cold_s: est_ttft_s,
+            lazy_searches: 0,
             blocks: Vec::new(),
         }
     }
@@ -117,6 +122,7 @@ impl PrefillPlan {
             est_ttft_s: self.est_ttft_cold_s,
             est_ttft_serial_s: self.est_ttft_cold_s,
             est_ttft_cold_s: self.est_ttft_cold_s,
+            lazy_searches: self.lazy_searches,
             blocks: self
                 .blocks
                 .iter()
@@ -158,24 +164,17 @@ fn lut_bucket(x: usize, q: usize) -> usize {
     }
 }
 
-/// Make sure the offset LUT holds a searched entry at the bucket of
-/// `(suffix, start)`, running `hierarchical_grid_search` once per fresh
-/// bucket (the KVR-P idea extended with the causal offset). Search
-/// failures — a bucket too small for the arity — just leave the bucket
-/// empty; callers fall back to the even split.
-fn ensure_offset_entry(
-    cm: &CostModel, cfg: &PrefixCacheConfig, lut: &mut PartitionLut,
-    suffix: usize, start: usize,
+/// Search one lattice bucket and insert it: `hierarchical_grid_search`
+/// over a `bs`-token suffix at causal offset `bst`, with the exact
+/// search config the lazy memo uses — the offline precompute
+/// ([`precompute_offset_grid`]) and the admission-path memo must fill
+/// identical entries or a preloaded table would still leave lazy
+/// searches behind. Search failures — a bucket too small for the
+/// arity — just leave the bucket empty; callers fall back to the even
+/// split.
+fn search_offset_bucket(
+    cm: &CostModel, lut: &mut PartitionLut, bs: usize, bst: usize,
 ) {
-    let q = lut_quantum(cfg);
-    let (bs, bst) = (lut_bucket(suffix, q), lut_bucket(start, q));
-    if lut.offset_entry(bs, bst).is_some() {
-        return;
-    }
-    let p = lut.procs;
-    if bs < p {
-        return;
-    }
     // Coarse zoom: the LUT interpolates between buckets anyway, so a
     // fine final stride buys nothing over its own search cost.
     let scfg = SearchConfig {
@@ -190,23 +189,84 @@ fn ensure_offset_entry(
             .map(|s| s.ttft)
             .unwrap_or(f64::INFINITY)
     };
-    if let Ok(res) = hierarchical_grid_search(bs, p, &scfg, &mut objective) {
+    if let Ok(res) = hierarchical_grid_search(bs, lut.procs, &scfg, &mut objective)
+    {
         let _ = lut.insert_offset(bs, bst, &res.partition, res.ttft);
     }
 }
 
+/// Make sure the offset LUT holds a searched entry at the bucket of
+/// `(suffix, start)`, running `hierarchical_grid_search` once per fresh
+/// bucket (the KVR-P idea extended with the causal offset). Returns
+/// whether a lazy search actually ran — 0 against a warmed or preloaded
+/// table, which is exactly what `ServeMetrics::lazy_partition_searches`
+/// counts.
+fn ensure_offset_entry(
+    cm: &CostModel, cfg: &PrefixCacheConfig, lut: &mut PartitionLut,
+    suffix: usize, start: usize,
+) -> bool {
+    let q = lut_quantum(cfg);
+    let (bs, bst) = (lut_bucket(suffix, q), lut_bucket(start, q));
+    if lut.offset_entry(bs, bst).is_some() {
+        return false;
+    }
+    if bs < lut.procs {
+        return false;
+    }
+    search_offset_bucket(cm, lut, bs, bst);
+    true
+}
+
+/// Precompute every offset-LUT bucket a serve over prompts of up to
+/// `max_context` tokens could probe (`kvr search --lut-out`): the full
+/// `(suffix, start)` lattice at the memo quantum, bounded by
+/// `suffix + start <= max_context` with one quantum of rounding slack on
+/// each coordinate. A table built here and preloaded via
+/// `kvr serve --lut` makes [`ensure_offset_entry`] a pure lookup — zero
+/// lazy `hierarchical_grid_search` calls on the admission path. Returns
+/// the number of buckets searched.
+pub fn precompute_offset_grid(
+    cm: &CostModel, cfg: &PrefixCacheConfig, lut: &mut PartitionLut,
+    max_context: usize,
+) -> usize {
+    let q = lut_quantum(cfg);
+    let cmax = lut_bucket(max_context, q);
+    let mut searched = 0usize;
+    let mut bs = q;
+    while bs <= cmax {
+        if bs >= lut.procs {
+            // lut_bucket rounds each coordinate up by at most one
+            // quantum, so reachable bucket sums stay <= cmax + 2q.
+            let mut bst = 0usize;
+            while bs + bst <= cmax + 2 * q && bst <= cmax {
+                if lut.offset_entry(bs, bst).is_none() {
+                    search_offset_bucket(cm, lut, bs, bst);
+                    searched += 1;
+                }
+                bst += q;
+            }
+        }
+        bs += q;
+    }
+    searched
+}
+
 /// The partition one candidate cut is priced with: the memoized
 /// searched partition at the cut's causal offset when enabled and
-/// available, the even split otherwise.
+/// available, the even split otherwise. Bumps `lazy_searches` when the
+/// memo had to run a fresh search for the bucket.
 fn cut_partition(
     cm: &CostModel, cfg: &PrefixCacheConfig, procs: usize, suffix: usize,
     start: usize, lut: &mut Option<&mut PartitionLut>,
+    lazy_searches: &mut usize,
 ) -> Partition {
     let p = procs.min(suffix).max(1);
     if cfg.searched_cuts && suffix >= p {
         if let Some(lut) = lut.as_deref_mut() {
             if lut.procs == p {
-                ensure_offset_entry(cm, cfg, lut, suffix, start);
+                if ensure_offset_entry(cm, cfg, lut, suffix, start) {
+                    *lazy_searches += 1;
+                }
                 if let Ok(ratios) = lut.predict_ratios_offset(suffix, start) {
                     if let Ok(part) = Partition::from_ratios(suffix, &ratios, 1)
                     {
@@ -248,7 +308,9 @@ pub fn plan(
     // come out of real suffix compute, never out of the cache.
     let max_reuse_blocks = matched.len().min(c.saturating_sub(1) / bt);
 
-    let cold_part = cut_partition(cm, cfg, procs, c, 0, &mut lut);
+    let mut lazy_searches = 0usize;
+    let cold_part =
+        cut_partition(cm, cfg, procs, c, 0, &mut lut, &mut lazy_searches);
     let est_ttft_cold_s = chain_ttft(cm, &cold_part, &[])?;
     let mut best_r = 0usize;
     let mut best_est = est_ttft_cold_s;
@@ -258,7 +320,9 @@ pub fn plan(
     for r in 1..=max_reuse_blocks {
         load_acc += block_load_s(cm, cfg, matched[r - 1].1);
         let (suffix, start) = (c - r * bt, r * bt);
-        let part = cut_partition(cm, cfg, procs, suffix, start, &mut lut);
+        let part = cut_partition(
+            cm, cfg, procs, suffix, start, &mut lut, &mut lazy_searches,
+        );
         let est = if cfg.pipelined_loads && load_acc > 0.0 {
             // The overlapped makespan: the load stream delivers the
             // reused KV layer by layer while the chain consumes it.
@@ -311,6 +375,7 @@ pub fn plan(
         est_ttft_s: best_est,
         est_ttft_serial_s: best_serial,
         est_ttft_cold_s,
+        lazy_searches,
         blocks,
     })
 }
@@ -527,15 +592,42 @@ mod tests {
         c.searched_cuts = true;
         let matched = cold_match(8);
         let mut lut = PartitionLut::new("llama7b", 4, "a100-300gbps");
-        plan(&cm, &c, 8192, &matched, 4, Some(&mut lut)).unwrap();
+        let first = plan(&cm, &c, 8192, &matched, 4, Some(&mut lut)).unwrap();
         let entries = lut.offset_entries().len();
         assert!(entries > 0);
-        plan(&cm, &c, 8192, &matched, 4, Some(&mut lut)).unwrap();
+        assert!(first.lazy_searches > 0, "fresh buckets must be counted");
+        let second = plan(&cm, &c, 8192, &matched, 4, Some(&mut lut)).unwrap();
         assert_eq!(
             lut.offset_entries().len(),
             entries,
             "a replayed plan must hit the memoized buckets"
         );
+        assert_eq!(second.lazy_searches, 0, "warm planning is O(lookup)");
+    }
+
+    #[test]
+    fn precomputed_grid_leaves_no_lazy_searches() {
+        // The plan-once contract: after `precompute_offset_grid` over the
+        // serving context range, no plan shape within it pays a lazy
+        // `hierarchical_grid_search`.
+        let cm = cm();
+        let mut c = cfg(2e10);
+        c.searched_cuts = true;
+        let mut lut = PartitionLut::new("llama7b", 4, "a100-300gbps");
+        let n = precompute_offset_grid(&cm, &c, &mut lut, 8192);
+        assert!(n > 0, "a fresh table must search its grid");
+        for &(ctx, blocks) in
+            &[(8192usize, 8usize), (8192, 16), (4096, 4), (6144, 2), (2048, 0)]
+        {
+            let matched = cold_match(blocks);
+            let p = plan(&cm, &c, ctx, &matched, 4, Some(&mut lut)).unwrap();
+            assert_eq!(
+                p.lazy_searches, 0,
+                "ctx {ctx}, {blocks} cached blocks hit a cold bucket"
+            );
+        }
+        // Re-precomputing the same grid finds every bucket filled.
+        assert_eq!(precompute_offset_grid(&cm, &c, &mut lut, 8192), 0);
     }
 
     #[test]

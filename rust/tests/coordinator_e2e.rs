@@ -3,11 +3,16 @@
 
 use std::path::PathBuf;
 
+use kvr::config::{hardware_by_name, ModelConfig};
 use kvr::coordinator::{
-    ByteTokenizer, Cluster, GenRequest, PartitionPolicy, Scheduler,
-    SchedulerConfig,
+    ByteTokenizer, ChunkOutcome, Clock, Cluster, DecodeOutcome, DecodeStep,
+    GenRequest, LoadPlan, PartitionPolicy, PrefillJob, PrefillOutcome,
+    ReusedPrefix, Scheduler, SchedulerConfig, ServingBackend,
 };
+use kvr::partition::Partition;
+use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::runtime::Engine;
+use kvr::sim::cost::CostModel;
 
 fn art_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -211,20 +216,276 @@ fn decode_and_release_error_paths() {
     let err = cluster.decode(7, 30, 1).unwrap_err().to_string();
     assert!(err.contains("out of range"), "{err}");
     assert!(cluster.release(7, 30).is_err());
-    // Release to the wrong owner fails and leaves the cache intact.
-    let err = cluster.release(wrong, 30).unwrap_err().to_string();
-    assert!(err.contains("no cache for request 30"), "{err}");
+    // Release is idempotent per worker: releasing where the cache does
+    // not live is a no-op success, and the real cache stays intact.
+    cluster.release(wrong, 30).unwrap();
     assert!(cluster.decode(pre.owner, 30, 1).is_ok());
 
-    // Proper release succeeds exactly once; double release is an error.
+    // Proper release frees the cache; double release is a no-op too
+    // (abort paths settle retained seeds a failure may have consumed).
     cluster.release(pre.owner, 30).unwrap();
-    let err = cluster.release(pre.owner, 30).unwrap_err().to_string();
+    cluster.release(pre.owner, 30).unwrap();
+    let err = cluster.decode(pre.owner, 30, 1).unwrap_err().to_string();
     assert!(err.contains("no cache for request 30"), "{err}");
     // The cluster stays usable after the error paths.
     let again = cluster
         .parallel_prefill(31, &prompt, &PartitionPolicy::Even)
         .unwrap();
     cluster.release(again.owner, 31).unwrap();
+}
+
+#[test]
+fn chunked_carry_ships_seed_wire_once_not_per_chunk() {
+    // Zero-copy chunk carry (DESIGN.md §12): the between-chunk hand-off
+    // retains the accumulated KV on its owning worker, so the carry
+    // counter — all seed wire shipped into prefill chains — stays flat
+    // across intermediate chunks. Before the refactor every chunk
+    // re-shipped the full accumulated prefix: O(prefix) wire per chunk.
+    if !have_artifacts() {
+        return;
+    }
+    let tok = ByteTokenizer;
+    let prompt = tok.pad_to_multiple(&vec![11i32; 190], 32); // 192 tokens
+    let mut cluster = Cluster::new(&art_dir(), 2).unwrap();
+
+    // Reference: the unchunked chain over the same prompt.
+    let full = cluster
+        .parallel_prefill(40, &prompt, &PartitionPolicy::Even)
+        .unwrap();
+    cluster.release(full.owner, 40).unwrap();
+    assert_eq!(cluster.carry_wire_bytes(), 0, "no reuse seed was shipped");
+
+    // Fresh prompt, three 64-token chunks: every chunk boundary must
+    // ship zero seed wire (the retained cache never leaves its worker).
+    let req = GenRequest {
+        id: 41,
+        tokens: prompt.clone(),
+        max_new_tokens: 1,
+        arrival: 0.0,
+    };
+    let mut job = cluster
+        .prefill_begin(req, None, LoadPlan::none(), &PartitionPolicy::Even, false, 64)
+        .unwrap();
+    assert_eq!(job.chunks_total(), 3);
+    let mut fin: Option<PrefillOutcome> = None;
+    while fin.is_none() {
+        let before = cluster.carry_wire_bytes();
+        let out = cluster.prefill_chunk(&mut job).unwrap();
+        assert_eq!(
+            cluster.carry_wire_bytes(),
+            before,
+            "a carried chunk boundary must ship no wire"
+        );
+        fin = out.done;
+    }
+    let fin = fin.unwrap();
+    // The carried chain agrees with the unchunked chain bit-for-bit on
+    // the token it emits.
+    let want = full
+        .logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as i32)
+        .unwrap();
+    assert_eq!(fin.first_token, want, "chunked chain must match unchunked");
+    ServingBackend::release(&mut cluster, fin.owner, 41).unwrap();
+
+    // With a reused prefix the carry is the seed wire, once — O(seed),
+    // not O(prefix x chunks).
+    let seeded = cluster
+        .parallel_prefill_reused(42, &prompt, None, &PartitionPolicy::Even, true)
+        .unwrap();
+    let wire = seeded.wire.clone().expect("wire requested");
+    cluster.release(seeded.owner, 42).unwrap();
+    let m = cluster.manifest.model.clone();
+    let head = kvr::runtime::KvCache::from_wire(
+        m.layers, m.kv_heads, m.head_dim, prompt.len(), &wire,
+    )
+    .unwrap();
+    let seed_wire = head.block_wire(0, 64);
+    let seed_bytes = seed_wire.len() as u64;
+    let reused = ReusedPrefix { tokens: 64, wire: seed_wire, blocks: Vec::new() };
+    let req = GenRequest {
+        id: 43,
+        tokens: prompt.clone(),
+        max_new_tokens: 1,
+        arrival: 0.0,
+    };
+    let base = cluster.carry_wire_bytes();
+    let mut job = cluster
+        .prefill_begin(req, Some(reused), LoadPlan::none(), &PartitionPolicy::Even, false, 64)
+        .unwrap();
+    assert_eq!(job.chunks_total(), 2);
+    let out = cluster.prefill_chunk(&mut job).unwrap();
+    assert!(out.done.is_none());
+    assert_eq!(
+        cluster.carry_wire_bytes() - base,
+        seed_bytes,
+        "the first chunk ships exactly the reuse seed"
+    );
+    let before = cluster.carry_wire_bytes();
+    let out = cluster.prefill_chunk(&mut job).unwrap();
+    assert_eq!(
+        cluster.carry_wire_bytes(),
+        before,
+        "the intermediate carry ships nothing on top of the seed"
+    );
+    let fin = out.done.expect("second chunk finishes the job");
+    assert_eq!(fin.reused_tokens, 64);
+    ServingBackend::release(&mut cluster, fin.owner, 43).unwrap();
+}
+
+/// A [`Cluster`] whose `prefill_chunk` fails once, after the target
+/// request's first chunk completed — with a retained seed staged on a
+/// worker. The abort path must settle that seed (and the lease above
+/// it) or the worker leaks slab rows for the cluster's lifetime.
+struct FailingChunkCluster {
+    inner: Cluster,
+    fail_req: u64,
+    armed: bool,
+}
+
+impl ServingBackend for FailingChunkCluster {
+    fn workers(&self) -> usize {
+        ServingBackend::workers(&self.inner)
+    }
+    fn model(&self) -> &ModelConfig {
+        self.inner.model()
+    }
+    fn granularity(&self) -> usize {
+        ServingBackend::granularity(&self.inner)
+    }
+    fn needs_kv_payloads(&self) -> bool {
+        self.inner.needs_kv_payloads()
+    }
+    fn clock(&self) -> Box<dyn Clock> {
+        self.inner.clock()
+    }
+    fn plan_partition(
+        &self, c: usize, start: usize, policy: &PartitionPolicy,
+    ) -> kvr::Result<Partition> {
+        ServingBackend::plan_partition(&self.inner, c, start, policy)
+    }
+    fn prefill(
+        &mut self, req: &GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
+    ) -> kvr::Result<PrefillOutcome> {
+        self.inner.prefill(req, reused, loads, policy, want_wire)
+    }
+    fn prefill_begin(
+        &mut self, req: GenRequest, reused: Option<ReusedPrefix>,
+        loads: LoadPlan, policy: &PartitionPolicy, want_wire: bool,
+        chunk_tokens: usize,
+    ) -> kvr::Result<PrefillJob> {
+        self.inner
+            .prefill_begin(req, reused, loads, policy, want_wire, chunk_tokens)
+    }
+    fn prefill_chunk(
+        &mut self, job: &mut PrefillJob,
+    ) -> kvr::Result<ChunkOutcome> {
+        if self.armed && job.req.id == self.fail_req && job.chunks_done() == 1 {
+            self.armed = false;
+            return Err(kvr::Error::Coordinator(
+                "injected chunk failure".into(),
+            ));
+        }
+        self.inner.prefill_chunk(job)
+    }
+    fn prefill_abort(&mut self, job: PrefillJob) {
+        self.inner.prefill_abort(job);
+    }
+    fn decode_batch(
+        &mut self, steps: &[DecodeStep],
+    ) -> kvr::Result<DecodeOutcome> {
+        ServingBackend::decode_batch(&mut self.inner, steps)
+    }
+    fn release(&mut self, owner: usize, req_id: u64) -> kvr::Result<()> {
+        ServingBackend::release(&mut self.inner, owner, req_id)
+    }
+    fn kv_bytes_active(&self) -> f64 {
+        self.inner.kv_bytes_active()
+    }
+    fn admit_capacity(&self, prompt_tokens: usize, max_new_tokens: usize) -> bool {
+        self.inner.admit_capacity(prompt_tokens, max_new_tokens)
+    }
+    fn decode_capacity(&self, want: usize) -> usize {
+        self.inner.decode_capacity(want)
+    }
+    fn decode_capacity_by_owner(&self) -> Option<Vec<usize>> {
+        self.inner.decode_capacity_by_owner()
+    }
+    fn carry_wire_bytes(&self) -> u64 {
+        self.inner.carry_wire_bytes()
+    }
+}
+
+#[test]
+fn mid_job_abort_releases_the_retained_seed() {
+    // Failure injection across the retained-seed carry: request 51's
+    // chunked prefill dies on its second chunk, AFTER chunk one parked
+    // its cache as a staged seed. The settle path must release that
+    // seed (worker-side) and the admission's lease (cache-side), and
+    // the cluster must serve the same request again afterwards.
+    if !have_artifacts() {
+        return;
+    }
+    let shared: Vec<i32> = (0..96).map(|i| (i * 7 + 3) % 251).collect();
+    let mk = |id: u64, salt: i32| {
+        let mut tokens = shared.clone();
+        tokens.extend((0..96).map(|i| (i * 3 + salt) % 251));
+        GenRequest { id, tokens, max_new_tokens: 2, arrival: 0.0 }
+    };
+    let cluster = Cluster::new(&art_dir(), 2).unwrap();
+    let cm = CostModel::new(
+        cluster.manifest.model.clone(),
+        hardware_by_name("host-cpu").unwrap(),
+    );
+    let mut backend =
+        FailingChunkCluster { inner: cluster, fail_req: 51, armed: true };
+    let cfg = PrefixCacheConfig {
+        block_tokens: 32,
+        hot_capacity_tokens: 64 * 32,
+        cold_capacity_tokens: 256 * 32,
+        cold_load_bw: 300e9,
+        cold_load_latency: 1e-5,
+        ..PrefixCacheConfig::default()
+    };
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: 2,
+        prefill_chunk: 32,
+        ..SchedulerConfig::default()
+    })
+    .with_prefix_cache(PrefixCache::new(cfg), cm);
+
+    // Request 50 admits the shared prefix into the cache.
+    let (resp, _) = sched.serve(&mut backend, vec![mk(50, 5)]).unwrap();
+    assert_eq!(resp.len(), 1);
+
+    // Request 51 (shared prefix, fresh tail) chunks over its suffix and
+    // dies on the second chunk — the retained seed from chunk one is
+    // staged on a worker at that moment.
+    let err = sched
+        .serve(&mut backend, vec![mk(51, 11)])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("injected chunk failure"), "{err}");
+    // Every lease pin was matched by an unpin on the abort path.
+    sched.assert_lease_quiescent();
+    // The retained seed and partial KV settled: nothing stays resident.
+    assert_eq!(
+        backend.kv_bytes_active(),
+        0.0,
+        "aborted job must release its retained seed"
+    );
+
+    // The same request serves cleanly afterwards: no stale staged seed,
+    // no leaked slab, workers all alive.
+    let (resp, m) = sched.serve(&mut backend, vec![mk(51, 11)]).unwrap();
+    assert_eq!(resp.len(), 1);
+    assert!(!resp[0].tokens.is_empty());
+    assert_eq!(m.requests, 1);
+    sched.assert_lease_quiescent();
 }
 
 #[test]

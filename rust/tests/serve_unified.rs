@@ -18,7 +18,9 @@ use kvr::coordinator::{
     ReusedPrefix, Scheduler, SchedulerConfig, ServeMetrics, ServingBackend,
     SimBackend, SimCluster,
 };
+use kvr::partition::lut::PartitionLut;
 use kvr::partition::Partition;
+use kvr::prefixcache::planner::precompute_offset_grid;
 use kvr::prefixcache::{PrefixCache, PrefixCacheConfig};
 use kvr::sim::cost::CostModel;
 use kvr::sim::{kvr_timeline_offset, quiet_network};
@@ -601,6 +603,63 @@ fn chunked_prefill_cuts_tpot_p95_and_bounds_the_stall() {
         p95_ch < p95_un,
         "chunked TPOT p95 {p95_ch} !< unchunked {p95_un}"
     );
+}
+
+#[test]
+fn preloaded_lut_serves_with_zero_lazy_searches() {
+    // Plan-once (DESIGN.md §12): `kvr search --lut-out` precomputes the
+    // (suffix × causal-offset) partition grid offline; a serve with that
+    // LUT preloaded must never pay a lazy hierarchical grid search at
+    // admission — counter-asserted, not eyeballed. The same workload
+    // against an empty memo LUT is the lazy control.
+    let (model, hw) = parts();
+    let cm = CostModel::new(model.clone(), hw.clone());
+    // searched_cuts stays at its default (true): this is the config the
+    // wiring exists for.
+    let cfg = PrefixCacheConfig {
+        block_tokens: 512,
+        hot_capacity_tokens: 64 * 512,
+        cold_capacity_tokens: 512 * 512,
+        cold_load_bw: 300e9,
+        cold_load_latency: 1e-4,
+        ..PrefixCacheConfig::default()
+    };
+    assert!(cfg.searched_cuts, "plan-once targets the searched-cut path");
+    let reqs = workload(8, 2048, 512, 8);
+    let run = |pc: PrefixCache| {
+        let mut backend = SimBackend::new(model.clone(), hw.clone(), 4);
+        let mut sched = sim_scheduler(8).with_prefix_cache(pc, cm.clone());
+        let (resp, m) = sched.serve(&mut backend, reqs.clone()).unwrap();
+        assert_eq!(resp.len(), 8);
+        m
+    };
+
+    // Lazy control: the memo LUT starts empty, so the first admissions
+    // that touch each (suffix, offset) bucket search on the serving path.
+    let lazy = run(PrefixCache::new(cfg.clone()));
+    assert!(
+        lazy.lazy_partition_searches > 0,
+        "control run must pay lazy searches at admission"
+    );
+
+    // Plan-once: precompute the grid (what `kvr search --lut-out`
+    // saves), preload it (what `kvr serve --lut` loads), serve again.
+    let mut lut = PartitionLut::new(&cm.model.name, 4, &cm.hw.name);
+    let buckets = precompute_offset_grid(&cm, &cfg, &mut lut, 4096);
+    assert!(buckets > 0, "the grid must search offline");
+    let mut pc = PrefixCache::new(cfg.clone());
+    pc.preload_partition_lut(lut);
+    let warm = run(pc);
+    assert_eq!(
+        warm.lazy_partition_searches, 0,
+        "a preloaded LUT must leave zero lazy searches on the serving path"
+    );
+    // The modeled backend ships no seed wire either way.
+    assert_eq!(warm.carry_wire_bytes, 0);
+    // Same tokens served: plan-once changes where planning happens, not
+    // what is served.
+    assert_eq!(warm.requests, lazy.requests);
+    assert_eq!(warm.tokens_out, lazy.tokens_out);
 }
 
 // ---------------------------------------------------------------------
