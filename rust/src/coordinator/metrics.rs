@@ -152,6 +152,31 @@ pub struct ServeMetrics {
     /// Fabric: requests routed to a node where at least one prefix
     /// block was already resident at route time.
     pub route_hits: usize,
+    /// Failover: injected node crashes this serve survived (gates the
+    /// failover report line and JSON section).
+    pub node_failures: usize,
+    /// Failover: requests re-placed off a dead node onto a survivor.
+    pub rerouted_requests: usize,
+    /// Failover: global-index entries drained when their owner died.
+    pub orphaned_blocks: usize,
+    /// Failover: prefix blocks re-streamed from surviving owners for
+    /// rerouted requests.
+    pub refetched_blocks: usize,
+    /// Failover: rerouted requests with no surviving prefix at the
+    /// target — the §7 planner recomputes their KV from scratch.
+    pub recompute_fallbacks: usize,
+    /// Failover: peer-prefix streams abandoned at the priced deadline
+    /// (the router fell back to recompute instead of wedging).
+    pub fetch_timeouts: usize,
+    /// Failover: requests dropped after exhausting the reroute budget.
+    pub failover_gave_up: usize,
+    /// Global-index invalidations whose recorded owner disagreed with
+    /// the evicting node (index drift made observable; always counted,
+    /// surfaced only when non-zero).
+    pub stale_invalidations: usize,
+    /// Per-crash recovery spans: crash time to the last rerouted
+    /// retirement (s).
+    pub recovery_times: Vec<f64>,
     /// Bounded log-bucket TTFT histogram — the constant-memory tail
     /// estimate for runs too large to retain every sample (the exact
     /// vectors above stay the golden source of truth).
@@ -162,6 +187,8 @@ pub struct ServeMetrics {
     pub hist_e2e: Histogram,
     /// Bounded queue-wait histogram.
     pub hist_queue: Histogram,
+    /// Bounded recovery-time histogram (one sample per survived crash).
+    pub hist_recovery: Histogram,
 }
 
 impl ServeMetrics {
@@ -225,6 +252,13 @@ impl ServeMetrics {
     /// one chunk).
     pub fn record_prefill_chunk(&mut self) {
         self.prefill_chunks += 1;
+    }
+
+    /// Record one survived crash's recovery span (crash time to the
+    /// last rerouted retirement).
+    pub fn record_recovery(&mut self, span_s: f64) {
+        self.recovery_times.push(span_s);
+        self.hist_recovery.record(span_s);
     }
 
     /// Track the longest decode stall observed: `stall_s` is the
@@ -327,10 +361,20 @@ impl ServeMetrics {
         self.lazy_partition_searches += other.lazy_partition_searches;
         self.phase_totals.add(&other.phase_totals);
         self.phase_requests += other.phase_requests;
+        self.node_failures += other.node_failures;
+        self.rerouted_requests += other.rerouted_requests;
+        self.orphaned_blocks += other.orphaned_blocks;
+        self.refetched_blocks += other.refetched_blocks;
+        self.recompute_fallbacks += other.recompute_fallbacks;
+        self.fetch_timeouts += other.fetch_timeouts;
+        self.failover_gave_up += other.failover_gave_up;
+        self.stale_invalidations += other.stale_invalidations;
+        self.recovery_times.extend_from_slice(&other.recovery_times);
         self.hist_ttft.merge(&other.hist_ttft);
         self.hist_tpot.merge(&other.hist_tpot);
         self.hist_e2e.merge(&other.hist_e2e);
         self.hist_queue.merge(&other.hist_queue);
+        self.hist_recovery.merge(&other.hist_recovery);
     }
 
     /// Output tokens per second over the wall-clock window.
@@ -455,6 +499,43 @@ impl ServeMetrics {
                 self.peer_blocks,
             ));
         }
+        // Degraded-mode section only when a crash was actually injected
+        // — fault-free reports stay byte-identical.
+        if self.node_failures > 0 {
+            out.push_str(&format!(
+                "failover  {} node crash(es)   rerouted {}   orphaned {} \
+                 blocks   refetched {} / recomputed {}   fetch-timeouts {}\n",
+                self.node_failures,
+                self.rerouted_requests,
+                self.orphaned_blocks,
+                self.refetched_blocks,
+                self.recompute_fallbacks,
+                self.fetch_timeouts,
+            ));
+            if !self.recovery_times.is_empty() {
+                let r = Summary::of(&self.recovery_times);
+                out.push_str(&format!(
+                    "recovery  mean {} p95 {} max {}\n",
+                    fmt_time(r.mean),
+                    fmt_time(r.p95),
+                    fmt_time(r.max),
+                ));
+            }
+            if self.failover_gave_up > 0 {
+                out.push_str(&format!(
+                    "WARN  {} request(s) dropped after exhausting the \
+                     failover retry budget\n",
+                    self.failover_gave_up,
+                ));
+            }
+        }
+        if self.stale_invalidations > 0 {
+            out.push_str(&format!(
+                "WARN  {} stale index invalidation(s): eviction reported \
+                 by a non-owner node\n",
+                self.stale_invalidations,
+            ));
+        }
         out
     }
 
@@ -567,6 +648,31 @@ impl ServeMetrics {
                     ("route_hit_rate", self.route_hit_rate().into()),
                     ("peer_blocks", self.peer_blocks.into()),
                     ("load_imbalance", self.load_imbalance().into()),
+                    (
+                        "stale_invalidations",
+                        self.stale_invalidations.into(),
+                    ),
+                ]),
+            ));
+        }
+        // Failover section only when a crash was injected: fault-free
+        // fabric runs keep their pre-failure JSON shape.
+        if self.node_failures > 0 {
+            fields.push((
+                "failover",
+                Json::obj(vec![
+                    ("node_failures", self.node_failures.into()),
+                    ("rerouted_requests", self.rerouted_requests.into()),
+                    ("orphaned_blocks", self.orphaned_blocks.into()),
+                    ("refetched_blocks", self.refetched_blocks.into()),
+                    (
+                        "recompute_fallbacks",
+                        self.recompute_fallbacks.into(),
+                    ),
+                    ("fetch_timeouts", self.fetch_timeouts.into()),
+                    ("gave_up", self.failover_gave_up.into()),
+                    ("recovery", summary_json(&self.recovery_times)),
+                    ("recovery_hist", hist_json(&self.hist_recovery)),
                 ]),
             ));
         }
@@ -927,6 +1033,81 @@ mod tests {
         let mut empty_batch = ServeMetrics::default();
         empty_batch.node_requests = vec![0, 0];
         assert_eq!(empty_batch.load_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn failover_counters_gate_report_and_json() {
+        let mut m = ServeMetrics::default();
+        m.record_request(0.5, &[0.1], 0.8, 0.0);
+        m.wall_s = 2.0;
+        m.fabric_nodes = 2;
+        m.node_requests = vec![1, 0];
+        // Fault-free fabric run: no failover line or section, no stale
+        // warning.
+        let report = m.report();
+        assert!(!report.contains("failover"), "{report}");
+        assert!(!report.contains("stale index"), "{report}");
+        assert!(m.to_json().get("failover").is_none());
+
+        m.node_failures = 1;
+        m.rerouted_requests = 3;
+        m.orphaned_blocks = 5;
+        m.refetched_blocks = 2;
+        m.recompute_fallbacks = 1;
+        m.fetch_timeouts = 1;
+        m.failover_gave_up = 1;
+        m.stale_invalidations = 2;
+        m.record_recovery(0.25);
+        let report = m.report();
+        assert!(report.contains("failover  1 node crash(es)"), "{report}");
+        assert!(report.contains("rerouted 3"), "{report}");
+        assert!(report.contains("orphaned 5"), "{report}");
+        assert!(report.contains("refetched 2 / recomputed 1"), "{report}");
+        assert!(report.contains("fetch-timeouts 1"), "{report}");
+        assert!(report.contains("recovery  mean 250.000ms"), "{report}");
+        assert!(
+            report.contains("WARN  1 request(s) dropped"),
+            "{report}"
+        );
+        assert!(
+            report.contains("WARN  2 stale index invalidation(s)"),
+            "{report}"
+        );
+        let j = m.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j, "--metrics-json roundtrips the failover section");
+        let f = back.get("failover").unwrap();
+        assert_eq!(f.get("node_failures").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            f.get("rerouted_requests").unwrap().as_usize().unwrap(),
+            3
+        );
+        assert_eq!(f.get("gave_up").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            f.get("recovery").unwrap().get("max").unwrap().as_f64().unwrap(),
+            0.25
+        );
+        assert_eq!(
+            back.get("fabric")
+                .unwrap()
+                .get("stale_invalidations")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            2
+        );
+
+        // And absorb folds everything across serves.
+        let mut t = ServeMetrics::default();
+        t.absorb(&m);
+        t.absorb(&m);
+        assert_eq!(t.node_failures, 2);
+        assert_eq!(t.rerouted_requests, 6);
+        assert_eq!(t.orphaned_blocks, 10);
+        assert_eq!(t.fetch_timeouts, 2);
+        assert_eq!(t.stale_invalidations, 4);
+        assert_eq!(t.recovery_times, vec![0.25, 0.25]);
+        assert_eq!(t.hist_recovery.count(), 2);
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Deterministic fault injection for the serving fabric (DESIGN.md
+//! §13).
+//!
+//! A [`FaultPlan`] names what breaks and when, all on the shared-origin
+//! virtual clock so every run replays bit-identically:
+//!
+//! * **crash** — node `n` dies at time `t`: responses it would have
+//!   retired before `t` stand, everything else is rerouted to a
+//!   survivor (re-fetch or recompute) by the router;
+//! * **slow** — node `n`'s links carry a latency multiplier (a flaky
+//!   NIC), which the peer-fetch deadline turns into timeouts;
+//! * **link** — a directed peer link loses bandwidth inside a window
+//!   (reusing [`Contention`] from the noise sidecar).
+//!
+//! Plans come from `kvr serve --faults plan.json`, the `--kill-node
+//! N@T[,N@T...]` shorthand, or the seeded [`FaultPlan::random_single_kill`]
+//! generator the property tests draw from. An empty plan is free: the
+//! router short-circuits back to the fault-free serve path.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::net::{Contention, LinkId, Network};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A deterministic schedule of injected faults (virtual-clock times).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// node → crash time (one crash per node; the node is alive on
+    /// `[0, t)` and dead from `t` on).
+    crashes: BTreeMap<usize, f64>,
+    /// node → latency multiplier applied to every link touching it.
+    slow: BTreeMap<usize, f64>,
+    /// Directed link bandwidth-degradation windows.
+    links: Vec<(usize, usize, Contention)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when the plan injects nothing — the router serves on the
+    /// pinned fault-free path.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.slow.is_empty() && self.links.is_empty()
+    }
+
+    /// Schedule node `node` to crash at virtual time `t`.
+    pub fn kill(&mut self, node: usize, t: f64) -> Result<()> {
+        if !t.is_finite() || t < 0.0 {
+            return Err(Error::Cli(format!(
+                "fault plan: crash time for node {node} must be finite and \
+                 non-negative, got {t}"
+            )));
+        }
+        if self.crashes.insert(node, t).is_some() {
+            return Err(Error::Cli(format!(
+                "fault plan: node {node} is killed twice"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Multiply the latency of every link touching `node` by `mult`.
+    pub fn slow_node(&mut self, node: usize, mult: f64) -> Result<()> {
+        if !mult.is_finite() || mult <= 0.0 {
+            return Err(Error::Cli(format!(
+                "fault plan: latency multiplier for node {node} must be \
+                 finite and positive, got {mult}"
+            )));
+        }
+        self.slow.insert(node, mult);
+        Ok(())
+    }
+
+    /// Degrade the directed link `src → dst` to `factor` of its
+    /// bandwidth inside `[start, end)` (`end` may be infinite).
+    pub fn degrade_link(
+        &mut self, src: usize, dst: usize, start: f64, end: f64, factor: f64,
+    ) -> Result<()> {
+        if !start.is_finite() || start < 0.0 || end < start {
+            return Err(Error::Cli(format!(
+                "fault plan: link {src}->{dst} window [{start}, {end}) is \
+                 not a valid time range"
+            )));
+        }
+        if !factor.is_finite() || factor <= 0.0 {
+            return Err(Error::Cli(format!(
+                "fault plan: link {src}->{dst} factor must be finite and \
+                 positive, got {factor}"
+            )));
+        }
+        self.links.push((src, dst, Contention { start, end, factor }));
+        Ok(())
+    }
+
+    /// Crash time for `node`, if the plan kills it.
+    pub fn crash_time(&self, node: usize) -> Option<f64> {
+        self.crashes.get(&node).copied()
+    }
+
+    /// Whether `node` is still up at virtual time `t` (alive on
+    /// `[0, crash_t)`, strictly).
+    pub fn alive_at(&self, node: usize, t: f64) -> bool {
+        match self.crashes.get(&node) {
+            Some(&ct) => t < ct,
+            None => true,
+        }
+    }
+
+    /// Scheduled crashes as `(node, time)`, ordered by node.
+    pub fn crashes(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.crashes.iter().map(|(&n, &t)| (n, t))
+    }
+
+    /// Parse the `--kill-node N@T[,N@T...]` shorthand into a plan.
+    pub fn parse_kill_spec(spec: &str) -> Result<Self> {
+        let mut plan = Self::new();
+        for part in spec.split(',') {
+            let Some((node, t)) = part.split_once('@') else {
+                return Err(Error::Cli(format!(
+                    "--kill-node: `{part}` is not of the form N@T"
+                )));
+            };
+            let node: usize = node.trim().parse().map_err(|_| {
+                Error::Cli(format!(
+                    "--kill-node: `{node}` is not a node index"
+                ))
+            })?;
+            let t: f64 = t.trim().parse().map_err(|_| {
+                Error::Cli(format!("--kill-node: `{t}` is not a time"))
+            })?;
+            plan.kill(node, t)?;
+        }
+        Ok(plan)
+    }
+
+    /// Parse a fault-plan JSON document:
+    /// `{"faults": [{"kind": "crash", "node": 1, "t": 0.5},
+    ///              {"kind": "slow", "node": 2, "latency_mult": 8.0},
+    ///              {"kind": "link", "src": 0, "dst": 1, "start": 0.0,
+    ///               "end": 1.0, "factor": 0.25}]}`.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut plan = Self::new();
+        for f in v.req("faults")?.as_array()? {
+            match f.req("kind")?.as_str()? {
+                "crash" => {
+                    plan.kill(
+                        f.req("node")?.as_usize()?,
+                        f.req("t")?.as_f64()?,
+                    )?;
+                }
+                "slow" => {
+                    plan.slow_node(
+                        f.req("node")?.as_usize()?,
+                        f.req("latency_mult")?.as_f64()?,
+                    )?;
+                }
+                "link" => {
+                    let end = match f.get("end") {
+                        Some(e) => e.as_f64()?,
+                        None => f64::INFINITY,
+                    };
+                    plan.degrade_link(
+                        f.req("src")?.as_usize()?,
+                        f.req("dst")?.as_usize()?,
+                        f.req("start")?.as_f64()?,
+                        end,
+                        f.req("factor")?.as_f64()?,
+                    )?;
+                }
+                other => {
+                    return Err(Error::Json(format!(
+                        "fault plan: unknown fault kind `{other}`"
+                    )))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Load a fault-plan JSON file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Check every referenced node against the fabric size before any
+    /// routing state mutates.
+    pub fn validate_for(&self, nodes: usize) -> Result<()> {
+        for (&n, _) in &self.crashes {
+            if n >= nodes {
+                return Err(Error::Cli(format!(
+                    "fault plan kills node {n}, but the fabric has {nodes} \
+                     node(s)"
+                )));
+            }
+        }
+        for (&n, _) in &self.slow {
+            if n >= nodes {
+                return Err(Error::Cli(format!(
+                    "fault plan slows node {n}, but the fabric has {nodes} \
+                     node(s)"
+                )));
+            }
+        }
+        for &(src, dst, _) in &self.links {
+            if src >= nodes || dst >= nodes || src == dst {
+                return Err(Error::Cli(format!(
+                    "fault plan degrades link {src}->{dst}, which is not a \
+                     peer link of a {nodes}-node fabric"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Seeded single-crash generator for randomized chaos tests: kills
+    /// one uniformly chosen node at a uniform time in `[0, max_t)`.
+    pub fn random_single_kill(
+        rng: &mut Rng, nodes: usize, max_t: f64,
+    ) -> Result<Self> {
+        if nodes == 0 || !max_t.is_finite() || max_t <= 0.0 {
+            return Err(Error::Cli(format!(
+                "random_single_kill needs nodes >= 1 and max_t > 0, got \
+                 {nodes} node(s), max_t {max_t}"
+            )));
+        }
+        let mut plan = Self::new();
+        plan.kill(rng.range(0, nodes), rng.range_f64(0.0, max_t))?;
+        Ok(plan)
+    }
+
+    /// Install the plan's slow-node multipliers and link-degradation
+    /// windows into the peer fabric (crashes are the router's job —
+    /// they cut streams rather than slow them).
+    pub fn apply_network(&self, net: &mut Network) -> Result<()> {
+        for (&n, &mult) in &self.slow {
+            net.scale_latency(n, mult);
+        }
+        for &(src, dst, c) in &self.links {
+            net.add_contention(LinkId { src, dst }, c)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_spec_parses_one_or_many() {
+        let p = FaultPlan::parse_kill_spec("2@0.5").unwrap();
+        assert_eq!(p.crash_time(2), Some(0.5));
+        assert_eq!(p.crash_time(0), None);
+
+        let p = FaultPlan::parse_kill_spec("0@1.5, 3@0.25").unwrap();
+        assert_eq!(p.crashes().collect::<Vec<_>>(), vec![(0, 1.5), (3, 0.25)]);
+
+        for bad in ["2", "x@1", "1@y", "1@-2", "1@0.1,1@0.2"] {
+            assert!(FaultPlan::parse_kill_spec(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn json_plan_roundtrips_every_fault_kind() {
+        let text = r#"{"faults": [
+            {"kind": "crash", "node": 1, "t": 0.5},
+            {"kind": "slow", "node": 2, "latency_mult": 8.0},
+            {"kind": "link", "src": 0, "dst": 1,
+             "start": 0.0, "end": 1.0, "factor": 0.25},
+            {"kind": "link", "src": 1, "dst": 0,
+             "start": 2.0, "factor": 0.5}
+        ]}"#;
+        let p = FaultPlan::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert!(!p.is_empty());
+        assert_eq!(p.crash_time(1), Some(0.5));
+        assert!(p.validate_for(3).is_ok());
+        // Node 2 referenced → a 2-node fabric rejects the plan.
+        assert!(p.validate_for(2).is_err());
+
+        let err = FaultPlan::from_json(
+            &Json::parse(r#"{"faults": [{"kind": "meteor"}]}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("meteor"), "{err}");
+    }
+
+    #[test]
+    fn alive_at_is_strict_at_the_crash_instant() {
+        let mut p = FaultPlan::new();
+        p.kill(1, 2.0).unwrap();
+        assert!(p.alive_at(1, 0.0));
+        assert!(p.alive_at(1, 1.999_999));
+        assert!(!p.alive_at(1, 2.0), "dead exactly at the crash time");
+        assert!(!p.alive_at(1, 10.0));
+        assert!(p.alive_at(0, 1e9), "unkilled nodes never die");
+    }
+
+    #[test]
+    fn builders_reject_degenerate_faults() {
+        let mut p = FaultPlan::new();
+        assert!(p.kill(0, f64::NAN).is_err());
+        assert!(p.slow_node(0, 0.0).is_err());
+        assert!(p.slow_node(0, -1.0).is_err());
+        assert!(p.degrade_link(0, 1, 1.0, 0.5, 0.5).is_err());
+        assert!(p.degrade_link(0, 1, 0.0, 1.0, 0.0).is_err());
+        assert!(p.is_empty(), "rejected faults leave no state");
+    }
+
+    #[test]
+    fn apply_network_installs_slowdowns_and_windows() {
+        let mut p = FaultPlan::new();
+        p.slow_node(1, 4.0).unwrap();
+        p.degrade_link(0, 1, 0.0, 2.0, 0.5).unwrap();
+        let mut net = Network::new(2, 100.0, 0.5);
+        p.apply_network(&mut net).unwrap();
+        // Latency on the touched link is 4x; the window halves the
+        // first 2 s of bandwidth: 2 s at 50 B/s = 100 B, then 400 B at
+        // 100 B/s = 4 s, plus 2.0 s latency.
+        let done = net.send(0, 1, 500.0, 0.0, 0.0).unwrap();
+        assert!((done - 8.0).abs() < 1e-9, "{done}");
+    }
+
+    #[test]
+    fn random_single_kill_is_seed_deterministic_and_in_range() {
+        for seed in 0..16u64 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let pa = FaultPlan::random_single_kill(&mut a, 4, 3.0).unwrap();
+            let pb = FaultPlan::random_single_kill(&mut b, 4, 3.0).unwrap();
+            let ka: Vec<_> = pa.crashes().collect();
+            assert_eq!(ka, pb.crashes().collect::<Vec<_>>());
+            assert_eq!(ka.len(), 1);
+            let (node, t) = ka[0];
+            assert!(node < 4);
+            assert!((0.0..3.0).contains(&t));
+        }
+        assert!(FaultPlan::random_single_kill(&mut Rng::new(1), 0, 1.0)
+            .is_err());
+    }
+}

@@ -61,6 +61,22 @@ impl GlobalIndex {
         }
     }
 
+    /// Bulk-drop every entry owned by `node` (the node crashed: its
+    /// blocks are gone, so routing must stop chasing them). Returns the
+    /// number of entries removed — the fabric surfaces it as the
+    /// `orphaned_blocks` failover counter.
+    pub fn drain_node(&mut self, node: usize) -> usize {
+        let before = self.owner.len();
+        self.owner.retain(|_, &mut o| o != node);
+        before - self.owner.len()
+    }
+
+    /// Number of entries currently recorded against `node` (tests pin
+    /// the post-crash index state through this).
+    pub fn owned_by(&self, node: usize) -> usize {
+        self.owner.values().filter(|&&o| o == node).count()
+    }
+
     /// Longest-prefix affinity walk: the owner of `ids[0]` is the
     /// candidate, and the run extends while consecutive blocks agree on
     /// that owner. Returns `(node, run_blocks)`; `None` when the first
@@ -133,6 +149,23 @@ mod tests {
         // second block is still indexed.
         assert!(gi.affinity(&ids).is_none());
         assert_eq!(gi.len(), 1);
+    }
+
+    #[test]
+    fn drain_node_removes_exactly_the_dead_owners_entries() {
+        let a = chain_ids(&(0..96).collect::<Vec<i32>>(), 32); // 3 blocks
+        let b = chain_ids(&(100..164).collect::<Vec<i32>>(), 32); // 2 blocks
+        let mut gi = GlobalIndex::new();
+        gi.record(1, &a);
+        gi.record(2, &b);
+        assert_eq!(gi.owned_by(1), 3);
+        assert_eq!(gi.owned_by(2), 2);
+        assert_eq!(gi.drain_node(1), 3);
+        assert_eq!(gi.owned_by(1), 0);
+        assert_eq!(gi.len(), 2, "the survivor's entries stay");
+        assert_eq!(gi.affinity(&b), Some((2, 2)));
+        assert!(gi.affinity(&a).is_none(), "drained chain has no affinity");
+        assert_eq!(gi.drain_node(1), 0, "second drain finds nothing");
     }
 
     #[test]

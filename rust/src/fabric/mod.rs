@@ -29,9 +29,22 @@
 //! them concurrently on one unified clock; the fabric wall clock is the
 //! max over node wall clocks, and all traces merge onto the one
 //! timeline.
+//!
+//! Failure model (DESIGN.md §13): a seeded [`FaultPlan`] crashes nodes
+//! at virtual-clock instants, slows their links, or degrades peer
+//! links. A crash at `T` keeps every response that retired strictly
+//! before `T` and reroutes the rest to nodes still alive at `T`
+//! (prefix re-fetch from a surviving owner when the chain exists,
+//! planner recompute when it doesn't), drains the dead node's
+//! [`GlobalIndex`] entries, and emits `node_down`/`reroute`/
+//! `recovered` trace events that [`crate::trace::validate`] audits
+//! first-class. An empty plan leaves the fault-free path bit-identical
+//! to a router with no plan at all.
 
+pub mod fault;
 pub mod index;
 
+pub use fault::FaultPlan;
 pub use index::GlobalIndex;
 
 use crate::coordinator::{
@@ -41,13 +54,24 @@ use crate::coordinator::{
 use crate::error::{Error, Result};
 use crate::net::Network;
 use crate::prefixcache::{chain_ids, BlockId, CacheStats};
-use crate::trace::{EventKind, Trace, Tracer};
+use crate::trace::{EventKind, Trace, TraceEvent, Tracer};
 use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
 
 /// Peer-link pricing when no node has a prefix cache attached (matches
 /// [`crate::prefixcache::PrefixCacheConfig`]'s defaults).
 const DEFAULT_PEER_BW: f64 = 10e9;
 const DEFAULT_PEER_LATENCY: f64 = 1e-3;
+
+/// A request dropped by this many crashes stops being rerouted and is
+/// aborted — the retry budget keeps a pathological plan (every target
+/// crashes in sequence) from cycling work forever.
+const MAX_REROUTES: usize = 3;
+
+/// A deadline-guarded peer fetch may take at most this multiple of the
+/// uncontended transfer time before the router abandons it and lets
+/// the planner recompute the prefix instead.
+const PEER_FETCH_TIMEOUT_FACTOR: f64 = 4.0;
 
 /// Where a request lands (DESIGN.md §11).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +124,19 @@ struct RouteDecision {
     peer: usize,
     /// Peer-fetch span on the serving clock (0 when nothing streamed).
     dur: f64,
+    /// A deadline-guarded fetch that blew its budget (fault runs only).
+    timeout: Option<FetchTimeoutInfo>,
+}
+
+/// A peer fetch the router abandoned: the source link was too degraded
+/// (or the source crashed mid-stream) to land the blocks in time.
+struct FetchTimeoutInfo {
+    /// The slowest source peer in the abandoned fetch.
+    peer: usize,
+    /// Blocks the fetch would have streamed.
+    blocks: usize,
+    /// Seconds spent waiting before giving up (the full deadline).
+    waited: f64,
 }
 
 /// The multi-node front end: routes each request to one of N per-node
@@ -112,6 +149,11 @@ pub struct RouterBackend {
     rng: Rng,
     rr_next: usize,
     tracer: Tracer,
+    /// Injected failures for the next serve (empty = fault-free path).
+    faults: FaultPlan,
+    /// Truncated dead-node trace events staged during a failover serve,
+    /// spliced into the merged timeline by [`Self::take_trace`].
+    fault_events: Vec<TraceEvent>,
 }
 
 impl RouterBackend {
@@ -123,6 +165,28 @@ impl RouterBackend {
             rng: Rng::new(seed),
             rr_next: 0,
             tracer: Tracer::disabled(),
+            faults: FaultPlan::new(),
+            fault_events: Vec::new(),
+        }
+    }
+
+    /// Install the fault plan for subsequent serves. An empty plan is
+    /// equivalent to never calling this: the serve takes the fault-free
+    /// path, bit-identical in responses, metrics, and trace.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = plan;
+    }
+
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Debug-build invariant: every node's prefix-cache leases are
+    /// settled. Failover serves check this after crash handling — a
+    /// reroute must never strand a pinned block on any node.
+    pub fn assert_lease_quiescent(&self) {
+        for n in &self.nodes {
+            n.sched.assert_lease_quiescent();
         }
     }
 
@@ -164,11 +228,15 @@ impl RouterBackend {
         }
     }
 
-    /// Merged fabric trace: router `route` events plus every node's
-    /// events, stable-sorted onto the one shared-origin timeline (a
-    /// route event precedes same-instant node events).
+    /// Merged fabric trace: router events (`route`, and on fault runs
+    /// `node_down`/`reroute`/`fetch_timeout`/`recovered`), then the
+    /// staged dead-node events a crash truncated, then every live
+    /// node's events — stable-sorted onto the one shared-origin
+    /// timeline (a route event precedes same-instant node events, and
+    /// a crash's `node_down` precedes its `reroute`s).
     pub fn take_trace(&mut self) -> Trace {
         let mut events = self.tracer.take().events;
+        events.append(&mut self.fault_events);
         for n in &mut self.nodes {
             events.extend(n.sched.take_trace().events);
         }
@@ -255,9 +323,32 @@ impl RouterBackend {
         let block_bytes = self.nodes[node].backend.model().kv_bytes_per_token()
             as f64
             * bt as f64;
-        // Walk past the local run: locally resident blocks extend the
-        // run for free; owner-verified peer blocks are fetch candidates;
-        // the first block that is neither ends the usable prefix.
+        let (covered, fetches) =
+            self.peer_fetch_candidates(node, ids, matched, |_| true);
+        if fetches.is_empty() {
+            return Ok((0, t0));
+        }
+        let mut done = t0;
+        for &p in &fetches {
+            let t = net.send(p, node, block_bytes, bt as f64, t0)?;
+            done = done.max(t);
+        }
+        let fetched = match self.nodes[node].sched.prefix_cache_mut() {
+            Some(pc) => pc.admit_fetched_prefix(&req.tokens, covered),
+            None => 0,
+        };
+        Ok((fetched, done))
+    }
+
+    /// Walk past the local run: locally resident blocks extend the
+    /// run for free; owner-verified peer blocks (from peers passing
+    /// `alive`) are fetch candidates; the first block that is neither
+    /// ends the usable prefix. Returns the covered block count and the
+    /// source peer of each fetch.
+    fn peer_fetch_candidates(
+        &self, node: usize, ids: &[BlockId], matched: usize,
+        alive: impl Fn(usize) -> bool,
+    ) -> (usize, Vec<usize>) {
         let mut covered = matched;
         let mut fetches: Vec<usize> = Vec::new();
         for (i, &id) in ids.iter().enumerate().skip(matched) {
@@ -270,7 +361,7 @@ impl RouterBackend {
                 continue;
             }
             let Some(p) = self.index.owner_of(id) else { break };
-            if p == node || p >= self.nodes.len() {
+            if p == node || p >= self.nodes.len() || !alive(p) {
                 break;
             }
             // The index is advisory: re-verify residency at the owner
@@ -286,19 +377,64 @@ impl RouterBackend {
             fetches.push(p);
             covered = i + 1;
         }
-        if fetches.is_empty() {
-            return Ok((0, t0));
+        (covered, fetches)
+    }
+
+    /// Deadline-guarded peer fetch (fault runs): the whole stream is
+    /// priced against [`PEER_FETCH_TIMEOUT_FACTOR`] times its
+    /// uncontended transfer time, and a stream from a peer that
+    /// crashes before its blocks land never completes. Blowing the
+    /// deadline abandons the fetch — nothing is admitted, the planner
+    /// recomputes the prefix, and the timeout is surfaced to the
+    /// caller — so a dying or degraded peer can never wedge admission.
+    fn fetch_peer_blocks_deadline(
+        &mut self, node: usize, ids: &[BlockId], matched: usize,
+        req: &GenRequest, t0: f64, net: &mut Network,
+    ) -> Result<(usize, f64, Option<FetchTimeoutInfo>)> {
+        if self.nodes[node].sched.prefix_cache().is_none() {
+            return Ok((0, t0, None));
         }
+        let bt = self.block_tokens();
+        let block_bytes = self.nodes[node].backend.model().kv_bytes_per_token()
+            as f64
+            * bt as f64;
+        let (covered, fetches) = self
+            .peer_fetch_candidates(node, ids, matched, |p| {
+                self.faults.alive_at(p, t0)
+            });
+        if fetches.is_empty() {
+            return Ok((0, t0, None));
+        }
+        let deadline = t0
+            + PEER_FETCH_TIMEOUT_FACTOR
+                * net.ideal_transfer_time(block_bytes * fetches.len() as f64);
         let mut done = t0;
+        let mut worst = fetches[0];
         for &p in &fetches {
             let t = net.send(p, node, block_bytes, bt as f64, t0)?;
-            done = done.max(t);
+            // A peer that dies before its stream lands never delivers.
+            let t = if self.faults.alive_at(p, t) { t } else { f64::INFINITY };
+            if t > done {
+                done = t;
+                worst = p;
+            }
+        }
+        if done > deadline {
+            return Ok((
+                0,
+                deadline,
+                Some(FetchTimeoutInfo {
+                    peer: worst,
+                    blocks: fetches.len(),
+                    waited: deadline - t0,
+                }),
+            ));
         }
         let fetched = match self.nodes[node].sched.prefix_cache_mut() {
             Some(pc) => pc.admit_fetched_prefix(&req.tokens, covered),
             None => 0,
         };
-        Ok((fetched, done))
+        Ok((fetched, done, None))
     }
 
     /// Route one request: pick the node, probe its resident prefix,
@@ -337,7 +473,104 @@ impl RouterBackend {
             // `take_dropped` → `invalidate`) keeps the map honest.
             self.index.record(node, &ids);
         }
-        Ok(RouteDecision { node, matched, peer, dur: (done - t0).max(0.0) })
+        Ok(RouteDecision {
+            node,
+            matched,
+            peer,
+            dur: (done - t0).max(0.0),
+            timeout: None,
+        })
+    }
+
+    /// Fault-aware [`Self::route`]: only nodes alive at the request's
+    /// arrival are candidates, affinity falls through dead owners to a
+    /// consistent re-ring over the live set, and peer fetches run
+    /// under the crash-and-deadline pricing of
+    /// [`Self::fetch_peer_blocks_deadline`].
+    fn route_faulted(
+        &mut self, req: &GenRequest, loads: &[usize],
+        net: &mut Option<Network>,
+    ) -> Result<RouteDecision> {
+        let t0 = req.arrival.max(0.0);
+        let live = self.live_nodes_at(t0);
+        if live.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "no live fabric node for request {} at t={:.6}s",
+                req.id, t0
+            )));
+        }
+        let ids = chain_ids(&req.tokens, self.block_tokens());
+        let node = match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let k = live[self.rr_next % live.len()];
+                self.rr_next = self.rr_next.wrapping_add(1);
+                k
+            }
+            RoutingPolicy::Random => live[self.rng.range(0, live.len())],
+            RoutingPolicy::Affinity => {
+                self.affinity_node_live(&ids, loads, req, &live)
+            }
+        };
+        let matched = self.nodes[node]
+            .sched
+            .prefix_cache()
+            .map_or(0, |pc| pc.resident_prefix_blocks(&req.tokens));
+        let mut peer = 0usize;
+        let mut done = t0;
+        let mut timeout = None;
+        if self.policy == RoutingPolicy::Affinity {
+            if let Some(net) = net.as_mut() {
+                (peer, done, timeout) = self
+                    .fetch_peer_blocks_deadline(node, &ids, matched, req, t0, net)?;
+            }
+            self.index.record(node, &ids);
+        }
+        Ok(RouteDecision {
+            node,
+            matched,
+            peer,
+            dur: (done - t0).max(0.0),
+            timeout,
+        })
+    }
+
+    /// Nodes the fault plan has not crashed by time `t` (strict: a
+    /// node crashing exactly at `t` is already down).
+    fn live_nodes_at(&self, t: f64) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| self.faults.alive_at(i, t))
+            .collect()
+    }
+
+    /// [`Self::affinity_node`] restricted to the live set: a dead (or
+    /// bogus) longest-prefix owner falls through to a consistent
+    /// re-ring of the head block over the live nodes, so sharers of an
+    /// orphaned prefix still co-locate on one survivor.
+    fn affinity_node_live(
+        &self, ids: &[BlockId], loads: &[usize], req: &GenRequest,
+        live: &[usize],
+    ) -> usize {
+        let least = live
+            .iter()
+            .copied()
+            .min_by_key(|&i| loads[i])
+            .unwrap_or(0);
+        let reringed = || match ids.first() {
+            Some(&head) => live[GlobalIndex::consistent_node(head, live.len())],
+            None => least,
+        };
+        let Some((cand, run)) = self.index.affinity(ids) else {
+            return reringed();
+        };
+        if run == 0 || !live.contains(&cand) {
+            return reringed();
+        }
+        let cost = req.tokens.len() + req.max_new_tokens;
+        if loads[cand] > 2 * loads[least] + cost {
+            least
+        } else {
+            cand
+        }
     }
 
     /// Serve a batch across the fabric: route every request in arrival
@@ -347,6 +580,11 @@ impl RouterBackend {
     pub fn serve(
         &mut self, requests: Vec<GenRequest>,
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        // The fault-free path must stay bit-identical to the pre-fault
+        // router: only a non-empty plan diverts into failover serving.
+        if !self.faults.is_empty() {
+            return self.serve_faulted(requests);
+        }
         let n = self.nodes.len();
         if n == 0 {
             return Err(Error::Coordinator(
@@ -398,15 +636,30 @@ impl RouterBackend {
         let mut responses: Vec<GenResponse> = Vec::new();
         for (i, reqs) in per_node.into_iter().enumerate() {
             let node = &mut self.nodes[i];
-            let (resp, m) = node.sched.serve(&mut node.backend, reqs)?;
+            let t_hint = reqs.iter().fold(0.0f64, |m, r| m.max(r.arrival));
+            let (resp, m) = match node.sched.serve(&mut node.backend, reqs) {
+                Ok(v) => v,
+                Err(e) => {
+                    return Err(Self::node_failure_context(
+                        i,
+                        t_hint,
+                        &mut node.sched,
+                        e,
+                    ))
+                }
+            };
             merged.absorb(&m);
             responses.extend(resp);
             // Node-local evictions during the serve invalidate their
             // global-index entries — routing never chases an entry the
-            // owning store has dropped.
+            // owning store has dropped. An invalidation the index
+            // rejects (the reporting node is not the recorded owner)
+            // signals routing-map drift and is surfaced, not dropped.
             if let Some(pc) = node.sched.prefix_cache_mut() {
                 for id in pc.take_dropped() {
-                    self.index.invalidate(i, id);
+                    if !self.index.invalidate(i, id) {
+                        merged.stale_invalidations += 1;
+                    }
                 }
             }
         }
@@ -415,6 +668,317 @@ impl RouterBackend {
         merged.node_requests = counts;
         merged.route_hits = route_hits;
         merged.peer_blocks = peer_blocks;
+        Ok((responses, merged))
+    }
+
+    /// Wrap a node-serve error with the failing node's identity and
+    /// the furthest virtual-clock instant its trace reached (falling
+    /// back to the share's latest arrival when tracing is off), so a
+    /// fabric failure exits with *where* and *when*, not just *what*.
+    fn node_failure_context(
+        node: usize, t_hint: f64, sched: &mut Scheduler, e: Error,
+    ) -> Error {
+        let t = sched
+            .take_trace()
+            .events
+            .iter()
+            .fold(t_hint, |m, ev| m.max(ev.t + ev.dur));
+        Error::Coordinator(format!(
+            "fabric node {node} failed at virtual time {t:.6}s: {e}"
+        ))
+    }
+
+    /// Failover serve (DESIGN.md §13): route over live nodes, serve
+    /// crashing nodes in crash order, split each crash at its kill
+    /// time `T` — responses retired strictly before `T` stand, the
+    /// rest are casualties rerouted (arrival = `T`, bounded by
+    /// [`MAX_REROUTES`]) onto nodes still alive at `T`, which are all
+    /// not-yet-served — then serve the survivors with the extra load.
+    /// Every crash drains the dead node's index entries and leaves all
+    /// leases settled; node request counts report *retirements* (the
+    /// routed-share counts are ambiguous once requests move).
+    fn serve_faulted(
+        &mut self, requests: Vec<GenRequest>,
+    ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Err(Error::Coordinator(
+                "fabric serve with no nodes attached".into(),
+            ));
+        }
+        if let Some(bad) = requests.iter().find(|r| !r.arrival.is_finite()) {
+            return Err(Error::Coordinator(format!(
+                "request {} has a non-finite arrival ({})",
+                bad.id, bad.arrival
+            )));
+        }
+        self.faults.validate_for(n)?;
+        let mut requests = requests;
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+
+        let mut net = self.make_net();
+        if let Some(net) = net.as_mut() {
+            self.faults.apply_network(net)?;
+        }
+        let mut per_node: Vec<Vec<GenRequest>> =
+            (0..n).map(|_| Vec::new()).collect();
+        let mut loads = vec![0usize; n];
+        let mut merged = ServeMetrics::default();
+        let mut route_hits = 0usize;
+        let mut peer_blocks = 0usize;
+        // Raw arrivals per request id: a retirement at `arrival + e2e`
+        // on the shared-origin timeline is compared against kill times,
+        // and reroutes reset the arrival to the crash instant.
+        let mut arrival_of: HashMap<u64, f64> = HashMap::new();
+        for req in requests {
+            let d = self.route_faulted(&req, &loads, &mut net)?;
+            loads[d.node] += req.tokens.len() + req.max_new_tokens;
+            if d.matched > 0 {
+                route_hits += 1;
+            }
+            peer_blocks += d.peer;
+            self.tracer.emit(
+                req.arrival.max(0.0),
+                d.dur,
+                Some(req.id),
+                EventKind::Route {
+                    node: d.node,
+                    policy: self.policy.name().to_string(),
+                    matched_blocks: d.matched,
+                    peer_blocks: d.peer,
+                },
+            );
+            if let Some(to) = &d.timeout {
+                merged.fetch_timeouts += 1;
+                self.tracer.emit(
+                    req.arrival.max(0.0) + to.waited,
+                    0.0,
+                    Some(req.id),
+                    EventKind::FetchTimeout {
+                        peer: to.peer,
+                        blocks: to.blocks,
+                        waited_s: to.waited,
+                    },
+                );
+            }
+            arrival_of.insert(req.id, req.arrival);
+            per_node[d.node].push(req);
+        }
+
+        // Crash order: crashing nodes by kill time (index tiebreak),
+        // survivors after. A casualty at `T` can only target nodes
+        // alive strictly past `T`, which this order has not served
+        // yet, so rerouted work always lands on an unserved node.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            match (self.faults.crash_time(a), self.faults.crash_time(b)) {
+                (Some(ta), Some(tb)) => ta.total_cmp(&tb).then(a.cmp(&b)),
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => a.cmp(&b),
+            }
+        });
+
+        let mut responses: Vec<GenResponse> = Vec::new();
+        let mut node_retired = vec![0usize; n];
+        let mut reroute_hops: HashMap<u64, usize> = HashMap::new();
+        // Final retirement instant of every rerouted request that did
+        // retire — the recovery span of its crash reaches to the max.
+        let mut retire_at: HashMap<u64, f64> = HashMap::new();
+        let mut crash_log: Vec<(usize, f64, Vec<u64>)> = Vec::new();
+        for &i in &order {
+            let share = std::mem::take(&mut per_node[i]);
+            let t_kill = self.faults.crash_time(i);
+            let share_reqs: Vec<GenRequest> = match t_kill {
+                Some(_) => share.clone(),
+                None => Vec::new(),
+            };
+            let t_hint = share.iter().fold(0.0f64, |m, r| m.max(r.arrival));
+            let node = &mut self.nodes[i];
+            let (resp, m) = match node.sched.serve(&mut node.backend, share) {
+                Ok(v) => v,
+                Err(e) => {
+                    return Err(Self::node_failure_context(
+                        i,
+                        t_hint,
+                        &mut node.sched,
+                        e,
+                    ))
+                }
+            };
+            // Eviction reconciliation runs before any index drain so a
+            // dead node's honest evictions are not miscounted as drift.
+            if let Some(pc) = node.sched.prefix_cache_mut() {
+                for id in pc.take_dropped() {
+                    if !self.index.invalidate(i, id) {
+                        merged.stale_invalidations += 1;
+                    }
+                }
+            }
+            let Some(t_kill) = t_kill else {
+                // Survivor: the whole share stands.
+                merged.absorb(&m);
+                node_retired[i] += resp.len();
+                for r in &resp {
+                    if reroute_hops.contains_key(&r.id) {
+                        let arrived =
+                            arrival_of.get(&r.id).copied().unwrap_or(0.0);
+                        retire_at.insert(r.id, arrived + r.e2e);
+                    }
+                }
+                responses.extend(resp);
+                continue;
+            };
+            // Crash at t_kill: keep what retired strictly before it.
+            let mut kept: Vec<GenResponse> = Vec::new();
+            for r in resp {
+                let arrived = arrival_of.get(&r.id).copied().unwrap_or(0.0);
+                if arrived + r.e2e < t_kill {
+                    kept.push(r);
+                }
+            }
+            let kept_ids: HashSet<u64> = kept.iter().map(|r| r.id).collect();
+            // Rebuild the dead node's metrics from kept responses only.
+            // Kept responses are exactly the share's first retirements,
+            // so pairing them with the engine's retire-ordered queue
+            // waits is positional. Engine-internal counters (decode
+            // steps, chunk counts, cache stats) die with the node —
+            // documented degradation, not silent loss.
+            let mut by_retire: Vec<&GenResponse> = kept.iter().collect();
+            by_retire.sort_by(|a, b| {
+                let ta = arrival_of.get(&a.id).copied().unwrap_or(0.0) + a.e2e;
+                let tb = arrival_of.get(&b.id).copied().unwrap_or(0.0) + b.e2e;
+                ta.total_cmp(&tb)
+            });
+            let mut dead_m = ServeMetrics::default();
+            for (j, r) in by_retire.iter().enumerate() {
+                let queue = m.queue_waits.get(j).copied().unwrap_or(0.0);
+                dead_m.record_request(r.ttft, &r.tpot, r.e2e, queue);
+            }
+            dead_m.wall_s = t_kill.min(m.wall_s);
+            merged.absorb(&dead_m);
+            node_retired[i] += kept.len();
+            for r in &kept {
+                if reroute_hops.contains_key(&r.id) {
+                    let arrived = arrival_of.get(&r.id).copied().unwrap_or(0.0);
+                    retire_at.insert(r.id, arrived + r.e2e);
+                }
+            }
+            // Truncate the dead node's trace at the crash: kept
+            // requests keep their full lifecycle, everything else
+            // survives only if it ended strictly before the kill.
+            if self.tracer.is_on() {
+                for ev in node.sched.take_trace().events {
+                    let keep = match ev.req {
+                        Some(id) if kept_ids.contains(&id) => true,
+                        _ => ev.t + ev.dur < t_kill,
+                    };
+                    if keep {
+                        self.fault_events.push(ev);
+                    }
+                }
+            }
+            // The node served its share to completion before the split,
+            // so its leases must already be settled — a crash never
+            // excuses a pinned block.
+            node.sched.assert_lease_quiescent();
+            responses.extend(kept);
+            merged.node_failures += 1;
+            merged.orphaned_blocks += self.index.drain_node(i);
+            self.tracer.emit(t_kill, 0.0, None, EventKind::NodeDown { node: i });
+            // Reroute the casualties at the crash instant, in their
+            // original arrival order.
+            let mut rerouted_ids: Vec<u64> = Vec::new();
+            for req in share_reqs {
+                if kept_ids.contains(&req.id) {
+                    continue;
+                }
+                let hops = reroute_hops.entry(req.id).or_insert(0);
+                *hops += 1;
+                let attempt = *hops;
+                if attempt > MAX_REROUTES {
+                    merged.failover_gave_up += 1;
+                    self.tracer.emit(
+                        t_kill,
+                        0.0,
+                        Some(req.id),
+                        EventKind::Abort {
+                            reason: format!(
+                                "failover retry budget exhausted after {} reroutes",
+                                attempt - 1
+                            ),
+                        },
+                    );
+                    continue;
+                }
+                let moved = GenRequest { arrival: t_kill, ..req };
+                let d = self.route_faulted(&moved, &loads, &mut net)?;
+                loads[d.node] += moved.tokens.len() + moved.max_new_tokens;
+                merged.rerouted_requests += 1;
+                merged.refetched_blocks += d.peer;
+                if d.matched == 0 && d.peer == 0 {
+                    merged.recompute_fallbacks += 1;
+                }
+                self.tracer.emit(
+                    t_kill,
+                    d.dur,
+                    Some(moved.id),
+                    EventKind::Reroute {
+                        from: i,
+                        to: d.node,
+                        refetched_blocks: d.peer,
+                        attempt,
+                    },
+                );
+                if let Some(to) = &d.timeout {
+                    merged.fetch_timeouts += 1;
+                    self.tracer.emit(
+                        t_kill + to.waited,
+                        0.0,
+                        Some(moved.id),
+                        EventKind::FetchTimeout {
+                            peer: to.peer,
+                            blocks: to.blocks,
+                            waited_s: to.waited,
+                        },
+                    );
+                }
+                arrival_of.insert(moved.id, t_kill);
+                rerouted_ids.push(moved.id);
+                per_node[d.node].push(moved);
+            }
+            crash_log.push((i, t_kill, rerouted_ids));
+        }
+
+        // Per-crash recovery span: kill instant to the last rerouted
+        // retirement (counting only casualties that did retire).
+        for (node, t_kill, ids) in crash_log {
+            let mut last = f64::NEG_INFINITY;
+            let mut recovered = 0usize;
+            for id in &ids {
+                if let Some(&t) = retire_at.get(id) {
+                    recovered += 1;
+                    last = last.max(t);
+                }
+            }
+            if recovered > 0 {
+                let span = (last - t_kill).max(0.0);
+                merged.record_recovery(span);
+                self.tracer.emit(
+                    t_kill,
+                    span,
+                    None,
+                    EventKind::Recovered { node, rerouted: recovered },
+                );
+            }
+        }
+
+        responses.sort_by_key(|r| r.id);
+        merged.fabric_nodes = n;
+        merged.node_requests = node_retired;
+        merged.route_hits = route_hits;
+        merged.peer_blocks = peer_blocks;
+        self.assert_lease_quiescent();
         Ok((responses, merged))
     }
 }
@@ -564,6 +1128,63 @@ mod tests {
             "tiebreak bounds the skew: {:?}",
             m2.node_requests
         );
+    }
+
+    #[test]
+    fn late_crash_keeps_every_response_but_drains_ownership() {
+        // A kill after the wall clock ends reroutes nothing — every
+        // response retired strictly before it — but still counts the
+        // failure and orphans the dead node's index entries.
+        let mut r = router(2, RoutingPolicy::Affinity, true);
+        let mut plan = FaultPlan::new();
+        plan.kill(0, 1e9).unwrap();
+        r.set_fault_plan(plan);
+        let (resp, m) = r.serve(reqs(4, 512, 128)).unwrap();
+        assert_eq!(resp.len(), 4);
+        assert_eq!(m.node_failures, 1);
+        assert_eq!(m.rerouted_requests, 0);
+        assert!(m.recovery_times.is_empty());
+        assert_eq!(r.global_index().owned_by(0), 0, "dead owner drained");
+    }
+
+    #[test]
+    fn early_crash_reroutes_the_share_to_the_survivor() {
+        let mut r = router(2, RoutingPolicy::RoundRobin, false);
+        r.enable_tracing();
+        let mut plan = FaultPlan::new();
+        plan.kill(1, 0.06).unwrap();
+        r.set_fault_plan(plan);
+        // rr sends req 1 (arrival 0.05) to node 1; it cannot retire a
+        // 640-token prompt in 10 ms, so the crash reroutes it. Requests
+        // arriving after the kill never route to node 1 at all.
+        let (resp, m) = r.serve(reqs(4, 512, 128)).unwrap();
+        let ids: Vec<u64> = resp.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "every request retires exactly once");
+        assert_eq!(m.node_failures, 1);
+        assert_eq!(m.rerouted_requests, 1);
+        assert_eq!(m.node_requests, vec![4, 0], "retirements all on node 0");
+        assert_eq!(m.recovery_times.len(), 1, "the casualty recovered");
+        let trace = r.take_trace();
+        assert!(trace
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::NodeDown { node: 1 })));
+        assert!(trace.events.iter().any(|e| matches!(
+            e.kind,
+            EventKind::Reroute { from: 1, to: 0, attempt: 1, .. }
+        )));
+        trace.validate().unwrap();
+        r.assert_lease_quiescent();
+    }
+
+    #[test]
+    fn a_fully_dead_fabric_is_a_contextual_error() {
+        let mut r = router(1, RoutingPolicy::Affinity, false);
+        let mut plan = FaultPlan::new();
+        plan.kill(0, 0.0).unwrap();
+        r.set_fault_plan(plan);
+        let err = r.serve(reqs(1, 256, 64)).unwrap_err().to_string();
+        assert!(err.contains("no live fabric node"), "{err}");
     }
 
     #[test]

@@ -537,6 +537,48 @@ kvr lint: 2 files, 5 new violations (0 baselined, 0 suppressed)\n";
     }
 
     #[test]
+    fn fabric_failover_paths_must_settle_engine_errors() {
+        // A naked `?` on an engine call inside a fabric serve/reroute
+        // fn leaks routed state mid-failover.
+        let naked = "fn serve_faulted(&mut self) -> Result<()> {\n\
+                     let v = node.sched.serve(&mut node.backend, reqs)?;\n\
+                     Ok(())\n\
+                     }\n";
+        let out = lint_sources(&src(&[("fabric/mod.rs", naked)])).unwrap();
+        assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+        assert_eq!(out.violations[0].rule, "lease-settlement");
+        assert_eq!(out.violations[0].line, 2);
+        assert!(
+            out.violations[0].message.contains("fabric failover"),
+            "{}",
+            out.violations[0].message
+        );
+        // Matching the error (the contextual-wrap shape) is clean.
+        let matched = "fn serve_faulted(&mut self) -> Result<()> {\n\
+                       match node.sched.serve(&mut node.backend, reqs) {\n\
+                       Ok(v) => v,\n\
+                       Err(e) => return Err(contextualize(e)),\n\
+                       }\n\
+                       }\n";
+        let out = lint_sources(&src(&[("fabric/mod.rs", matched)])).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        // A chain that visibly settles before `?` is clean too.
+        let settled = "fn route_faulted(&mut self) -> Result<()> {\n\
+                       let v = sched.serve(reqs).map_err(wrap)?;\n\
+                       Ok(())\n\
+                       }\n";
+        let out = lint_sources(&src(&[("fabric/mod.rs", settled)])).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        // Helpers outside the serve/reroute namespace propagate freely.
+        let helper = "fn fetch_blocks(&mut self) -> Result<()> {\n\
+                      let v = sched.probe(ids)?;\n\
+                      Ok(())\n\
+                      }\n";
+        let out = lint_sources(&src(&[("fabric/mod.rs", helper)])).unwrap();
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+    }
+
+    #[test]
     fn test_code_is_exempt_everywhere() {
         let body = "fn live() { let a = x.unwrap(); }\n\
                     #[cfg(test)]\n\

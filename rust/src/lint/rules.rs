@@ -335,6 +335,98 @@ fn lease_settlement(files: &[SourceFile], out: &mut Vec<Violation>) {
     }
 }
 
+/// `lease-settlement` (fabric extension): inside the fabric's serve
+/// and reroute functions (`serve`, `serve_*`, anything containing
+/// `route`), fallible engine calls through a `sched.`/`backend.`
+/// receiver must not escape via a naked `?` — a failover path that
+/// propagates before reconciling strands rerouted work and leases.
+/// Chains that visibly settle (`map_err`/`unwrap_or`/`unwrap_or_else`/
+/// `ok`/`or_else`) are exempt.
+fn lease_settlement_fabric(files: &[SourceFile], out: &mut Vec<Violation>) {
+    for f in files.iter().filter(|f| f.path.starts_with("fabric/")) {
+        let t = &f.tokens;
+        let mut i = 0;
+        while i < t.len() {
+            let scanned = !t[i].test
+                && ident(t, i) == Some("fn")
+                && ident(t, i + 1).is_some_and(|n| {
+                    n == "serve"
+                        || n.starts_with("serve_")
+                        || n.contains("route")
+                });
+            if !scanned {
+                i += 1;
+                continue;
+            }
+            let Some(open) = (i + 2..t.len()).find(|&k| is_op(t, k, "{"))
+            else {
+                break;
+            };
+            let Some(close) = crate::lint::lexer::delim_span(t, open) else {
+                i = open + 1;
+                continue;
+            };
+            scan_fabric_fn_body(f, open, close, out);
+            i = close + 1;
+        }
+    }
+}
+
+/// The chain scan behind [`lease_settlement_fabric`], over one fn body.
+fn scan_fabric_fn_body(
+    f: &SourceFile, open: usize, close: usize, out: &mut Vec<Violation>,
+) {
+    let t = &f.tokens;
+    let mut i = open;
+    while i < close {
+        if !t[i].test
+            && matches!(ident(t, i), Some("backend" | "sched"))
+            && is_op(t, i + 1, ".")
+        {
+            let line = t[i].line;
+            let mut k = i + 1;
+            let mut saw_call = false;
+            let mut settled = false;
+            while is_op(t, k, ".")
+                && ident(t, k + 1).is_some()
+                && is_op(t, k + 2, "(")
+            {
+                if matches!(
+                    ident(t, k + 1),
+                    Some(
+                        "map_err" | "unwrap_or" | "unwrap_or_else" | "ok"
+                            | "or_else"
+                    )
+                ) {
+                    settled = true;
+                }
+                match close_paren(t, k + 2) {
+                    Some(end) => {
+                        saw_call = true;
+                        k = end + 1;
+                    }
+                    None => break,
+                }
+            }
+            if saw_call && !settled && is_op(t, k, "?") {
+                push(
+                    out,
+                    "lease-settlement",
+                    f,
+                    line,
+                    "fallible engine call escapes the fabric failover path \
+                     via a naked `?` — match the error so rerouted work and \
+                     leases are reconciled before it propagates"
+                        .into(),
+                );
+            }
+            i = k.max(i + 1);
+            continue;
+        }
+        i += 1;
+    }
+}
+
 /// Run the whole catalog over the lexed tree, sorted by (path, line,
 /// rule) for deterministic reports.
 pub fn run_rules(files: &[SourceFile]) -> Vec<Violation> {
@@ -346,6 +438,7 @@ pub fn run_rules(files: &[SourceFile]) -> Vec<Violation> {
     }
     trace_validator_exhaustive(files, &mut out);
     lease_settlement(files, &mut out);
+    lease_settlement_fabric(files, &mut out);
     out.sort_by(|a, b| {
         (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule))
     });

@@ -24,7 +24,7 @@ use kvr::coordinator::{
 };
 use kvr::engines::{Evaluator, Method};
 use kvr::error::Result;
-use kvr::fabric::{RouterBackend, RoutingPolicy};
+use kvr::fabric::{FaultPlan, RouterBackend, RoutingPolicy};
 use kvr::partition::lut::PartitionLut;
 use kvr::partition::search::SearchConfig;
 use kvr::prefixcache::planner::precompute_offset_grid;
@@ -56,6 +56,7 @@ USAGE:
             [--pipelined-loads | --serial-loads] [--even-cuts]
             [--lut offset-lut.json]
             [--nodes N] [--routing affinity|random|rr]
+            [--faults plan.json] [--kill-node N@T[,N@T...]]
             [--trace-out FILE] [--metrics-json FILE]
   kvr trace <file.jsonl> [--validate] [--chrome out.json]
   kvr lint  [--root rust/src] [--baseline lint-baseline.txt]
@@ -91,6 +92,17 @@ independent engines behind a router, each with its own prefix cache.
 affinity over the global block index, with cross-node streaming of
 missing prefix blocks), or the index-blind `random` / `rr` baselines.
 `--nodes 1` reproduces the single-node serve bit for bit.
+
+Faults: `--kill-node N@T` (fabric only) crashes node N at virtual time
+T seconds — repeatable as a comma list — and `--faults plan.json`
+loads a full plan (`crash` / `slow` latency multipliers / `link`
+degradation windows; DESIGN.md \u{a7}13). Work that retired strictly
+before a crash stands; the rest reroutes to surviving nodes (prefix
+re-fetch from a surviving owner, planner recompute otherwise) with the
+dead node's index entries drained. Failover counters land in the
+report and `--metrics-json`; `node_down`/`reroute`/`fetch_timeout`/
+`recovered` events land in `--trace-out`. An empty plan is
+bit-identical to no plan.
 
 Telemetry: `--trace-out` records every serving-clock event (admission,
 plan, cold load, prefill chunks, decode steps/stalls, retire) as JSONL;
@@ -336,6 +348,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .into(),
         ));
     }
+    let wants_faults =
+        args.get("faults").is_some() || args.get("kill-node").is_some();
+    if wants_faults
+        && !(args.flag("sim")
+            && (args.usize_or("nodes", 1)?.max(1) > 1
+                || args.get("routing").is_some()))
+    {
+        return Err(kvr::Error::Cli(
+            "--faults/--kill-node inject node failures into the \
+             multi-node fabric: add --sim and --nodes N (or --routing)"
+                .into(),
+        ));
+    }
     let mut rng = Rng::new(seed);
 
     if args.flag("sim") {
@@ -368,6 +393,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         .with_prefix_cache(build_prefix_cache(args, 512)?, cm);
                 }
                 router.add_node(sched, backend);
+            }
+            if wants_faults {
+                let mut plan = match args.get("faults") {
+                    Some(path) => FaultPlan::load(path)?,
+                    None => FaultPlan::new(),
+                };
+                if let Some(spec) = args.get("kill-node") {
+                    for (node, t) in
+                        FaultPlan::parse_kill_spec(spec)?.crashes()
+                    {
+                        plan.kill(node, t)?;
+                    }
+                }
+                plan.validate_for(nodes)?;
+                router.set_fault_plan(plan);
             }
             if args.get("trace-out").is_some() {
                 router.enable_tracing();

@@ -39,7 +39,6 @@ pub struct Contention {
 #[derive(Clone, Debug)]
 struct Link {
     bw: f64,
-    #[allow(dead_code)] // per-link latency override (future asymmetric fabrics)
     latency: f64,
     busy_until: f64,
     contention: Vec<Contention>,
@@ -144,15 +143,28 @@ impl Network {
         &mut self, src: usize, dst: usize, bytes: f64, kv_entries: f64,
         ready: f64,
     ) -> Result<f64> {
-        let latency = self.latency;
         let link = self.link_mut(LinkId { src, dst })?;
         let start = ready.max(link.busy_until);
         let done = link.finish_time(start, bytes);
+        let latency = link.latency;
         link.busy_until = done;
         self.stats.total_bytes += bytes;
         self.stats.messages += 1;
         self.stats.kv_entries += kv_entries;
         Ok(done + latency)
+    }
+
+    /// Multiply the latency of every link touching `node` (either
+    /// direction) by `mult` — a slow NIC or degraded host, from the
+    /// fault plan's `slow` entries.
+    pub fn scale_latency(&mut self, node: usize, mult: f64) {
+        for src in 0..self.p {
+            for dst in 0..self.p {
+                if src != dst && (src == node || dst == node) {
+                    self.links[src * self.p + dst].latency *= mult;
+                }
+            }
+        }
     }
 
     /// Pure cost query: how long would `bytes` take on an uncontended link.
@@ -217,6 +229,20 @@ mod tests {
             .unwrap();
         let done = n.send(0, 1, 100.0, 0.0, 0.0).unwrap(); // 25 B/s
         assert!((done - 4.0).abs() < 1e-9, "{done}");
+    }
+
+    #[test]
+    fn scale_latency_touches_only_the_named_nodes_links() {
+        let mut n = Network::new(3, 100.0, 0.5);
+        n.scale_latency(1, 4.0);
+        // Links touching node 1 (either direction) carry 2.0s latency.
+        let done = n.send(0, 1, 100.0, 0.0, 0.0).unwrap();
+        assert!((done - 3.0).abs() < 1e-12, "{done}");
+        let done = n.send(1, 2, 100.0, 0.0, 0.0).unwrap();
+        assert!((done - 3.0).abs() < 1e-12, "{done}");
+        // The 0 -> 2 link is untouched.
+        let done = n.send(0, 2, 100.0, 0.0, 0.0).unwrap();
+        assert!((done - 1.5).abs() < 1e-12, "{done}");
     }
 
     #[test]

@@ -99,6 +99,23 @@ pub enum EventKind {
     },
     /// The request (or, with no `req`, the whole serve) failed.
     Abort { reason: String },
+    /// Fabric node `node` crashed at `t` (engine-wide: no `req`).
+    /// Everything it had not retired by `t` reroutes to survivors.
+    NodeDown { node: usize },
+    /// The router re-placed this request off dead node `from` onto live
+    /// node `to` (t = the crash time, dur = the re-fetch span):
+    /// `refetched_blocks` prefix blocks re-streamed from surviving
+    /// owners (0 ⇒ full recompute), on failover attempt `attempt`
+    /// (1-based). The request's lifecycle restarts on `to`.
+    Reroute { from: usize, to: usize, refetched_blocks: usize, attempt: usize },
+    /// A peer-prefix stream from `peer` blew its priced deadline after
+    /// `waited_s` seconds (`blocks` were in flight); the router fell
+    /// back to recompute.
+    FetchTimeout { peer: usize, blocks: usize, waited_s: f64 },
+    /// All of dead node `node`'s `rerouted` casualties that could
+    /// retire did so (t = the crash time, dur = the recovery span from
+    /// crash to the last rerouted retirement).
+    Recovered { node: usize, rerouted: usize },
 }
 
 impl EventKind {
@@ -117,6 +134,10 @@ impl EventKind {
             EventKind::DecodeStep { .. } => "decode_step",
             EventKind::Retire { .. } => "retire",
             EventKind::Abort { .. } => "abort",
+            EventKind::NodeDown { .. } => "node_down",
+            EventKind::Reroute { .. } => "reroute",
+            EventKind::FetchTimeout { .. } => "fetch_timeout",
+            EventKind::Recovered { .. } => "recovered",
         }
     }
 
@@ -130,6 +151,8 @@ impl EventKind {
                 | EventKind::DecodeStep { .. }
                 | EventKind::Plan { .. }
                 | EventKind::Route { .. }
+                | EventKind::Reroute { .. }
+                | EventKind::Recovered { .. }
         )
     }
 }
@@ -247,6 +270,22 @@ fn kind_fields(kind: &EventKind) -> Vec<(&'static str, Json)> {
         EventKind::Abort { reason } => {
             vec![("reason", reason.as_str().into())]
         }
+        EventKind::NodeDown { node } => vec![("node", (*node).into())],
+        EventKind::Reroute { from, to, refetched_blocks, attempt } => vec![
+            ("from", (*from).into()),
+            ("to", (*to).into()),
+            ("refetched", (*refetched_blocks).into()),
+            ("attempt", (*attempt).into()),
+        ],
+        EventKind::FetchTimeout { peer, blocks, waited_s } => vec![
+            ("peer", (*peer).into()),
+            ("blocks", (*blocks).into()),
+            ("waited_s", (*waited_s).into()),
+        ],
+        EventKind::Recovered { node, rerouted } => vec![
+            ("node", (*node).into()),
+            ("rerouted", (*rerouted).into()),
+        ],
     }
 }
 
@@ -307,6 +346,24 @@ fn kind_from_json(name: &str, v: &Json) -> Result<EventKind> {
         },
         "abort" => EventKind::Abort {
             reason: v.req("reason")?.as_str()?.to_string(),
+        },
+        "node_down" => {
+            EventKind::NodeDown { node: v.req("node")?.as_usize()? }
+        }
+        "reroute" => EventKind::Reroute {
+            from: v.req("from")?.as_usize()?,
+            to: v.req("to")?.as_usize()?,
+            refetched_blocks: v.req("refetched")?.as_usize()?,
+            attempt: v.req("attempt")?.as_usize()?,
+        },
+        "fetch_timeout" => EventKind::FetchTimeout {
+            peer: v.req("peer")?.as_usize()?,
+            blocks: v.req("blocks")?.as_usize()?,
+            waited_s: v.req("waited_s")?.as_f64()?,
+        },
+        "recovered" => EventKind::Recovered {
+            node: v.req("node")?.as_usize()?,
+            rerouted: v.req("rerouted")?.as_usize()?,
         },
         other => {
             return Err(Error::Json(format!("unknown trace event `{other}`")))
@@ -538,6 +595,39 @@ mod tests {
                 matched_blocks: 2,
                 peer_blocks: 1,
             },
+        });
+        events.push(TraceEvent {
+            t: 2.5,
+            dur: 0.0,
+            req: None,
+            kind: EventKind::NodeDown { node: 3 },
+        });
+        events.push(TraceEvent {
+            t: 2.5,
+            dur: 0.002,
+            req: Some(2),
+            kind: EventKind::Reroute {
+                from: 3,
+                to: 1,
+                refetched_blocks: 2,
+                attempt: 1,
+            },
+        });
+        events.push(TraceEvent {
+            t: 2.6,
+            dur: 0.0,
+            req: Some(4),
+            kind: EventKind::FetchTimeout {
+                peer: 3,
+                blocks: 2,
+                waited_s: 0.04,
+            },
+        });
+        events.push(TraceEvent {
+            t: 2.5,
+            dur: 0.4,
+            req: None,
+            kind: EventKind::Recovered { node: 3, rerouted: 2 },
         });
         let trace = Trace { events };
         let text = trace.to_jsonl();

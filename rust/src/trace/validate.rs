@@ -29,7 +29,7 @@
 //! audit rule is a compile error here and a `kvr lint`
 //! (trace-validator-exhaustive) finding.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::error::{Error, Result};
 use crate::trace::{EventKind, Trace};
@@ -50,6 +50,10 @@ pub struct TraceCheck {
     pub lease_events: usize,
     pub cold_load_events: usize,
     pub route_events: usize,
+    pub node_down_events: usize,
+    pub reroute_events: usize,
+    pub fetch_timeout_events: usize,
+    pub recovered_events: usize,
     /// Last event end on the serving clock (s).
     pub span_s: f64,
 }
@@ -73,6 +77,10 @@ struct ReqState {
     retired: Option<f64>,
     aborted: bool,
     routed: bool,
+    /// Failover hops taken so far (each one resets the lifecycle).
+    reroutes: usize,
+    /// The last reroute's target node (must be alive at trace end).
+    reroute_to: Option<usize>,
 }
 
 fn viol(req: u64, msg: String) -> String {
@@ -94,6 +102,9 @@ impl Trace {
         let mut last_enqueue_t = f64::NEG_INFINITY;
         let mut reqs: BTreeMap<u64, ReqState> = BTreeMap::new();
         let mut any_abort = false;
+        // Nodes that have crashed so far (in event order): a reroute
+        // must leave a down node, and no request may end on one.
+        let mut downs: BTreeSet<usize> = BTreeSet::new();
 
         for (i, e) in self.events.iter().enumerate() {
             if !e.t.is_finite() || e.t < 0.0 || !e.dur.is_finite() || e.dur < 0.0
@@ -141,6 +152,23 @@ impl Trace {
                 EventKind::Abort { .. } => {
                     any_abort = true;
                     check.aborted += 1;
+                }
+                EventKind::NodeDown { node } => {
+                    check.node_down_events += 1;
+                    downs.insert(*node);
+                }
+                EventKind::Reroute { .. } => check.reroute_events += 1,
+                EventKind::FetchTimeout { .. } => {
+                    check.fetch_timeout_events += 1
+                }
+                EventKind::Recovered { node, .. } => {
+                    check.recovered_events += 1;
+                    if !downs.contains(node) {
+                        violations.push(format!(
+                            "trace invariant: node {node} recovered but \
+                             never went down"
+                        ));
+                    }
                 }
                 EventKind::Enqueued { .. }
                 | EventKind::Admitted { .. }
@@ -262,8 +290,44 @@ impl Trace {
                     }
                 }
                 EventKind::Abort { .. } => st.aborted = true,
-                EventKind::DecodeStep { .. } | EventKind::DecodeStall { .. } => {
-                    // Engine-wide spans: nothing per-request to check.
+                EventKind::Reroute { from, to, .. } => {
+                    // Failover: the request leaves a node that just
+                    // crashed and restarts its lifecycle on a survivor
+                    // — a rerouted request must still retire exactly
+                    // once, so the retired/routed facts persist across
+                    // the reset.
+                    if st.retired.is_some() {
+                        violations
+                            .push(viol(id, "reroute after retirement".into()));
+                    }
+                    if !downs.contains(from) {
+                        violations.push(viol(
+                            id,
+                            format!(
+                                "rerouted off node {from}, which is not down"
+                            ),
+                        ));
+                    }
+                    if !st.routed {
+                        violations
+                            .push(viol(id, "reroute before any route".into()));
+                    }
+                    st.enqueued = None;
+                    st.admitted = None;
+                    st.planned = false;
+                    st.leased = false;
+                    st.chunks.clear();
+                    st.first_token = None;
+                    st.reroutes += 1;
+                    st.reroute_to = Some(*to);
+                }
+                EventKind::DecodeStep { .. }
+                | EventKind::DecodeStall { .. }
+                | EventKind::NodeDown { .. }
+                | EventKind::FetchTimeout { .. }
+                | EventKind::Recovered { .. } => {
+                    // Engine-wide (or informational) events: nothing
+                    // per-request to check.
                 }
             }
         }
@@ -323,6 +387,27 @@ impl Trace {
                 && !st.aborted
             {
                 violations.push(viol(id, "admitted but never retired".into()));
+            }
+            // Failover end-state: a rerouted request that never retired
+            // must not be left pointing at a node that also died — the
+            // router owes it another reroute (or an abort).
+            if let Some(to) = st.reroute_to {
+                if downs.contains(&to)
+                    && st.retired.is_none()
+                    && !st.aborted
+                {
+                    violations.push(viol(
+                        id,
+                        format!("final reroute targets dead node {to}"),
+                    ));
+                }
+            }
+            if st.reroutes > 0
+                && st.retired.is_none()
+                && !st.aborted
+                && !any_abort
+            {
+                violations.push(viol(id, "rerouted but never retired".into()));
             }
         }
         TraceAudit { check, violations }
@@ -621,6 +706,152 @@ mod tests {
         t.events.insert(1, ev(0.0, 0.0, Some(0), route_kind()));
         let err = t.validate().unwrap_err().to_string();
         assert!(err.contains("routed twice"), "{err}");
+    }
+
+    /// One request routed to node 1, killed mid-prefill at t = 0.5,
+    /// rerouted to node 0, and served to completion there.
+    fn reroute_trace() -> Trace {
+        Trace {
+            events: vec![
+                ev(0.0, 0.0, Some(0), route_kind()),
+                ev(0.0, 0.0, Some(0), EventKind::Enqueued {
+                    prompt_tokens: 64,
+                    max_new_tokens: 2,
+                }),
+                ev(0.0, 0.0, Some(0), EventKind::Admitted { queue_s: 0.0 }),
+                ev(0.0, 0.3, Some(0), EventKind::PrefillChunk {
+                    index: 0,
+                    total: 2,
+                    offset: 0,
+                    rows: 32,
+                }),
+                ev(0.5, 0.0, None, EventKind::NodeDown { node: 1 }),
+                ev(0.5, 0.0, Some(0), EventKind::Reroute {
+                    from: 1,
+                    to: 0,
+                    refetched_blocks: 0,
+                    attempt: 1,
+                }),
+                ev(0.5, 0.85, None, EventKind::Recovered {
+                    node: 1,
+                    rerouted: 1,
+                }),
+                ev(0.5, 0.0, Some(0), EventKind::Enqueued {
+                    prompt_tokens: 64,
+                    max_new_tokens: 2,
+                }),
+                ev(0.5, 0.0, Some(0), EventKind::Admitted { queue_s: 0.0 }),
+                ev(0.5, 0.5, Some(0), EventKind::PrefillChunk {
+                    index: 0,
+                    total: 2,
+                    offset: 0,
+                    rows: 32,
+                }),
+                ev(1.0, 0.25, Some(0), EventKind::PrefillChunk {
+                    index: 1,
+                    total: 2,
+                    offset: 32,
+                    rows: 32,
+                }),
+                ev(1.25, 0.0, Some(0), EventKind::FirstToken {
+                    ttft_s: 0.75,
+                }),
+                ev(1.25, 0.1, None, EventKind::DecodeStep {
+                    batch: 1,
+                    groups: vec![1],
+                }),
+                ev(1.35, 0.0, Some(0), EventKind::Retire {
+                    e2e_s: 0.85,
+                    tokens_out: 2,
+                    queue_s: 0.0,
+                    plan_s: 0.0,
+                    load_s: 0.0,
+                    compute_s: 0.75,
+                    decode_s: 0.1,
+                    stall_s: 0.0,
+                }),
+            ],
+        }
+    }
+
+    #[test]
+    fn reroute_resets_the_lifecycle_and_validates_clean() {
+        let check = reroute_trace().validate().unwrap();
+        assert_eq!(check.node_down_events, 1);
+        assert_eq!(check.reroute_events, 1);
+        assert_eq!(check.recovered_events, 1);
+        assert_eq!(check.retired, 1);
+        // The survivor's second enqueue/admission/prefill did not trip
+        // the "twice" rules: the reroute reset the lifecycle.
+        assert!(reroute_trace().audit().violations.is_empty());
+    }
+
+    #[test]
+    fn reroute_off_a_live_node_is_rejected() {
+        let mut t = reroute_trace();
+        t.events.remove(4); // drop the node_down
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("not down"), "{err}");
+    }
+
+    #[test]
+    fn recovery_without_a_crash_is_rejected() {
+        let t = Trace {
+            events: vec![ev(0.5, 0.1, None, EventKind::Recovered {
+                node: 2,
+                rerouted: 1,
+            })],
+        };
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("recovered but never went down"), "{err}");
+    }
+
+    #[test]
+    fn reroute_after_retirement_is_rejected() {
+        let mut t = reroute_trace();
+        let reroute = t.events[5].clone();
+        t.events.push(TraceEvent { t: 1.35, ..reroute });
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("reroute after retirement"), "{err}");
+    }
+
+    #[test]
+    fn reroute_before_any_route_is_rejected() {
+        let mut t = reroute_trace();
+        t.events.remove(0); // drop the initial route
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("reroute before any route"), "{err}");
+    }
+
+    #[test]
+    fn unretired_reroutes_must_not_end_on_a_dead_node() {
+        // Cut the trace right after the reroute: request 0 now points at
+        // node 0 and never retires there; then node 0 dies too.
+        let mut t = reroute_trace();
+        t.events.truncate(7);
+        t.events.push(ev(2.0, 0.0, None, EventKind::NodeDown { node: 0 }));
+        let audit = t.audit();
+        assert!(
+            audit
+                .violations
+                .iter()
+                .any(|v| v.contains("final reroute targets dead node 0")),
+            "{:?}",
+            audit.violations
+        );
+        assert!(
+            audit
+                .violations
+                .iter()
+                .any(|v| v.contains("rerouted but never retired")),
+            "{:?}",
+            audit.violations
+        );
+        // An abort settles the request: the end-state rules stand down.
+        t.events.push(ev(2.0, 0.0, Some(0), EventKind::Abort {
+            reason: "failover retry budget exhausted".into(),
+        }));
+        t.validate().unwrap();
     }
 
     #[test]

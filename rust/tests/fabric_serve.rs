@@ -14,9 +14,10 @@ use kvr::coordinator::{
     GenRequest, GenResponse, Scheduler, SchedulerConfig, ServeMetrics,
     SimBackend,
 };
-use kvr::fabric::{GlobalIndex, RouterBackend, RoutingPolicy};
+use kvr::fabric::{FaultPlan, GlobalIndex, RouterBackend, RoutingPolicy};
 use kvr::prefixcache::{chain_ids, PrefixCache, PrefixCacheConfig};
 use kvr::trace::EventKind;
+use kvr::util::rng::Rng;
 
 fn parts() -> (ModelConfig, HardwareConfig) {
     (
@@ -347,4 +348,256 @@ fn multi_node_traced_serve_validates_end_to_end() {
             assert_eq!(policy, "affinity");
         }
     }
+}
+
+#[test]
+fn an_empty_fault_plan_is_bit_identical_to_no_plan() {
+    // The failover machinery must be invisible until a fault actually
+    // exists: installing an empty plan must not perturb a single bit of
+    // responses, metrics, or the merged trace stream.
+    for policy in [RoutingPolicy::Affinity, RoutingPolicy::RoundRobin] {
+        let reqs = workload(8, 1024, 256, 8);
+        let mut plain = router(3, policy, true);
+        plain.enable_tracing();
+        let (want_resp, want) = plain.serve(reqs.clone()).unwrap();
+        let mut faulted = router(3, policy, true);
+        faulted.enable_tracing();
+        faulted.set_fault_plan(FaultPlan::new());
+        let (got_resp, got) = faulted.serve(reqs).unwrap();
+        assert_responses_match(&got_resp, &want_resp);
+        assert_metrics_match(&got, &want);
+        assert_eq!(got.node_requests, want.node_requests);
+        assert_eq!(got.node_failures, 0);
+        assert_eq!(got.rerouted_requests, 0);
+        assert!(got.recovery_times.is_empty());
+        assert_eq!(
+            faulted.take_trace().to_jsonl(),
+            plain.take_trace().to_jsonl(),
+            "an empty plan must leave the trace stream untouched"
+        );
+    }
+}
+
+#[test]
+fn mid_run_node_kill_retires_every_request_exactly_once() {
+    // Deterministic 4-node chaos golden. Request 0 (arrival 0, empty
+    // index) consistent-hashes onto a known victim; killing that node
+    // before any first token lands strands it mid-prefill, so the
+    // failover path must reroute it — and every request, rerouted or
+    // not, must retire exactly once on a live node.
+    let reqs = workload(12, 1024, 256, 8);
+    let victim =
+        GlobalIndex::consistent_node(chain_ids(&reqs[0].tokens, 512)[0], 4);
+
+    // A fault-free probe bounds the kill time: half the smallest TTFT
+    // is strictly after request 0 routes and strictly before anything
+    // it could have retired.
+    let mut probe = router(4, RoutingPolicy::Affinity, true);
+    let (_, m0) = probe.serve(reqs.clone()).unwrap();
+    let min_ttft = m0.ttfts.iter().cloned().fold(f64::INFINITY, f64::min);
+    let t_kill = 0.5 * min_ttft;
+    assert!(t_kill > 0.0 && t_kill.is_finite());
+
+    let mut r = router(4, RoutingPolicy::Affinity, true);
+    r.enable_tracing();
+    let mut plan = FaultPlan::new();
+    plan.kill(victim, t_kill).unwrap();
+    r.set_fault_plan(plan);
+    let (resp, m) = r.serve(reqs).unwrap();
+
+    let mut ids: Vec<u64> = resp.iter().map(|x| x.id).collect();
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (0..12u64).collect::<Vec<_>>(),
+        "every request retires exactly once"
+    );
+    assert_eq!(m.failover_gave_up, 0, "one crash never exhausts the budget");
+    assert_eq!(m.node_failures, 1);
+    assert!(
+        m.rerouted_requests >= 1,
+        "request 0 was stranded mid-prefill and must reroute"
+    );
+    assert_eq!(m.recovery_times.len(), 1, "one crash, one recovery span");
+    assert_eq!(
+        r.global_index().owned_by(victim),
+        0,
+        "the dead node's ownership must drain"
+    );
+
+    let trace = r.take_trace();
+    let down = trace.events.iter().any(
+        |e| matches!(e.kind, EventKind::NodeDown { node } if node == victim),
+    );
+    assert!(down, "the crash must be a first-class trace event");
+    let rerouted = trace.events.iter().any(|e| {
+        matches!(
+            e.kind,
+            EventKind::Reroute { from, attempt, .. }
+                if from == victim && attempt == 1
+        )
+    });
+    assert!(rerouted, "the stranded share must reroute off the victim");
+    trace.validate().expect("failover trace must audit clean");
+    r.assert_lease_quiescent();
+}
+
+#[test]
+fn random_single_kill_never_loses_or_duplicates_requests() {
+    // Property sweep: random single-node kills at random times over
+    // randomized Zipf-flavored workloads. Whatever the timing, every
+    // admitted request retires exactly once (modulo an explicit budget
+    // abort), the trace audits clean, and no lease leaks.
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed * 7919 + 13);
+        let nodes = 2 + (seed as usize % 3);
+        let n_req = 12u64;
+        // Template popularity ~ 1/rank^1.1 over four 1024-token
+        // templates; fresh 256-token tails keep every prompt distinct.
+        let weights: Vec<f64> =
+            (1..=4).map(|r| 1.0 / (r as f64).powf(1.1)).collect();
+        let total: f64 = weights.iter().sum();
+        let reqs: Vec<GenRequest> = (0..n_req)
+            .map(|id| {
+                let mut pick = rng.range_f64(0.0, total);
+                let mut t = 0usize;
+                for (k, w) in weights.iter().enumerate() {
+                    if pick < *w {
+                        t = k;
+                        break;
+                    }
+                    pick -= *w;
+                }
+                let mut tokens: Vec<i32> = (0..1024i32)
+                    .map(|i| i * 17 + t as i32 * 7919 + 3)
+                    .collect();
+                tokens.extend(
+                    (0..256i32)
+                        .map(|j| j * 31 + seed as i32 * 997 + id as i32),
+                );
+                GenRequest {
+                    id,
+                    tokens,
+                    max_new_tokens: 4,
+                    arrival: id as f64 * rng.range_f64(0.01, 0.08),
+                }
+            })
+            .collect();
+        // The fault-free wall bounds the kill time so every draw lands
+        // somewhere inside the serve.
+        let mut fault_free = router(nodes, RoutingPolicy::Affinity, true);
+        let (ff_resp, ff) = fault_free.serve(reqs.clone()).unwrap();
+        assert_eq!(ff_resp.len(), n_req as usize);
+        let plan =
+            FaultPlan::random_single_kill(&mut rng, nodes, ff.wall_s).unwrap();
+
+        let mut r = router(nodes, RoutingPolicy::Affinity, true);
+        r.enable_tracing();
+        r.set_fault_plan(plan);
+        let (resp, m) = r.serve(reqs).unwrap();
+        let mut ids: Vec<u64> = resp.iter().map(|x| x.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(
+            ids.len(),
+            resp.len(),
+            "seed {seed}: a request retired twice"
+        );
+        assert_eq!(
+            resp.len() + m.failover_gave_up,
+            n_req as usize,
+            "seed {seed}: every request retires once or aborts explicitly"
+        );
+        assert_eq!(m.node_failures, 1, "seed {seed}");
+        let check = r.take_trace().validate();
+        assert!(
+            check.is_ok(),
+            "seed {seed}: trace audit failed: {:?}",
+            check.err()
+        );
+        r.assert_lease_quiescent();
+    }
+}
+
+#[test]
+fn degraded_peer_fetch_times_out_and_falls_back_to_recompute() {
+    // Same divert construction as the peer-streaming golden, but the
+    // owning node's links are latency-degraded far past the 4x-ideal
+    // fetch deadline: the stream must time out, nothing lands, and the
+    // diverted sharer recomputes instead of wedging admission.
+    let template: Vec<i32> = (0..2048i32).map(|i| i * 17 + 3).collect();
+    let mut r = router(2, RoutingPolicy::Affinity, true);
+    r.serve(vec![GenRequest {
+        id: 0,
+        tokens: template.clone(),
+        max_new_tokens: 2,
+        arrival: 0.0,
+    }])
+    .unwrap();
+    let ids = chain_ids(&template, 512);
+    let owner = r.global_index().owner_of(ids[0]).expect("template recorded");
+    let filler = (0..64i32)
+        .map(|salt| -> Vec<i32> {
+            (0..4096i32).map(|i| i * 13 + salt * 104729 + 11).collect()
+        })
+        .find(|cand| {
+            GlobalIndex::consistent_node(chain_ids(cand, 512)[0], 2) == owner
+        })
+        .expect("some salt must hash onto the owner");
+
+    let mut plan = FaultPlan::new();
+    plan.slow_node(owner, 1e4).unwrap();
+    r.set_fault_plan(plan);
+    r.enable_tracing();
+    let (resp, m) = r
+        .serve(vec![
+            GenRequest {
+                id: 10,
+                tokens: filler,
+                max_new_tokens: 256,
+                arrival: 0.0,
+            },
+            GenRequest {
+                id: 11,
+                tokens: template,
+                max_new_tokens: 4,
+                arrival: 0.05,
+            },
+        ])
+        .unwrap();
+    assert_eq!(resp.len(), 2, "a timed-out fetch must not wedge the serve");
+    assert_eq!(m.fetch_timeouts, 1, "the divert's stream blows the deadline");
+    assert_eq!(m.peer_blocks, 0, "a timed-out stream lands nothing");
+    assert_eq!(m.node_failures, 0, "slow is degraded, not dead");
+    let trace = r.take_trace();
+    let timed_out = trace.events.iter().any(|e| {
+        e.req == Some(11)
+            && matches!(
+                e.kind,
+                EventKind::FetchTimeout { peer, blocks, .. }
+                    if peer == owner && blocks == 4
+            )
+    });
+    assert!(timed_out, "the timeout must be a first-class trace event");
+    trace.validate().expect("degraded-mode trace must audit clean");
+    r.assert_lease_quiescent();
+}
+
+#[test]
+fn a_dead_fabric_fails_with_the_nodes_context() {
+    // Killing every node before the first arrival leaves no live target:
+    // the serve must fail loudly, naming the request it could not place
+    // and the virtual time of the attempt.
+    let mut r = router(4, RoutingPolicy::Affinity, true);
+    let mut plan = FaultPlan::new();
+    for node in 0..4 {
+        plan.kill(node, 0.0).unwrap();
+    }
+    r.set_fault_plan(plan);
+    let err = r.serve(workload(4, 1024, 256, 4)).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("no live fabric node") && msg.contains("request 0"),
+        "error must carry routing context: {msg}"
+    );
 }
